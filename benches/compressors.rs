@@ -1,0 +1,93 @@
+//! Compression-stack microbenchmarks (the L3 hot path).
+//!
+//! criterion is unavailable offline; this is a `harness = false` bench using
+//! the in-tree timing harness (`util::stats`). Run with `cargo bench`.
+//!
+//! Dimensions: 25.6M mirrors ResNet-50 (the paper's non-convex model);
+//! 7850 mirrors the convex workload. Reported GB/s is input throughput.
+
+use qsparse::compress::{encode, parse_spec, ErrorMemory};
+use qsparse::util::rng::Pcg64;
+use qsparse::util::stats::{report, time_iters};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let big_d = if quick { 1 << 20 } else { 25_610_216 }; // ResNet-50 d
+    let small_d = 7850;
+
+    let mut rng = Pcg64::seeded(42);
+    let big: Vec<f32> = (0..big_d).map(|_| rng.normal_f32()).collect();
+    let small: Vec<f32> = (0..small_d).map(|_| rng.normal_f32()).collect();
+    let bytes_big = big_d * 4;
+    let (warm, iters) = if quick { (1, 3) } else { (2, 8) };
+
+    println!("# compressor microbenches (d_big={big_d}, d_small={small_d})\n");
+    let k_big = big_d / 256; // ~0.4%, the paper's ResNet-50 ratio
+    for spec in [
+        format!("topk:k={k_big}"),
+        format!("randk:k={k_big}"),
+        "qsgd:bits=4".to_string(),
+        "sign".to_string(),
+        format!("qtopk:k={k_big},bits=4"),
+        format!("signtopk:k={k_big},m=1"),
+    ] {
+        let op = parse_spec(&spec).unwrap();
+        let mut r = Pcg64::seeded(7);
+        let samples = time_iters(warm, iters, || {
+            std::hint::black_box(op.compress(&big, &mut r));
+        });
+        report(&format!("compress/{}", op.name()), &samples, Some(bytes_big));
+    }
+
+    println!();
+    // Error-feedback round (compress + memory update) at ResNet scale.
+    for spec in [format!("topk:k={k_big}"), format!("signtopk:k={k_big},m=1")] {
+        let op = parse_spec(&spec).unwrap();
+        let mut mem = ErrorMemory::zeros(big_d);
+        let mut r = Pcg64::seeded(9);
+        let samples = time_iters(warm, iters, || {
+            std::hint::black_box(mem.compress_update(&big, op.as_ref(), &mut r));
+        });
+        report(&format!("ef-round/{}", op.name()), &samples, Some(bytes_big));
+    }
+
+    println!();
+    // Wire encode/decode throughput.
+    for spec in [
+        format!("topk:k={k_big}"),
+        format!("qtopk:k={k_big},bits=4"),
+        format!("signtopk:k={k_big},m=1"),
+    ] {
+        let op = parse_spec(&spec).unwrap();
+        let mut r = Pcg64::seeded(11);
+        let msg = op.compress(&big, &mut r);
+        let samples = time_iters(warm, iters, || {
+            std::hint::black_box(encode::encode(&msg));
+        });
+        let (bytes, len) = encode::encode(&msg);
+        report(
+            &format!("encode/{}", op.name()),
+            &samples,
+            Some((len / 8) as usize),
+        );
+        let samples = time_iters(warm, iters, || {
+            std::hint::black_box(encode::decode(&bytes, len));
+        });
+        report(
+            &format!("decode/{}", op.name()),
+            &samples,
+            Some((len / 8) as usize),
+        );
+    }
+
+    println!();
+    // Convex-scale end-to-end compressor latency (tiny vectors, per-sync cost).
+    for spec in ["topk:k=40", "signtopk:k=40,m=1", "qtopk:k=40,bits=4,scaled"] {
+        let op = parse_spec(spec).unwrap();
+        let mut r = Pcg64::seeded(13);
+        let samples = time_iters(warm * 50, iters * 200, || {
+            std::hint::black_box(op.compress(&small, &mut r));
+        });
+        report(&format!("small/{}", op.name()), &samples, Some(small_d * 4));
+    }
+}

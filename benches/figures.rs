@@ -1,0 +1,35 @@
+//! Figure-regeneration bench: runs every paper figure in quick mode and
+//! prints the paper-style summaries (the full-fidelity run is
+//! `qsparse figure all`; see EXPERIMENTS.md for the recorded full run).
+//!
+//! `cargo bench --bench figures` — add `-- --full` for full fidelity.
+
+use qsparse::figures;
+use qsparse::util::stats::Stopwatch;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let quick = !full;
+    println!(
+        "# regenerating all paper figures ({} mode)\n",
+        if quick { "quick" } else { "full" }
+    );
+    let total = Stopwatch::start();
+    for id in figures::all_figure_ids() {
+        let spec = figures::figure_spec(id).unwrap();
+        let sw = Stopwatch::start();
+        match figures::run_figure(&spec, quick) {
+            Ok(result) => {
+                result.write_csvs("results").ok();
+                print!("{}", result.summary());
+                println!("   ({:.1}s)\n", sw.secs());
+            }
+            Err(e) => println!("{id}: ERROR {e}\n"),
+        }
+    }
+    println!("# γ table (d=7850, k=40)");
+    for (name, gamma, measured) in figures::gamma_table(7850, 40) {
+        println!("{name:<28} γ={gamma:<12.6} measured(1-γ̂)={measured:.6}");
+    }
+    println!("\ntotal: {:.1}s", total.secs());
+}

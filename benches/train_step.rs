@@ -1,0 +1,89 @@
+//! End-to-end step latency: native vs PJRT backends, and the coordinator
+//! overhead on top of raw gradient compute (DESIGN.md §Perf L3 target:
+//! coordination ≤ 10% of step time).
+
+use qsparse::compress::parse_spec;
+use qsparse::data::{gaussian_clusters, Sharding};
+use qsparse::engine::{run, TrainSpec};
+use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
+use qsparse::optim::LrSchedule;
+use qsparse::runtime::PjrtRuntime;
+use qsparse::topology::FixedPeriod;
+use qsparse::util::stats::{report, time_iters};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+
+    // Raw gradient latency — the floor the coordinator adds to.
+    let ds = gaussian_clusters(2000, 784, 10, 0.2, 1.0, 1);
+    let softmax = SoftmaxRegression::new(784, 10, 1e-4);
+    let batch = ds.gather(&(0..8).collect::<Vec<_>>());
+    let mut params = vec![0.01f32; softmax.dim()];
+    let mut grad = vec![0.0f32; softmax.dim()];
+    let samples = time_iters(warm * 20, iters * 50, || {
+        std::hint::black_box(softmax.loss_grad(&params, &batch, &mut grad));
+    });
+    report("grad/native-softmax(b=8,d=7850)", &samples, None);
+    let native_softmax_grad = qsparse::util::stats::Summary::of(&samples).mean;
+
+    let mlp = Mlp::new(vec![256, 64, 10]);
+    let ds2 = gaussian_clusters(2000, 256, 10, 0.2, 1.0, 2);
+    let batch2 = ds2.gather(&(0..16).collect::<Vec<_>>());
+    params = mlp.init_params(1);
+    grad = vec![0.0f32; mlp.dim()];
+    let samples = time_iters(warm * 10, iters * 30, || {
+        std::hint::black_box(mlp.loss_grad(&params, &batch2, &mut grad));
+    });
+    report("grad/native-mlp(b=16,d=17k)", &samples, None);
+
+    // PJRT grad latency (if artifacts exist).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = PjrtRuntime::open("artifacts").unwrap();
+        let pj = rt.load_model("softmax").unwrap();
+        let mut g = vec![0.0f32; pj.dim()];
+        let p = vec![0.01f32; pj.dim()];
+        let samples = time_iters(warm * 5, iters * 10, || {
+            std::hint::black_box(pj.loss_grad(&p, &batch, &mut g));
+        });
+        report("grad/pjrt-softmax(b=8,d=7850)", &samples, None);
+
+        let lm = rt.load_model("lm").unwrap();
+        let e = lm.entry.clone();
+        let seq = e.seq.unwrap();
+        let toks: Vec<f32> = (0..e.batch * (seq + 1)).map(|i| (i % 200) as f32).collect();
+        let lb = qsparse::data::Batch { x: toks, y: vec![0; e.batch], b: e.batch, dim: seq + 1 };
+        let lp = rt.load_init("lm").unwrap().unwrap();
+        let mut lg = vec![0.0f32; lm.dim()];
+        let samples = time_iters(1, if quick { 2 } else { 5 }, || {
+            std::hint::black_box(lm.loss_grad(&lp, &lb, &mut lg));
+        });
+        report("grad/pjrt-lm(b=8,d=471k)", &samples, None);
+    } else {
+        println!("(artifacts/ missing — skipping PJRT benches; run `make artifacts`)");
+    }
+
+    // Full engine step (R=8) vs 8× raw grad: the difference is coordination.
+    let comp = parse_spec("signtopk:k=170,m=1").unwrap();
+    let sched = FixedPeriod::new(1);
+    let steps = if quick { 20 } else { 100 };
+    let samples = time_iters(0, if quick { 2 } else { 4 }, || {
+        let mut spec = TrainSpec::new(&softmax, &ds, comp.as_ref(), &sched);
+        spec.workers = 8;
+        spec.batch = 8;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.1 };
+        spec.sharding = Sharding::Iid;
+        spec.eval_every = steps + 1; // exclude eval cost
+        std::hint::black_box(run(&spec));
+    });
+    let per_step: Vec<f64> = samples.iter().map(|s| s / steps as f64).collect();
+    report("engine/step(R=8,signtopk,H=1)", &per_step, None);
+    let engine_step = qsparse::util::stats::Summary::of(&per_step).mean;
+    let overhead = (engine_step - 8.0 * native_softmax_grad) / engine_step * 100.0;
+    println!(
+        "\ncoordination overhead: engine step {} vs 8x raw grad {} -> {overhead:.1}% of step",
+        qsparse::util::stats::fmt_duration(engine_step),
+        qsparse::util::stats::fmt_duration(8.0 * native_softmax_grad),
+    );
+}

@@ -1,0 +1,78 @@
+//! The paper's convex experiment (§5.2) through the FULL three-layer stack:
+//! the gradient/loss of the softmax model is computed by the AOT-compiled
+//! JAX artifact (with its Pallas linear + fused softmax-xent kernels) via
+//! PJRT — python never runs here. The rust coordinator supplies workers,
+//! compression, error feedback and local iterations.
+//!
+//!     make artifacts           # once
+//!     cargo run --release --example convex_mnist
+//!
+//! Reproduces the fig4/fig6 story: composed operators converge like vanilla
+//! SGD while sending orders of magnitude fewer bits; local steps (H = 8)
+//! multiply the savings.
+
+use qsparse::compress::parse_spec;
+use qsparse::data::{gaussian_clusters_split, Sharding};
+use qsparse::engine::{run, TrainSpec};
+use qsparse::optim::LrSchedule;
+use qsparse::runtime::PjrtRuntime;
+use qsparse::topology::FixedPeriod;
+
+fn main() -> anyhow::Result<()> {
+    let rt = PjrtRuntime::open("artifacts").map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` first to build the AOT models")
+    })?;
+    let model = rt.load_model("softmax")?;
+    let entry = model.entry.clone();
+    println!(
+        "loaded pjrt:softmax  d={} batch={} (HLO from python/compile/aot.py)\n",
+        entry.d, entry.batch
+    );
+
+    // MNIST-geometry data: 784 features, 10 classes, R = 15 workers, b = 8.
+    let n = 6000;
+    let (train, test) =
+        gaussian_clusters_split(n, n / 4, entry.feat, entry.classes, 0.12, 1.0, 20190527);
+
+    let series: Vec<(&str, String, usize)> = vec![
+        ("vanilla SGD", "identity".into(), 1),
+        ("TopK-SGD (k=40)", "topk:k=40".into(), 1),
+        ("QTopK 4-bit", "qtopk:k=40,bits=4,scaled".into(), 1),
+        ("SignTopK", "signtopk:k=40,m=1".into(), 1),
+        ("Qsparse-local (SignTopK, H=8)", "signtopk:k=40,m=1".into(), 8),
+    ];
+
+    println!(
+        "{:<32} {:>9} {:>10} {:>12} {:>9}",
+        "series", "loss", "test_err", "Mbits_up", "saving"
+    );
+    let steps = 600;
+    let mut baseline = None;
+    for (label, comp_spec, h) in series {
+        let comp = parse_spec(&comp_spec)?;
+        let schedule = FixedPeriod::new(h);
+        let mut spec = TrainSpec::new(&model, &train, comp.as_ref(), &schedule);
+        spec.test = Some(&test);
+        spec.workers = 15;
+        spec.batch = entry.batch;
+        spec.steps = steps;
+        spec.sharding = Sharding::Iid;
+        spec.eval_every = 100;
+        spec.eval_rows = 128;
+        spec.lr = LrSchedule::InvTime { xi: 1900.0, a: 1570.0 };
+        let hist = run(&spec);
+        let p = hist.points.last().unwrap();
+        let saving = baseline
+            .map(|b: u64| format!("{:.0}x", b as f64 / p.bits_up as f64))
+            .unwrap_or_else(|| "1x".to_string());
+        baseline.get_or_insert(p.bits_up);
+        println!(
+            "{label:<32} {:>9.4} {:>9.2}% {:>12.2} {:>9}",
+            p.train_loss,
+            100.0 * p.test_err,
+            p.bits_up as f64 / 1e6,
+            saving
+        );
+    }
+    Ok(())
+}

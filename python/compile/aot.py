@@ -1,0 +1,168 @@
+"""AOT lowering: JAX (L2, with L1 Pallas kernels) → HLO text + manifest.
+
+HLO *text* is the interchange format — the image's xla_extension 0.5.1
+rejects jax≥0.5's serialized protos (64-bit instruction ids), while the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with return_tuple=True; the rust
+runtime unwraps with Literal::to_tuple*.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--models softmax,mlp,...]
+
+Writes, per model variant:
+    <name>.grad.hlo.txt — (params, x, y) -> (loss, grad_flat)
+    <name>.eval.hlo.txt — (params, x, y) -> (loss, top1_errs, top5_errs)
+and a single manifest.json describing shapes/dtypes/param layout.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Model variants exported by default. The convex softmax matches the paper's
+# MNIST geometry (d = 7850, b = 8); mlp/lm batch sizes match the figure
+# harness and the end-to-end example.
+VARIANTS = {
+    "softmax": dict(
+        kind="softmax",
+        cfg=M.SoftmaxConfig(dim=784, classes=10, lam=1.0 / 60000.0),
+        batch=8,
+    ),
+    "mlp": dict(kind="mlp", cfg=M.MlpConfig(widths=(256, 64, 10)), batch=16),
+    "lm": dict(
+        kind="lm",
+        cfg=M.LmConfig(vocab=256, seq=64, layers=2, model_dim=128, heads=4),
+        batch=8,
+    ),
+    # ~10M-parameter transformer for the end-to-end training example
+    # (examples/train_transformer.rs). CPU-PJRT friendly.
+    "lm10m": dict(
+        kind="lm",
+        cfg=M.LmConfig(vocab=2048, seq=128, layers=4, model_dim=256, heads=8),
+        batch=4,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_variant(name, spec):
+    kind, cfg, batch = spec["kind"], spec["cfg"], spec["batch"]
+    if kind == "softmax":
+        loss_fn = lambda p, x, y: M.softmax_loss(cfg, p, x, y)
+        eval_fn = M.make_classifier_eval(lambda p, x: M.softmax_logits(cfg, p, x), cfg.classes)
+        x_shape, y_shape = (batch, cfg.dim), (batch,)
+        y_dtype = jnp.int32
+        feat = cfg.dim
+        classes = cfg.classes
+    elif kind == "mlp":
+        loss_fn = lambda p, x, y: M.mlp_loss(cfg, p, x, y)
+        eval_fn = M.make_classifier_eval(lambda p, x: M.mlp_logits(cfg, p, x), cfg.widths[-1])
+        x_shape, y_shape = (batch, cfg.widths[0]), (batch,)
+        y_dtype = jnp.int32
+        feat = cfg.widths[0]
+        classes = cfg.widths[-1]
+    elif kind == "lm":
+        loss_fn = lambda p, x, y: M.lm_loss(cfg, p, x, y)
+        eval_fn = M.make_lm_eval(cfg)
+        # tokens travel as f32 (b, seq+1); y is a dummy int32 scalar batch.
+        x_shape, y_shape = (batch, cfg.seq + 1), (batch,)
+        y_dtype = jnp.int32
+        feat = cfg.seq + 1
+        classes = cfg.vocab
+    else:
+        raise ValueError(kind)
+
+    d = cfg.d
+    grad_fn = M.make_loss_and_grad(loss_fn)
+    p_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct(x_shape, jnp.float32)
+    y_spec = jax.ShapeDtypeStruct(y_shape, y_dtype)
+
+    # keep_unused: the LM loss derives targets from x and ignores y; the
+    # rust runtime always passes (params, x, y), so keep the parameter.
+    grad_hlo = to_hlo_text(jax.jit(grad_fn, keep_unused=True).lower(p_spec, x_spec, y_spec))
+    eval_hlo = to_hlo_text(jax.jit(eval_fn, keep_unused=True).lower(p_spec, x_spec, y_spec))
+
+    entry = {
+        "name": name,
+        "kind": kind,
+        "d": int(d),
+        "batch": int(batch),
+        "feat": int(feat),
+        "classes": int(classes),
+        "x_shape": list(x_shape),
+        "y_shape": list(y_shape),
+        "grad_file": f"{name}.grad.hlo.txt",
+        "eval_file": f"{name}.eval.hlo.txt",
+        "eval_rows": int(x_shape[0]),
+    }
+    if kind == "lm":
+        entry["seq"] = int(cfg.seq)
+        entry["vocab"] = int(cfg.vocab)
+        entry["layer_sizes"] = [int(s) for s in cfg.layer_sizes()]
+    if kind == "mlp":
+        entry["widths"] = list(cfg.widths)
+    if kind == "softmax":
+        entry["lam"] = float(cfg.lam)
+    return entry, grad_hlo, eval_hlo
+
+
+def init_params_for(spec, seed=0):
+    kind, cfg = spec["kind"], spec["cfg"]
+    if kind == "mlp":
+        return M.mlp_init(cfg, seed)
+    if kind == "lm":
+        return M.lm_init(cfg, seed)
+    return jnp.zeros((cfg.d,), jnp.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="softmax,mlp,lm")
+    ap.add_argument("--with-init", action="store_true",
+                    help="also dump <name>.init.f32 raw initial parameters")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "models": []}
+    for name in [m.strip() for m in args.models.split(",") if m.strip()]:
+        spec = VARIANTS[name]
+        entry, grad_hlo, eval_hlo = build_variant(name, spec)
+        for fname, text in ((entry["grad_file"], grad_hlo), (entry["eval_file"], eval_hlo)):
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+        if args.with_init or spec["kind"] in ("mlp", "lm"):
+            import numpy as np
+
+            init = np.asarray(init_params_for(spec), dtype=np.float32)
+            ipath = os.path.join(args.out_dir, f"{name}.init.f32")
+            init.tofile(ipath)
+            entry["init_file"] = f"{name}.init.f32"
+            print(f"wrote {ipath} ({init.nbytes / 1e6:.2f} MB)")
+        entry["grad_sha"] = hashlib.sha256(grad_hlo.encode()).hexdigest()[:16]
+        manifest["models"].append(entry)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

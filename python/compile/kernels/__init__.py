@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .matmul_bias import linear, matmul_bias
+from .softmax_xent import softmax_xent, softmax_xent_fused
+
+__all__ = ["linear", "matmul_bias", "softmax_xent", "softmax_xent_fused"]

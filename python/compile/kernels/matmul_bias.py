@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: tiled matmul + bias (+ optional ReLU).
+
+TPU-idiomatic structure (DESIGN.md §7 Hardware-Adaptation): the grid walks
+(M/bm, N/bn, K/bk) tiles; each grid step moves one (bm, bk) tile of `x` and
+one (bk, bn) tile of `w` from HBM into VMEM (expressed by the BlockSpecs),
+accumulates a partial product in a f32 VMEM scratch accumulator via
+`jnp.dot(..., preferred_element_type=f32)` — the MXU systolic-array path —
+and writes the output tile once on the last K step, fusing bias add and the
+activation so the tile never round-trips to HBM in between.
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is both the correctness oracle path
+and the form embedded in the AOT artifacts. Real-TPU perf is estimated from
+the BlockSpec footprint in DESIGN.md §Perf.
+
+The differentiable wrapper `linear()` carries a custom VJP whose backward
+matmuls (dx = g·wᵀ, dw = xᵀ·g) reuse the same kernel, so the AOT-lowered
+training step runs Pallas in both the forward and backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes: multiples of the TPU native (8, 128) f32 tile; the MXU
+# is a 128x128 systolic array, so bm = bn = 128 feeds it fully while three
+# f32 buffers (x-tile, w-tile, acc) stay ≲ 0.6 MiB of VMEM.
+BM, BN, BK = 128, 128, 256
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, relu: bool, bias_ref=None):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pad_to(a, axis, mult):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "bk"))
+def matmul_bias(x, w, b=None, relu=False, bm=BM, bn=BN, bk=BK):
+    """y = x @ w (+ b) (+ ReLU) via the tiled Pallas kernel.
+
+    Shapes: x (m, k), w (k, n), b (n,) or None. Arbitrary sizes — inputs are
+    zero-padded up to tile multiples and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = min(bm, _ceil_mult(m, 8))
+    bn = min(bn, _ceil_mult(n, 128))
+    bk = min(bk, _ceil_mult(k, 128))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [xp, wp]
+    if b is not None:
+        bp = _pad_to(b.reshape(1, -1), 1, bn)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(bp)
+        kernel = functools.partial(_matmul_kernel_with_bias, nk=gk, relu=relu)
+    else:
+        kernel = functools.partial(_matmul_kernel, nk=gk, relu=relu)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(*args)
+    return out[:m, :n]
+
+
+def _matmul_kernel_with_bias(x_ref, w_ref, bias_ref, o_ref, acc_ref, *, nk, relu):
+    _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, nk=nk, relu=relu, bias_ref=bias_ref)
+
+
+def _ceil_mult(v, mult):
+    return max(mult, ((v + mult - 1) // mult) * mult)
+
+
+# -- differentiable wrapper ---------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, relu=False):
+    """Differentiable y = relu?(x @ w + b) backed by the Pallas kernel."""
+    return matmul_bias(x, w, b, relu=relu)
+
+
+def _linear_fwd(x, w, b, relu):
+    y = matmul_bias(x, w, b, relu=relu)
+    return y, (x, w, y)
+
+
+def _linear_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0)
+    # Backward matmuls reuse the same Pallas kernel (no bias, no relu).
+    dx = matmul_bias(g, w.T)
+    dw = matmul_bias(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels (run
+with interpret=True) match these references to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, relu=False):
+    """y = x @ w + b, optionally ReLU'd. x: (m, k), w: (k, n), b: (n,)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def softmax_xent_ref(logits, labels):
+    """Mean cross-entropy over rows plus row-wise softmax probabilities.
+
+    logits: (b, c) f32; labels: (b,) int32.
+    Returns (mean_loss: scalar, probs: (b, c)).
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    logp = z - lse
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll), jnp.exp(logp)

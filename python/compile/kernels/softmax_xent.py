@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused row-block softmax cross-entropy.
+
+One grid step processes a (br, C) block of logits entirely in VMEM: the
+row max, exp, row sum, log and the label gather all happen on-chip — the
+TPU analogue of the warp-level reductions a CUDA softmax kernel would use.
+Outputs the per-row negative log-likelihood and the softmax probabilities
+(saved for the backward pass: d logits = (p − onehot)/b).
+
+interpret=True: see matmul_bias.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 64  # rows per block
+
+
+def _softmax_xent_kernel(logits_ref, labels_ref, nll_ref, probs_ref):
+    z = logits_ref[...]  # (br, c)
+    labels = labels_ref[...]  # (br, 1) int32
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    logp = (z - m) - jnp.log(s)
+    probs_ref[...] = e / s
+    c = z.shape[-1]
+    onehot = labels == jax.lax.broadcasted_iota(jnp.int32, (z.shape[0], c), 1)
+    nll_ref[...] = -jnp.sum(jnp.where(onehot, logp, 0.0), axis=-1, keepdims=True)
+
+
+def _pad_rows(a, mult):
+    rem = (-a.shape[0]) % mult
+    if rem == 0:
+        return a
+    pad = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax_xent_fused(logits, labels, br=BR):
+    """Per-row NLL and probabilities via the fused Pallas kernel.
+
+    logits (b, c) f32, labels (b,) int — returns (nll (b,), probs (b, c)).
+    """
+    b, c = logits.shape
+    br = min(br, _ceil8(b))
+    lp = _pad_rows(logits, br)
+    # Pad labels with class 0; padded rows are sliced away below.
+    yp = _pad_rows(labels.astype(jnp.int32).reshape(-1, 1), br)
+    grid = (lp.shape[0] // br,)
+    nll, probs = pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lp.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((lp.shape[0], c), jnp.float32),
+        ],
+        interpret=True,
+    )(lp, yp)
+    return nll[:b, 0], probs[:b]
+
+
+def _ceil8(v):
+    return max(8, ((v + 7) // 8) * 8)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Differentiable mean cross-entropy over the batch (Pallas-fused)."""
+    nll, _ = softmax_xent_fused(logits, labels)
+    return jnp.mean(nll)
+
+
+def _sx_fwd(logits, labels):
+    nll, probs = softmax_xent_fused(logits, labels)
+    return jnp.mean(nll), (probs, labels)
+
+
+def _sx_bwd(res, g):
+    probs, labels = res
+    b, c = probs.shape
+    onehot = labels.astype(jnp.int32)[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (b, c), 1
+    )
+    dlogits = (probs - onehot.astype(probs.dtype)) * (g / b)
+    return dlogits, None
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

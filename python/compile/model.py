@@ -1,0 +1,281 @@
+"""L2 — JAX models over a *flat* f32 parameter vector.
+
+The rust coordinator owns model parameters as one flat Vec<f32> (the
+compression operators, error memories and the aggregation rule are all
+defined over flat vectors). Every model here therefore exposes:
+
+    loss_and_grad(params_flat, x, y) -> (loss, grad_flat)
+    evaluate(params_flat, x, y)      -> (loss, top1_errors, top5_errors)
+
+Each function is jitted and AOT-lowered by `aot.py` to HLO text, one
+artifact per (model, batch) configuration. The dense layers and the
+softmax cross-entropy run through the L1 Pallas kernels.
+
+Models:
+  * softmax — ℓ2-regularized softmax regression (paper §5.2.1, convex)
+  * mlp     — ReLU MLP classifier (non-convex stand-in; DESIGN.md §6)
+  * lm      — decoder-only transformer LM (end-to-end driver). Token
+              sequences cross the boundary as f32 and are floored to int
+              inside, so the rust engine's (f32 features, labels) batch
+              type carries them unchanged.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear, softmax_xent
+
+
+# -- softmax regression --------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SoftmaxConfig:
+    dim: int = 784
+    classes: int = 10
+    lam: float = 1.0 / 60000.0
+
+    @property
+    def d(self):
+        return (self.dim + 1) * self.classes
+
+    def unflatten(self, params):
+        w = params[: self.dim * self.classes].reshape(self.dim, self.classes)
+        z = params[self.dim * self.classes :]
+        return w, z
+
+
+def softmax_loss(cfg: SoftmaxConfig, params, x, y):
+    w, z = cfg.unflatten(params)
+    logits = linear(x, w, z)
+    loss = softmax_xent(logits, y)
+    return loss + 0.5 * cfg.lam * jnp.sum(w * w)
+
+
+def softmax_logits(cfg: SoftmaxConfig, params, x):
+    w, z = cfg.unflatten(params)
+    return linear(x, w, z)
+
+
+# -- MLP -----------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    widths: tuple = (784, 256, 10)
+
+    @property
+    def d(self):
+        return sum((i + 1) * o for i, o in zip(self.widths[:-1], self.widths[1:]))
+
+    def unflatten(self, params):
+        layers, off = [], 0
+        for i, o in zip(self.widths[:-1], self.widths[1:]):
+            w = params[off : off + i * o].reshape(i, o)
+            off += i * o
+            b = params[off : off + o]
+            off += o
+            layers.append((w, b))
+        return layers
+
+
+def mlp_logits(cfg: MlpConfig, params, x):
+    layers = cfg.unflatten(params)
+    h = x
+    for li, (w, b) in enumerate(layers):
+        h = linear(h, w, b, li + 1 < len(layers))
+    return h
+
+
+def mlp_loss(cfg: MlpConfig, params, x, y):
+    return softmax_xent(mlp_logits(cfg, params, x), y)
+
+
+def mlp_init(cfg: MlpConfig, seed: int):
+    """He init — mirrored by rust/src/grad/mlp.rs `init_params` (not bitwise:
+    each side seeds its own RNG; the engine never mixes the two)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i, o in zip(cfg.widths[:-1], cfg.widths[1:]):
+        key, k1 = jax.random.split(key)
+        chunks.append((jax.random.normal(k1, (i, o)) * (2.0 / i) ** 0.5).reshape(-1))
+        chunks.append(jnp.zeros((o,)))
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+# -- transformer LM --------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256
+    seq: int = 64
+    layers: int = 2
+    model_dim: int = 128
+    heads: int = 4
+    ffn_mult: int = 4
+
+    @property
+    def head_dim(self):
+        assert self.model_dim % self.heads == 0
+        return self.model_dim // self.heads
+
+    def shapes(self):
+        """Ordered (name, shape) of every parameter tensor."""
+        dm, v, s = self.model_dim, self.vocab, self.seq
+        f = self.ffn_mult * dm
+        out = [("tok_emb", (v, dm)), ("pos_emb", (s, dm))]
+        for l in range(self.layers):
+            out += [
+                (f"l{l}.ln1_g", (dm,)),
+                (f"l{l}.ln1_b", (dm,)),
+                (f"l{l}.wqkv", (dm, 3 * dm)),
+                (f"l{l}.bqkv", (3 * dm,)),
+                (f"l{l}.wo", (dm, dm)),
+                (f"l{l}.bo", (dm,)),
+                (f"l{l}.ln2_g", (dm,)),
+                (f"l{l}.ln2_b", (dm,)),
+                (f"l{l}.wf1", (dm, f)),
+                (f"l{l}.bf1", (f,)),
+                (f"l{l}.wf2", (f, dm)),
+                (f"l{l}.bf2", (dm,)),
+            ]
+        out += [("lnf_g", (dm,)), ("lnf_b", (dm,)), ("head", (dm, v)), ("head_b", (v,))]
+        return out
+
+    @property
+    def d(self):
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.shapes())
+
+    def unflatten(self, params):
+        tensors, off = {}, 0
+        for name, shape in self.shapes():
+            n = 1
+            for s in shape:
+                n *= s
+            tensors[name] = params[off : off + n].reshape(shape)
+            off += n
+        return tensors
+
+    def layer_sizes(self):
+        """Flat size per named tensor (for piecewise/per-layer compression)."""
+        sizes = []
+        for _, shape in self.shapes():
+            n = 1
+            for s in shape:
+                n *= s
+            sizes.append(n)
+        return sizes
+
+
+def _layernorm(h, g, b, eps=1e-5):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def lm_logits(cfg: LmConfig, params, tokens):
+    """tokens: (b, seq) int32 → logits (b, seq, vocab)."""
+    p = cfg.unflatten(params)
+    b, s = tokens.shape
+    dm, nh, hd = cfg.model_dim, cfg.heads, cfg.head_dim
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    for l in range(cfg.layers):
+        x1 = _layernorm(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        qkv = linear(x1.reshape(b * s, dm), p[f"l{l}.wqkv"], p[f"l{l}.bqkv"])
+        qkv = qkv.reshape(b, s, 3, nh, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd**0.5)
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, dm)
+        proj = linear(ctx.reshape(b * s, dm), p[f"l{l}.wo"], p[f"l{l}.bo"])
+        h = h + proj.reshape(b, s, dm)
+        x2 = _layernorm(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        f1 = linear(x2.reshape(b * s, dm), p[f"l{l}.wf1"], p[f"l{l}.bf1"], True)
+        f2 = linear(f1, p[f"l{l}.wf2"], p[f"l{l}.bf2"])
+        h = h + f2.reshape(b, s, dm)
+    h = _layernorm(h, p["lnf_g"], p["lnf_b"])
+    logits = linear(h.reshape(b * s, dm), p["head"], p["head_b"])
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def lm_loss(cfg: LmConfig, params, xtokens_f32, _y_unused):
+    """Next-token NLL. xtokens_f32: (b, seq+1) f32-encoded tokens."""
+    tokens = xtokens_f32.astype(jnp.int32)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_logits(cfg, params, inp)
+    b, s, v = logits.shape
+    return softmax_xent(logits.reshape(b * s, v), tgt.reshape(b * s))
+
+
+def lm_init(cfg: LmConfig, seed: int):
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in cfg.shapes():
+        key, k1 = jax.random.split(key)
+        if name.endswith(("_b", ".bqkv", ".bo", ".bf1", ".bf2")) or name.endswith("_g"):
+            init = jnp.ones(shape) if name.endswith("_g") else jnp.zeros(shape)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            init = jax.random.normal(k1, shape) * (1.0 / fan_in) ** 0.5
+        chunks.append(init.reshape(-1))
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+# -- shared loss/grad + eval wrappers -------------------------------------------
+
+
+def make_loss_and_grad(loss_fn):
+    """(params, x, y) → (loss, grad) as a single fused computation."""
+
+    def f(params, x, y):
+        loss, grad = jax.value_and_grad(loss_fn)(params, x, y)
+        return loss, grad
+
+    return f
+
+
+def make_classifier_eval(logits_fn, classes):
+    """(params, x, y) → (mean_loss, top1_errs, top5_errs) counts as f32."""
+
+    def f(params, x, y):
+        logits = logits_fn(params, x)
+        loss = softmax_xent(logits, y)
+        y = y.astype(jnp.int32)
+        ly = jnp.take_along_axis(logits, y[:, None], axis=-1)
+        # Rank with first-index tie-break (mirrors the rust substrates: at
+        # all-equal logits top-1 error must be (C−1)/C, not 0).
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        better = jnp.sum(
+            (logits > ly) | ((logits == ly) & (iota < y[:, None])), axis=-1
+        )
+        top1 = jnp.sum(better >= 1).astype(jnp.float32)
+        top5 = jnp.sum(better >= min(5, classes)).astype(jnp.float32)
+        return loss, top1, top5
+
+    return f
+
+
+def make_lm_eval(cfg: LmConfig):
+    def f(params, x, y):
+        tokens = x.astype(jnp.int32)
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits = lm_logits(cfg, params, inp)
+        b, s, v = logits.shape
+        flat, tflat = logits.reshape(b * s, v), tgt.reshape(b * s)
+        loss = softmax_xent(flat, tflat)
+        ly = jnp.take_along_axis(flat, tflat[:, None], axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, flat.shape, 1)
+        better = jnp.sum(
+            (flat > ly) | ((flat == ly) & (iota < tflat[:, None])), axis=-1
+        )
+        top1 = jnp.sum(better >= 1).astype(jnp.float32)
+        top5 = jnp.sum(better >= 5).astype(jnp.float32)
+        return loss, top1, top5
+
+    return f

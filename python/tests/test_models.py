@@ -1,0 +1,116 @@
+"""L2 model correctness: flat-parameter models vs independent references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("models", max_examples=10, deadline=None)
+settings.load_profile("models")
+
+
+def test_softmax_loss_at_zero_is_log_c():
+    cfg = M.SoftmaxConfig(dim=12, classes=7, lam=0.0)
+    r = np.random.RandomState(0)
+    x = r.randn(8, 12).astype(np.float32)
+    y = r.randint(0, 7, size=8).astype(np.int32)
+    loss = M.softmax_loss(cfg, jnp.zeros((cfg.d,), jnp.float32), jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(float(loss), np.log(7.0), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_softmax_grad_matches_pure_jnp(seed):
+    cfg = M.SoftmaxConfig(dim=9, classes=4, lam=0.01)
+    r = np.random.RandomState(seed)
+    p = (r.randn(cfg.d) * 0.3).astype(np.float32)
+    x = r.randn(6, 9).astype(np.float32)
+    y = r.randint(0, 4, size=6).astype(np.int32)
+
+    def ref_loss(p, x, y):
+        w = p[: 9 * 4].reshape(9, 4)
+        z = p[9 * 4 :]
+        logits = x @ w + z
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+        return nll + 0.5 * cfg.lam * jnp.sum(w * w)
+
+    g_model = jax.grad(lambda p: M.softmax_loss(cfg, p, jnp.array(x), jnp.array(y)))(jnp.array(p))
+    g_ref = jax.grad(ref_loss)(jnp.array(p), jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(g_model, g_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_dim_and_init():
+    cfg = M.MlpConfig(widths=(20, 16, 5))
+    assert cfg.d == 21 * 16 + 17 * 5
+    p = M.mlp_init(cfg, 0)
+    assert p.shape == (cfg.d,)
+    # biases zero, weights He-scaled
+    layers = cfg.unflatten(p)
+    for (w, b), fan_in in zip(layers, (20, 16)):
+        np.testing.assert_allclose(b, 0.0)
+        assert abs(float(jnp.std(w)) - (2.0 / fan_in) ** 0.5) < 0.3 * (2.0 / fan_in) ** 0.5
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mlp_learns_one_step(seed):
+    cfg = M.MlpConfig(widths=(10, 8, 3))
+    r = np.random.RandomState(seed)
+    x = r.randn(16, 10).astype(np.float32)
+    y = r.randint(0, 3, size=16).astype(np.int32)
+    p = M.mlp_init(cfg, seed % 1000)
+    f = M.make_loss_and_grad(lambda p, x, y: M.mlp_loss(cfg, p, x, y))
+    loss0, g = f(p, jnp.array(x), jnp.array(y))
+    p2 = p - 0.5 * g
+    loss1, _ = f(p2, jnp.array(x), jnp.array(y))
+    assert float(loss1) < float(loss0)
+
+
+def test_lm_shapes_and_loss_at_init():
+    cfg = M.LmConfig(vocab=50, seq=12, layers=1, model_dim=16, heads=2)
+    p = M.lm_init(cfg, 0)
+    assert p.shape == (cfg.d,)
+    r = np.random.RandomState(1)
+    toks = r.randint(0, 50, size=(3, 13)).astype(np.float32)
+    loss = M.lm_loss(cfg, p, jnp.array(toks), jnp.zeros((3,), jnp.int32))
+    # Near-uniform prediction at init.
+    assert abs(float(loss) - np.log(50.0)) < 0.3 * np.log(50.0)
+    logits = M.lm_logits(cfg, p, jnp.array(toks[:, :-1]).astype(jnp.int32))
+    assert logits.shape == (3, 12, 50)
+
+
+def test_lm_causality():
+    """Changing a future token must not affect past logits."""
+    cfg = M.LmConfig(vocab=30, seq=8, layers=1, model_dim=16, heads=2)
+    p = M.lm_init(cfg, 3)
+    r = np.random.RandomState(2)
+    toks = r.randint(0, 30, size=(1, 8)).astype(np.int32)
+    base = M.lm_logits(cfg, p, jnp.array(toks))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 7) % 30
+    pert = M.lm_logits(cfg, p, jnp.array(toks2))
+    np.testing.assert_allclose(base[0, :-1], pert[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[0, -1], pert[0, -1])
+
+
+def test_lm_layer_sizes_sum_to_d():
+    cfg = M.LmConfig(vocab=40, seq=6, layers=2, model_dim=8, heads=2)
+    assert sum(cfg.layer_sizes()) == cfg.d
+
+
+def test_classifier_eval_counts():
+    cfg = M.SoftmaxConfig(dim=4, classes=3, lam=0.0)
+    ev = M.make_classifier_eval(lambda p, x: M.softmax_logits(cfg, p, x), 3)
+    # Hand-crafted params: identity-ish weights → predictable argmax.
+    p = np.zeros(cfg.d, np.float32)
+    w = np.zeros((4, 3), np.float32)
+    w[0, 0] = w[1, 1] = w[2, 2] = 5.0
+    p[: 12] = w.reshape(-1)
+    x = np.eye(4, dtype=np.float32)[:3]  # rows predict class 0,1,2
+    y_right = np.array([0, 1, 2], np.int32)
+    y_wrong = np.array([1, 2, 0], np.int32)
+    _, top1_r, _ = ev(jnp.array(p), jnp.array(x), jnp.array(y_right))
+    _, top1_w, _ = ev(jnp.array(p), jnp.array(x), jnp.array(y_wrong))
+    assert float(top1_r) == 0.0
+    assert float(top1_w) == 3.0

@@ -1,0 +1,241 @@
+//! Composed operators: quantizer ∘ sparsifier (paper §2.3).
+//!
+//! * `QTopK` — QSGD applied to the Top_k (or Rand_k) subvector. Unscaled
+//!   (Lemma 1, requires β_{k,s} < 1 for the γ guarantee) or scaled by
+//!   1/(1+β_{k,s}) (Lemma 2, always a compression operator).
+//! * `SignTopK` — deterministic sign of the Top_k subvector scaled by
+//!   ‖Top_k(x)‖_m / k (Lemma 3).
+
+use super::quantize::Qsgd;
+use super::sparsify::top_k_indices;
+use super::{Compressor, Message};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{norm1, norm2};
+
+/// QSGD ∘ {Top_k | Rand_k}.
+#[derive(Clone, Debug)]
+pub struct QTopK {
+    pub k: usize,
+    pub q: Qsgd,
+    /// Apply the 1/(1+β_{k,s}) post-scale of Lemma 2.
+    pub scaled: bool,
+    /// Use Rand_k instead of Top_k as the sparsifier.
+    pub rand: bool,
+}
+
+impl QTopK {
+    pub fn new(k: usize, q: Qsgd, scaled: bool) -> Self {
+        assert!(k > 0);
+        QTopK { k, q, scaled, rand: false }
+    }
+
+    pub fn new_rand(k: usize, q: Qsgd, scaled: bool) -> Self {
+        assert!(k > 0);
+        QTopK { k, q, scaled, rand: true }
+    }
+
+    /// β_{k,s}: the quantizer's blow-up evaluated at the *sparsified*
+    /// dimension k (Lemma 1 treats Comp_k(x) as a length-k vector).
+    pub fn beta_k(&self) -> f64 {
+        self.q.beta(self.k)
+    }
+}
+
+impl Compressor for QTopK {
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        let d = x.len();
+        let k = self.k.min(d);
+        let idx: Vec<u32> = if self.rand {
+            let mut v: Vec<u32> = rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+            v.sort_unstable();
+            v
+        } else {
+            top_k_indices(x, k)
+        };
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        let (norms, levels, neg) = self.q.quantize_values(&vals, rng);
+        let post_scale = if self.scaled {
+            (1.0 / (1.0 + self.beta_k())) as f32
+        } else {
+            1.0
+        };
+        Message::Qsgd {
+            d,
+            s: self.q.s,
+            bucket: self.q.bucket as u32,
+            norms,
+            post_scale,
+            idx: Some(idx),
+            levels,
+            neg,
+        }
+    }
+
+    fn gamma(&self, d: usize) -> f64 {
+        let k = self.k.min(d) as f64;
+        let d = d.max(1) as f64;
+        let beta = self.beta_k();
+        if self.scaled {
+            // Lemma 2: γ = k / (d(1+β)) — valid for all β.
+            k / (d * (1.0 + beta))
+        } else {
+            // Lemma 1: γ = (1 − β) k/d — requires β < 1.
+            ((1.0 - beta) * k / d).max(0.0)
+        }
+    }
+
+    fn name(&self) -> String {
+        let bits = 32 - self.q.s.leading_zeros();
+        let sp = if self.rand { "randk" } else { "topk" };
+        if self.scaled {
+            format!("q{sp}_scaled(k={},{}bit)", self.k, bits)
+        } else {
+            format!("q{sp}(k={},{}bit)", self.k, bits)
+        }
+    }
+}
+
+/// Sign ∘ Top_k with m-norm scaling (Lemma 3):
+/// C(x) = (‖Top_k(x)‖_m / k) · SignTop_k(x).
+#[derive(Clone, Debug)]
+pub struct SignTopK {
+    pub k: usize,
+    /// Norm index m ∈ {1, 2}; the paper's experiments use m = 1.
+    pub m: u32,
+}
+
+impl SignTopK {
+    pub fn new(k: usize, m: u32) -> Self {
+        assert!(k > 0);
+        assert!(m >= 1, "m must be a positive integer");
+        SignTopK { k, m }
+    }
+}
+
+impl Compressor for SignTopK {
+    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
+        let d = x.len();
+        let k = self.k.min(d);
+        let idx = top_k_indices(x, k);
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        let nm = match self.m {
+            1 => norm1(&vals),
+            2 => norm2(&vals),
+            m => vals.iter().map(|v| (v.abs() as f64).powi(m as i32)).sum::<f64>().powf(1.0 / m as f64),
+        };
+        let scale = (nm / k as f64) as f32;
+        let neg = vals.iter().map(|&v| v < 0.0).collect();
+        Message::SparseSign { d, scale, idx, neg }
+    }
+
+    fn gamma(&self, d: usize) -> f64 {
+        let k = self.k.min(d) as f64;
+        let d = d.max(1) as f64;
+        match self.m {
+            // Lemma 3, m = 1: γ ≥ 1/d (the max's first term; the second term
+            // is data-dependent).
+            1 => 1.0 / d,
+            // m ≥ 2: γ = k^{2/m − 1} / d.
+            m => k.powf(2.0 / m as f64 - 1.0) / d,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("signtopk(k={},m={})", self.k, self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::norm2_sq;
+
+    #[test]
+    fn qtopk_support_is_topk() {
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let mut rng = Pcg64::seeded(20);
+        let op = QTopK::new(3, Qsgd::from_bits(8), false);
+        match op.compress(&x, &mut rng) {
+            Message::Qsgd { idx: Some(idx), .. } => assert_eq!(idx, vec![1, 3, 5]),
+            _ => panic!("wrong message"),
+        }
+    }
+
+    #[test]
+    fn qtopk_fine_quantizer_close_to_topk() {
+        // With many levels, QTop_k(x) ≈ Top_k(x).
+        let mut rng = Pcg64::seeded(21);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let op = QTopK::new(32, Qsgd::from_bits(12), false);
+        let dense = op.compress(&x, &mut rng).to_dense();
+        let topk = super::super::sparsify::TopK::new(32)
+            .compress(&x, &mut rng)
+            .to_dense();
+        let diff: Vec<f32> = dense.iter().zip(&topk).map(|(a, b)| a - b).collect();
+        assert!(norm2_sq(&diff) < 1e-4 * norm2_sq(&topk));
+    }
+
+    #[test]
+    fn qtopk_compression_property_empirical() {
+        // E‖x − C(x)‖² ≤ (1 − γ)‖x‖² with γ from Lemma 1 / Lemma 2.
+        let mut rng = Pcg64::seeded(22);
+        let d = 128;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for scaled in [false, true] {
+            let op = QTopK::new(16, Qsgd::from_bits(4), scaled); // β_{16,15} < 1
+            let gamma = op.gamma(d);
+            assert!(gamma > 0.0);
+            let trials = 4000;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let dense = op.compress(&x, &mut rng).to_dense();
+                let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+                acc += norm2_sq(&resid);
+            }
+            let mean = acc / trials as f64;
+            let bound = (1.0 - gamma) * norm2_sq(&x);
+            assert!(mean <= bound * 1.03, "scaled={scaled}: {mean} > {bound}");
+        }
+    }
+
+    #[test]
+    fn scaled_gamma_beats_unscaled_when_beta_lt_1() {
+        // Remark 2: (1−β)k/d < k/(d(1+β)) whenever 0 < β < 1.
+        let unscaled = QTopK::new(16, Qsgd::from_bits(4), false);
+        let scaled = QTopK::new(16, Qsgd::from_bits(4), true);
+        assert!(unscaled.beta_k() < 1.0);
+        assert!(scaled.gamma(1024) > unscaled.gamma(1024));
+    }
+
+    #[test]
+    fn signtopk_value_and_compression() {
+        let x = vec![4.0f32, -2.0, 1.0, 0.5];
+        let mut rng = Pcg64::seeded(23);
+        let op = SignTopK::new(2, 1);
+        let m = op.compress(&x, &mut rng);
+        // Top_2 = {4, -2}; ‖·‖₁ = 6; scale = 3.
+        match &m {
+            Message::SparseSign { scale, idx, neg, .. } => {
+                assert_eq!(idx, &vec![0, 1]);
+                assert_eq!(neg, &vec![false, true]);
+                assert!((scale - 3.0).abs() < 1e-6);
+            }
+            _ => panic!("wrong message"),
+        }
+        // Deterministic compression property with γ from Lemma 3 (m=1 uses the
+        // data-dependent second term; here the max evaluates to
+        // (k/d)(‖v‖₁/(√k‖v‖₂))² = (2/4)·(6/(√2·√20))² = 0.45).
+        let dense = m.to_dense();
+        let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+        let v_n1: f64 = 6.0;
+        let v_n2_sq: f64 = 20.0;
+        let gamma_data = (2.0 / 4.0) * v_n1 * v_n1 / (2.0 * v_n2_sq);
+        assert!(norm2_sq(&resid) <= (1.0 - gamma_data) * norm2_sq(&x) + 1e-6);
+    }
+
+    #[test]
+    fn signtopk_m2_gamma() {
+        let op = SignTopK::new(16, 2);
+        assert!((op.gamma(256) - 1.0 / 256.0).abs() < 1e-12); // k^0/d
+    }
+}

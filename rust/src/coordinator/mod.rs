@@ -1,0 +1,83 @@
+//! Threaded master/worker runtime.
+//!
+//! The engine (`engine::`) proves the algorithms deterministically; this
+//! module runs them as an actual distributed system: one OS thread per
+//! worker plus a master thread, communicating exclusively through mpsc
+//! channels carrying *encoded* wire messages (`compress::encode`). The
+//! master decodes each update, folds it into the global model, and replies
+//! with the fresh model — exactly the Algorithm 1/2 message pattern, so the
+//! wire format, bit accounting and error-feedback logic are exercised
+//! end-to-end under real concurrency.
+//!
+//! Because `GradModel` implementations may be `!Send` (PJRT wraps an `Rc`
+//! client), every thread constructs its own model through a `Send + Clone`
+//! factory.
+
+mod master;
+mod worker;
+
+pub use master::run_threaded;
+
+use crate::compress::Compressor;
+use crate::data::Sharding;
+use crate::optim::LrSchedule;
+use crate::topology::SyncSchedule;
+use std::sync::Arc;
+
+/// Configuration for a threaded run (mirrors `engine::TrainSpec` minus the
+/// borrowed references, which don't work across threads).
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub batch: usize,
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    pub compressor: Arc<dyn Compressor>,
+    pub schedule: Arc<dyn SyncSchedule>,
+    pub sharding: Sharding,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_rows: usize,
+    /// Initial parameters (zeros if None).
+    pub init: Option<Vec<f32>>,
+}
+
+impl CoordinatorConfig {
+    pub fn new(compressor: Arc<dyn Compressor>, schedule: Arc<dyn SyncSchedule>) -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            batch: 8,
+            steps: 100,
+            lr: LrSchedule::Const { eta: 0.1 },
+            momentum: 0.0,
+            compressor,
+            schedule,
+            sharding: Sharding::Iid,
+            seed: 0,
+            eval_every: 10,
+            eval_rows: 256,
+            init: None,
+        }
+    }
+}
+
+/// Worker → master: an encoded compressed update.
+pub(crate) struct UpdateMsg {
+    pub worker: usize,
+    /// Global-clock step at which the worker synchronized.
+    pub step: usize,
+    pub bytes: Vec<u8>,
+    pub bit_len: u64,
+}
+
+/// Worker → master control messages.
+pub(crate) enum ToMaster {
+    Update(UpdateMsg),
+    Finished(#[allow(dead_code)] usize),
+}
+
+/// Master → worker: the fresh global model after aggregation.
+pub(crate) struct ModelMsg {
+    pub params: Vec<f32>,
+}

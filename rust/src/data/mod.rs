@@ -1,0 +1,313 @@
+//! Datasets, synthetic generators and worker sharding.
+//!
+//! The sandbox has no dataset downloads, so the paper's MNIST/ImageNet
+//! workloads are substituted by synthetic classification data with matched
+//! dimensions (DESIGN.md §6): `gaussian_clusters` draws class means on a
+//! sphere and samples isotropic Gaussians around them — a 10-class problem
+//! with 784 features reproduces the d = (784+1)·10 = 7850 softmax geometry
+//! of the paper's convex experiments.
+
+use crate::util::rng::Pcg64;
+
+/// An in-memory classification dataset: row-major features + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather rows `idx` into a dense batch (x: b×dim, y: b).
+    pub fn gather(&self, idx: &[usize]) -> Batch {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.labels[i]);
+        }
+        Batch { x, y, b: idx.len(), dim: self.dim }
+    }
+}
+
+/// A minibatch (row-major features).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+    pub b: usize,
+    pub dim: usize,
+}
+
+/// Synthetic multi-class data: class means drawn N(0, I)·sep, points
+/// N(mean, noise²·I). Labels balanced round-robin.
+pub fn gaussian_clusters(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    sep: f32,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg64::new(seed, 77);
+    let mut means = vec![0.0f32; classes * dim];
+    rng.fill_normal(&mut means, sep);
+    let mut features = vec![0.0f32; n * dim];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        labels.push(c as u32);
+        let row = &mut features[i * dim..(i + 1) * dim];
+        rng.fill_normal(row, noise);
+        for (r, m) in row.iter_mut().zip(&means[c * dim..(c + 1) * dim]) {
+            *r += *m;
+        }
+    }
+    // Shuffle rows so shards are not trivially ordered by class.
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut ds = Dataset { features: vec![0.0; n * dim], labels: vec![0; n], n, dim, classes };
+    for (dst, &src) in perm.iter().enumerate() {
+        ds.features[dst * dim..(dst + 1) * dim]
+            .copy_from_slice(&features[src * dim..(src + 1) * dim]);
+        ds.labels[dst] = labels[src];
+    }
+    ds
+}
+
+/// As `gaussian_clusters`, but returns a (train, test) pair drawn from the
+/// *same* class means (generate once, split) — the correct held-out setup.
+pub fn gaussian_clusters_split(
+    n_train: usize,
+    n_test: usize,
+    dim: usize,
+    classes: usize,
+    sep: f32,
+    noise: f32,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let full = gaussian_clusters(n_train + n_test, dim, classes, sep, noise, seed);
+    let train_idx: Vec<usize> = (0..n_train).collect();
+    let test_idx: Vec<usize> = (n_train..n_train + n_test).collect();
+    let take = |idx: &[usize]| {
+        let b = full.gather(idx);
+        Dataset {
+            features: b.x,
+            labels: b.y,
+            n: idx.len(),
+            dim,
+            classes,
+        }
+    };
+    (take(&train_idx), take(&test_idx))
+}
+
+/// Synthetic next-token corpus for the transformer driver: integer tokens
+/// with a planted bigram structure so the LM loss has signal to descend.
+pub fn synthetic_corpus(n_tokens: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg64::new(seed, 99);
+    // Random sparse bigram table: each token has a small set of likely successors.
+    let succ: Vec<[u32; 4]> = (0..vocab)
+        .map(|_| {
+            [
+                rng.below(vocab as u64) as u32,
+                rng.below(vocab as u64) as u32,
+                rng.below(vocab as u64) as u32,
+                rng.below(vocab as u64) as u32,
+            ]
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n_tokens);
+    let mut cur = rng.below(vocab as u64) as u32;
+    for _ in 0..n_tokens {
+        out.push(cur);
+        cur = if rng.f32() < 0.8 {
+            succ[cur as usize][rng.below(4) as usize]
+        } else {
+            rng.below(vocab as u64) as u32
+        };
+    }
+    out
+}
+
+/// How a dataset is partitioned across R workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Round-robin rows (IID shards).
+    Iid,
+    /// Sort by label, then contiguous blocks (pathological heterogeneity —
+    /// the federated-learning stress case).
+    LabelSkew,
+}
+
+/// Partition row indices across workers.
+pub fn shard_indices(ds: &Dataset, workers: usize, sharding: Sharding) -> Vec<Vec<usize>> {
+    assert!(workers >= 1);
+    let order: Vec<usize> = match sharding {
+        Sharding::Iid => (0..ds.n).collect(),
+        Sharding::LabelSkew => {
+            let mut idx: Vec<usize> = (0..ds.n).collect();
+            idx.sort_by_key(|&i| ds.labels[i]);
+            idx
+        }
+    };
+    let mut shards = vec![Vec::with_capacity(ds.n / workers + 1); workers];
+    match sharding {
+        Sharding::Iid => {
+            for (j, &i) in order.iter().enumerate() {
+                shards[j % workers].push(i);
+            }
+        }
+        Sharding::LabelSkew => {
+            let per = ds.n.div_ceil(workers);
+            for (j, &i) in order.iter().enumerate() {
+                shards[(j / per).min(workers - 1)].push(i);
+            }
+        }
+    }
+    shards
+}
+
+/// Per-worker uniform-with-replacement minibatch sampler over a shard
+/// (matches the paper: "i_t^(r) is a mini-batch of size b uniformly in D_r").
+#[derive(Clone, Debug)]
+pub struct ShardSampler {
+    shard: Vec<usize>,
+    rng: Pcg64,
+    pub batch: usize,
+}
+
+impl ShardSampler {
+    pub fn new(shard: Vec<usize>, batch: usize, seed: u64, worker: usize) -> Self {
+        assert!(!shard.is_empty(), "empty shard for worker {worker}");
+        ShardSampler { shard, rng: Pcg64::new(seed ^ 0xbeef, worker as u64 + 101), batch }
+    }
+
+    pub fn next_batch(&mut self, ds: &Dataset) -> Batch {
+        let idx: Vec<usize> = (0..self.batch)
+            .map(|_| self.shard[self.rng.below_usize(self.shard.len())])
+            .collect();
+        ds.gather(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_shapes_and_balance() {
+        let ds = gaussian_clusters(1000, 16, 10, 1.0, 0.3, 42);
+        assert_eq!(ds.n, 1000);
+        assert_eq!(ds.features.len(), 1000 * 16);
+        let mut counts = [0usize; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn clusters_are_separable_by_nearest_mean() {
+        // With large separation and small noise a trivial classifier works —
+        // sanity check that labels correlate with geometry.
+        let ds = gaussian_clusters(500, 8, 5, 2.0, 0.1, 7);
+        // Recompute class means from the data itself.
+        let mut means = vec![0.0f64; 5 * 8];
+        let mut counts = [0usize; 5];
+        for i in 0..ds.n {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..8 {
+                means[c * 8 + j] += ds.row(i)[j] as f64;
+            }
+        }
+        for c in 0..5 {
+            for j in 0..8 {
+                means[c * 8 + j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.n {
+            let mut best = (f64::MAX, 0usize);
+            for c in 0..5 {
+                let d2: f64 = (0..8)
+                    .map(|j| (ds.row(i)[j] as f64 - means[c * 8 + j]).powi(2))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            correct += usize::from(best.1 == ds.labels[i] as usize);
+        }
+        assert!(correct as f64 / ds.n as f64 > 0.95);
+    }
+
+    #[test]
+    fn iid_shards_partition() {
+        let ds = gaussian_clusters(103, 4, 3, 1.0, 0.5, 1);
+        let shards = shard_indices(&ds, 4, Sharding::Iid);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn label_skew_concentrates_labels() {
+        let ds = gaussian_clusters(1000, 4, 10, 1.0, 0.5, 2);
+        let shards = shard_indices(&ds, 10, Sharding::LabelSkew);
+        // Each shard should be dominated by ~1 label.
+        for shard in &shards {
+            let mut counts = [0usize; 10];
+            for &i in shard {
+                counts[ds.labels[i] as usize] += 1;
+            }
+            let max = *counts.iter().max().unwrap();
+            assert!(max * 10 >= shard.len() * 9, "shard not skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn sampler_batches_from_own_shard() {
+        let ds = gaussian_clusters(100, 4, 2, 1.0, 0.5, 3);
+        let shards = shard_indices(&ds, 2, Sharding::Iid);
+        let allowed: std::collections::HashSet<Vec<u8>> = shards[0]
+            .iter()
+            .map(|&i| ds.row(i).iter().flat_map(|f| f.to_le_bytes()).collect())
+            .collect();
+        let mut s = ShardSampler::new(shards[0].clone(), 8, 9, 0);
+        for _ in 0..5 {
+            let b = s.next_batch(&ds);
+            assert_eq!(b.b, 8);
+            for r in 0..b.b {
+                let row: Vec<u8> = b.x[r * 4..(r + 1) * 4]
+                    .iter()
+                    .flat_map(|f| f.to_le_bytes())
+                    .collect();
+                assert!(allowed.contains(&row));
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_token_range() {
+        let toks = synthetic_corpus(10_000, 64, 5);
+        assert_eq!(toks.len(), 10_000);
+        assert!(toks.iter().all(|&t| t < 64));
+        // Bigram structure: repeated pairs occur far above uniform chance.
+        let mut pair_counts = std::collections::HashMap::new();
+        for w in toks.windows(2) {
+            *pair_counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let max_pair = pair_counts.values().copied().max().unwrap();
+        assert!(max_pair > 10, "no planted structure: {max_pair}");
+    }
+}

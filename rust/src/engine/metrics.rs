@@ -1,0 +1,153 @@
+//! Run metrics: the series the paper's figures plot.
+
+use crate::util::json::Json;
+
+/// One recorded point along a training run.
+#[derive(Clone, Debug)]
+pub struct MetricPoint {
+    /// Global-clock step (0 = initialization).
+    pub step: usize,
+    /// Mean loss of the *master* model on the fixed train eval subset.
+    pub train_loss: f64,
+    /// Top-1 test error of the master model (NaN if no test set).
+    pub test_err: f64,
+    /// Top-5 test error (NaN if no test set).
+    pub test_top5_err: f64,
+    /// Cumulative uplink bits (worker → master), exact wire encoding.
+    pub bits_up: u64,
+    /// Cumulative downlink bits (master → worker model broadcasts).
+    pub bits_down: u64,
+    /// Average squared error-memory norm across workers (Lemma 4/5 probe).
+    pub mem_norm_sq: f64,
+}
+
+/// History of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub points: Vec<MetricPoint>,
+    pub final_params: Vec<f32>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: MetricPoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map_or(f64::NAN, |p| p.train_loss)
+    }
+
+    pub fn total_bits_up(&self) -> u64 {
+        self.points.last().map_or(0, |p| p.bits_up)
+    }
+
+    /// First cumulative uplink bit count at which `train_loss ≤ target`
+    /// (the paper's “bits to reach target loss”); None if never reached.
+    pub fn bits_to_loss(&self, target: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| p.train_loss <= target)
+            .map(|p| p.bits_up)
+    }
+
+    /// First cumulative uplink bits at which `test_err ≤ target`.
+    pub fn bits_to_test_err(&self, target: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| !p.test_err.is_nan() && p.test_err <= target)
+            .map(|p| p.bits_up)
+    }
+
+    /// Minimum train loss seen.
+    pub fn best_loss(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.train_loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// CSV with a stable header; used by the figure harness.
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("step,train_loss,test_err,test_top5_err,bits_up,bits_down,mem_norm_sq\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{},{},{:.6e}\n",
+                p.step, p.train_loss, p.test_err, p.test_top5_err, p.bits_up, p.bits_down,
+                p.mem_norm_sq
+            ));
+        }
+        out
+    }
+
+    /// JSON summary (used by `qsparse train --json`).
+    pub fn summary_json(&self, name: &str, wall_secs: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("steps", Json::from(self.points.last().map_or(0, |p| p.step))),
+            ("final_loss", Json::num(self.final_loss())),
+            ("best_loss", Json::num(self.best_loss())),
+            (
+                "final_test_err",
+                Json::num(self.points.last().map_or(f64::NAN, |p| p.test_err)),
+            ),
+            ("bits_up", Json::from(self.total_bits_up())),
+            (
+                "bits_down",
+                Json::from(self.points.last().map_or(0, |p| p.bits_down)),
+            ),
+            ("wall_secs", Json::num(wall_secs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(steps: &[(usize, f64, u64)]) -> History {
+        let mut h = History::new();
+        for &(step, loss, bits) in steps {
+            h.push(MetricPoint {
+                step,
+                train_loss: loss,
+                test_err: loss / 2.0,
+                test_top5_err: loss / 4.0,
+                bits_up: bits,
+                bits_down: 0,
+                mem_norm_sq: 0.0,
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn bits_to_loss_finds_first_crossing() {
+        let h = mk(&[(0, 2.0, 0), (10, 1.0, 100), (20, 0.5, 200), (30, 0.4, 300)]);
+        assert_eq!(h.bits_to_loss(1.0), Some(100));
+        assert_eq!(h.bits_to_loss(0.45), Some(300));
+        assert_eq!(h.bits_to_loss(0.1), None);
+        assert_eq!(h.bits_to_test_err(0.25), Some(200));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let h = mk(&[(0, 2.0, 0), (5, 1.5, 64)]);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("step,train_loss"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let h = mk(&[(0, 2.0, 0), (5, 1.5, 64)]);
+        let j = h.summary_json("test", 1.0);
+        assert_eq!(j.get("steps").as_usize(), Some(5));
+        assert_eq!(j.get("bits_up").as_usize(), Some(64));
+        assert!(j.get("final_loss").as_f64().unwrap() - 1.5 < 1e-12);
+    }
+}

@@ -1,0 +1,338 @@
+//! Deterministic simulation engine for Algorithms 1 and 2.
+//!
+//! The engine advances a global clock t = 0..T. At every tick each worker
+//! takes one local SGD(+momentum) step on its shard; workers whose schedule
+//! fires at t compress their net progress (with error feedback) and the
+//! master folds the received messages into the global model:
+//!
+//!   x_{t+1} = x_t − (1/R) Σ_{r ∈ S_t} g_t^{(r)}      (Alg 1 line 18 / Alg 2 line 19)
+//!
+//! With a `FixedPeriod` schedule this is exactly Algorithm 1; with
+//! `RandomGaps` it is Algorithm 2. With `Identity` + H = 1 it degenerates to
+//! vanilla distributed SGD (validated bit-for-bit in tests).
+//!
+//! The same worker/master arithmetic is reused by the threaded runtime in
+//! `coordinator::`; the engine exists so experiments are reproducible from a
+//! single seed and independent of thread interleaving.
+
+pub mod metrics;
+
+pub use metrics::{History, MetricPoint};
+
+use crate::compress::{Compressor, ErrorMemory};
+use crate::data::{shard_indices, Batch, Dataset, ShardSampler, Sharding};
+use crate::grad::GradModel;
+use crate::optim::{LocalSgd, LrSchedule};
+use crate::topology::SyncSchedule;
+use crate::util::rng::Pcg64;
+
+/// Full specification of a training run.
+pub struct TrainSpec<'a> {
+    pub model: &'a dyn GradModel,
+    pub train: &'a Dataset,
+    /// Held-out set for test error; `None` disables test metrics.
+    pub test: Option<&'a Dataset>,
+    pub workers: usize,
+    /// Per-worker minibatch size b.
+    pub batch: usize,
+    /// Global-clock steps T.
+    pub steps: usize,
+    pub lr: LrSchedule,
+    /// Momentum applied to the local iterations (paper §5.1.1); 0 disables.
+    pub momentum: f64,
+    pub compressor: &'a dyn Compressor,
+    pub schedule: &'a dyn SyncSchedule,
+    pub sharding: Sharding,
+    pub seed: u64,
+    /// Record metrics every `eval_every` steps (and at the last step).
+    pub eval_every: usize,
+    /// Rows subsampled for loss/error evaluation (caps eval cost).
+    pub eval_rows: usize,
+}
+
+impl<'a> TrainSpec<'a> {
+    /// Reasonable defaults for the common fields; callers override the rest.
+    pub fn new(
+        model: &'a dyn GradModel,
+        train: &'a Dataset,
+        compressor: &'a dyn Compressor,
+        schedule: &'a dyn SyncSchedule,
+    ) -> Self {
+        TrainSpec {
+            model,
+            train,
+            test: None,
+            workers: 4,
+            batch: 8,
+            steps: 100,
+            lr: LrSchedule::Const { eta: 0.1 },
+            momentum: 0.0,
+            compressor,
+            schedule,
+            sharding: Sharding::Iid,
+            seed: 0,
+            eval_every: 10,
+            eval_rows: 512,
+        }
+    }
+}
+
+/// Mutable per-worker state during a run.
+struct WorkerState {
+    /// x̂_t^{(r)} — local iterate.
+    local: Vec<f32>,
+    /// x_t^{(r)} — the last global model this worker received (its sync
+    /// anchor; in Alg 1 this equals the master's x_t at sync points).
+    anchor: Vec<f32>,
+    memory: ErrorMemory,
+    opt: LocalSgd,
+    sampler: ShardSampler,
+    rng: Pcg64,
+    grad_buf: Vec<f32>,
+}
+
+/// Run a full training job; returns the metric history and final model.
+pub fn run(spec: &TrainSpec) -> History {
+    let d = spec.model.dim();
+    assert!(spec.workers >= 1);
+    // x_0 = 0 (the paper's convex runs); non-convex callers use `run_from`
+    // with a model-appropriate init.
+    run_from(spec, vec![0.0f32; d])
+}
+
+/// As `run`, but from explicit initial parameters (used by the non-convex
+/// figures, which need a proper MLP init).
+pub fn run_from(spec: &TrainSpec, mut global: Vec<f32>) -> History {
+    let d = spec.model.dim();
+    assert_eq!(global.len(), d);
+    let r_count = spec.workers;
+    let shards = shard_indices(spec.train, r_count, spec.sharding);
+
+    let mut workers: Vec<WorkerState> = (0..r_count)
+        .map(|r| WorkerState {
+            local: global.clone(),
+            anchor: global.clone(),
+            memory: ErrorMemory::zeros(d),
+            opt: LocalSgd::new(d, spec.momentum, 0.0),
+            sampler: ShardSampler::new(shards[r].clone(), spec.batch, spec.seed, r),
+            rng: Pcg64::new(spec.seed ^ 0xc0ffee, r as u64 + 1),
+            grad_buf: vec![0.0f32; d],
+        })
+        .collect();
+
+    let eval = EvalSets::new(spec);
+    let mut history = History::new();
+    let mut bits_up: u64 = 0;
+    let mut bits_down: u64 = 0;
+    let mut delta = vec![0.0f32; d];
+
+    // t = 0 snapshot.
+    history.push(eval.measure(spec, 0, &global, bits_up, bits_down, avg_mem(&workers)));
+
+    for t in 0..spec.steps {
+        let eta = spec.lr.at(t);
+        // -- workers: one local step each ------------------------------------
+        for w in workers.iter_mut() {
+            let batch = w.sampler.next_batch(spec.train);
+            spec.model.loss_grad(&w.local, &batch, &mut w.grad_buf);
+            w.opt.step(&mut w.local, &w.grad_buf, eta);
+        }
+        // -- synchronization -------------------------------------------------
+        let mut any_sync = false;
+        for (r, w) in workers.iter_mut().enumerate() {
+            if !spec.schedule.syncs_at(r, t) {
+                continue;
+            }
+            any_sync = true;
+            // delta = x_anchor − x̂_{t+1/2}  (net local progress, Alg 1 line 8)
+            for ((dv, a), l) in delta.iter_mut().zip(&w.anchor).zip(&w.local) {
+                *dv = a - l;
+            }
+            let msg = w.memory.compress_update(&delta, spec.compressor, &mut w.rng);
+            bits_up += msg.wire_bits();
+            // master: x ← x − (1/R) g
+            msg.add_into(&mut global, -1.0 / r_count as f32);
+        }
+        if any_sync {
+            // master broadcasts the new model to the workers that synced.
+            for (r, w) in workers.iter_mut().enumerate() {
+                if spec.schedule.syncs_at(r, t) {
+                    w.local.copy_from_slice(&global);
+                    w.anchor.copy_from_slice(&global);
+                    bits_down += 32 * d as u64;
+                }
+            }
+        }
+        // -- metrics ----------------------------------------------------------
+        let step = t + 1;
+        if step % spec.eval_every == 0 || step == spec.steps {
+            history.push(eval.measure(spec, step, &global, bits_up, bits_down, avg_mem(&workers)));
+        }
+    }
+
+    history.final_params = global;
+    history
+}
+
+fn avg_mem(workers: &[WorkerState]) -> f64 {
+    workers.iter().map(|w| w.memory.norm_sq()).sum::<f64>() / workers.len() as f64
+}
+
+/// Fixed evaluation subsets (deterministic, shared by every series in a
+/// figure so curves are comparable).
+struct EvalSets {
+    train_batch: Batch,
+    test_batch: Option<Batch>,
+}
+
+impl EvalSets {
+    fn new(spec: &TrainSpec) -> Self {
+        let mut rng = Pcg64::new(spec.seed ^ 0xe7a1, 5);
+        let take = spec.eval_rows.min(spec.train.n);
+        let idx = rng.sample_indices(spec.train.n, take);
+        let train_batch = spec.train.gather(&idx);
+        let test_batch = spec.test.map(|ts| {
+            let take = spec.eval_rows.min(ts.n);
+            let idx = rng.sample_indices(ts.n, take);
+            ts.gather(&idx)
+        });
+        EvalSets { train_batch, test_batch }
+    }
+
+    fn measure(
+        &self,
+        spec: &TrainSpec,
+        step: usize,
+        params: &[f32],
+        bits_up: u64,
+        bits_down: u64,
+        mem_norm_sq: f64,
+    ) -> MetricPoint {
+        let train_loss = spec.model.loss(params, &self.train_batch);
+        let (test_err, test_top5_err) = match &self.test_batch {
+            Some(tb) => (
+                spec.model.error_rate(params, tb),
+                spec.model.topn_error_rate(params, tb, 5),
+            ),
+            None => (f64::NAN, f64::NAN),
+        };
+        MetricPoint {
+            step,
+            train_loss,
+            test_err,
+            test_top5_err,
+            bits_up,
+            bits_down,
+            mem_norm_sq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+    use crate::data::gaussian_clusters;
+    use crate::grad::SoftmaxRegression;
+    use crate::topology::FixedPeriod;
+
+    fn small_setup() -> (Dataset, SoftmaxRegression) {
+        let ds = gaussian_clusters(240, 10, 4, 2.0, 0.4, 33);
+        let model = SoftmaxRegression::new(10, 4, 1.0 / 240.0);
+        (ds, model)
+    }
+
+    #[test]
+    fn vanilla_sgd_decreases_loss() {
+        let (ds, model) = small_setup();
+        let id = Identity;
+        let sched = FixedPeriod::new(1);
+        let mut spec = TrainSpec::new(&model, &ds, &id, &sched);
+        spec.workers = 4;
+        spec.steps = 150;
+        spec.lr = LrSchedule::Const { eta: 0.5 };
+        let h = run(&spec);
+        let first = h.points.first().unwrap().train_loss;
+        let last = h.points.last().unwrap().train_loss;
+        assert!(last < first * 0.5, "loss {first} → {last}");
+        assert_eq!(h.final_params.len(), model.dim());
+    }
+
+    #[test]
+    fn h1_identity_memory_stays_zero() {
+        let (ds, model) = small_setup();
+        let id = Identity;
+        let sched = FixedPeriod::new(1);
+        let mut spec = TrainSpec::new(&model, &ds, &id, &sched);
+        spec.steps = 30;
+        let h = run(&spec);
+        for p in &h.points {
+            assert!(p.mem_norm_sq < 1e-12);
+        }
+    }
+
+    #[test]
+    fn topk_with_memory_converges_like_sgd() {
+        let (ds, model) = small_setup();
+        let sched = FixedPeriod::new(1);
+        let id = Identity;
+        let topk = TopK::new(model.dim() / 20);
+        let mk = |comp: &dyn Compressor| {
+            let mut spec = TrainSpec::new(&model, &ds, comp, &sched);
+            spec.workers = 4;
+            spec.steps = 400;
+            spec.lr = LrSchedule::Const { eta: 0.5 };
+            run(&spec).points.last().unwrap().train_loss
+        };
+        let l_sgd = mk(&id);
+        let l_topk = mk(&topk);
+        assert!(
+            l_topk < l_sgd + 0.25,
+            "topk failed to track sgd: {l_topk} vs {l_sgd}"
+        );
+    }
+
+    #[test]
+    fn bits_accounting_monotone_and_cheaper_for_sparse() {
+        let (ds, model) = small_setup();
+        let sched = FixedPeriod::new(1);
+        let id = Identity;
+        let topk = TopK::new(2);
+        let mut spec = TrainSpec::new(&model, &ds, &id, &sched);
+        spec.steps = 20;
+        let h_id = run(&spec);
+        let spec2 = TrainSpec { compressor: &topk, ..TrainSpec::new(&model, &ds, &topk, &sched) };
+        let mut spec2 = spec2;
+        spec2.steps = 20;
+        let h_tk = run(&spec2);
+        let bits_id = h_id.points.last().unwrap().bits_up;
+        let bits_tk = h_tk.points.last().unwrap().bits_up;
+        assert!(bits_tk < bits_id / 10, "topk bits {bits_tk} vs dense {bits_id}");
+        // bits monotone over time
+        let ups: Vec<u64> = h_id.points.iter().map(|p| p.bits_up).collect();
+        assert!(ups.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn local_sgd_h4_sends_fewer_bits_same_ballpark_loss() {
+        let (ds, model) = small_setup();
+        let id = Identity;
+        let s1 = FixedPeriod::new(1);
+        let s4 = FixedPeriod::new(4);
+        let run_with = |sched: &dyn crate::topology::SyncSchedule| {
+            let mut spec = TrainSpec::new(&model, &ds, &id, sched);
+            spec.workers = 4;
+            spec.steps = 200;
+            spec.lr = LrSchedule::Const { eta: 0.3 };
+            run(&spec)
+        };
+        let h1 = run_with(&s1);
+        let h4 = run_with(&s4);
+        let b1 = h1.points.last().unwrap().bits_up;
+        let b4 = h4.points.last().unwrap().bits_up;
+        assert!((b1 as f64 / b4 as f64 - 4.0).abs() < 0.6, "ratio {}", b1 as f64 / b4 as f64);
+        let l1 = h1.points.last().unwrap().train_loss;
+        let l4 = h4.points.last().unwrap().train_loss;
+        assert!(l4 < l1 + 0.3, "H=4 diverged: {l4} vs {l1}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Figure output: CSV files + paper-style summary tables.
+
+use super::FigureSpec;
+use crate::engine::History;
+use std::path::Path;
+
+/// The result of running every series of one figure.
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub steps: usize,
+    pub target_loss: f64,
+    pub target_test_err: f64,
+    pub series: Vec<(String, History, f64)>,
+}
+
+impl FigureResult {
+    pub fn new(spec: &FigureSpec, steps: usize) -> Self {
+        FigureResult {
+            id: spec.id.to_string(),
+            title: spec.title.to_string(),
+            steps,
+            target_loss: spec.target_loss,
+            target_test_err: spec.target_test_err,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, label: &str, hist: History, wall_secs: f64) {
+        self.series.push((label.to_string(), hist, wall_secs));
+    }
+
+    /// Write `<out>/<fig>/<series>.csv` for every series.
+    pub fn write_csvs(&self, out_dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        let dir = out_dir.as_ref().join(&self.id);
+        std::fs::create_dir_all(&dir)?;
+        for (label, hist, _) in &self.series {
+            let fname = format!("{}.csv", sanitize(label));
+            std::fs::write(dir.join(fname), hist.to_csv())?;
+        }
+        Ok(())
+    }
+
+    /// Paper-style summary: final loss/error, total bits, bits-to-target on
+    /// both metrics, and the savings factor vs the first series (the
+    /// uncompressed baseline by convention). The savings column uses the
+    /// test-error crossing when available and not NaN (the paper's fig 6c
+    /// metric), else the train-loss crossing.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} (T={} steps)\n", self.id, self.title, self.steps));
+        out.push_str(&format!(
+            "{:<30} {:>10} {:>9} {:>11} {:>12} {:>12} {:>9}\n",
+            "series", "loss", "test_err", "Mbits_up", "bits→loss", "bits→terr", "saving×"
+        ));
+        let headline = |h: &History| {
+            h.bits_to_test_err(self.target_test_err)
+                .or_else(|| h.bits_to_loss(self.target_loss))
+        };
+        let baseline_bits = self.series.first().and_then(|(_, h, _)| headline(h));
+        for (label, hist, _) in &self.series {
+            let bl = hist.bits_to_loss(self.target_loss);
+            let bt = hist.bits_to_test_err(self.target_test_err);
+            let saving = match (baseline_bits, headline(hist)) {
+                (Some(b), Some(x)) if x > 0 => format!("{:.1}", b as f64 / x as f64),
+                _ => "-".to_string(),
+            };
+            let fmt_m = |v: Option<u64>| {
+                v.map_or("-".to_string(), |b| format!("{:.2}M", b as f64 / 1e6))
+            };
+            out.push_str(&format!(
+                "{:<30} {:>10.4} {:>9.4} {:>11.2} {:>12} {:>12} {:>9}\n",
+                label,
+                hist.final_loss(),
+                hist.points.last().map_or(f64::NAN, |p| p.test_err),
+                hist.total_bits_up() as f64 / 1e6,
+                fmt_m(bl),
+                fmt_m(bt),
+                saving,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable summary row set (used by EXPERIMENTS.md generation).
+    pub fn summary_rows(&self) -> Vec<(String, f64, f64, u64, Option<u64>)> {
+        self.series
+            .iter()
+            .map(|(label, h, _)| {
+                (
+                    label.clone(),
+                    h.final_loss(),
+                    h.points.last().map_or(f64::NAN, |p| p.test_err),
+                    h.total_bits_up(),
+                    h.bits_to_loss(self.target_loss),
+                )
+            })
+            .collect()
+    }
+}
+
+fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::MetricPoint;
+
+    fn fake_history(final_loss: f64, bits: u64) -> History {
+        let mut h = History::new();
+        for (i, frac) in [(0usize, 1.0f64), (50, 0.6), (100, 0.3)] {
+            h.push(MetricPoint {
+                step: i,
+                train_loss: final_loss + frac,
+                test_err: frac / 2.0,
+                test_top5_err: frac / 4.0,
+                bits_up: bits * i as u64 / 100,
+                bits_down: 0,
+                mem_norm_sq: 0.0,
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn summary_contains_all_series_and_savings() {
+        let spec = crate::figures::figure_spec("fig4").unwrap();
+        let mut r = FigureResult::new(&spec, 100);
+        r.add("SGD", fake_history(0.1, 1_000_000), 1.0);
+        r.add("TopK", fake_history(0.1, 10_000), 1.0);
+        let s = r.summary();
+        assert!(s.contains("SGD"));
+        assert!(s.contains("TopK"));
+        let rows = r.summary_rows();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].3 < rows[0].3);
+    }
+
+    #[test]
+    fn write_csvs_creates_files() {
+        let spec = crate::figures::figure_spec("fig1").unwrap();
+        let mut r = FigureResult::new(&spec, 10);
+        r.add("A/B weird label", fake_history(0.5, 100), 0.1);
+        let dir = std::env::temp_dir().join(format!("qsparse_test_{}", std::process::id()));
+        r.write_csvs(&dir).unwrap();
+        let written = dir.join("fig1").join("A_B_weird_label.csv");
+        assert!(written.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! The per-figure series definitions (paper §5 + Appendix D).
+//!
+//! Labels follow the paper's legends. k values: 40 for the convex workload
+//! (§5.2.2) and ~1% of d for the non-convex workload (the paper's
+//! per-tensor min(d_t, 1000) amounts to 0.4% of ResNet-50).
+
+use super::{FigureSpec, SeriesSpec, Workload};
+
+/// All figure ids in paper order.
+pub fn all_figure_ids() -> Vec<&'static str> {
+    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"]
+}
+
+/// Build the spec for one figure id.
+pub fn figure_spec(id: &str) -> Option<FigureSpec> {
+    // k for the non-convex MLP workload (d ≈ 17k ⇒ k ≈ 170).
+    const KNC: &str = "170";
+    // k for the convex softmax workload (paper: 40).
+    const KC: &str = "40";
+    let s = SeriesSpec::new;
+    let a = SeriesSpec::asynchronous;
+    Some(match id {
+        // ---- non-convex (ResNet-50 stand-in) --------------------------------
+        "fig1" => FigureSpec {
+            id: "fig1",
+            title: "non-convex: Qsparse operators vs baselines (loss/acc vs iters & bits)",
+            workload: Workload::NonConvexMlp,
+            steps: 800,
+            target_loss: 0.05,
+            target_test_err: 0.12,
+            series: vec![
+                s("SGD", "identity", 1),
+                s("EF-QSGD-4bit", "qsgd:bits=4", 1),
+                s("EF-SignSGD", "sign", 1),
+                s("TopK", &format!("topk:k={KNC}"), 1),
+                s("QTopK-4bit", &format!("qtopk:k={KNC},bits=4"), 1),
+                s("SignTopK", &format!("signtopk:k={KNC},m=1"), 1),
+            ],
+        },
+        "fig2" => FigureSpec {
+            id: "fig2",
+            title: "non-convex: effect of local iterations H ∈ {1,4,8}",
+            workload: Workload::NonConvexMlp,
+            steps: 800,
+            target_loss: 0.05,
+            target_test_err: 0.12,
+            series: vec![
+                s("SGD_1L", "identity", 1),
+                s("SGD_4L", "identity", 4),
+                s("SGD_8L", "identity", 8),
+                s("SignTopK_1L", &format!("signtopk:k={KNC},m=1"), 1),
+                s("SignTopK_4L", &format!("signtopk:k={KNC},m=1"), 4),
+                s("SignTopK_8L", &format!("signtopk:k={KNC},m=1"), 8),
+                s("QTopK_4L", &format!("qtopk:k={KNC},bits=4"), 4),
+                s("TopK_4L", &format!("topk:k={KNC}"), 4),
+            ],
+        },
+        "fig3" => FigureSpec {
+            id: "fig3",
+            title: "non-convex: Qsparse-local-SGD vs EF-SignSGD / TopK-SGD / local SGD",
+            workload: Workload::NonConvexMlp,
+            steps: 800,
+            target_loss: 0.05,
+            target_test_err: 0.12,
+            series: vec![
+                s("SGD", "identity", 1),
+                s("LocalSGD_8L", "identity", 8),
+                s("EF-SignSGD", "sign", 1),
+                s("TopK-SGD", &format!("topk:k={KNC}"), 1),
+                s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KNC},m=1"), 8),
+                s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KNC},bits=4"), 8),
+            ],
+        },
+        // ---- convex (MNIST-geometry softmax) --------------------------------
+        "fig4" => FigureSpec {
+            id: "fig4",
+            title: "convex: composed operators (2-bit vs 4-bit QSGD; loss vs iters & bits)",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                s("SGD", "identity", 1),
+                s("EF-QSGD-4bit", "qsgd:bits=4", 1),
+                s("EF-QSGD-2bit", "qsgd:bits=2", 1),
+                s("TopK", &format!("topk:k={KC}"), 1),
+                s("QTopK-4bit", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                s("QTopK-2bit", &format!("qtopk:k={KC},bits=2,scaled"), 1),
+                s("SignTopK", &format!("signtopk:k={KC},m=1"), 1),
+            ],
+        },
+        "fig5" => FigureSpec {
+            id: "fig5",
+            title: "convex: local iterations × operators; coarse vs fine quantizers",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                s("SGD_1L", "identity", 1),
+                s("SGD_8L", "identity", 8),
+                s("TopK_8L", &format!("topk:k={KC}"), 8),
+                s("SignTopK_1L", &format!("signtopk:k={KC},m=1"), 1),
+                s("SignTopK_4L", &format!("signtopk:k={KC},m=1"), 4),
+                s("SignTopK_8L", &format!("signtopk:k={KC},m=1"), 8),
+                s("QTopK-2bit_1L", &format!("qtopk:k={KC},bits=2,scaled"), 1),
+                s("QTopK-2bit_8L", &format!("qtopk:k={KC},bits=2,scaled"), 8),
+                s("QTopK-4bit_1L", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                s("QTopK-4bit_8L", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+            ],
+        },
+        "fig6" => FigureSpec {
+            id: "fig6",
+            title: "convex: Qsparse-local-SGD vs EF-QSGD / EF-SignSGD / TopK-SGD",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                s("SGD", "identity", 1),
+                s("EF-QSGD", "qsgd:bits=4", 1),
+                s("EF-SignSGD", "sign", 1),
+                s("TopK-SGD", &format!("topk:k={KC}"), 1),
+                s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KC},m=1"), 8),
+                s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+            ],
+        },
+        "fig7" => FigureSpec {
+            id: "fig7",
+            title: "convex asynchronous (Algorithm 2): random per-worker gaps U[1,H]",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                a("SGD-async", "identity", 8),
+                a("EF-SignSGD-async", "sign", 8),
+                a("TopK-async", &format!("topk:k={KC}"), 8),
+                a("Qsparse-async(SignTopK)", &format!("signtopk:k={KC},m=1"), 8),
+                a("Qsparse-async(QTopK)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+            ],
+        },
+        // ---- appendix D ------------------------------------------------------
+        "fig8" => FigureSpec {
+            id: "fig8",
+            title: "appendix D: scaled vs unscaled QTopK under local iterations",
+            workload: Workload::NonConvexMlp,
+            steps: 800,
+            target_loss: 0.05,
+            target_test_err: 0.12,
+            series: vec![
+                s("QTopK_L0", &format!("qtopk:k={KNC},bits=4"), 1),
+                s("QTopK-scaled_L0", &format!("qtopk:k={KNC},bits=4,scaled"), 1),
+                s("QTopK_L4", &format!("qtopk:k={KNC},bits=4"), 4),
+                s("QTopK-scaled_L4", &format!("qtopk:k={KNC},bits=4,scaled"), 4),
+                s("QTopK_L8", &format!("qtopk:k={KNC},bits=4"), 8),
+                s("QTopK-scaled_L8", &format!("qtopk:k={KNC},bits=4,scaled"), 8),
+            ],
+        },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_id_has_a_spec_and_parses() {
+        for id in all_figure_ids() {
+            let spec = figure_spec(id).unwrap_or_else(|| panic!("{id} missing"));
+            assert_eq!(spec.id, id);
+            assert!(!spec.series.is_empty());
+            for s in &spec.series {
+                crate::compress::parse_spec(&s.compressor)
+                    .unwrap_or_else(|e| panic!("{id}/{}: {e}", s.label));
+                assert!(s.h >= 1);
+            }
+        }
+        assert!(figure_spec("fig99").is_none());
+    }
+
+    #[test]
+    fn labels_unique_within_figure() {
+        for id in all_figure_ids() {
+            let spec = figure_spec(id).unwrap();
+            let mut labels: Vec<_> = spec.series.iter().map(|s| s.label).collect();
+            labels.sort_unstable();
+            labels.dedup();
+            assert_eq!(labels.len(), spec.series.len(), "{id} duplicate labels");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Multi-layer perceptron with ReLU hidden layers and softmax cross-entropy
+//! output — the native non-convex workload standing in for the paper's
+//! ResNet-50 (DESIGN.md §6: the communication claims under test depend on d
+//! and the update distribution, not on convolutional structure).
+//!
+//! Params layout (flat): for each layer l with shape (in_l × out_l):
+//!   [ W_l row-major (in × out) | b_l (out) ] concatenated over layers.
+
+use super::GradModel;
+use crate::data::Batch;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Layer widths including input and output, e.g. [784, 256, 10].
+    pub widths: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(widths: Vec<usize>) -> Self {
+        assert!(widths.len() >= 2);
+        Mlp { widths }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    /// Flat sizes per layer: (in+1)*out.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        (0..self.layers())
+            .map(|l| (self.widths[l] + 1) * self.widths[l + 1])
+            .collect()
+    }
+
+    fn layer_offsets(&self) -> Vec<usize> {
+        let mut off = vec![0usize];
+        for s in self.layer_sizes() {
+            off.push(off.last().unwrap() + s);
+        }
+        off
+    }
+
+    /// He-style init matching the JAX model in python/compile/model.py.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 1313);
+        let mut params = vec![0.0f32; self.dim()];
+        let offs = self.layer_offsets();
+        for l in 0..self.layers() {
+            let (fan_in, fan_out) = (self.widths[l], self.widths[l + 1]);
+            let std = (2.0 / fan_in as f64).sqrt() as f32;
+            let w = &mut params[offs[l]..offs[l] + fan_in * fan_out];
+            rng.fill_normal(w, std);
+            // biases stay zero
+        }
+        params
+    }
+
+    /// Forward pass storing post-activation values per layer. Returns logits
+    /// for each row (b × classes) plus the stored activations for backprop.
+    fn forward(&self, params: &[f32], batch: &Batch) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let offs = self.layer_offsets();
+        let b = batch.b;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers());
+        let mut cur = batch.x.clone();
+        let mut cur_w = batch.dim;
+        for l in 0..self.layers() {
+            let (fan_in, fan_out) = (self.widths[l], self.widths[l + 1]);
+            assert_eq!(cur_w, fan_in);
+            let w = &params[offs[l]..offs[l] + fan_in * fan_out];
+            let bias = &params[offs[l] + fan_in * fan_out..offs[l + 1]];
+            let mut next = vec![0.0f32; b * fan_out];
+            for i in 0..b {
+                let xi = &cur[i * fan_in..(i + 1) * fan_in];
+                let oi = &mut next[i * fan_out..(i + 1) * fan_out];
+                oi.copy_from_slice(bias);
+                for (j, &xj) in xi.iter().enumerate() {
+                    if xj == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[j * fan_out..(j + 1) * fan_out];
+                    for (o, &wv) in oi.iter_mut().zip(wrow) {
+                        *o += xj * wv;
+                    }
+                }
+                if l + 1 < self.layers() {
+                    for o in oi.iter_mut() {
+                        *o = o.max(0.0); // ReLU
+                    }
+                }
+            }
+            acts.push(cur);
+            cur = next;
+            cur_w = fan_out;
+        }
+        (acts, cur)
+    }
+}
+
+impl GradModel for Mlp {
+    fn dim(&self) -> usize {
+        self.layer_sizes().iter().sum()
+    }
+
+    fn loss_grad(&self, params: &[f32], batch: &Batch, grad: &mut [f32]) -> f64 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let offs = self.layer_offsets();
+        let b = batch.b;
+        let classes = *self.widths.last().unwrap();
+        let (acts, mut logits) = self.forward(params, batch);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+
+        // Softmax + xent; logits becomes dL/dlogits.
+        let mut loss = 0.0f64;
+        let inv_b = 1.0 / b as f32;
+        for i in 0..b {
+            let row = &mut logits[i * classes..(i + 1) * classes];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v as f64;
+            }
+            let y = batch.y[i] as usize;
+            loss -= ((row[y] as f64 / sum).max(1e-30)).ln();
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = ((*v as f64 / sum) as f32 - f32::from(c == y)) * inv_b;
+            }
+        }
+        loss /= b as f64;
+
+        // Backprop through layers (delta = dL/d pre-activation of layer l+1).
+        let mut delta = logits;
+        for l in (0..self.layers()).rev() {
+            let (fan_in, fan_out) = (self.widths[l], self.widths[l + 1]);
+            let input = &acts[l]; // b × fan_in (post-activation of prev layer)
+            let w = &params[offs[l]..offs[l] + fan_in * fan_out];
+            let (gw, gb) = grad[offs[l]..offs[l + 1]].split_at_mut(fan_in * fan_out);
+            let mut prev_delta = if l > 0 { vec![0.0f32; b * fan_in] } else { Vec::new() };
+            for i in 0..b {
+                let di = &delta[i * fan_out..(i + 1) * fan_out];
+                let xi = &input[i * fan_in..(i + 1) * fan_in];
+                for (gbc, &dv) in gb.iter_mut().zip(di) {
+                    *gbc += dv;
+                }
+                for (j, &xj) in xi.iter().enumerate() {
+                    if xj != 0.0 {
+                        let gwrow = &mut gw[j * fan_out..(j + 1) * fan_out];
+                        for (g, &dv) in gwrow.iter_mut().zip(di) {
+                            *g += xj * dv;
+                        }
+                    }
+                }
+                if l > 0 {
+                    let pdi = &mut prev_delta[i * fan_in..(i + 1) * fan_in];
+                    for (j, pd) in pdi.iter_mut().enumerate() {
+                        if xi[j] > 0.0 {
+                            // ReLU derivative via post-activation > 0.
+                            let wrow = &w[j * fan_out..(j + 1) * fan_out];
+                            let mut acc = 0.0f32;
+                            for (&wv, &dv) in wrow.iter().zip(di) {
+                                acc += wv * dv;
+                            }
+                            *pd = acc;
+                        }
+                    }
+                }
+            }
+            delta = prev_delta;
+        }
+        loss
+    }
+
+    fn error_rate(&self, params: &[f32], batch: &Batch) -> f64 {
+        self.topn_error_rate(params, batch, 1)
+    }
+
+    fn topn_error_rate(&self, params: &[f32], batch: &Batch, n: usize) -> f64 {
+        let classes = *self.widths.last().unwrap();
+        let (_, logits) = self.forward(params, batch);
+        let mut wrong = 0usize;
+        for i in 0..batch.b {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let y = batch.y[i] as usize;
+            let ly = row[y];
+            // Tie-break by index (see SoftmaxRegression::topn_error_rate).
+            let better = row
+                .iter()
+                .enumerate()
+                .filter(|&(c, &l)| l > ly || (l == ly && c < y))
+                .count();
+            if better >= n {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / batch.b as f64
+    }
+
+    fn name(&self) -> String {
+        format!("mlp({:?})", self.widths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_clusters;
+
+    #[test]
+    fn dim_matches_layout() {
+        let m = Mlp::new(vec![8, 16, 4]);
+        assert_eq!(m.dim(), (8 + 1) * 16 + (16 + 1) * 4);
+        assert_eq!(m.layer_sizes(), vec![144, 68]);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let ds = gaussian_clusters(32, 6, 3, 1.5, 0.4, 21);
+        let batch = ds.gather(&(0..12).collect::<Vec<_>>());
+        let m = Mlp::new(vec![6, 10, 3]);
+        let params = m.init_params(5);
+        let coords: Vec<usize> = (0..m.dim()).step_by(11).collect();
+        crate::grad::check_grad(&m, &params, &batch, &coords);
+    }
+
+    #[test]
+    fn sgd_learns_clusters() {
+        let ds = gaussian_clusters(512, 10, 4, 2.0, 0.4, 22);
+        let m = Mlp::new(vec![10, 24, 4]);
+        let mut params = m.init_params(3);
+        let all: Vec<usize> = (0..ds.n).collect();
+        let batch = ds.gather(&all);
+        let mut g = vec![0.0f32; m.dim()];
+        let l0 = m.loss(&params, &batch);
+        for _ in 0..200 {
+            m.loss_grad(&params, &batch, &mut g);
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.3 * gi;
+            }
+        }
+        let l1 = m.loss(&params, &batch);
+        assert!(l1 < l0 * 0.3, "loss {l0} → {l1}");
+        assert!(m.error_rate(&params, &batch) < 0.1);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = Mlp::new(vec![4, 8, 2]);
+        assert_eq!(m.init_params(7), m.init_params(7));
+        assert_ne!(m.init_params(7), m.init_params(8));
+    }
+}

@@ -1,0 +1,68 @@
+//! Native gradient substrates (pure rust).
+//!
+//! These implement the paper's objective functions directly so the figure
+//! harness can run large sweeps cheaply and so PJRT numerics can be
+//! cross-checked. The PJRT-backed equivalents live in `runtime::`; both
+//! implement `GradModel` and are interchangeable in the engine.
+
+pub mod mlp;
+pub mod softmax;
+
+pub use mlp::Mlp;
+pub use softmax::SoftmaxRegression;
+
+use crate::data::Batch;
+
+/// A differentiable empirical-risk model over a flat parameter vector.
+///
+/// Not `Send`/`Sync`: the PJRT-backed implementation wraps an `Rc`-based
+/// client. The threaded coordinator constructs one model per worker thread
+/// via a `Send` factory instead of sharing one instance.
+pub trait GradModel {
+    /// Flat parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// Mean loss over the batch and its gradient (written into `grad`,
+    /// which the caller provides zeroed or not — it is overwritten).
+    fn loss_grad(&self, params: &[f32], batch: &Batch, grad: &mut [f32]) -> f64;
+
+    /// Mean loss only (evaluation path).
+    fn loss(&self, params: &[f32], batch: &Batch) -> f64 {
+        let mut g = vec![0.0; self.dim()];
+        self.loss_grad(params, batch, &mut g)
+    }
+
+    /// Classification error rate in [0,1] on a batch (1 − accuracy).
+    fn error_rate(&self, params: &[f32], batch: &Batch) -> f64;
+
+    /// Top-n error rate (paper reports top-1/top-5); default = top-1.
+    fn topn_error_rate(&self, params: &[f32], batch: &Batch, _n: usize) -> f64 {
+        self.error_rate(params, batch)
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Numerical-gradient check helper shared by the model tests:
+/// compares analytic ∂loss/∂θ_i with central differences on a few coords.
+#[cfg(test)]
+pub(crate) fn check_grad(model: &dyn GradModel, params: &[f32], batch: &Batch, coords: &[usize]) {
+    let mut g = vec![0.0f32; model.dim()];
+    model.loss_grad(params, batch, &mut g);
+    let eps = 1e-3f32;
+    for &i in coords {
+        let mut p = params.to_vec();
+        p[i] += eps;
+        let lp = model.loss(&p, batch);
+        p[i] -= 2.0 * eps;
+        let lm = model.loss(&p, batch);
+        let num = (lp - lm) / (2.0 * eps as f64);
+        let ana = g[i] as f64;
+        let denom = num.abs().max(ana.abs()).max(1e-4);
+        assert!(
+            (num - ana).abs() / denom < 2e-2,
+            "{}: coord {i}: numeric {num} vs analytic {ana}",
+            model.name()
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! ℓ2-regularized softmax (multinomial logistic) regression — the paper's
+//! convex workload (§5.2.1).
+//!
+//! Cost:  −(1/b) Σ_i log h_{x,z}(a_i)[y_i] + (λ/2)‖W‖²
+//! Params layout (flat, d = (dim+1)·classes):
+//!   [ W (dim × classes, row-major by feature) | z (classes biases) ]
+//! λ defaults to 1/n as in the paper. The regularizer covers W only (the
+//! paper regularizes ‖x‖², i.e. the weight columns).
+
+use super::GradModel;
+use crate::data::Batch;
+
+#[derive(Clone, Debug)]
+pub struct SoftmaxRegression {
+    pub dim: usize,
+    pub classes: usize,
+    pub lambda: f64,
+}
+
+impl SoftmaxRegression {
+    pub fn new(dim: usize, classes: usize, lambda: f64) -> Self {
+        assert!(classes >= 2);
+        SoftmaxRegression { dim, classes, lambda }
+    }
+
+    #[inline]
+    fn w_len(&self) -> usize {
+        self.dim * self.classes
+    }
+
+    /// logits[c] = Σ_j x_j W[j,c] + z_c for one row.
+    fn logits_row(&self, params: &[f32], row: &[f32], out: &mut [f32]) {
+        let c = self.classes;
+        let (w, z) = params.split_at(self.w_len());
+        out.copy_from_slice(&z[..c]);
+        for (j, &xj) in row.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let wrow = &w[j * c..(j + 1) * c];
+            for (o, &wjc) in out.iter_mut().zip(wrow) {
+                *o += xj * wjc;
+            }
+        }
+    }
+
+    /// Softmax in place; returns logsumexp.
+    fn softmax_inplace(logits: &mut [f32]) -> f64 {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f64;
+        for l in logits.iter_mut() {
+            *l = (*l - max).exp();
+            sum += *l as f64;
+        }
+        for l in logits.iter_mut() {
+            *l = (*l as f64 / sum) as f32;
+        }
+        max as f64 + sum.ln()
+    }
+}
+
+impl GradModel for SoftmaxRegression {
+    fn dim(&self) -> usize {
+        (self.dim + 1) * self.classes
+    }
+
+    fn loss_grad(&self, params: &[f32], batch: &Batch, grad: &mut [f32]) -> f64 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        assert_eq!(batch.dim, self.dim);
+        let c = self.classes;
+        let b = batch.b;
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (gw, gz) = grad.split_at_mut(self.w_len());
+        let mut probs = vec![0.0f32; c];
+        let mut loss = 0.0f64;
+        let inv_b = 1.0 / b as f32;
+        for i in 0..b {
+            let row = &batch.x[i * self.dim..(i + 1) * self.dim];
+            self.logits_row(params, row, &mut probs);
+            let y = batch.y[i] as usize;
+            // loss_i = logsumexp − logit_y; recompute logit_y before softmax
+            // by tracking it: do softmax and use log(prob_y) instead.
+            Self::softmax_inplace(&mut probs);
+            loss -= (probs[y].max(1e-30) as f64).ln();
+            // dL/dlogit = (p − onehot)/b
+            for cc in 0..c {
+                let delta = (probs[cc] - f32::from(cc == y)) * inv_b;
+                gz[cc] += delta;
+                if delta != 0.0 {
+                    for (j, &xj) in row.iter().enumerate() {
+                        gw[j * c + cc] += delta * xj;
+                    }
+                }
+            }
+        }
+        loss /= b as f64;
+        // ℓ2 on W.
+        if self.lambda != 0.0 {
+            let lam = self.lambda as f32;
+            let w = &params[..self.w_len()];
+            let mut reg = 0.0f64;
+            for (g, &wv) in gw.iter_mut().zip(w) {
+                *g += lam * wv;
+                reg += (wv as f64) * (wv as f64);
+            }
+            loss += 0.5 * self.lambda * reg;
+        }
+        loss
+    }
+
+    fn error_rate(&self, params: &[f32], batch: &Batch) -> f64 {
+        self.topn_error_rate(params, batch, 1)
+    }
+
+    fn topn_error_rate(&self, params: &[f32], batch: &Batch, n: usize) -> f64 {
+        let c = self.classes;
+        let mut logits = vec![0.0f32; c];
+        let mut wrong = 0usize;
+        for i in 0..batch.b {
+            let row = &batch.x[i * self.dim..(i + 1) * self.dim];
+            self.logits_row(params, row, &mut logits);
+            let y = batch.y[i] as usize;
+            let ly = logits[y];
+            // Rank of the true class under argmax-with-first-index tie-break
+            // (equal logits at a lower index outrank y — matters at x_0 = 0,
+            // where all logits tie and top-1 error must be (C−1)/C).
+            let better = logits
+                .iter()
+                .enumerate()
+                .filter(|&(c, &l)| l > ly || (l == ly && c < y))
+                .count();
+            if better >= n {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / batch.b as f64
+    }
+
+    fn name(&self) -> String {
+        format!("softmax({}x{},λ={})", self.dim, self.classes, self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gaussian_clusters, Sharding};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (SoftmaxRegression, crate::data::Batch) {
+        let ds = gaussian_clusters(64, 12, 4, 1.5, 0.4, 11);
+        let shards = crate::data::shard_indices(&ds, 1, Sharding::Iid);
+        let batch = ds.gather(&shards[0][..16]);
+        (SoftmaxRegression::new(12, 4, 0.01), batch)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (m, batch) = setup();
+        let mut rng = Pcg64::seeded(60);
+        let params: Vec<f32> = (0..m.dim()).map(|_| rng.normal_f32() * 0.1).collect();
+        let coords: Vec<usize> = (0..m.dim()).step_by(7).collect();
+        crate::grad::check_grad(&m, &params, &batch, &coords);
+    }
+
+    #[test]
+    fn loss_at_zero_is_log_c() {
+        let (m, batch) = setup();
+        let params = vec![0.0f32; m.dim()];
+        let loss = m.loss(&params, &batch);
+        assert!((loss - (4.0f64).ln()).abs() < 1e-6, "{loss}");
+    }
+
+    #[test]
+    fn gd_converges_and_classifies() {
+        let ds = gaussian_clusters(256, 12, 4, 2.0, 0.3, 12);
+        let m = SoftmaxRegression::new(12, 4, 1.0 / 256.0);
+        let all: Vec<usize> = (0..ds.n).collect();
+        let batch = ds.gather(&all);
+        let mut params = vec![0.0f32; m.dim()];
+        let mut g = vec![0.0f32; m.dim()];
+        let l0 = m.loss(&params, &batch);
+        for _ in 0..300 {
+            m.loss_grad(&params, &batch, &mut g);
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.5 * gi;
+            }
+        }
+        let l1 = m.loss(&params, &batch);
+        assert!(l1 < l0 * 0.2, "loss {l0} → {l1}");
+        assert!(m.error_rate(&params, &batch) < 0.05);
+        assert!(m.topn_error_rate(&params, &batch, 2) <= m.error_rate(&params, &batch));
+    }
+}

@@ -1,0 +1,33 @@
+//! # qsparse — Qsparse-local-SGD
+//!
+//! A production-grade reproduction of *“Qsparse-local-SGD: Distributed SGD
+//! with Quantization, Sparsification, and Local Computations”* (Basu, Data,
+//! Karakus, Diggavi — NeurIPS 2019), built as a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed coordinator: compression
+//!   operators with exact wire-format bit accounting, error-feedback memory,
+//!   synchronous (Algorithm 1) and asynchronous (Algorithm 2) schedules, a
+//!   deterministic simulation engine and a threaded master/worker runtime.
+//! * **L2** — JAX models (`python/compile/model.py`), AOT-lowered to HLO
+//!   text and executed from rust via PJRT (`runtime::`).
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) inside the L2
+//!   models.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record. Start with `examples/quickstart.rs`.
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod figures;
+pub mod grad;
+pub mod optim;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+
+pub use compress::{Compressor, Message};
+pub use engine::{History, TrainSpec};
+pub use grad::GradModel;

@@ -1,0 +1,323 @@
+//! `qsparse` — CLI entrypoint for the Qsparse-local-SGD reproduction.
+//!
+//! Subcommands:
+//!   figure <id|all> [--out results] [--quick]     regenerate paper figures
+//!   gamma-table [--d N] [--k N]                   Lemma 1–3 γ table
+//!   train [options]                               one training run
+//!   inspect [--artifacts DIR]                     list AOT artifacts
+//!
+//! `train` options:
+//!   --workload convex|nonconvex   native substrates (default convex)
+//!   --pjrt NAME                   use the AOT artifact NAME instead
+//!   --artifacts DIR               artifact dir (default artifacts)
+//!   --compressor SPEC             e.g. topk:k=40 | qtopk:k=40,bits=4,scaled
+//!   --h N                         sync period H (default 1)
+//!   --async                       Algorithm 2 random per-worker gaps
+//!   --threaded                    threaded master/worker runtime (vs engine)
+//!   --steps N --workers N --batch N --eta F --momentum F --seed N
+//!   --csv FILE                    write the metric history as CSV
+//!   --json                        print a JSON summary
+
+use qsparse::compress::parse_spec;
+use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+use qsparse::data::{gaussian_clusters_split, Sharding};
+use qsparse::engine::{self, TrainSpec};
+use qsparse::figures;
+use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
+use qsparse::optim::LrSchedule;
+use qsparse::runtime::PjrtRuntime;
+use qsparse::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+use qsparse::util::stats::Stopwatch;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("gamma-table") => cmd_gamma(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand `{other}` (try `qsparse help`)"),
+    }
+}
+
+const HELP: &str = "\
+qsparse — Qsparse-local-SGD (NeurIPS 2019) reproduction
+
+USAGE: qsparse <figure|gamma-table|train|inspect|help> [options]
+
+  figure <id|all> [--out results] [--quick]
+  gamma-table [--d 7850] [--k 40]
+  train [--workload convex|nonconvex] [--pjrt NAME] [--compressor SPEC]
+        [--h N] [--async] [--threaded] [--steps N] [--workers N] [--batch N]
+        [--eta F] [--momentum F] [--seed N] [--csv FILE] [--json]
+  inspect [--artifacts DIR]
+
+Compressor SPECs: identity | topk:k=K | randk:k=K | qsgd:bits=B | sign |
+  qtopk:k=K,bits=B[,scaled] | signtopk:k=K[,m=M]
+";
+
+/// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
+struct Flags {
+    positional: Vec<String>,
+    kv: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+const BOOL_FLAGS: &[&str] = &["quick", "async", "threaded", "json"];
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Flags> {
+        let mut f = Flags { positional: Vec::new(), kv: HashMap::new(), bools: Vec::new() };
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    f.bools.push(key.to_string());
+                } else {
+                    i += 1;
+                    let v = args
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{key} requires a value"))?;
+                    f.kv.insert(key.to_string(), v.clone());
+                }
+            } else {
+                f.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(f)
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let which = f
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let out = f.get_or("out", "results");
+    let quick = f.has("quick");
+    let ids: Vec<String> = if which == "all" {
+        figures::all_figure_ids().iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![which]
+    };
+    for id in &ids {
+        let spec = figures::figure_spec(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown figure `{id}`"))?;
+        let sw = Stopwatch::start();
+        let result = figures::run_figure(&spec, quick)?;
+        result.write_csvs(&out)?;
+        print!("{}", result.summary());
+        println!("   ({} series, {:.1}s, CSVs in {out}/{id}/)\n", result.series.len(), sw.secs());
+    }
+    Ok(())
+}
+
+fn cmd_gamma(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let d: usize = f.parse_num("d", 7850)?;
+    let k: usize = f.parse_num("k", 40)?;
+    println!("γ table (Lemmas 1–3), d={d}, k={k}, Gaussian x:");
+    println!("{:<28} {:>12} {:>22}", "operator", "γ(worst)", "measured E‖x−C‖²/‖x‖²");
+    for (name, gamma, measured) in figures::gamma_table(d, k) {
+        println!("{name:<28} {gamma:>12.6} {measured:>22.6}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let steps: usize = f.parse_num("steps", 500)?;
+    let h: usize = f.parse_num("h", 1)?;
+    let seed: u64 = f.parse_num("seed", figures::SEED)?;
+    let comp_spec = f.get_or("compressor", "identity");
+    let compressor = parse_spec(&comp_spec)?;
+    let sw = Stopwatch::start();
+
+    // Model + data + defaults per workload.
+    type Setup = (
+        Box<dyn GradModel>,
+        qsparse::data::Dataset,
+        qsparse::data::Dataset,
+        Vec<f32>,
+        usize,
+        usize,
+        LrSchedule,
+        f64,
+    );
+    let (model, train, test, init, workers, batch, lr, momentum): Setup =
+        if let Some(name) = f.get("pjrt") {
+            let rt = PjrtRuntime::open(f.get_or("artifacts", "artifacts"))?;
+            let model = rt.load_model(name)?;
+            let entry = model.entry.clone();
+            anyhow::ensure!(
+                entry.kind != "lm",
+                "LM training has a dedicated driver: examples/train_transformer.rs"
+            );
+            let n = 4000;
+            let (train, test) =
+                gaussian_clusters_split(n, n / 4, entry.feat, entry.classes, 0.3, 1.0, seed);
+            let init = rt.load_init(name)?.unwrap_or_else(|| vec![0.0; entry.d]);
+            let batch = entry.batch;
+            (
+                Box::new(model),
+                train,
+                test,
+                init,
+                4,
+                batch,
+                LrSchedule::Const { eta: 0.1 },
+                0.0,
+            )
+        } else {
+            match f.get_or("workload", "convex").as_str() {
+                "convex" => {
+                    let w = figures::Workload::ConvexSoftmax.instantiate(false);
+                    (w.model, w.train, w.test, w.init, w.workers, w.batch, w.lr, w.momentum)
+                }
+                "nonconvex" => {
+                    let w = figures::Workload::NonConvexMlp.instantiate(false);
+                    (w.model, w.train, w.test, w.init, w.workers, w.batch, w.lr, w.momentum)
+                }
+                other => anyhow::bail!("unknown workload `{other}`"),
+            }
+        };
+    let workers: usize = f.parse_num("workers", workers)?;
+    let batch: usize = f.parse_num("batch", batch)?;
+    let lr = match f.get("eta") {
+        Some(e) => LrSchedule::Const { eta: e.parse()? },
+        None => lr,
+    };
+    let momentum: f64 = f.parse_num("momentum", momentum)?;
+
+    let schedule: Box<dyn SyncSchedule> = if f.has("async") {
+        Box::new(RandomGaps::generate(workers, h, steps, seed ^ 0x5eed))
+    } else {
+        Box::new(FixedPeriod::new(h))
+    };
+
+    let history = if f.has("threaded") {
+        anyhow::ensure!(
+            f.get("pjrt").is_none(),
+            "--threaded requires a Send model factory; native workloads only \
+             (PJRT models are constructed per-thread in library/example code)"
+        );
+        let is_convex = f.get_or("workload", "convex") == "convex";
+        let (dim, classes, n) = (train.dim, train.classes, train.n);
+        let factory = move || -> Box<dyn GradModel> {
+            if is_convex {
+                Box::new(SoftmaxRegression::new(dim, classes, 1.0 / n as f64))
+            } else {
+                Box::new(Mlp::new(vec![dim, 64, classes]))
+            }
+        };
+        let mut cfg = CoordinatorConfig::new(Arc::from(compressor), Arc::from(schedule));
+        cfg.workers = workers;
+        cfg.batch = batch;
+        cfg.steps = steps;
+        cfg.lr = lr;
+        cfg.momentum = momentum;
+        cfg.seed = seed;
+        cfg.init = Some(init);
+        run_threaded(&cfg, factory, Arc::new(train), Some(Arc::new(test)))?
+    } else {
+        let spec = TrainSpec {
+            model: model.as_ref(),
+            train: &train,
+            test: Some(&test),
+            workers,
+            batch,
+            steps,
+            lr,
+            momentum,
+            compressor: compressor.as_ref(),
+            schedule: schedule.as_ref(),
+            sharding: Sharding::Iid,
+            seed,
+            eval_every: f.parse_num("eval-every", 25)?,
+            eval_rows: 512,
+        };
+        engine::run_from(&spec, init)
+    };
+
+    if let Some(csv) = f.get("csv") {
+        std::fs::write(csv, history.to_csv())?;
+    }
+    if f.has("json") {
+        println!("{}", history.summary_json(&comp_spec, sw.secs()));
+    } else {
+        let last = history.points.last().unwrap();
+        println!(
+            "{} steps={} H={} workers={}  loss={:.4} test_err={:.4}  bits_up={:.2}M  ({:.1}s)",
+            comp_spec,
+            last.step,
+            h,
+            workers,
+            last.train_loss,
+            last.test_err,
+            last.bits_up as f64 / 1e6,
+            sw.secs()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let dir = f.get_or("artifacts", "artifacts");
+    let rt = PjrtRuntime::open(&dir)?;
+    println!("artifacts in {dir}:");
+    for m in &rt.manifest().models {
+        println!(
+            "  {:<10} kind={:<8} d={:<9} batch={:<3} feat={:<5} classes={:<5} files=[{}, {}]{}",
+            m.name,
+            m.kind,
+            m.d,
+            m.batch,
+            m.feat,
+            m.classes,
+            m.grad_file,
+            m.eval_file,
+            m.init_file.as_deref().map(|f| format!(" init={f}")).unwrap_or_default(),
+        );
+    }
+    Ok(())
+}

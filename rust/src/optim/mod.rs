@@ -1,0 +1,137 @@
+//! Local optimizers and learning-rate schedules.
+//!
+//! The paper's experiments run SGD with momentum 0.9 *on the local
+//! iterations* (§5.1.1) for the non-convex case, and plain SGD with an
+//! inverse-time decaying rate c/(λ(a+t)) for the convex case (§5.2.2).
+
+/// Learning-rate schedule η_t.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// η_t = η (Theorems 1, 4).
+    Const { eta: f64 },
+    /// η_t = ξ / (a + t) (Theorems 2, 3, 5, 6 and the convex experiments,
+    /// where ξ = c/λ and a = dH/k per §5.2.2).
+    InvTime { xi: f64, a: f64 },
+    /// Linear warmup for `warmup` steps to `peak`, then multiply by `decay`
+    /// at each milestone (the ResNet-50 schedule of §5.1.1).
+    WarmupPiecewise { peak: f64, warmup: usize, milestones: Vec<usize>, decay: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f64 {
+        match self {
+            LrSchedule::Const { eta } => *eta,
+            LrSchedule::InvTime { xi, a } => xi / (a + t as f64),
+            LrSchedule::WarmupPiecewise { peak, warmup, milestones, decay } => {
+                if t < *warmup {
+                    peak * (t + 1) as f64 / *warmup as f64
+                } else {
+                    let drops = milestones.iter().filter(|&&m| t >= m).count() as i32;
+                    peak * decay.powi(drops)
+                }
+            }
+        }
+    }
+}
+
+/// Local optimizer state (per worker). Momentum is applied to the local
+/// steps, exactly as in the paper's experiments; the *transmitted* quantity
+/// is always the net parameter displacement, so the coordinator is agnostic
+/// to the local optimizer.
+#[derive(Clone, Debug)]
+pub struct LocalSgd {
+    pub momentum: f64,
+    pub weight_decay: f64,
+    velocity: Vec<f32>,
+}
+
+impl LocalSgd {
+    pub fn new(d: usize, momentum: f64, weight_decay: f64) -> Self {
+        LocalSgd { momentum, weight_decay, velocity: vec![0.0; d] }
+    }
+
+    pub fn plain(d: usize) -> Self {
+        Self::new(d, 0.0, 0.0)
+    }
+
+    /// One local step: x ← x − η (v) with v = μ·v + g + wd·x.
+    pub fn step(&mut self, x: &mut [f32], grad: &[f32], eta: f64) {
+        debug_assert_eq!(x.len(), grad.len());
+        debug_assert_eq!(x.len(), self.velocity.len());
+        let mu = self.momentum as f32;
+        let wd = self.weight_decay as f32;
+        let eta = eta as f32;
+        if mu == 0.0 && wd == 0.0 {
+            for (xi, gi) in x.iter_mut().zip(grad) {
+                *xi -= eta * gi;
+            }
+            return;
+        }
+        for ((xi, gi), vi) in x.iter_mut().zip(grad).zip(self.velocity.iter_mut()) {
+            let g = gi + wd * *xi;
+            *vi = mu * *vi + g;
+            *xi -= eta * *vi;
+        }
+    }
+
+    /// Reset momentum (used when local state is replaced by the global model
+    /// in variants that drop local velocity at sync; default keeps it).
+    pub fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_and_invtime() {
+        let c = LrSchedule::Const { eta: 0.1 };
+        assert_eq!(c.at(0), 0.1);
+        assert_eq!(c.at(1000), 0.1);
+        let it = LrSchedule::InvTime { xi: 8.0, a: 2.0 };
+        assert!((it.at(0) - 4.0).abs() < 1e-12);
+        assert!((it.at(6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_piecewise() {
+        let s = LrSchedule::WarmupPiecewise {
+            peak: 1.0,
+            warmup: 10,
+            milestones: vec![30, 60],
+            decay: 0.1,
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(9) - 1.0).abs() < 1e-12);
+        assert!((s.at(20) - 1.0).abs() < 1e-12);
+        assert!((s.at(30) - 0.1).abs() < 1e-12);
+        assert!((s.at(60) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut opt = LocalSgd::plain(3);
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        opt.step(&mut x, &[1.0, 0.0, -1.0], 0.5);
+        assert_eq!(x, vec![0.5, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = LocalSgd::new(1, 0.9, 0.0);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], 1.0); // v=1, x=-1
+        opt.step(&mut x, &[1.0], 1.0); // v=1.9, x=-2.9
+        assert!((x[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut opt = LocalSgd::new(1, 0.0, 0.1);
+        let mut x = vec![10.0f32];
+        opt.step(&mut x, &[0.0], 1.0);
+        assert!((x[0] - 9.0).abs() < 1e-6);
+    }
+}

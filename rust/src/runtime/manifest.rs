@@ -1,0 +1,137 @@
+//! Artifact manifest (written by python/compile/aot.py, parsed here with the
+//! in-tree JSON parser — serde is unavailable offline).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One exported model variant.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    /// Flat parameter dimension.
+    pub d: usize,
+    /// Compiled per-call batch size.
+    pub batch: usize,
+    /// Feature width of x (classifiers: input dim; LM: seq+1 tokens as f32).
+    pub feat: usize,
+    pub classes: usize,
+    pub grad_file: String,
+    pub eval_file: String,
+    pub init_file: Option<String>,
+    /// LM-only: sequence length.
+    pub seq: Option<usize>,
+    /// Per-tensor flat sizes (LM), for piecewise compression.
+    pub layer_sizes: Vec<usize>,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(
+            root.get("format").as_usize() == Some(1),
+            "unsupported manifest format"
+        );
+        let models = root
+            .get("models")
+            .as_arr()
+            .context("manifest missing `models`")?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+fn parse_entry(j: &Json) -> Result<ModelEntry> {
+    let req_str = |k: &str| -> Result<String> {
+        j.get(k)
+            .as_str()
+            .map(str::to_string)
+            .with_context(|| format!("manifest entry missing `{k}`"))
+    };
+    let req_usize = |k: &str| -> Result<usize> {
+        j.get(k)
+            .as_usize()
+            .with_context(|| format!("manifest entry missing `{k}`"))
+    };
+    Ok(ModelEntry {
+        name: req_str("name")?,
+        kind: req_str("kind")?,
+        d: req_usize("d")?,
+        batch: req_usize("batch")?,
+        feat: req_usize("feat")?,
+        classes: req_usize("classes")?,
+        grad_file: req_str("grad_file")?,
+        eval_file: req_str("eval_file")?,
+        init_file: j.get("init_file").as_str().map(str::to_string),
+        seq: j.get("seq").as_usize(),
+        layer_sizes: j
+            .get("layer_sizes")
+            .as_arr()
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": [
+        {"name": "softmax", "kind": "softmax", "d": 7850, "batch": 8,
+         "feat": 784, "classes": 10,
+         "grad_file": "softmax.grad.hlo.txt", "eval_file": "softmax.eval.hlo.txt"},
+        {"name": "lm", "kind": "lm", "d": 1000, "batch": 4, "feat": 65,
+         "classes": 256, "seq": 64, "layer_sizes": [10, 20],
+         "grad_file": "lm.grad.hlo.txt", "eval_file": "lm.eval.hlo.txt",
+         "init_file": "lm.init.f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["softmax", "lm"]);
+        let s = m.model("softmax").unwrap();
+        assert_eq!(s.d, 7850);
+        assert_eq!(s.batch, 8);
+        assert!(s.init_file.is_none());
+        assert!(s.seq.is_none());
+        let lm = m.model("lm").unwrap();
+        assert_eq!(lm.seq, Some(64));
+        assert_eq!(lm.layer_sizes, vec![10, 20]);
+        assert_eq!(lm.init_file.as_deref(), Some("lm.init.f32"));
+        assert!(m.model("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "models": []}"#).is_err());
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse(r#"{"format": 1, "models": [{"name": "x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Synchronization schedules I_T (paper Definition 4, §3, §4).
+//!
+//! A schedule decides, per worker, at which global-clock steps t the worker
+//! synchronizes with the master (i.e. t+1 ∈ I_T^(r) in the paper's
+//! indexing). `gap()` of a schedule is the maximum distance between
+//! consecutive sync points; all theory constants are stated in terms of
+//! H ≥ gap(I_T).
+
+use crate::util::rng::Pcg64;
+
+/// Per-worker synchronization schedule over a horizon of T steps.
+pub trait SyncSchedule: Send + Sync {
+    /// Does worker `r` synchronize at the end of step `t` (0-based)?
+    fn syncs_at(&self, r: usize, t: usize) -> bool;
+
+    /// Upper bound H on the gap (Definition 4).
+    fn h(&self) -> usize;
+
+    /// True iff all workers share the same sync points (Algorithm 1).
+    fn is_synchronous(&self) -> bool;
+
+    fn name(&self) -> String;
+}
+
+/// Synchronous schedule with a fixed period H: sync at t = H−1, 2H−1, …
+/// (H = 1 is vanilla distributed SGD). gap(I_T) = H.
+#[derive(Clone, Debug)]
+pub struct FixedPeriod {
+    pub h: usize,
+}
+
+impl FixedPeriod {
+    pub fn new(h: usize) -> Self {
+        assert!(h >= 1);
+        FixedPeriod { h }
+    }
+}
+
+impl SyncSchedule for FixedPeriod {
+    fn syncs_at(&self, _r: usize, t: usize) -> bool {
+        (t + 1) % self.h == 0
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn is_synchronous(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        format!("sync(H={})", self.h)
+    }
+}
+
+/// Asynchronous schedule (§5.2.3): after every synchronization, worker r
+/// draws its next gap uniformly from {1, …, H}. Schedules are materialized
+/// deterministically from a seed so the simulator and the threaded
+/// coordinator see the same I_T^(r).
+#[derive(Clone, Debug)]
+pub struct RandomGaps {
+    h: usize,
+    /// sync_points[r] = sorted sync steps for worker r over [0, horizon).
+    sync_points: Vec<Vec<u32>>,
+    horizon: usize,
+}
+
+impl RandomGaps {
+    pub fn generate(workers: usize, h: usize, horizon: usize, seed: u64) -> Self {
+        assert!(h >= 1);
+        let mut sync_points = Vec::with_capacity(workers);
+        for r in 0..workers {
+            let mut rng = Pcg64::new(seed ^ 0xa5ce9d, r as u64 + 1);
+            let mut pts = Vec::new();
+            let mut t = 0usize;
+            loop {
+                let gap = rng.range_u64(1, h as u64) as usize;
+                t += gap;
+                if t > horizon {
+                    break;
+                }
+                pts.push((t - 1) as u32); // sync at end of step t-1
+            }
+            // Ensure the horizon end is a sync point for every worker so the
+            // final model reflects all local work (paper: T ∈ I_T^(r)).
+            if pts.last().map(|&p| p as usize) != Some(horizon - 1) && horizon > 0 {
+                pts.push((horizon - 1) as u32);
+            }
+            sync_points.push(pts);
+        }
+        RandomGaps { h, sync_points, horizon }
+    }
+
+    /// The explicit schedule for worker r (used by tests).
+    pub fn points(&self, r: usize) -> &[u32] {
+        &self.sync_points[r]
+    }
+
+    /// Measured gap(I_T^(r)) — must be ≤ H by construction.
+    pub fn measured_gap(&self, r: usize) -> usize {
+        let pts = &self.sync_points[r];
+        let mut prev = -1i64;
+        let mut worst = 0usize;
+        for &p in pts {
+            worst = worst.max((p as i64 - prev) as usize);
+            prev = p as i64;
+        }
+        worst
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.horizon
+    }
+}
+
+impl SyncSchedule for RandomGaps {
+    fn syncs_at(&self, r: usize, t: usize) -> bool {
+        self.sync_points[r].binary_search(&(t as u32)).is_ok()
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn is_synchronous(&self) -> bool {
+        self.h == 1
+    }
+
+    fn name(&self) -> String {
+        format!("async(H={})", self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_period_gap() {
+        let s = FixedPeriod::new(4);
+        let pts: Vec<usize> = (0..16).filter(|&t| s.syncs_at(0, t)).collect();
+        assert_eq!(pts, vec![3, 7, 11, 15]);
+        assert!(s.is_synchronous());
+    }
+
+    #[test]
+    fn h1_syncs_every_step() {
+        let s = FixedPeriod::new(1);
+        assert!((0..10).all(|t| s.syncs_at(0, t)));
+    }
+
+    #[test]
+    fn random_gaps_respect_h_and_end() {
+        let h = 8;
+        let horizon = 200;
+        let s = RandomGaps::generate(5, h, horizon, 1234);
+        for r in 0..5 {
+            assert!(s.measured_gap(r) <= h, "worker {r} gap {}", s.measured_gap(r));
+            assert_eq!(*s.points(r).last().unwrap() as usize, horizon - 1);
+            // points sorted and unique
+            let pts = s.points(r);
+            assert!(pts.windows(2).all(|w| w[0] < w[1]));
+        }
+        // Workers have different schedules (overwhelmingly likely).
+        assert_ne!(s.points(0), s.points(1));
+    }
+
+    #[test]
+    fn random_gaps_deterministic_in_seed() {
+        let a = RandomGaps::generate(3, 5, 100, 7);
+        let b = RandomGaps::generate(3, 5, 100, 7);
+        let c = RandomGaps::generate(3, 5, 100, 8);
+        for r in 0..3 {
+            assert_eq!(a.points(r), b.points(r));
+        }
+        assert_ne!(a.points(0), c.points(0));
+    }
+
+    #[test]
+    fn random_gaps_h1_is_synchronous() {
+        let s = RandomGaps::generate(4, 1, 50, 3);
+        for r in 0..4 {
+            let pts: Vec<usize> = (0..50).filter(|&t| s.syncs_at(r, t)).collect();
+            assert_eq!(pts, (0..50).collect::<Vec<_>>());
+        }
+    }
+}

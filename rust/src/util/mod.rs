@@ -1,0 +1,6 @@
+//! Support substrates (offline sandbox: these replace the usual crates —
+//! see DESIGN.md §6 Substitutions).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

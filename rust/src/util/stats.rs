@@ -1,0 +1,154 @@
+//! Small statistics + timing helpers used by tests and the bench harness
+//! (criterion is not available offline; `benches/*.rs` use these).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of f64s.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.5),
+            p90: q(0.9),
+            p99: q(0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup iterations; returns
+/// per-iteration durations in seconds.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Bench-report line in a stable, grep-friendly format.
+pub fn report(name: &str, samples_sec: &[f64], bytes_per_iter: Option<usize>) {
+    let s = Summary::of(samples_sec);
+    let mut line = format!(
+        "bench {name:<44} n={:<4} mean={:>10} p50={:>10} p99={:>10}",
+        s.n,
+        fmt_duration(s.mean),
+        fmt_duration(s.p50),
+        fmt_duration(s.p99),
+    );
+    if let Some(b) = bytes_per_iter {
+        let gbps = b as f64 / s.mean / 1e9;
+        line.push_str(&format!(" thrpt={gbps:>7.3} GB/s"));
+    }
+    println!("{line}");
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+// -- vector helpers shared across modules ------------------------------------
+
+/// Squared L2 norm.
+pub fn norm2_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// L2 norm.
+pub fn norm2(xs: &[f32]) -> f64 {
+    norm2_sq(xs).sqrt()
+}
+
+/// L1 norm.
+pub fn norm1(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64).abs()).sum()
+}
+
+/// max |x_i|.
+pub fn norm_inf(xs: &[f32]) -> f64 {
+    xs.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0f32, -4.0];
+        assert!((norm2(&v) - 5.0).abs() < 1e-9);
+        assert!((norm1(&v) - 7.0).abs() < 1e-9);
+        assert!((norm_inf(&v) - 4.0).abs() < 1e-9);
+        assert!((norm2_sq(&v) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("us"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+}

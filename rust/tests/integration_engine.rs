@@ -1,0 +1,214 @@
+//! Integration tests: the engine against the paper's algorithmic claims.
+
+use qsparse::compress::{parse_spec, Identity, TopK};
+use qsparse::data::{gaussian_clusters_split, Dataset, Sharding};
+use qsparse::engine::{run, run_from, TrainSpec};
+use qsparse::grad::{GradModel, SoftmaxRegression};
+use qsparse::optim::LrSchedule;
+use qsparse::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+
+fn setup(n: usize) -> (Dataset, Dataset, SoftmaxRegression) {
+    let (train, test) = gaussian_clusters_split(n, n / 4, 20, 4, 0.4, 1.0, 77);
+    let model = SoftmaxRegression::new(20, 4, 1.0 / n as f64);
+    (train, test, model)
+}
+
+fn base_spec<'a>(
+    model: &'a SoftmaxRegression,
+    train: &'a Dataset,
+    comp: &'a dyn qsparse::Compressor,
+    sched: &'a dyn SyncSchedule,
+) -> TrainSpec<'a> {
+    let mut spec = TrainSpec::new(model, train, comp, sched);
+    spec.workers = 5;
+    spec.batch = 4;
+    spec.steps = 200;
+    spec.lr = LrSchedule::Const { eta: 0.4 };
+    spec
+}
+
+/// H = 1 + identity compressor must be *exactly* vanilla distributed SGD:
+/// x_{t+1} = x_t − (η/R) Σ_r ∇f_{i_t^r}(x_t), reproduced here by hand.
+#[test]
+fn h1_identity_is_bitexact_vanilla_sgd() {
+    let (train, _test, model) = setup(200);
+    let id = Identity;
+    let sched = FixedPeriod::new(1);
+    let mut spec = base_spec(&model, &train, &id, &sched);
+    spec.steps = 25;
+    let hist = run(&spec);
+
+    // Manual replication with the same RNG streams / samplers.
+    use qsparse::data::{shard_indices, ShardSampler};
+    let d = model.dim();
+    let shards = shard_indices(&train, spec.workers, Sharding::Iid);
+    let mut samplers: Vec<ShardSampler> = (0..spec.workers)
+        .map(|r| ShardSampler::new(shards[r].clone(), spec.batch, spec.seed, r))
+        .collect();
+    let mut x = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    for _t in 0..spec.steps {
+        // Engine: each worker does x_local = x − η g_r, sends delta = η g_r;
+        // master: x ← x − (1/R) Σ η g_r. Equivalent to the averaged step,
+        // with the same per-worker f32 rounding (delta = x − (x − ηg)).
+        let eta = 0.4f32;
+        let mut acc = vec![0.0f32; d];
+        for s in samplers.iter_mut() {
+            let batch = s.next_batch(&train);
+            model.loss_grad(&x, &batch, &mut g);
+            for ((a, &xv), &gv) in acc.iter_mut().zip(&x).zip(&g) {
+                *a += xv - (xv - eta * gv);
+            }
+        }
+        for (xv, a) in x.iter_mut().zip(&acc) {
+            *xv -= a / spec.workers as f32;
+        }
+    }
+    let final_loss_manual = {
+        let all: Vec<usize> = (0..train.n).collect();
+        model.loss(&x, &train.gather(&all))
+    };
+    for (a, b) in hist.final_params.iter().zip(&x) {
+        assert!((a - b).abs() <= 1e-6, "iterates diverged: {a} vs {b}");
+    }
+    assert!(final_loss_manual.is_finite());
+}
+
+/// RandomGaps with H = 1 is the synchronous schedule; Algorithm 2 must then
+/// coincide with Algorithm 1 exactly.
+#[test]
+fn async_h1_equals_sync() {
+    let (train, _test, model) = setup(200);
+    let id = Identity;
+    let s_sync = FixedPeriod::new(1);
+    let s_async = RandomGaps::generate(5, 1, 60, 123);
+    let mut a = base_spec(&model, &train, &id, &s_sync);
+    a.steps = 60;
+    let mut b = base_spec(&model, &train, &id, &s_async);
+    b.steps = 60;
+    let ha = run(&a);
+    let hb = run(&b);
+    assert_eq!(ha.final_params, hb.final_params);
+    assert_eq!(ha.total_bits_up(), hb.total_bits_up());
+}
+
+/// Every operator in the zoo converges on the strongly convex objective
+/// (Theorem 3 / Theorem 6 sanity).
+#[test]
+fn all_operators_converge_convex() {
+    let (train, _test, model) = setup(400);
+    let l0 = (4.0f64).ln();
+    for spec_str in [
+        "identity",
+        "topk:k=6",
+        "randk:k=12",
+        "qsgd:bits=4",
+        "sign",
+        "qtopk:k=8,bits=4",
+        "qtopk:k=8,bits=4,scaled",
+        "qtopk:k=8,bits=2,scaled",
+        "signtopk:k=8,m=1",
+        "signtopk:k=8,m=2",
+    ] {
+        let comp = parse_spec(spec_str).unwrap();
+        for h in [1usize, 4] {
+            let sched = FixedPeriod::new(h);
+            let mut spec = base_spec(&model, &train, comp.as_ref(), &sched);
+            spec.steps = 400;
+            spec.lr = LrSchedule::InvTime { xi: 60.0, a: 100.0 };
+            let hist = run(&spec);
+            let lf = hist.final_loss();
+            assert!(
+                lf < 0.45 * l0,
+                "{spec_str} H={h}: loss {l0:.3} → {lf:.3} (did not converge)"
+            );
+        }
+    }
+}
+
+/// Lemma 5 flavor: with a fixed learning rate the average error memory stays
+/// bounded over time (no blow-up), and it scales like O(η²).
+#[test]
+fn memory_bounded_and_scales_with_eta_sq() {
+    let (train, _test, model) = setup(400);
+    let comp = TopK::new(8);
+    let sched = FixedPeriod::new(4);
+    let run_with_eta = |eta: f64| {
+        let mut spec = base_spec(&model, &train, &comp, &sched);
+        spec.steps = 300;
+        spec.lr = LrSchedule::Const { eta };
+        let hist = run(&spec);
+        // max over the second half (steady state)
+        hist.points
+            .iter()
+            .filter(|p| p.step > 150)
+            .map(|p| p.mem_norm_sq)
+            .fold(0.0f64, f64::max)
+    };
+    let m1 = run_with_eta(0.2);
+    let m2 = run_with_eta(0.1);
+    assert!(m1.is_finite() && m1 > 0.0);
+    // η halved ⇒ memory bound quarters (allow slack for gradient drift).
+    let ratio = m1 / m2;
+    assert!(
+        (2.0..9.0).contains(&ratio),
+        "memory did not scale ~η²: m(0.2)={m1:.3e} m(0.1)={m2:.3e} ratio={ratio:.2}"
+    );
+}
+
+/// Increasing H with the identity compressor divides the bits by ~H while
+/// keeping convergence in range (the local-SGD tradeoff, fig 2/5).
+#[test]
+fn bits_scale_inversely_with_h() {
+    let (train, _test, model) = setup(400);
+    let id = Identity;
+    let mut bits = Vec::new();
+    for h in [1usize, 2, 4, 8] {
+        let sched = FixedPeriod::new(h);
+        let mut spec = base_spec(&model, &train, &id, &sched);
+        spec.steps = 160;
+        let hist = run(&spec);
+        bits.push(hist.total_bits_up());
+    }
+    for (i, h) in [2usize, 4, 8].iter().enumerate() {
+        let ratio = bits[0] as f64 / bits[i + 1] as f64;
+        assert!(
+            (ratio - *h as f64).abs() < 0.2 * *h as f64,
+            "H={h}: bits ratio {ratio}"
+        );
+    }
+}
+
+/// Sharding by label skew still converges (error feedback handles it), just
+/// slower than IID.
+#[test]
+fn label_skew_converges() {
+    let (train, _test, model) = setup(400);
+    let comp = TopK::new(8);
+    let sched = FixedPeriod::new(2);
+    let mut spec = base_spec(&model, &train, &comp, &sched);
+    spec.steps = 500;
+    spec.sharding = Sharding::LabelSkew;
+    spec.lr = LrSchedule::InvTime { xi: 60.0, a: 100.0 };
+    let hist = run(&spec);
+    assert!(hist.final_loss() < 0.8 * (4.0f64).ln(), "loss {}", hist.final_loss());
+}
+
+/// run_from with a nonzero init starts from that init (t=0 loss matches).
+#[test]
+fn run_from_respects_init() {
+    let (train, _test, model) = setup(100);
+    let id = Identity;
+    let sched = FixedPeriod::new(1);
+    let mut spec = base_spec(&model, &train, &id, &sched);
+    spec.steps = 1;
+    spec.eval_rows = train.n;
+    let init = vec![0.5f32; model.dim()];
+    let hist = run_from(&spec, init.clone());
+    let all: Vec<usize> = (0..train.n).collect();
+    let _batch = train.gather(&all);
+    let p0 = &hist.points[0];
+    // t=0 loss is evaluated at the provided init, not at zeros.
+    let zeros_loss = (4.0f64).ln();
+    assert!((p0.train_loss - zeros_loss).abs() > 1e-3);
+}

@@ -1,0 +1,144 @@
+//! PJRT runtime integration: the AOT artifacts must agree with the native
+//! rust substrates numerically (same math, two implementations).
+//!
+//! These tests need `make artifacts` to have run; they are skipped (pass
+//! trivially with a notice) when `artifacts/manifest.json` is absent so
+//! `cargo test` works on a fresh checkout.
+
+use qsparse::data::{gaussian_clusters, Batch};
+use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
+use qsparse::runtime::PjrtRuntime;
+use qsparse::util::rng::Pcg64;
+
+fn artifacts() -> Option<PjrtRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::open("artifacts").expect("open artifacts"))
+}
+
+#[test]
+fn manifest_lists_models() {
+    let Some(rt) = artifacts() else { return };
+    let names = rt.manifest().names();
+    for required in ["softmax", "mlp", "lm"] {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+}
+
+/// PJRT softmax gradient ≈ native rust gradient on identical inputs.
+#[test]
+fn pjrt_softmax_matches_native_grad() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.load_model("softmax").unwrap();
+    let e = model.entry.clone();
+    // The artifact's λ is 1/60000 (MNIST n); mirror it natively.
+    let native = SoftmaxRegression::new(e.feat, e.classes, 1.0 / 60000.0);
+    assert_eq!(model.dim(), native.dim());
+
+    let ds = gaussian_clusters(64, e.feat, e.classes, 0.4, 1.0, 3);
+    let batch = ds.gather(&(0..e.batch).collect::<Vec<_>>());
+    let mut rng = Pcg64::seeded(17);
+    let params: Vec<f32> = (0..model.dim()).map(|_| rng.normal_f32() * 0.05).collect();
+
+    let mut g_pjrt = vec![0.0f32; model.dim()];
+    let loss_pjrt = model.loss_grad(&params, &batch, &mut g_pjrt);
+    let mut g_native = vec![0.0f32; native.dim()];
+    let loss_native = native.loss_grad(&params, &batch, &mut g_native);
+
+    assert!(
+        (loss_pjrt - loss_native).abs() < 1e-4 * (1.0 + loss_native.abs()),
+        "loss: pjrt {loss_pjrt} vs native {loss_native}"
+    );
+    let mut worst = 0.0f32;
+    for (a, b) in g_pjrt.iter().zip(&g_native) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 2e-4, "grad max abs diff {worst}");
+}
+
+/// PJRT eval agrees with native error rates.
+#[test]
+fn pjrt_softmax_eval_matches_native() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.load_model("softmax").unwrap();
+    let e = model.entry.clone();
+    let native = SoftmaxRegression::new(e.feat, e.classes, 1.0 / 60000.0);
+    let ds = gaussian_clusters(64, e.feat, e.classes, 0.4, 1.0, 5);
+    let batch = ds.gather(&(0..e.batch * 4).collect::<Vec<_>>());
+    let mut rng = Pcg64::seeded(29);
+    let params: Vec<f32> = (0..model.dim()).map(|_| rng.normal_f32() * 0.1).collect();
+    let err_p = model.error_rate(&params, &batch);
+    let err_n = native.error_rate(&params, &batch);
+    assert!(
+        (err_p - err_n).abs() <= 0.0 + 1e-9,
+        "top1 err: pjrt {err_p} vs native {err_n}"
+    );
+    let e5_p = model.topn_error_rate(&params, &batch, 5);
+    let e5_n = native.topn_error_rate(&params, &batch, 5);
+    assert!((e5_p - e5_n).abs() <= 1e-9, "top5 err: {e5_p} vs {e5_n}");
+}
+
+/// PJRT MLP loss decreases under plain gradient steps (artifact fwd/bwd is
+/// a working training oracle; detailed numerics are covered in pytest).
+#[test]
+fn pjrt_mlp_trains() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.load_model("mlp").unwrap();
+    let e = model.entry.clone();
+    let mut params = rt.load_init("mlp").unwrap().expect("mlp init");
+    let ds = gaussian_clusters(256, e.feat, e.classes, 0.3, 1.0, 9);
+    let mut g = vec![0.0f32; model.dim()];
+    let batch = ds.gather(&(0..e.batch).collect::<Vec<_>>());
+    let l0 = model.loss_grad(&params, &batch, &mut g);
+    for step in 0..30 {
+        let idx: Vec<usize> = (0..e.batch).map(|i| (step * e.batch + i) % ds.n).collect();
+        let b = ds.gather(&idx);
+        model.loss_grad(&params, &b, &mut g);
+        for (p, gv) in params.iter_mut().zip(&g) {
+            *p -= 0.1 * gv;
+        }
+    }
+    let l1 = model.loss_grad(&params, &batch, &mut g);
+    assert!(l1 < l0, "mlp artifact did not learn: {l0} → {l1}");
+}
+
+/// Native MLP and the JAX MLP share the parameter layout: the exported init
+/// vector has the right length and a plausible He-init scale.
+#[test]
+fn mlp_init_layout_compatible() {
+    let Some(rt) = artifacts() else { return };
+    let entry = rt.manifest().model("mlp").unwrap().clone();
+    let widths: Vec<usize> = vec![entry.feat, 64, entry.classes];
+    let native = Mlp::new(widths);
+    assert_eq!(native.dim(), entry.d, "flat layout size mismatch");
+    let init = rt.load_init("mlp").unwrap().unwrap();
+    assert_eq!(init.len(), entry.d);
+    let nz = init.iter().filter(|v| **v != 0.0).count();
+    // weights nonzero, biases zero: nz = Σ in·out
+    assert_eq!(nz, entry.feat * 64 + 64 * entry.classes);
+}
+
+/// The LM artifact runs a full grad step and its loss at init is ≈ ln(vocab).
+#[test]
+fn pjrt_lm_loss_at_init() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.load_model("lm").unwrap();
+    let e = model.entry.clone();
+    let seq = e.seq.unwrap();
+    let params = rt.load_init("lm").unwrap().unwrap();
+    let mut rng = Pcg64::seeded(41);
+    let x: Vec<f32> = (0..e.batch * (seq + 1))
+        .map(|_| rng.below(e.classes as u64) as f32)
+        .collect();
+    let batch = Batch { x, y: vec![0; e.batch], b: e.batch, dim: seq + 1 };
+    let mut g = vec![0.0f32; model.dim()];
+    let loss = model.loss_grad(&params, &batch, &mut g);
+    let expect = (e.classes as f64).ln();
+    assert!(
+        (loss - expect).abs() < 0.35 * expect,
+        "LM init loss {loss} ≉ ln(vocab) {expect}"
+    );
+    assert!(g.iter().any(|&v| v != 0.0), "zero gradient");
+}

@@ -1,0 +1,237 @@
+//! Seeded property tests over the compression stack (the sandbox has no
+//! proptest crate, so these are randomized sweeps with fixed seeds — fully
+//! reproducible, wide input coverage including adversarial shapes).
+
+use qsparse::compress::{encode, parse_spec, Compressor, Message};
+use qsparse::util::rng::Pcg64;
+use qsparse::util::stats::norm2_sq;
+
+/// Input families that historically break compressors.
+fn gen_vector(rng: &mut Pcg64, d: usize, family: usize) -> Vec<f32> {
+    match family % 6 {
+        0 => (0..d).map(|_| rng.normal_f32()).collect(), // gaussian
+        1 => vec![0.0; d],                               // all zeros
+        2 => {
+            // single spike
+            let mut v = vec![0.0f32; d];
+            v[rng.below_usize(d)] = rng.normal_f32() * 100.0;
+            v
+        }
+        3 => (0..d).map(|_| 1.0f32).collect(), // constant (ties everywhere)
+        4 => (0..d)
+            .map(|_| rng.normal_f32() * 10f32.powi(rng.below(9) as i32 - 4))
+            .collect(), // wide dynamic range
+        _ => (0..d)
+            .map(|i| if i % 7 == 0 { rng.normal_f32() } else { 0.0 })
+            .collect(), // sparse input
+    }
+}
+
+fn operators(d: usize, rng: &mut Pcg64) -> Vec<Box<dyn Compressor>> {
+    let k = 1 + rng.below_usize(d);
+    let bits = 2 + rng.below(7) as u32;
+    [
+        "identity".to_string(),
+        format!("topk:k={k}"),
+        format!("randk:k={k}"),
+        format!("qsgd:bits={bits}"),
+        "sign".to_string(),
+        format!("qtopk:k={k},bits={bits}"),
+        format!("qtopk:k={k},bits={bits},scaled"),
+        format!("signtopk:k={k},m=1"),
+        format!("signtopk:k={k},m=2"),
+    ]
+    .iter()
+    .map(|s| parse_spec(s).unwrap())
+    .collect()
+}
+
+/// Wire round-trip: decode(encode(m)) == m for every operator × input family
+/// × dimension.
+#[test]
+fn prop_encode_decode_roundtrip() {
+    let mut rng = Pcg64::seeded(0xDEC0DE);
+    for trial in 0..120 {
+        let d = 1 + rng.below_usize(600);
+        let x = gen_vector(&mut rng, d, trial);
+        for op in operators(d, &mut rng) {
+            let msg = op.compress(&x, &mut rng);
+            let (bytes, len) = encode::encode(&msg);
+            let back = encode::decode(&bytes, len)
+                .unwrap_or_else(|| panic!("trial {trial} {} failed to decode", op.name()));
+            assert_eq!(msg, back, "trial {trial} {}", op.name());
+            assert_eq!(len, msg.wire_bits());
+            // byte buffer is minimal
+            assert!(bytes.len() as u64 * 8 < len + 8);
+        }
+    }
+}
+
+/// Mathematical consistency: to_dense ≡ add_into, dims preserved, nnz sane.
+#[test]
+fn prop_message_views_consistent() {
+    let mut rng = Pcg64::seeded(0xC0DE);
+    for trial in 0..80 {
+        let d = 1 + rng.below_usize(300);
+        let x = gen_vector(&mut rng, d, trial);
+        for op in operators(d, &mut rng) {
+            let msg = op.compress(&x, &mut rng);
+            assert_eq!(msg.dim(), d, "{}", op.name());
+            assert!(msg.nnz() <= d);
+            let dense = msg.to_dense();
+            let mut acc = vec![7.0f32; d];
+            msg.add_into(&mut acc, -3.0);
+            for (a, dv) in acc.iter().zip(&dense) {
+                let expect = 7.0 - 3.0 * dv;
+                assert!(
+                    (a - expect).abs() <= 1e-5 * (1.0 + expect.abs()),
+                    "{}: {a} vs {expect}",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+/// Definition 3 (γ-compression): E‖x − C(x)‖² ≤ (1 − γ)‖x‖², Monte-Carlo
+/// over stochastic operators, exact for deterministic ones.
+#[test]
+fn prop_compression_property_all_operators() {
+    let mut rng = Pcg64::seeded(0x9A77A);
+    for trial in 0..25 {
+        let d = 8 + rng.below_usize(200);
+        // Gaussian + wide-range families (zero vectors are trivially fine).
+        let x = gen_vector(&mut rng, d, if trial % 2 == 0 { 0 } else { 4 });
+        let xn = norm2_sq(&x);
+        if xn == 0.0 {
+            continue;
+        }
+        for op in operators(d, &mut rng) {
+            let gamma = op.gamma(d);
+            if gamma <= 0.0 {
+                continue; // outside the operating regime (Remark 1)
+            }
+            let trials = 300;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let dense = op.compress(&x, &mut rng).to_dense();
+                let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+                acc += norm2_sq(&resid);
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                mean <= (1.0 - gamma) * xn * 1.10 + 1e-9,
+                "trial {trial} {} d={d}: E‖x−C‖²={mean:.4e} > (1−γ)‖x‖²={:.4e}",
+                op.name(),
+                (1.0 - gamma) * xn
+            );
+        }
+    }
+}
+
+/// Error-feedback invariant: over any message sequence, memory + total
+/// transmitted = total input (conservation of mass).
+#[test]
+fn prop_error_feedback_conserves_mass() {
+    use qsparse::compress::ErrorMemory;
+    let mut rng = Pcg64::seeded(0xFEED);
+    for trial in 0..40 {
+        let d = 4 + rng.below_usize(100);
+        for op in operators(d, &mut rng) {
+            let mut mem = ErrorMemory::zeros(d);
+            let mut total_in = vec![0.0f64; d];
+            let mut total_out = vec![0.0f64; d];
+            for _round in 0..12 {
+                let delta = gen_vector(&mut rng, d, trial);
+                for (t, &v) in total_in.iter_mut().zip(&delta) {
+                    *t += v as f64;
+                }
+                let msg = op.compress_via(&mut mem, &delta, &mut rng);
+                let dense = msg.to_dense();
+                for (t, &v) in total_out.iter_mut().zip(&dense) {
+                    *t += v as f64;
+                }
+            }
+            for i in 0..d {
+                let lhs = total_in[i];
+                let rhs = total_out[i] + mem.as_slice()[i] as f64;
+                assert!(
+                    (lhs - rhs).abs() <= 1e-2 * (1.0 + lhs.abs()),
+                    "{} coord {i}: in={lhs} out+mem={rhs}",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+/// Helper so the conservation test reads naturally.
+trait CompressVia {
+    fn compress_via(
+        &self,
+        mem: &mut qsparse::compress::ErrorMemory,
+        delta: &[f32],
+        rng: &mut Pcg64,
+    ) -> Message;
+}
+
+impl CompressVia for Box<dyn Compressor> {
+    fn compress_via(
+        &self,
+        mem: &mut qsparse::compress::ErrorMemory,
+        delta: &[f32],
+        rng: &mut Pcg64,
+    ) -> Message {
+        mem.compress_update(delta, self.as_ref(), rng)
+    }
+}
+
+/// Elias-γ codes round-trip for arbitrary u64 magnitudes.
+#[test]
+fn prop_elias_gamma_roundtrip() {
+    let mut rng = Pcg64::seeded(0xE11A5);
+    let mut w = encode::BitWriter::new();
+    let mut values = Vec::new();
+    for _ in 0..2000 {
+        let v = 1 + (rng.next_u64() >> rng.below(60) as u32);
+        w.push_elias_gamma(v);
+        values.push(v);
+    }
+    let (bytes, len) = w.into_bytes();
+    let mut r = encode::BitReader::new(&bytes, len);
+    for (i, &v) in values.iter().enumerate() {
+        assert_eq!(r.read_elias_gamma(), Some(v), "value {i}");
+    }
+    assert_eq!(r.read_bit(), None);
+}
+
+/// JSON emit→parse fixpoint on randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    use qsparse::util::json::Json;
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => Json::Str(
+                (0..rng.below_usize(12))
+                    .map(|_| char::from_u32(0x20 + rng.below(0x50) as u32).unwrap())
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below_usize(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below_usize(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg64::seeded(0x15011);
+    for _ in 0..200 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(doc, back, "{text}");
+    }
+}
