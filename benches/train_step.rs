@@ -37,8 +37,9 @@ fn main() {
     });
     report("grad/native-mlp(b=16,d=17k)", &samples, None);
 
-    // PJRT grad latency (if artifacts exist).
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // PJRT grad latency (if artifacts exist and this build can run them).
+    if std::path::Path::new("artifacts/manifest.json").exists() && PjrtRuntime::backend_available()
+    {
         let rt = PjrtRuntime::open("artifacts").unwrap();
         let pj = rt.load_model("softmax").unwrap();
         let mut g = vec![0.0f32; pj.dim()];
@@ -60,7 +61,10 @@ fn main() {
         });
         report("grad/pjrt-lm(b=8,d=471k)", &samples, None);
     } else {
-        println!("(artifacts/ missing — skipping PJRT benches; run `make artifacts`)");
+        println!(
+            "(artifacts/ or the `pjrt` feature missing — skipping PJRT benches; \
+             run `make artifacts` and build with --features pjrt)"
+        );
     }
 
     // Full engine step (R=8) vs 8× raw grad: the difference is coordination.
@@ -86,4 +90,64 @@ fn main() {
         qsparse::util::stats::fmt_duration(engine_step),
         qsparse::util::stats::fmt_duration(8.0 * native_softmax_grad),
     );
+
+    // Broadcast path (master side, R=8, d=7850): dense model snapshot vs
+    // error-compensated compressed delta per worker. Shows both the wall
+    // cost of the downlink aggregation work and the wire-bit savings.
+    bench_broadcast(quick, warm, iters);
+}
+
+fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
+    use qsparse::compress::encode;
+    use qsparse::protocol::MasterCore;
+    use qsparse::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    let d = 7850usize;
+    let workers = 8usize;
+    let mut rng = Pcg64::seeded(7);
+    let init: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+    let drift = || -> Vec<f32> {
+        let mut r = Pcg64::seeded(8);
+        (0..d).map(|_| r.normal_f32() * 0.01).collect()
+    };
+
+    // Dense downlink: one shared Arc snapshot per round (what the threaded
+    // master sends), bits = encoded dense model per worker.
+    let mut core = MasterCore::new(init.clone(), workers, 7, false);
+    let noise = drift();
+    let samples = time_iters(warm * 5, iters * 20, || {
+        core.apply_update(&qsparse::Message::Dense { values: noise.clone() }).unwrap();
+        let payload: Arc<[f32]> = Arc::from(core.params());
+        for _r in 0..workers {
+            std::hint::black_box(Arc::clone(&payload));
+        }
+    });
+    report("broadcast/dense(R=8,d=7850)", &samples, Some(4 * d));
+    let dense_bits = workers as u64 * encode::dense_model_bits(d);
+
+    // Compressed downlink: per-worker EF delta + wire encoding.
+    for spec in ["topk:k=400", "qtopk:k=400,bits=4"] {
+        let down = parse_spec(spec).unwrap();
+        let mut core = MasterCore::new(init.clone(), workers, 7, true);
+        let noise = drift();
+        let mut round_bits = 0u64;
+        let mut rounds = 0u64;
+        let samples = time_iters(warm * 5, if quick { iters * 5 } else { iters * 20 }, || {
+            core.apply_update(&qsparse::Message::Dense { values: noise.clone() }).unwrap();
+            for r in 0..workers {
+                let msg = core.delta_broadcast(r, down.as_ref());
+                let (bytes, bit_len) = encode::encode(&msg);
+                round_bits += bit_len;
+                std::hint::black_box(bytes);
+            }
+            rounds += 1;
+        });
+        report(&format!("broadcast/{spec}(R=8,d=7850)"), &samples, None);
+        let avg_bits = round_bits / rounds.max(1);
+        println!(
+            "  downlink bits/round: {avg_bits} vs dense {dense_bits} ({:.1}x saving)",
+            dense_bits as f64 / avg_bits as f64
+        );
+    }
 }

@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         lr: LrSchedule::Const { eta: 0.25 },
         momentum: 0.9,
         compressor: compressor.as_ref(),
+        down_compressor: &qsparse::compress::IDENTITY,
         schedule: &schedule,
         sharding: Sharding::Iid,
         seed: 20190527,

@@ -320,6 +320,14 @@ pub fn wire_bits(msg: &Message) -> u64 {
     encode(msg).1
 }
 
+/// Wire size in bits of a dense model broadcast of dimension `d` — equal to
+/// `wire_bits(&Message::Dense { .. })` but computed in O(1): 3-bit tag +
+/// Elias-γ(d+1) header + d × f32. Lets the dense downlink path account bits
+/// honestly without serializing `32·d` bits per worker per sync.
+pub fn dense_model_bits(d: usize) -> u64 {
+    3 + elias_gamma_bits(d as u64 + 1) + 32 * d as u64
+}
+
 /// Decode a message produced by `encode`.
 pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
     let mut r = BitReader::new(bytes, bit_len);
@@ -470,6 +478,14 @@ mod tests {
         assert!(topk < dense / 50, "topk={topk} dense={dense}");
         assert!(signtopk < topk, "signtopk={signtopk} topk={topk}");
         assert!(qsgd < dense / 3, "qsgd={qsgd} dense={dense}");
+    }
+
+    #[test]
+    fn dense_model_bits_matches_real_encoding() {
+        for d in [1usize, 7, 300, 7850] {
+            let msg = Message::Dense { values: vec![0.25f32; d] };
+            assert_eq!(dense_model_bits(d), wire_bits(&msg), "d={d}");
+        }
     }
 
     #[test]

@@ -165,6 +165,13 @@ pub trait Compressor: Send + Sync {
 
     /// Human-readable name used in figure legends / CSV headers.
     fn name(&self) -> String;
+
+    /// True for the identity operator. Drivers use this to pick the exact
+    /// dense broadcast path on the downlink (copying the model bit-for-bit)
+    /// instead of a delta encoding, which would differ in the last f32 ulp.
+    fn is_identity(&self) -> bool {
+        false
+    }
 }
 
 /// Identity operator: no compression (vanilla / local SGD payloads).
@@ -183,7 +190,15 @@ impl Compressor for Identity {
     fn name(&self) -> String {
         "identity".to_string()
     }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
 }
+
+/// A `'static` identity operator, used as the default downlink compressor in
+/// borrowing configs (`TrainSpec`).
+pub static IDENTITY: Identity = Identity;
 
 /// Parse a compressor spec string, e.g.
 /// `identity`, `topk:k=1000`, `randk:k=1000`, `qsgd:bits=4`,

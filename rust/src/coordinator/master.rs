@@ -1,17 +1,23 @@
-//! Master actor: decode updates, aggregate, broadcast, record metrics.
+//! Master actor: a `protocol::MasterCore` behind mpsc channels — decode
+//! updates, aggregate, broadcast, record metrics.
 //!
 //! Aggregation policy (Algorithm 2 line 19): every received update is folded
 //! as x ← x − (1/R)·g and the fresh model is returned to the sender. With a
 //! synchronous schedule all R workers block at the same step, so the master
 //! *barriers*: it buffers the step's updates, applies them together and then
 //! replies to everyone — making the threaded run semantically identical to
-//! Algorithm 1 (and to the engine, which tests rely on).
+//! Algorithm 1 (and bit-identical to the engine, which tests rely on).
+//!
+//! Broadcast: Identity downlink shares one `Arc<[f32]>` model snapshot per
+//! aggregation round across all R reply channels; a non-Identity downlink
+//! sends each worker its own encoded error-compensated model delta.
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::encode;
+use crate::compress::{encode, Message};
 use crate::data::Dataset;
 use crate::engine::{History, MetricPoint};
 use crate::grad::GradModel;
+use crate::protocol::MasterCore;
 use crate::util::rng::Pcg64;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -32,8 +38,10 @@ where
 {
     let eval_model = model_factory();
     let d = eval_model.dim();
-    let mut global = cfg.init.clone().unwrap_or_else(|| vec![0.0f32; d]);
-    anyhow::ensure!(global.len() == d, "init length mismatch");
+    let init = cfg.init.clone().unwrap_or_else(|| vec![0.0f32; d]);
+    anyhow::ensure!(init.len() == d, "init length mismatch");
+    let dense_down = cfg.down_compressor.is_identity();
+    let mut core = MasterCore::new(init.clone(), cfg.workers, cfg.seed, !dense_down);
 
     let shards = crate::data::shard_indices(&train, cfg.workers, cfg.sharding);
     let (to_master_tx, to_master_rx) = mpsc::channel::<ToMaster>();
@@ -48,7 +56,7 @@ where
             cfg: cfg.clone(),
             train: Arc::clone(&train),
             shard: shards[r].clone(),
-            init: global.clone(),
+            init: init.clone(),
             to_master: to_master_tx.clone(),
             from_master: rx,
         };
@@ -79,8 +87,11 @@ where
     let mut last_eval_step = 0usize;
     let barrier = cfg.schedule.is_synchronous();
     let mut pending: Vec<UpdateMsg> = Vec::new();
+    // Last reported ‖m‖² per worker (memories live in worker threads, but
+    // they only change at syncs, so the latest report is the current value).
+    let mut mem_norms = vec![0.0f64; cfg.workers];
 
-    let mut record = |step: usize, global: &[f32], bits_up: u64, bits_down: u64| {
+    let mut record = |step: usize, global: &[f32], bits_up: u64, bits_down: u64, mem: f64| {
         let train_loss = eval_model.loss(global, &train_eval);
         let (test_err, test_top5) = match &test_eval {
             Some(tb) => (
@@ -96,10 +107,10 @@ where
             test_top5_err: test_top5,
             bits_up,
             bits_down,
-            mem_norm_sq: f64::NAN, // memories live in worker threads
+            mem_norm_sq: mem,
         });
     };
-    record(0, &global, 0, 0);
+    record(0, core.params(), 0, 0, 0.0);
 
     while finished < cfg.workers {
         match to_master_rx.recv() {
@@ -116,47 +127,69 @@ where
                         // sync run bit-identical to the engine (tested).
                         pending.sort_by_key(|u| u.worker);
                         for u in pending.drain(..) {
-                            apply_update(&mut global, &u, cfg.workers)?;
+                            mem_norms[u.worker] = u.mem_norm_sq;
+                            core.apply_update(&decode_update(&u)?)?;
                         }
-                        for tx in &reply_txs {
-                            bits_down += 32 * d as u64;
-                            let _ = tx.send(ModelMsg { params: global.clone() });
+                        if dense_down {
+                            let payload: Arc<[f32]> = Arc::from(core.params());
+                            let bits = encode::dense_model_bits(d);
+                            for tx in &reply_txs {
+                                bits_down += bits;
+                                let _ = tx.send(ModelMsg::Dense(Arc::clone(&payload)));
+                            }
+                        } else {
+                            for (r, tx) in reply_txs.iter().enumerate() {
+                                let msg =
+                                    core.delta_broadcast(r, cfg.down_compressor.as_ref());
+                                let (bytes, bit_len) = encode::encode(&msg);
+                                bits_down += bit_len;
+                                let _ = tx.send(ModelMsg::Delta { bytes, bit_len });
+                            }
                         }
                         if step + 1 >= last_eval_step + cfg.eval_every || step + 1 == cfg.steps {
                             last_eval_step = step + 1;
-                            record(step + 1, &global, bits_up, bits_down);
+                            record(step + 1, core.params(), bits_up, bits_down, avg(&mem_norms));
                         }
                     }
                 } else {
                     let step = upd.step;
                     let worker = upd.worker;
-                    apply_update(&mut global, &upd, cfg.workers)?;
-                    bits_down += 32 * d as u64;
-                    let _ = reply_txs[worker].send(ModelMsg { params: global.clone() });
+                    mem_norms[worker] = upd.mem_norm_sq;
+                    core.apply_update(&decode_update(&upd)?)?;
+                    if dense_down {
+                        bits_down += encode::dense_model_bits(d);
+                        let _ = reply_txs[worker].send(ModelMsg::Dense(Arc::from(core.params())));
+                    } else {
+                        let msg = core.delta_broadcast(worker, cfg.down_compressor.as_ref());
+                        let (bytes, bit_len) = encode::encode(&msg);
+                        bits_down += bit_len;
+                        let _ = reply_txs[worker].send(ModelMsg::Delta { bytes, bit_len });
+                    }
                     if step + 1 >= last_eval_step + cfg.eval_every {
                         last_eval_step = step + 1;
-                        record(step + 1, &global, bits_up, bits_down);
+                        record(step + 1, core.params(), bits_up, bits_down, avg(&mem_norms));
                     }
                 }
             }
         }
     }
     if last_eval_step != cfg.steps {
-        record(cfg.steps, &global, bits_up, bits_down);
+        record(cfg.steps, core.params(), bits_up, bits_down, avg(&mem_norms));
     }
     drop(record);
 
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
     }
-    history.final_params = global;
+    history.final_params = core.into_params();
     Ok(history)
 }
 
-fn apply_update(global: &mut [f32], upd: &UpdateMsg, workers: usize) -> anyhow::Result<()> {
-    let msg = encode::decode(&upd.bytes, upd.bit_len)
-        .ok_or_else(|| anyhow::anyhow!("undecodable update from worker {}", upd.worker))?;
-    anyhow::ensure!(msg.dim() == global.len(), "dimension mismatch on the wire");
-    msg.add_into(global, -1.0 / workers as f32);
-    Ok(())
+fn decode_update(upd: &UpdateMsg) -> anyhow::Result<Message> {
+    encode::decode(&upd.bytes, upd.bit_len)
+        .ok_or_else(|| anyhow::anyhow!("undecodable update from worker {}", upd.worker))
+}
+
+fn avg(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
 }

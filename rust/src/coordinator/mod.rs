@@ -9,6 +9,16 @@
 //! wire format, bit accounting and error-feedback logic are exercised
 //! end-to-end under real concurrency.
 //!
+//! All update/aggregate/broadcast arithmetic is delegated to
+//! `protocol::{WorkerCore, MasterCore}` — the same state machines the
+//! engine drives — so the synchronous threaded run is bit-identical to the
+//! engine by construction, not by parallel maintenance of two loops.
+//!
+//! Downlink: with `down_compressor = Identity` the master broadcasts one
+//! shared `Arc<[f32]>` model snapshot per round (no per-worker clone);
+//! otherwise each worker receives an encoded error-compensated model delta
+//! and `bits_down` counts the true wire length.
+//!
 //! Because `GradModel` implementations may be `!Send` (PJRT wraps an `Rc`
 //! client), every thread constructs its own model through a `Send + Clone`
 //! factory.
@@ -18,7 +28,7 @@ mod worker;
 
 pub use master::run_threaded;
 
-use crate::compress::Compressor;
+use crate::compress::{Compressor, Identity};
 use crate::data::Sharding;
 use crate::optim::LrSchedule;
 use crate::topology::SyncSchedule;
@@ -34,6 +44,9 @@ pub struct CoordinatorConfig {
     pub lr: LrSchedule,
     pub momentum: f64,
     pub compressor: Arc<dyn Compressor>,
+    /// Downlink (master → worker) compressor; `Identity` (the default)
+    /// broadcasts the dense model, preserving the historical behavior.
+    pub down_compressor: Arc<dyn Compressor>,
     pub schedule: Arc<dyn SyncSchedule>,
     pub sharding: Sharding,
     pub seed: u64,
@@ -52,6 +65,7 @@ impl CoordinatorConfig {
             lr: LrSchedule::Const { eta: 0.1 },
             momentum: 0.0,
             compressor,
+            down_compressor: Arc::new(Identity),
             schedule,
             sharding: Sharding::Iid,
             seed: 0,
@@ -69,6 +83,9 @@ pub(crate) struct UpdateMsg {
     pub step: usize,
     pub bytes: Vec<u8>,
     pub bit_len: u64,
+    /// ‖m_t^{(r)}‖² after this sync — aggregated by the master so the
+    /// threaded `History` carries the same memory probe as the engine's.
+    pub mem_norm_sq: f64,
 }
 
 /// Worker → master control messages.
@@ -77,7 +94,12 @@ pub(crate) enum ToMaster {
     Finished(#[allow(dead_code)] usize),
 }
 
-/// Master → worker: the fresh global model after aggregation.
-pub(crate) struct ModelMsg {
-    pub params: Vec<f32>,
+/// Master → worker: the model refresh after aggregation.
+pub(crate) enum ModelMsg {
+    /// Dense model broadcast (Identity downlink). The payload is shared —
+    /// one snapshot per aggregation round, not one clone per worker.
+    Dense(Arc<[f32]>),
+    /// Encoded error-compensated compressed model delta vs this worker's
+    /// anchor (see `protocol::` module docs).
+    Delta { bytes: Vec<u8>, bit_len: u64 },
 }

@@ -1,12 +1,12 @@
-//! Worker actor: local SGD steps, error-compensated compression, encoded
-//! uplink, blocking model refresh on sync (Algorithm 1/2 worker side).
+//! Worker actor: a `protocol::WorkerCore` behind mpsc channels — local SGD
+//! steps, error-compensated compression, encoded uplink, blocking model
+//! refresh on sync (Algorithm 1/2 worker side).
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::{encode, ErrorMemory};
-use crate::data::{Dataset, ShardSampler};
+use crate::compress::encode;
+use crate::data::Dataset;
 use crate::grad::GradModel;
-use crate::optim::LocalSgd;
-use crate::util::rng::Pcg64;
+use crate::protocol::WorkerCore;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
@@ -22,37 +22,31 @@ pub(crate) struct WorkerArgs {
 
 pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     let WorkerArgs { id, cfg, train, shard, init, to_master, from_master } = args;
-    let d = model.dim();
-    let mut local = init.clone();
-    let mut anchor = init;
-    let mut memory = ErrorMemory::zeros(d);
-    let mut opt = LocalSgd::new(d, cfg.momentum, 0.0);
-    let mut sampler = ShardSampler::new(shard, cfg.batch, cfg.seed, id);
-    let mut rng = Pcg64::new(cfg.seed ^ 0xc0ffee, id as u64 + 1);
-    let mut grad = vec![0.0f32; d];
-    let mut delta = vec![0.0f32; d];
+    assert_eq!(init.len(), model.dim(), "init/model dimension mismatch");
+    let mut core = WorkerCore::new(id, init, shard, cfg.batch, cfg.momentum, cfg.seed);
 
     for t in 0..cfg.steps {
-        let batch = sampler.next_batch(&train);
-        model.loss_grad(&local, &batch, &mut grad);
-        opt.step(&mut local, &grad, cfg.lr.at(t));
+        core.local_step(model.as_ref(), &train, cfg.lr.at(t));
 
         if cfg.schedule.syncs_at(id, t) {
-            for ((dv, a), l) in delta.iter_mut().zip(&anchor).zip(&local) {
-                *dv = a - l;
-            }
-            let msg = memory.compress_update(&delta, cfg.compressor.as_ref(), &mut rng);
+            let msg = core.make_update(cfg.compressor.as_ref());
             let (bytes, bit_len) = encode::encode(&msg);
-            if to_master
-                .send(ToMaster::Update(UpdateMsg { worker: id, step: t, bytes, bit_len }))
-                .is_err()
-            {
+            let update = UpdateMsg {
+                worker: id,
+                step: t,
+                bytes,
+                bit_len,
+                mem_norm_sq: core.mem_norm_sq(),
+            };
+            if to_master.send(ToMaster::Update(update)).is_err() {
                 return; // master gone
             }
             match from_master.recv() {
-                Ok(ModelMsg { params }) => {
-                    local.copy_from_slice(&params);
-                    anchor.copy_from_slice(&params);
+                Ok(ModelMsg::Dense(params)) => core.apply_dense_broadcast(&params),
+                Ok(ModelMsg::Delta { bytes, bit_len }) => {
+                    let delta = encode::decode(&bytes, bit_len)
+                        .unwrap_or_else(|| panic!("worker {id}: undecodable downlink delta"));
+                    core.apply_delta_broadcast(&delta);
                 }
                 Err(_) => return,
             }

@@ -45,6 +45,10 @@ impl History {
         self.points.last().map_or(0, |p| p.bits_up)
     }
 
+    pub fn total_bits_down(&self) -> u64 {
+        self.points.last().map_or(0, |p| p.bits_down)
+    }
+
     /// First cumulative uplink bit count at which `train_loss ≤ target`
     /// (the paper's “bits to reach target loss”); None if never reached.
     pub fn bits_to_loss(&self, target: f64) -> Option<u64> {

@@ -11,18 +11,27 @@
 //! `RandomGaps` it is Algorithm 2. With `Identity` + H = 1 it degenerates to
 //! vanilla distributed SGD (validated bit-for-bit in tests).
 //!
-//! The same worker/master arithmetic is reused by the threaded runtime in
-//! `coordinator::`; the engine exists so experiments are reproducible from a
-//! single seed and independent of thread interleaving.
+//! The worker/master arithmetic itself lives in `protocol::{WorkerCore,
+//! MasterCore}` and is shared verbatim with the threaded runtime in
+//! `coordinator::` — the engine is a thin in-process driver over the cores,
+//! so experiments are reproducible from a single seed and independent of
+//! thread interleaving, and the two substrates stay bit-identical by
+//! construction.
+//!
+//! Downlink: with `down_compressor = Identity` (the default) the master
+//! broadcasts the dense model exactly as the paper assumes; any other
+//! operator switches to error-compensated compressed model deltas (see
+//! `protocol::` docs), and `bits_down` reports the true encoded length.
 
 pub mod metrics;
 
 pub use metrics::{History, MetricPoint};
 
-use crate::compress::{Compressor, ErrorMemory};
-use crate::data::{shard_indices, Batch, Dataset, ShardSampler, Sharding};
+use crate::compress::{encode, Compressor};
+use crate::data::{shard_indices, Batch, Dataset, Sharding};
 use crate::grad::GradModel;
-use crate::optim::{LocalSgd, LrSchedule};
+use crate::optim::LrSchedule;
+use crate::protocol::{MasterCore, WorkerCore};
 use crate::topology::SyncSchedule;
 use crate::util::rng::Pcg64;
 
@@ -41,6 +50,11 @@ pub struct TrainSpec<'a> {
     /// Momentum applied to the local iterations (paper §5.1.1); 0 disables.
     pub momentum: f64,
     pub compressor: &'a dyn Compressor,
+    /// Downlink (master → worker) compressor. `Identity` broadcasts the
+    /// dense model (the paper's setting, bit-identical to the historical
+    /// behavior); anything else broadcasts error-compensated compressed
+    /// model deltas with server-side error feedback.
+    pub down_compressor: &'a dyn Compressor,
     pub schedule: &'a dyn SyncSchedule,
     pub sharding: Sharding,
     pub seed: u64,
@@ -68,6 +82,7 @@ impl<'a> TrainSpec<'a> {
             lr: LrSchedule::Const { eta: 0.1 },
             momentum: 0.0,
             compressor,
+            down_compressor: &crate::compress::IDENTITY,
             schedule,
             sharding: Sharding::Iid,
             seed: 0,
@@ -75,20 +90,6 @@ impl<'a> TrainSpec<'a> {
             eval_rows: 512,
         }
     }
-}
-
-/// Mutable per-worker state during a run.
-struct WorkerState {
-    /// x̂_t^{(r)} — local iterate.
-    local: Vec<f32>,
-    /// x_t^{(r)} — the last global model this worker received (its sync
-    /// anchor; in Alg 1 this equals the master's x_t at sync points).
-    anchor: Vec<f32>,
-    memory: ErrorMemory,
-    opt: LocalSgd,
-    sampler: ShardSampler,
-    rng: Pcg64,
-    grad_buf: Vec<f32>,
 }
 
 /// Run a full training job; returns the metric history and final model.
@@ -102,80 +103,88 @@ pub fn run(spec: &TrainSpec) -> History {
 
 /// As `run`, but from explicit initial parameters (used by the non-convex
 /// figures, which need a proper MLP init).
-pub fn run_from(spec: &TrainSpec, mut global: Vec<f32>) -> History {
+pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
     let d = spec.model.dim();
     assert_eq!(global.len(), d);
     let r_count = spec.workers;
     let shards = shard_indices(spec.train, r_count, spec.sharding);
+    let dense_down = spec.down_compressor.is_identity();
 
-    let mut workers: Vec<WorkerState> = (0..r_count)
-        .map(|r| WorkerState {
-            local: global.clone(),
-            anchor: global.clone(),
-            memory: ErrorMemory::zeros(d),
-            opt: LocalSgd::new(d, spec.momentum, 0.0),
-            sampler: ShardSampler::new(shards[r].clone(), spec.batch, spec.seed, r),
-            rng: Pcg64::new(spec.seed ^ 0xc0ffee, r as u64 + 1),
-            grad_buf: vec![0.0f32; d],
+    let mut workers: Vec<WorkerCore> = (0..r_count)
+        .map(|r| {
+            WorkerCore::new(
+                r,
+                global.clone(),
+                shards[r].clone(),
+                spec.batch,
+                spec.momentum,
+                spec.seed,
+            )
         })
         .collect();
+    let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
 
     let eval = EvalSets::new(spec);
     let mut history = History::new();
     let mut bits_up: u64 = 0;
     let mut bits_down: u64 = 0;
-    let mut delta = vec![0.0f32; d];
 
     // t = 0 snapshot.
-    history.push(eval.measure(spec, 0, &global, bits_up, bits_down, avg_mem(&workers)));
+    history.push(eval.measure(spec, 0, master.params(), bits_up, bits_down, avg_mem(&workers)));
 
     for t in 0..spec.steps {
         let eta = spec.lr.at(t);
         // -- workers: one local step each ------------------------------------
         for w in workers.iter_mut() {
-            let batch = w.sampler.next_batch(spec.train);
-            spec.model.loss_grad(&w.local, &batch, &mut w.grad_buf);
-            w.opt.step(&mut w.local, &w.grad_buf, eta);
+            w.local_step(spec.model, spec.train, eta);
         }
-        // -- synchronization -------------------------------------------------
+        // -- synchronization: uplink then aggregation ------------------------
         let mut any_sync = false;
         for (r, w) in workers.iter_mut().enumerate() {
             if !spec.schedule.syncs_at(r, t) {
                 continue;
             }
             any_sync = true;
-            // delta = x_anchor − x̂_{t+1/2}  (net local progress, Alg 1 line 8)
-            for ((dv, a), l) in delta.iter_mut().zip(&w.anchor).zip(&w.local) {
-                *dv = a - l;
-            }
-            let msg = w.memory.compress_update(&delta, spec.compressor, &mut w.rng);
+            let msg = w.make_update(spec.compressor);
             bits_up += msg.wire_bits();
-            // master: x ← x − (1/R) g
-            msg.add_into(&mut global, -1.0 / r_count as f32);
+            master.apply_update(&msg).expect("engine-internal update dim mismatch");
         }
+        // -- broadcast to the workers that synced ----------------------------
         if any_sync {
-            // master broadcasts the new model to the workers that synced.
             for (r, w) in workers.iter_mut().enumerate() {
-                if spec.schedule.syncs_at(r, t) {
-                    w.local.copy_from_slice(&global);
-                    w.anchor.copy_from_slice(&global);
-                    bits_down += 32 * d as u64;
+                if !spec.schedule.syncs_at(r, t) {
+                    continue;
+                }
+                if dense_down {
+                    w.apply_dense_broadcast(master.params());
+                    bits_down += encode::dense_model_bits(d);
+                } else {
+                    let msg = master.delta_broadcast(r, spec.down_compressor);
+                    bits_down += msg.wire_bits();
+                    w.apply_delta_broadcast(&msg);
                 }
             }
         }
         // -- metrics ----------------------------------------------------------
         let step = t + 1;
         if step % spec.eval_every == 0 || step == spec.steps {
-            history.push(eval.measure(spec, step, &global, bits_up, bits_down, avg_mem(&workers)));
+            history.push(eval.measure(
+                spec,
+                step,
+                master.params(),
+                bits_up,
+                bits_down,
+                avg_mem(&workers),
+            ));
         }
     }
 
-    history.final_params = global;
+    history.final_params = master.into_params();
     history
 }
 
-fn avg_mem(workers: &[WorkerState]) -> f64 {
-    workers.iter().map(|w| w.memory.norm_sq()).sum::<f64>() / workers.len() as f64
+fn avg_mem(workers: &[WorkerCore]) -> f64 {
+    workers.iter().map(|w| w.mem_norm_sq()).sum::<f64>() / workers.len() as f64
 }
 
 /// Fixed evaluation subsets (deterministic, shared by every series in a
@@ -311,6 +320,36 @@ mod tests {
         // bits monotone over time
         let ups: Vec<u64> = h_id.points.iter().map(|p| p.bits_up).collect();
         assert!(ups.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn compressed_downlink_saves_bits_and_tracks_dense() {
+        let (ds, model) = small_setup();
+        let sched = FixedPeriod::new(1);
+        let up = Identity;
+        let mk = |down_spec: &str| {
+            let down = crate::compress::parse_spec(down_spec).unwrap();
+            let mut spec = TrainSpec::new(&model, &ds, &up, &sched);
+            spec.down_compressor = down.as_ref();
+            spec.workers = 4;
+            spec.steps = 600;
+            spec.lr = LrSchedule::Const { eta: 0.3 };
+            run(&spec)
+        };
+        let dense = mk("identity");
+        let compressed = mk("topk:k=2");
+        let bd_dense = dense.points.last().unwrap().bits_down;
+        let bd_comp = compressed.points.last().unwrap().bits_down;
+        assert!(
+            bd_comp * 10 < bd_dense,
+            "downlink bits not ≥10× cheaper: {bd_comp} vs {bd_dense}"
+        );
+        let ld = dense.final_loss();
+        let lc = compressed.final_loss();
+        assert!(lc < ld + 0.3, "compressed downlink diverged: {lc} vs dense {ld}");
+        // bits_down monotone over time.
+        let downs: Vec<u64> = compressed.points.iter().map(|p| p.bits_down).collect();
+        assert!(downs.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

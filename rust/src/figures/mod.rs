@@ -39,6 +39,8 @@ pub struct SeriesSpec {
     pub label: &'static str,
     /// Compressor spec string (`compress::parse_spec`).
     pub compressor: String,
+    /// Downlink compressor spec; `identity` = dense model broadcast.
+    pub down: String,
     /// Sync period H (1 = sync every step).
     pub h: usize,
     /// Use the asynchronous schedule of Algorithm 2 (random per-worker gaps).
@@ -47,11 +49,23 @@ pub struct SeriesSpec {
 
 impl SeriesSpec {
     pub fn new(label: &'static str, compressor: &str, h: usize) -> Self {
-        SeriesSpec { label, compressor: compressor.to_string(), h, asynchronous: false }
+        SeriesSpec {
+            label,
+            compressor: compressor.to_string(),
+            down: "identity".to_string(),
+            h,
+            asynchronous: false,
+        }
     }
 
     pub fn asynchronous(label: &'static str, compressor: &str, h: usize) -> Self {
-        SeriesSpec { label, compressor: compressor.to_string(), h, asynchronous: true }
+        SeriesSpec { asynchronous: true, ..SeriesSpec::new(label, compressor, h) }
+    }
+
+    /// Builder: compress the downlink with `spec` (bidirectional series).
+    pub fn with_down(mut self, spec: &str) -> Self {
+        self.down = spec.to_string();
+        self
     }
 }
 
@@ -151,6 +165,7 @@ pub fn run_series(
     seed: u64,
 ) -> anyhow::Result<History> {
     let compressor: Box<dyn Compressor> = crate::compress::parse_spec(&s.compressor)?;
+    let down_compressor: Box<dyn Compressor> = crate::compress::parse_spec(&s.down)?;
     let schedule: Box<dyn SyncSchedule> = if s.asynchronous {
         Box::new(RandomGaps::generate(w.workers, s.h, steps, seed ^ 0x5eed))
     } else {
@@ -166,6 +181,7 @@ pub fn run_series(
         lr: w.lr.clone(),
         momentum: w.momentum,
         compressor: compressor.as_ref(),
+        down_compressor: down_compressor.as_ref(),
         schedule: schedule.as_ref(),
         sharding: Sharding::Iid,
         seed,

@@ -50,8 +50,9 @@ impl FigureResult {
         let mut out = String::new();
         out.push_str(&format!("== {} — {} (T={} steps)\n", self.id, self.title, self.steps));
         out.push_str(&format!(
-            "{:<30} {:>10} {:>9} {:>11} {:>12} {:>12} {:>9}\n",
-            "series", "loss", "test_err", "Mbits_up", "bits→loss", "bits→terr", "saving×"
+            "{:<30} {:>10} {:>9} {:>11} {:>11} {:>12} {:>12} {:>9}\n",
+            "series", "loss", "test_err", "Mbits_up", "Mbits_dn", "bits→loss", "bits→terr",
+            "saving×"
         ));
         let headline = |h: &History| {
             h.bits_to_test_err(self.target_test_err)
@@ -69,11 +70,12 @@ impl FigureResult {
                 v.map_or("-".to_string(), |b| format!("{:.2}M", b as f64 / 1e6))
             };
             out.push_str(&format!(
-                "{:<30} {:>10.4} {:>9.4} {:>11.2} {:>12} {:>12} {:>9}\n",
+                "{:<30} {:>10.4} {:>9.4} {:>11.2} {:>11.2} {:>12} {:>12} {:>9}\n",
                 label,
                 hist.final_loss(),
                 hist.points.last().map_or(f64::NAN, |p| p.test_err),
                 hist.total_bits_up() as f64 / 1e6,
+                hist.total_bits_down() as f64 / 1e6,
                 fmt_m(bl),
                 fmt_m(bt),
                 saving,

@@ -6,9 +6,10 @@
 
 use super::{FigureSpec, SeriesSpec, Workload};
 
-/// All figure ids in paper order.
+/// All figure ids in paper order (fig9 is this repo's bidirectional
+/// extension, not a paper figure).
 pub fn all_figure_ids() -> Vec<&'static str> {
-    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"]
+    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"]
 }
 
 /// Build the spec for one figure id.
@@ -157,6 +158,28 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
                 s("QTopK-scaled_L8", &format!("qtopk:k={KNC},bits=4,scaled"), 8),
             ],
         },
+        // ---- bidirectional extension (not in the paper) ----------------------
+        // Downlink error-compensated compression (Double Quantization /
+        // EC-QSGD style) on top of the paper's uplink operators. The downlink
+        // k is 10× the uplink k: the broadcast carries the *aggregate* of R
+        // worker updates, so its support is naturally wider.
+        "fig9" => FigureSpec {
+            id: "fig9",
+            title: "convex: bidirectional compression (downlink EF) vs dense broadcast",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                s("SGD", "identity", 1),
+                s("QTopK-up", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                s("QTopK-bidir", &format!("qtopk:k={KC},bits=4,scaled"), 1)
+                    .with_down("qtopk:k=400,bits=4"),
+                s("TopK-bidir", &format!("topk:k={KC}"), 1).with_down("topk:k=400"),
+                s("SignTopK-bidir_8L", &format!("signtopk:k={KC},m=1"), 8)
+                    .with_down("qtopk:k=400,bits=4"),
+            ],
+        },
         _ => return None,
     })
 }
@@ -174,6 +197,8 @@ mod tests {
             for s in &spec.series {
                 crate::compress::parse_spec(&s.compressor)
                     .unwrap_or_else(|e| panic!("{id}/{}: {e}", s.label));
+                crate::compress::parse_spec(&s.down)
+                    .unwrap_or_else(|e| panic!("{id}/{} downlink: {e}", s.label));
                 assert!(s.h >= 1);
             }
         }

@@ -6,8 +6,10 @@
 //! Pallas stack:
 //!
 //! * **L3 (this crate)** — the distributed coordinator: compression
-//!   operators with exact wire-format bit accounting, error-feedback memory,
-//!   synchronous (Algorithm 1) and asynchronous (Algorithm 2) schedules, a
+//!   operators with exact wire-format bit accounting, error-feedback memory
+//!   on both the uplink (workers) and the downlink (master), synchronous
+//!   (Algorithm 1) and asynchronous (Algorithm 2) schedules, a shared
+//!   protocol core (`protocol::{WorkerCore, MasterCore}`) driven by both a
 //!   deterministic simulation engine and a threaded master/worker runtime.
 //! * **L2** — JAX models (`python/compile/model.py`), AOT-lowered to HLO
 //!   text and executed from rust via PJRT (`runtime::`).
@@ -24,6 +26,7 @@ pub mod engine;
 pub mod figures;
 pub mod grad;
 pub mod optim;
+pub mod protocol;
 pub mod runtime;
 pub mod topology;
 pub mod util;
@@ -31,3 +34,4 @@ pub mod util;
 pub use compress::{Compressor, Message};
 pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
+pub use protocol::{MasterCore, WorkerCore};

@@ -11,6 +11,8 @@
 //!   --pjrt NAME                   use the AOT artifact NAME instead
 //!   --artifacts DIR               artifact dir (default artifacts)
 //!   --compressor SPEC             e.g. topk:k=40 | qtopk:k=40,bits=4,scaled
+//!   --down-compressor SPEC        downlink (master→worker) compressor;
+//!                                 default identity = dense model broadcast
 //!   --h N                         sync period H (default 1)
 //!   --async                       Algorithm 2 random per-worker gaps
 //!   --threaded                    threaded master/worker runtime (vs engine)
@@ -61,12 +63,18 @@ USAGE: qsparse <figure|gamma-table|train|inspect|help> [options]
   figure <id|all> [--out results] [--quick]
   gamma-table [--d 7850] [--k 40]
   train [--workload convex|nonconvex] [--pjrt NAME] [--compressor SPEC]
-        [--h N] [--async] [--threaded] [--steps N] [--workers N] [--batch N]
-        [--eta F] [--momentum F] [--seed N] [--csv FILE] [--json]
+        [--down-compressor SPEC] [--h N] [--async] [--threaded] [--steps N]
+        [--workers N] [--batch N] [--eta F] [--momentum F] [--seed N]
+        [--csv FILE] [--json]
   inspect [--artifacts DIR]
 
 Compressor SPECs: identity | topk:k=K | randk:k=K | qsgd:bits=B | sign |
   qtopk:k=K,bits=B[,scaled] | signtopk:k=K[,m=M]
+
+--compressor is the uplink (worker→master). --down-compressor compresses the
+downlink broadcast as an error-compensated model delta (server-side error
+feedback); the default `identity` broadcasts the dense model. bits_down in
+CSV/JSON output is the exact encoded wire length either way.
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
@@ -170,6 +178,8 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let seed: u64 = f.parse_num("seed", figures::SEED)?;
     let comp_spec = f.get_or("compressor", "identity");
     let compressor = parse_spec(&comp_spec)?;
+    let down_spec = f.get_or("down-compressor", "identity");
+    let down_compressor = parse_spec(&down_spec)?;
     let sw = Stopwatch::start();
 
     // Model + data + defaults per workload.
@@ -250,6 +260,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             }
         };
         let mut cfg = CoordinatorConfig::new(Arc::from(compressor), Arc::from(schedule));
+        cfg.down_compressor = Arc::from(down_compressor);
         cfg.workers = workers;
         cfg.batch = batch;
         cfg.steps = steps;
@@ -269,6 +280,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             lr,
             momentum,
             compressor: compressor.as_ref(),
+            down_compressor: down_compressor.as_ref(),
             schedule: schedule.as_ref(),
             sharding: Sharding::Iid,
             seed,
@@ -282,18 +294,26 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         std::fs::write(csv, history.to_csv())?;
     }
     if f.has("json") {
-        println!("{}", history.summary_json(&comp_spec, sw.secs()));
+        let name = if down_spec == "identity" {
+            comp_spec.clone()
+        } else {
+            format!("{comp_spec}|down={down_spec}")
+        };
+        println!("{}", history.summary_json(&name, sw.secs()));
     } else {
         let last = history.points.last().unwrap();
         println!(
-            "{} steps={} H={} workers={}  loss={:.4} test_err={:.4}  bits_up={:.2}M  ({:.1}s)",
+            "{}⇑ {}⇓ steps={} H={} workers={}  loss={:.4} test_err={:.4}  \
+             bits_up={:.2}M bits_down={:.2}M  ({:.1}s)",
             comp_spec,
+            down_spec,
             last.step,
             h,
             workers,
             last.train_loss,
             last.test_err,
             last.bits_up as f64 / 1e6,
+            last.bits_down as f64 / 1e6,
             sw.secs()
         );
     }

@@ -1,0 +1,122 @@
+//! Master-side protocol state machine (Algorithm 1/2, master lines).
+//!
+//! Aggregation: every received update is folded as `x ← x − (1/R)·g`
+//! (Algorithm 1 line 18 / Algorithm 2 line 19). Broadcast: either the dense
+//! model (Identity downlink — the paper's setting) or a per-worker
+//! error-compensated compressed model delta (see the module docs of
+//! [`crate::protocol`] for the recursion and its invariant).
+
+use super::DOWNLINK_RNG_SALT;
+use crate::compress::{Compressor, ErrorMemory, Message};
+use crate::util::rng::Pcg64;
+
+/// Per-worker downlink compression state (only allocated when the run uses
+/// a non-Identity downlink operator).
+struct DownlinkState {
+    /// Global model snapshot at this worker's previous broadcast.
+    prev: Vec<Vec<f32>>,
+    /// Server-side error memory m^{(r)} (≡ global − anchor_r, see mod docs).
+    mems: Vec<ErrorMemory>,
+    /// Per-worker streams so broadcast randomness is independent of the
+    /// order workers are served in (engine vs threaded, sync vs async).
+    rngs: Vec<Pcg64>,
+}
+
+/// Master state: the global model plus optional downlink compression state.
+pub struct MasterCore {
+    global: Vec<f32>,
+    workers: usize,
+    down: Option<DownlinkState>,
+    delta_buf: Vec<f32>,
+}
+
+impl MasterCore {
+    /// `init` is the initial global model — it must equal the init handed to
+    /// every `WorkerCore` (the downlink recursion starts from the shared
+    /// anchor). Pass `compressed_downlink = true` iff the run broadcasts
+    /// compressed deltas; the per-worker state is `2·R·d` floats, skipped
+    /// entirely for the classic dense broadcast.
+    pub fn new(init: Vec<f32>, workers: usize, seed: u64, compressed_downlink: bool) -> Self {
+        assert!(workers >= 1);
+        let d = init.len();
+        let down = compressed_downlink.then(|| DownlinkState {
+            prev: vec![init.clone(); workers],
+            mems: (0..workers).map(|_| ErrorMemory::zeros(d)).collect(),
+            rngs: (0..workers)
+                .map(|r| Pcg64::new(seed ^ DOWNLINK_RNG_SALT, r as u64 + 1))
+                .collect(),
+        });
+        MasterCore { global: init, workers, down, delta_buf: vec![0.0f32; d] }
+    }
+
+    /// The current global model x_t.
+    pub fn params(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Consume the core, returning the final model.
+    pub fn into_params(self) -> Vec<f32> {
+        self.global
+    }
+
+    pub fn dim(&self) -> usize {
+        self.global.len()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Fold one decoded worker update into the global model:
+    /// `x ← x − (1/R)·g`. Errors on dimension mismatch (malformed wire
+    /// message) rather than corrupting the model.
+    pub fn apply_update(&mut self, msg: &Message) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            msg.dim() == self.global.len(),
+            "update dimension mismatch: message d={} vs model d={}",
+            msg.dim(),
+            self.global.len()
+        );
+        msg.add_into(&mut self.global, -1.0 / self.workers as f32);
+        Ok(())
+    }
+
+    /// Produce the compressed downlink message for worker `r`: the
+    /// error-compensated model delta since `r`'s previous broadcast. The
+    /// caller transmits it (engine: in-memory; coordinator: encoded) and the
+    /// worker applies it via `WorkerCore::apply_delta_broadcast`.
+    ///
+    /// Panics if the core was built with `compressed_downlink = false` —
+    /// drivers choose the broadcast mode once, up front, from
+    /// `Compressor::is_identity`.
+    pub fn delta_broadcast(&mut self, r: usize, down: &dyn Compressor) -> Message {
+        let st = self
+            .down
+            .as_mut()
+            .expect("MasterCore built without compressed-downlink state");
+        // Δ = x_t − x_{prev sync of r} (model progress this worker missed).
+        for ((dv, g), p) in self.delta_buf.iter_mut().zip(&self.global).zip(&st.prev[r]) {
+            *dv = g - p;
+        }
+        let msg = st.mems[r].compress_update(&self.delta_buf, down, &mut st.rngs[r]);
+        st.prev[r].copy_from_slice(&self.global);
+        msg
+    }
+
+    /// Server-side error memory of worker `r` (None for dense downlink).
+    /// Equals `global − anchor_r` up to f32 rounding — the staleness probe.
+    pub fn down_memory(&self, r: usize) -> Option<&[f32]> {
+        self.down.as_ref().map(|st| st.mems[r].as_slice())
+    }
+
+    /// Average ‖m^{(r)}‖² across workers (0.0 for dense downlink) — the
+    /// server-side analogue of the uplink memory metric.
+    pub fn down_mem_norm_sq(&self) -> f64 {
+        match &self.down {
+            None => 0.0,
+            Some(st) => {
+                st.mems.iter().map(|m| m.norm_sq()).sum::<f64>() / st.mems.len() as f64
+            }
+        }
+    }
+}

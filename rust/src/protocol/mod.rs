@@ -1,0 +1,195 @@
+//! The single source of truth for Algorithm 1/2 arithmetic.
+//!
+//! Historically the worker/master update rules lived twice: once in the
+//! deterministic engine (`engine::run_from`) and once in the threaded
+//! runtime (`coordinator::{worker, master}`), and the bit-identical-sync
+//! guarantee between the two was maintained by careful copy-paste. This
+//! module extracts the arithmetic into two state machines so both execution
+//! substrates are thin drivers over the *same* f32 operations, in the same
+//! order:
+//!
+//! * [`WorkerCore`] — the per-worker side: one local SGD(+momentum) step,
+//!   net progress `delta = x_anchor − x̂_{t+1/2}` against the sync anchor,
+//!   error-compensated compression (Algorithm 1 lines 6–10), and anchor
+//!   reconstruction from a master broadcast.
+//! * [`MasterCore`] — the master side: fold decoded updates as
+//!   `x ← x − (1/R)·g` (Algorithm 1 line 18 / Algorithm 2 line 19) and
+//!   produce the broadcast payload for each syncing worker.
+//!
+//! # Downlink (master → worker) compression
+//!
+//! The paper compresses only the uplink; the broadcast is a dense model at
+//! `32·d` bits per worker per sync. On top of the cores this module adds the
+//! bidirectional extension studied in *Double Quantization* (Yu et al.) and
+//! *Error Compensated Quantized SGD* (Wu et al.): the master keeps, per
+//! worker, its own [`ErrorMemory`](crate::compress::ErrorMemory) and a
+//! snapshot of the global model at that worker's previous sync, and
+//! broadcasts the error-compensated, compressed *model delta*
+//!
+//! ```text
+//!   Δ_t^{(r)} = x_t − x_{prev sync of r}         (model progress)
+//!   v_t       = m_t^{(r)} + Δ_t^{(r)}            (server error compensation)
+//!   q_t       = C_down(v_t)                      (broadcast, encoded wire)
+//!   m_{t+1}   = v_t − q_t
+//! ```
+//!
+//! and the worker reconstructs its anchor as `x_anchor ← x_anchor + q_t`.
+//! By induction `m_t^{(r)} = x_t − x_anchor^{(r)}` exactly: the server
+//! memory *is* the worker's model staleness, so every dropped coordinate is
+//! re-offered at the next sync and the anchor tracks the global model.
+//!
+//! The `Identity` downlink operator short-circuits to the classic dense
+//! broadcast (`WorkerCore::apply_dense_broadcast` copies the model
+//! verbatim), which keeps pre-existing trajectories bit-identical: a dense
+//! delta reconstruction `a + (x − a)` would differ from `x` in the last
+//! f32 ulp, a full copy cannot.
+//!
+//! Determinism: all stochastic downlink compression draws from per-worker
+//! PCG streams salted with [`DOWNLINK_RNG_SALT`], so the engine and the
+//! threaded runtime consume identical randomness per (worker, sync) pair
+//! regardless of thread interleaving.
+
+mod master;
+mod worker;
+
+pub use master::MasterCore;
+pub use worker::WorkerCore;
+
+/// Stream salt for the master's per-worker downlink RNGs (distinct from the
+/// worker-side uplink salt `0xc0ffee` so the two never share a stream).
+pub const DOWNLINK_RNG_SALT: u64 = 0xd05eed;
+
+/// Stream salt for the worker-side uplink compression RNGs (kept identical
+/// to the historical engine/coordinator constant so seeded trajectories are
+/// preserved across the refactor).
+pub const UPLINK_RNG_SALT: u64 = 0xc0ffee;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{parse_spec, Identity, TopK};
+    use crate::data::gaussian_clusters;
+    use crate::grad::{GradModel, SoftmaxRegression};
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::norm2_sq;
+
+    fn setup() -> (crate::data::Dataset, SoftmaxRegression) {
+        let ds = gaussian_clusters(120, 12, 3, 1.5, 0.4, 9);
+        let model = SoftmaxRegression::new(12, 3, 1.0 / 120.0);
+        (ds, model)
+    }
+
+    #[test]
+    fn worker_update_then_dense_broadcast_roundtrip() {
+        let (ds, model) = setup();
+        let d = model.dim();
+        let shard: Vec<usize> = (0..ds.n).collect();
+        let mut w = WorkerCore::new(0, vec![0.0; d], shard, 4, 0.0, 7);
+        let mut m = MasterCore::new(vec![0.0; d], 1, 7, false);
+        w.local_step(&model, &ds, 0.3);
+        let msg = w.make_update(&Identity);
+        // Identity: the transmitted delta is exactly the negative local step.
+        assert_eq!(msg.dim(), d);
+        m.apply_update(&msg).unwrap();
+        // R = 1 + identity ⇒ master model equals the worker's local iterate.
+        for (g, l) in m.params().iter().zip(w.params()) {
+            assert!((g - l).abs() < 1e-7);
+        }
+        w.apply_dense_broadcast(m.params());
+        assert_eq!(w.params(), m.params());
+        assert!(w.mem_norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn delta_broadcast_memory_equals_staleness() {
+        // Invariant from the module docs: after every broadcast to worker r,
+        // the server memory equals global − anchor_r (within f32 rounding of
+        // the two subtraction orders).
+        let d = 64;
+        let down = TopK::new(6);
+        let mut rng = Pcg64::seeded(41);
+        let mut master = MasterCore::new(vec![0.0; d], 2, 41, true);
+        let mut anchors = vec![vec![0.0f32; d]; 2];
+        for _round in 0..12 {
+            // Drift the global model by a random dense "update".
+            let noise: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+            master
+                .apply_update(&crate::compress::Message::Dense { values: noise })
+                .unwrap();
+            for (r, anchor) in anchors.iter_mut().enumerate() {
+                let msg = master.delta_broadcast(r, &down);
+                msg.add_into(anchor, 1.0);
+                let resid: Vec<f32> = master
+                    .params()
+                    .iter()
+                    .zip(anchor.iter())
+                    .map(|(g, a)| g - a)
+                    .collect();
+                let mem = master.down_memory(r).unwrap();
+                let diff: Vec<f32> = resid.iter().zip(mem).map(|(x, y)| x - y).collect();
+                assert!(
+                    norm2_sq(&diff) < 1e-8 * (1.0 + norm2_sq(&resid)),
+                    "server memory drifted from anchor staleness"
+                );
+            }
+        }
+        // Freeze the global model and keep broadcasting: error feedback must
+        // drain the staleness (every dropped coordinate is re-offered).
+        let before: f64 = anchors
+            .iter()
+            .map(|a| {
+                let r: Vec<f32> =
+                    master.params().iter().zip(a.iter()).map(|(g, x)| g - x).collect();
+                norm2_sq(&r)
+            })
+            .sum();
+        for _round in 0..60 {
+            for (r, anchor) in anchors.iter_mut().enumerate() {
+                let msg = master.delta_broadcast(r, &down);
+                msg.add_into(anchor, 1.0);
+            }
+        }
+        let after: f64 = anchors
+            .iter()
+            .map(|a| {
+                let r: Vec<f32> =
+                    master.params().iter().zip(a.iter()).map(|(g, x)| g - x).collect();
+                norm2_sq(&r)
+            })
+            .sum();
+        assert!(
+            after < 0.05 * before + 1e-10,
+            "staleness did not drain: {before:.3e} → {after:.3e}"
+        );
+    }
+
+    #[test]
+    fn delta_broadcast_without_state_panics() {
+        let mut master = MasterCore::new(vec![0.0; 8], 1, 0, false);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            master.delta_broadcast(0, &Identity)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn downlink_rngs_are_per_worker_deterministic() {
+        // Two masters with the same seed produce identical broadcast streams
+        // per worker, independent of interleaving order across workers.
+        let d = 32;
+        let down = parse_spec("qsgd:bits=2").unwrap();
+        let mk = || MasterCore::new(vec![0.5; d], 3, 99, true);
+        let mut a = mk();
+        let mut b = mk();
+        // a: workers in order 0,1,2 — b: order 2,0,1.
+        let ma: Vec<_> = (0..3).map(|r| a.delta_broadcast(r, down.as_ref())).collect();
+        let order = [2usize, 0, 1];
+        let mut mb = vec![None, None, None];
+        for &r in &order {
+            mb[r] = Some(b.delta_broadcast(r, down.as_ref()));
+        }
+        for r in 0..3 {
+            assert_eq!(Some(&ma[r]), mb[r].as_ref(), "worker {r} stream order-dependent");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Worker-side protocol state machine (Algorithm 1/2, worker lines).
+//!
+//! Owns everything a worker mutates between syncs: the local iterate, the
+//! sync anchor, the error-feedback memory, the local optimizer, the shard
+//! sampler and the compression RNG. The engine drives one `WorkerCore` per
+//! simulated worker in-process; the threaded runtime drives one per OS
+//! thread — both through exactly these methods, so the arithmetic (and its
+//! f32 rounding) cannot drift between the two substrates.
+
+use super::UPLINK_RNG_SALT;
+use crate::compress::{Compressor, ErrorMemory, Message};
+use crate::data::{Dataset, ShardSampler};
+use crate::grad::GradModel;
+use crate::optim::LocalSgd;
+use crate::util::rng::Pcg64;
+
+/// Per-worker state: local iterate, sync anchor, error memory, optimizer.
+pub struct WorkerCore {
+    id: usize,
+    /// x̂_t^{(r)} — local iterate.
+    local: Vec<f32>,
+    /// x_t^{(r)} — the last global model this worker received (its sync
+    /// anchor; in Alg 1 this equals the master's x_t at sync points).
+    anchor: Vec<f32>,
+    memory: ErrorMemory,
+    opt: LocalSgd,
+    sampler: ShardSampler,
+    rng: Pcg64,
+    grad_buf: Vec<f32>,
+    delta_buf: Vec<f32>,
+}
+
+impl WorkerCore {
+    /// `init` is the initial global model (also the first anchor); `shard`
+    /// the worker's data indices. RNG/sampler streams are derived from
+    /// `(seed, id)` exactly as the pre-refactor engine and coordinator did,
+    /// so existing seeded trajectories are preserved.
+    pub fn new(
+        id: usize,
+        init: Vec<f32>,
+        shard: Vec<usize>,
+        batch: usize,
+        momentum: f64,
+        seed: u64,
+    ) -> Self {
+        let d = init.len();
+        WorkerCore {
+            id,
+            anchor: init.clone(),
+            local: init,
+            memory: ErrorMemory::zeros(d),
+            opt: LocalSgd::new(d, momentum, 0.0),
+            sampler: ShardSampler::new(shard, batch, seed, id),
+            rng: Pcg64::new(seed ^ UPLINK_RNG_SALT, id as u64 + 1),
+            grad_buf: vec![0.0f32; d],
+            delta_buf: vec![0.0f32; d],
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn dim(&self) -> usize {
+        self.local.len()
+    }
+
+    /// The current local iterate x̂_t^{(r)}.
+    pub fn params(&self) -> &[f32] {
+        &self.local
+    }
+
+    /// ‖m_t^{(r)}‖² — the Lemma 4/5 probe reported in metrics.
+    pub fn mem_norm_sq(&self) -> f64 {
+        self.memory.norm_sq()
+    }
+
+    /// One local SGD(+momentum) step on the worker's shard (Alg 1 line 5).
+    pub fn local_step(&mut self, model: &dyn GradModel, train: &Dataset, eta: f64) {
+        let batch = self.sampler.next_batch(train);
+        model.loss_grad(&self.local, &batch, &mut self.grad_buf);
+        self.opt.step(&mut self.local, &self.grad_buf, eta);
+    }
+
+    /// Synchronization, worker side (Alg 1 lines 6–10): net local progress
+    /// `delta = x_anchor − x̂_{t+1/2}`, error-compensated and compressed.
+    /// The returned message is what goes on the wire (uplink).
+    pub fn make_update(&mut self, compressor: &dyn Compressor) -> Message {
+        for ((dv, a), l) in self.delta_buf.iter_mut().zip(&self.anchor).zip(&self.local) {
+            *dv = a - l;
+        }
+        self.memory.compress_update(&self.delta_buf, compressor, &mut self.rng)
+    }
+
+    /// Dense broadcast (Identity downlink): adopt the master's model
+    /// verbatim as both anchor and local iterate. Bit-identical to the
+    /// pre-refactor broadcast.
+    pub fn apply_dense_broadcast(&mut self, params: &[f32]) {
+        assert_eq!(params.len(), self.local.len(), "broadcast dimension mismatch");
+        self.local.copy_from_slice(params);
+        self.anchor.copy_from_slice(params);
+    }
+
+    /// Compressed broadcast: reconstruct the anchor from the master's
+    /// error-compensated model delta (`x_anchor ← x_anchor + q_t`) and
+    /// restart local iterations from it.
+    pub fn apply_delta_broadcast(&mut self, msg: &Message) {
+        assert_eq!(msg.dim(), self.anchor.len(), "downlink delta dimension mismatch");
+        msg.add_into(&mut self.anchor, 1.0);
+        self.local.copy_from_slice(&self.anchor);
+    }
+}

@@ -1,0 +1,216 @@
+//! Real PJRT backend (`--features pjrt`): compiles the AOT HLO artifacts on
+//! the PJRT CPU client via the `xla` bindings. See `runtime::` for the
+//! feature gate and the artifact pipeline description.
+
+use super::manifest::{Manifest, ModelEntry};
+use crate::data::Batch;
+use crate::grad::GradModel;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A process-wide PJRT CPU client plus the artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// True: this build can compile and execute artifacts.
+    pub fn backend_available() -> bool {
+        true
+    }
+
+    /// Open `artifacts/` (must contain manifest.json) and create the client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile the grad+eval executables of a model variant.
+    pub fn load_model(&self, name: &str) -> Result<PjrtModel> {
+        let entry = self
+            .manifest
+            .model(name)
+            .with_context(|| format!("model `{name}` not in manifest"))?
+            .clone();
+        let grad = self.compile(&entry.grad_file)?;
+        let eval = self.compile(&entry.eval_file)?;
+        Ok(PjrtModel { entry, grad, eval })
+    }
+
+    /// Read the exported initial parameters (raw little-endian f32), if any.
+    pub fn load_init(&self, name: &str) -> Result<Option<Vec<f32>>> {
+        let entry = self
+            .manifest
+            .model(name)
+            .with_context(|| format!("model `{name}` not in manifest"))?;
+        let Some(init_file) = &entry.init_file else {
+            return Ok(None);
+        };
+        let bytes = std::fs::read(self.dir.join(init_file))?;
+        anyhow::ensure!(bytes.len() == entry.d * 4, "init file size mismatch");
+        let mut out = Vec::with_capacity(entry.d);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(Some(out))
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// An AOT-compiled model variant: `(params, x, y) → (loss, grad)` plus the
+/// `(loss, top1_errs, top5_errs)` evaluation executable.
+pub struct PjrtModel {
+    pub entry: ModelEntry,
+    grad: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    fn literals(&self, params: &[f32], batch: &Batch) -> Result<[xla::Literal; 3]> {
+        anyhow::ensure!(
+            params.len() == self.entry.d,
+            "params len {} != artifact d {}",
+            params.len(),
+            self.entry.d
+        );
+        anyhow::ensure!(
+            batch.b == self.entry.batch,
+            "batch size {} != artifact batch {} (artifacts are shape-specialized)",
+            batch.b,
+            self.entry.batch
+        );
+        anyhow::ensure!(batch.dim == self.entry.feat, "feature dim mismatch");
+        let p = xla::Literal::vec1(params);
+        let x = xla::Literal::vec1(&batch.x)
+            .reshape(&[batch.b as i64, batch.dim as i64])?;
+        let y_i32: Vec<i32> = batch.y.iter().map(|&v| v as i32).collect();
+        let y = xla::Literal::vec1(&y_i32);
+        Ok([p, x, y])
+    }
+
+    /// Raw grad call: returns (loss, grad).
+    pub fn loss_grad_vec(&self, params: &[f32], batch: &Batch) -> Result<(f64, Vec<f32>)> {
+        let args = self.literals(params, batch)?;
+        let result = self.grad.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss, grad) = result.to_tuple2()?;
+        let loss = loss.get_first_element::<f32>()? as f64;
+        let grad = grad.to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+
+    /// Raw eval call: returns (loss, top1_err_rate, top5_err_rate).
+    pub fn eval_metrics(&self, params: &[f32], batch: &Batch) -> Result<(f64, f64, f64)> {
+        let args = self.literals(params, batch)?;
+        let result = self.eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss, top1, top5) = result.to_tuple3()?;
+        // The LM artifacts count errors over b·seq positions, classifiers
+        // over b rows.
+        let rows = self.eval_rows();
+        Ok((
+            loss.get_first_element::<f32>()? as f64,
+            top1.get_first_element::<f32>()? as f64 / rows,
+            top5.get_first_element::<f32>()? as f64 / rows,
+        ))
+    }
+
+    fn eval_rows(&self) -> f64 {
+        match self.entry.seq {
+            Some(seq) => (self.entry.batch * seq) as f64,
+            None => self.entry.batch as f64,
+        }
+    }
+
+    /// Split an arbitrary batch into compiled-size chunks (≥1). Short batches
+    /// are padded by repeating rows (only eval subsets hit this path).
+    fn chunks(&self, batch: &Batch) -> Vec<Batch> {
+        let cb = self.entry.batch;
+        if batch.b == cb {
+            return vec![batch.clone()];
+        }
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + cb <= batch.b {
+            out.push(Batch {
+                x: batch.x[i * batch.dim..(i + cb) * batch.dim].to_vec(),
+                y: batch.y[i..i + cb].to_vec(),
+                b: cb,
+                dim: batch.dim,
+            });
+            i += cb;
+        }
+        if out.is_empty() {
+            let mut x = batch.x.clone();
+            let mut y = batch.y.clone();
+            while y.len() < cb {
+                let src = y.len() % batch.b;
+                x.extend_from_slice(&batch.x[src * batch.dim..(src + 1) * batch.dim]);
+                y.push(batch.y[src]);
+            }
+            out.push(Batch { x, y, b: cb, dim: batch.dim });
+        }
+        out
+    }
+}
+
+impl GradModel for PjrtModel {
+    fn dim(&self) -> usize {
+        self.entry.d
+    }
+
+    fn loss_grad(&self, params: &[f32], batch: &Batch, grad: &mut [f32]) -> f64 {
+        let (loss, g) = self
+            .loss_grad_vec(params, batch)
+            .expect("PJRT grad execution failed");
+        grad.copy_from_slice(&g);
+        loss
+    }
+
+    fn loss(&self, params: &[f32], batch: &Batch) -> f64 {
+        let mut losses = Vec::new();
+        for chunk in self.chunks(batch) {
+            let (l, _, _) = self.eval_metrics(params, &chunk).expect("PJRT eval failed");
+            losses.push(l);
+        }
+        losses.iter().sum::<f64>() / losses.len().max(1) as f64
+    }
+
+    fn error_rate(&self, params: &[f32], batch: &Batch) -> f64 {
+        let mut errs = Vec::new();
+        for chunk in self.chunks(batch) {
+            let (_, e1, _) = self.eval_metrics(params, &chunk).expect("PJRT eval failed");
+            errs.push(e1);
+        }
+        errs.iter().sum::<f64>() / errs.len().max(1) as f64
+    }
+
+    fn topn_error_rate(&self, params: &[f32], batch: &Batch, n: usize) -> f64 {
+        let mut errs = Vec::new();
+        for chunk in self.chunks(batch) {
+            let (_, e1, e5) = self.eval_metrics(params, &chunk).expect("PJRT eval failed");
+            errs.push(if n >= 5 { e5 } else { e1 });
+        }
+        errs.iter().sum::<f64>() / errs.len().max(1) as f64
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.entry.name)
+    }
+}

@@ -15,6 +15,10 @@ fn artifacts() -> Option<PjrtRuntime> {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
         return None;
     }
+    if !PjrtRuntime::backend_available() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     Some(PjrtRuntime::open("artifacts").expect("open artifacts"))
 }
 

@@ -1,0 +1,285 @@
+//! The shared protocol core across both execution substrates, and the
+//! bidirectional (downlink-compressed) extension.
+//!
+//! * engine ≡ threaded bit-identity must survive a non-trivial
+//!   `down_compressor` (per-worker server-side error feedback + per-worker
+//!   RNG streams make this order-independent by construction);
+//! * `identity` downlink must reproduce the historical dense-broadcast
+//!   semantics exactly (and its bit accounting in closed form);
+//! * downlink messages must round-trip the wire encoding, and the
+//!   error-feedback recursion must drain worker staleness.
+
+use qsparse::compress::{encode, parse_spec};
+use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+use qsparse::engine::{run, TrainSpec};
+use qsparse::grad::{GradModel, SoftmaxRegression};
+use qsparse::optim::LrSchedule;
+use qsparse::protocol::MasterCore;
+use qsparse::topology::{FixedPeriod, RandomGaps};
+use qsparse::util::rng::Pcg64;
+use qsparse::util::stats::norm2_sq;
+use std::sync::Arc;
+
+const N: usize = 300;
+
+fn data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
+    qsparse::data::gaussian_clusters_split(N, N / 4, 16, 4, 0.5, 1.0, 55)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(16, 4, 1.0 / N as f64)
+}
+
+/// Synchronous schedules barrier in the master, so the threaded run must be
+/// *bit-identical* to the engine — including when the downlink broadcasts
+/// compressed deltas (deterministic and stochastic operators alike).
+#[test]
+fn threaded_sync_bitexact_vs_engine_with_compressed_downlink() {
+    let (train, test) = data();
+    let m = model();
+    for (up_spec, down_spec) in [
+        ("topk:k=10", "topk:k=16"),
+        ("qtopk:k=10,bits=4", "qsgd:bits=4"),
+        ("identity", "signtopk:k=12,m=1"),
+    ] {
+        let up = parse_spec(up_spec).unwrap();
+        let down = parse_spec(down_spec).unwrap();
+        let sched = FixedPeriod::new(4);
+        let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+        spec.down_compressor = down.as_ref();
+        spec.workers = 4;
+        spec.batch = 4;
+        spec.steps = 80;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.test = Some(&test);
+        let engine_hist = run(&spec);
+
+        let mut cfg = CoordinatorConfig::new(
+            Arc::from(parse_spec(up_spec).unwrap()),
+            Arc::new(FixedPeriod::new(4)),
+        );
+        cfg.down_compressor = Arc::from(parse_spec(down_spec).unwrap());
+        cfg.workers = 4;
+        cfg.batch = 4;
+        cfg.steps = 80;
+        cfg.lr = LrSchedule::Const { eta: 0.3 };
+        cfg.seed = spec.seed;
+        let threaded_hist = run_threaded(
+            &cfg,
+            || Box::new(model()) as Box<dyn GradModel>,
+            Arc::new(train.clone()),
+            Some(Arc::new(test.clone())),
+        )
+        .unwrap();
+
+        assert_eq!(
+            engine_hist.final_params, threaded_hist.final_params,
+            "{up_spec}⇑ {down_spec}⇓: threaded sync run diverged from the engine"
+        );
+        assert_eq!(
+            engine_hist.total_bits_up(),
+            threaded_hist.total_bits_up(),
+            "{up_spec}⇑ {down_spec}⇓: uplink bit accounting differs"
+        );
+        assert_eq!(
+            engine_hist.total_bits_down(),
+            threaded_hist.total_bits_down(),
+            "{up_spec}⇑ {down_spec}⇓: downlink bit accounting differs"
+        );
+    }
+}
+
+/// `identity` downlink is the historical dense broadcast: the explicit spec
+/// and the default must take the same path, and bits_down must equal the
+/// closed-form dense accounting (one encoded dense model per worker per
+/// sync) — no hidden delta encoding.
+#[test]
+fn identity_downlink_is_dense_broadcast() {
+    let (train, _test) = data();
+    let m = model();
+    let up = parse_spec("topk:k=8").unwrap();
+    let sched = FixedPeriod::new(2);
+
+    let mk = |explicit_down: bool| {
+        let down = parse_spec("identity").unwrap();
+        let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+        if explicit_down {
+            spec.down_compressor = down.as_ref();
+        }
+        spec.workers = 5;
+        spec.batch = 4;
+        spec.steps = 60;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        run(&spec)
+    };
+    let default_down = mk(false);
+    let explicit_down = mk(true);
+    assert_eq!(default_down.final_params, explicit_down.final_params);
+
+    // 60 steps, H=2 ⇒ 30 sync rounds × 5 workers, one dense model each.
+    let d = m.dim();
+    let expect = 30 * 5 * encode::dense_model_bits(d);
+    assert_eq!(default_down.total_bits_down(), expect);
+}
+
+/// Downlink protocol property: over drifting global models, every broadcast
+/// message round-trips `encode`/`decode` exactly, anchors reconstructed from
+/// decoded deltas track the master's view, and freezing the model drains the
+/// staleness through error feedback.
+#[test]
+fn prop_downlink_roundtrip_and_staleness_drain() {
+    let mut rng = Pcg64::seeded(0xD0_11CE);
+    for trial in 0..12 {
+        let d = 16 + rng.below_usize(64);
+        let workers = 1 + rng.below_usize(4);
+        let down_specs =
+            ["topk:k=4", "randk:k=6", "qsgd:bits=4", "signtopk:k=6,m=1", "qtopk:k=5,bits=2"];
+        let down = parse_spec(down_specs[trial % down_specs.len()]).unwrap();
+
+        let init: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut master = MasterCore::new(init.clone(), workers, trial as u64, true);
+        let mut anchors = vec![init; workers];
+
+        for _round in 0..8 {
+            let drift: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.05).collect();
+            master
+                .apply_update(&qsparse::Message::Dense { values: drift })
+                .unwrap();
+            for (r, anchor) in anchors.iter_mut().enumerate() {
+                let msg = master.delta_broadcast(r, down.as_ref());
+                // Wire round-trip is exact.
+                let (bytes, bit_len) = encode::encode(&msg);
+                let back = encode::decode(&bytes, bit_len).expect("downlink decode");
+                assert_eq!(msg, back, "trial {trial}: downlink message mangled on the wire");
+                back.add_into(anchor, 1.0);
+                // Server memory ≡ global − anchor (up to f32 rounding).
+                let resid: Vec<f32> = master
+                    .params()
+                    .iter()
+                    .zip(anchor.iter())
+                    .map(|(g, a)| g - a)
+                    .collect();
+                let mem = master.down_memory(r).unwrap();
+                let diff: Vec<f32> = resid.iter().zip(mem).map(|(x, y)| x - y).collect();
+                assert!(
+                    norm2_sq(&diff) <= 1e-6 * (1.0 + norm2_sq(&resid)),
+                    "trial {trial}: server memory drifted from anchor staleness"
+                );
+            }
+        }
+        // Freeze the model; EF must re-offer everything that was dropped.
+        let before: f64 = (0..workers).map(|r| norm2_sq(master.down_memory(r).unwrap())).sum();
+        for _round in 0..120 {
+            for (r, anchor) in anchors.iter_mut().enumerate() {
+                let msg = master.delta_broadcast(r, down.as_ref());
+                msg.add_into(anchor, 1.0);
+            }
+        }
+        let after: f64 = (0..workers).map(|r| norm2_sq(master.down_memory(r).unwrap())).sum();
+        assert!(
+            after <= 0.2 * before + 1e-9,
+            "trial {trial}: staleness did not drain ({before:.3e} → {after:.3e})"
+        );
+    }
+}
+
+/// The asynchronous (aggregate-on-arrival) threaded path works with a
+/// compressed downlink: per-worker server memories keep anchors consistent
+/// even though workers sync at different steps, and the run converges.
+#[test]
+fn threaded_async_with_compressed_downlink_converges() {
+    let (train, test) = data();
+    let steps = 150;
+    let sched = RandomGaps::generate(4, 6, steps, 999);
+    // One broadcast per sync point per worker — the dense baseline in bits.
+    let total_syncs: u64 = (0..4).map(|r| sched.points(r).len() as u64).sum();
+    let dense_baseline = total_syncs * encode::dense_model_bits(model().dim());
+
+    let mut cfg =
+        CoordinatorConfig::new(Arc::from(parse_spec("topk:k=10").unwrap()), Arc::new(sched));
+    cfg.down_compressor = Arc::from(parse_spec("topk:k=8").unwrap());
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = steps;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    let hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train),
+        Some(Arc::new(test)),
+    )
+    .unwrap();
+    assert!(
+        hist.final_loss() < (4.0f64).ln() * 0.7,
+        "async compressed-downlink run did not converge: {}",
+        hist.final_loss()
+    );
+    assert!(hist.total_bits_up() > 0);
+    // Compressed downlink must actually beat the dense accounting (a silent
+    // fallback to dense broadcasts would fail this).
+    let bd = hist.total_bits_down();
+    assert!(bd > 0);
+    assert!(
+        bd * 4 < dense_baseline,
+        "async downlink not compressed: {bd} vs dense baseline {dense_baseline}"
+    );
+}
+
+/// Threaded runs now report the worker error-memory norm (it was NaN before
+/// the protocol refactor) and it matches the engine's under a synchronous
+/// schedule.
+#[test]
+fn threaded_reports_mem_norm_matching_engine() {
+    let (train, test) = data();
+    let m = model();
+    let up = parse_spec("topk:k=6").unwrap();
+    let sched = FixedPeriod::new(4);
+    let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = 80;
+    spec.eval_every = 4; // align eval points with the H=4 barriers
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.test = Some(&test);
+    let engine_hist = run(&spec);
+
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("topk:k=6").unwrap()),
+        Arc::new(FixedPeriod::new(4)),
+    );
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = 80;
+    cfg.eval_every = 4;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    let threaded_hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train.clone()),
+        Some(Arc::new(test.clone())),
+    )
+    .unwrap();
+
+    // Memory changes only at syncs, so at matching eval steps the threaded
+    // aggregate of last-reported ‖m‖² equals the engine's live average.
+    let mut checked = 0;
+    for ep in &engine_hist.points {
+        if let Some(tp) = threaded_hist.points.iter().find(|p| p.step == ep.step) {
+            assert!(
+                !tp.mem_norm_sq.is_nan(),
+                "threaded mem_norm_sq still NaN at step {}",
+                tp.step
+            );
+            assert!(
+                (tp.mem_norm_sq - ep.mem_norm_sq).abs()
+                    <= 1e-9 * (1.0 + ep.mem_norm_sq.abs()),
+                "step {}: threaded mem {} vs engine {}",
+                ep.step,
+                tp.mem_norm_sq,
+                ep.mem_norm_sq
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 3, "too few comparable eval points ({checked})");
+}
