@@ -95,6 +95,10 @@ fn main() {
     // error-compensated compressed delta per worker. Shows both the wall
     // cost of the downlink aggregation work and the wire-bit savings.
     bench_broadcast(quick, warm, iters);
+
+    // Aggregation under sampled participation: full R-worker rounds vs
+    // |S_t| = m sampled rounds with the unbiased 1/|S_t| fold.
+    bench_participation_aggregation(warm, iters);
 }
 
 fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
@@ -112,13 +116,14 @@ fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
         (0..d).map(|_| r.normal_f32() * 0.01).collect()
     };
 
-    // Dense downlink: one shared Arc snapshot per round (what the threaded
-    // master sends), bits = encoded dense model per worker.
+    // Dense downlink: one cached Arc snapshot per round (what the threaded
+    // master sends — rebuilt only after the model changes), bits = encoded
+    // dense model per worker.
     let mut core = MasterCore::new(init.clone(), workers, 7, false);
     let noise = drift();
     let samples = time_iters(warm * 5, iters * 20, || {
         core.apply_update(&qsparse::Message::Dense { values: noise.clone() }).unwrap();
-        let payload: Arc<[f32]> = Arc::from(core.params());
+        let payload: Arc<[f32]> = core.params_snapshot();
         for _r in 0..workers {
             std::hint::black_box(Arc::clone(&payload));
         }
@@ -149,5 +154,47 @@ fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
             "  downlink bits/round: {avg_bits} vs dense {dense_bits} ({:.1}x saving)",
             dense_bits as f64 / avg_bits as f64
         );
+    }
+}
+
+/// Master-side aggregation with sampled participation (the `begin_round` +
+/// per-round scale path): full R-worker rounds vs |S_t| = m sampled rounds.
+fn bench_participation_aggregation(warm: usize, iters: usize) {
+    use qsparse::protocol::{AggScale, MasterCore};
+    use qsparse::topology::ParticipationSpec;
+    use qsparse::util::rng::Pcg64;
+
+    let d = 7850usize;
+    let workers = 8usize;
+    let rounds_per_iter = 50usize;
+    let mut rng = Pcg64::seeded(13);
+    let updates: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..d).map(|_| rng.normal_f32() * 0.01).collect())
+        .collect();
+
+    for (label, spec, scale) in [
+        ("full(R=8,1/R)", ParticipationSpec::Full, AggScale::Workers),
+        ("fixed(m=2,1/|S|)", ParticipationSpec::FixedSize { m: 2 }, AggScale::Participants),
+    ] {
+        let part = spec.materialize(workers, rounds_per_iter, 29);
+        let mut core = MasterCore::new(vec![0.0f32; d], workers, 29, false);
+        core.set_agg_scale(scale);
+        let samples = time_iters(warm, iters * 4, || {
+            for t in 0..rounds_per_iter {
+                let s_t: Vec<usize> =
+                    (0..workers).filter(|&r| part.participates(r, t)).collect();
+                core.begin_round(s_t.len());
+                for r in s_t {
+                    core.apply_update(&qsparse::Message::Dense {
+                        values: updates[r].clone(),
+                    })
+                    .unwrap();
+                }
+            }
+            std::hint::black_box(core.params().len());
+        });
+        let per_round: Vec<f64> =
+            samples.iter().map(|s| s / rounds_per_iter as f64).collect();
+        report(&format!("aggregate/{label}(d=7850)"), &per_round, None);
     }
 }

@@ -73,6 +73,8 @@ fn main() -> anyhow::Result<()> {
         compressor: compressor.as_ref(),
         down_compressor: &qsparse::compress::IDENTITY,
         schedule: &schedule,
+        participation: &qsparse::topology::FULL_PARTICIPATION,
+        agg_scale: qsparse::protocol::AggScale::Workers,
         sharding: Sharding::Iid,
         seed: 20190527,
         eval_every: 20,

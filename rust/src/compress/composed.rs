@@ -85,12 +85,12 @@ impl Compressor for QTopK {
     }
 
     fn name(&self) -> String {
-        let bits = 32 - self.q.s.leading_zeros();
+        let levels = self.q.level_label();
         let sp = if self.rand { "randk" } else { "topk" };
         if self.scaled {
-            format!("q{sp}_scaled(k={},{}bit)", self.k, bits)
+            format!("q{sp}_scaled(k={},{levels})", self.k)
         } else {
-            format!("q{sp}(k={},{}bit)", self.k, bits)
+            format!("q{sp}(k={},{levels})", self.k)
         }
     }
 }

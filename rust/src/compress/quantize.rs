@@ -63,6 +63,18 @@ impl Qsgd {
         b
     }
 
+    /// Legend label for the level count: `"{b}bit"` iff s = 2^b − 1 (the
+    /// exact `from_bits` inverse), otherwise the explicit `"s=N"`. The old
+    /// `32 − s.leading_zeros()` derivation mislabeled every non-2^b−1 level
+    /// count (e.g. s = 4 printed as "3bit", which round-trips to s = 7).
+    pub fn level_label(&self) -> String {
+        if self.s.wrapping_add(1).is_power_of_two() {
+            format!("{}bit", (self.s + 1).trailing_zeros())
+        } else {
+            format!("s={}", self.s)
+        }
+    }
+
     /// Variance blow-up β = min(B/s², √B/s) at the effective bucket size
     /// B = min(d, bucket) [AGL+17].
     pub fn beta(&self, d: usize) -> f64 {
@@ -131,8 +143,7 @@ impl Compressor for Qsgd {
     }
 
     fn name(&self) -> String {
-        let bits = 32 - self.s.leading_zeros();
-        format!("qsgd({}bit,B={})", bits, self.bucket)
+        format!("qsgd({},B={})", self.level_label(), self.bucket)
     }
 }
 
@@ -246,6 +257,19 @@ mod tests {
         let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
         let gamma = norm1(&x).powi(2) / (4.0 * norm2_sq(&x));
         assert!(norm2_sq(&resid) <= (1.0 - gamma) * norm2_sq(&x) + 1e-9);
+    }
+
+    #[test]
+    fn qsgd_name_reports_exact_levels() {
+        // s = 2^b − 1 keeps the familiar bit-width label…
+        assert!(Qsgd::from_bits(4).name().contains("4bit")); // s = 15
+        assert!(Qsgd::from_bits(2).name().contains("2bit")); // s = 3
+        assert!(Qsgd::from_bits(1).name().contains("1bit")); // s = 1
+        // …but a non-2^b−1 level count is reported exactly, not rounded to a
+        // bit width it does not have (s = 4 used to print "3bit" ⇒ s = 7).
+        let odd = Qsgd::new(4);
+        assert!(odd.name().contains("s=4"), "{}", odd.name());
+        assert!(!odd.name().contains("bit"), "{}", odd.name());
     }
 
     #[test]

@@ -2,15 +2,24 @@
 //! updates, aggregate, broadcast, record metrics.
 //!
 //! Aggregation policy (Algorithm 2 line 19): every received update is folded
-//! as x ← x − (1/R)·g and the fresh model is returned to the sender. With a
-//! synchronous schedule all R workers block at the same step, so the master
-//! *barriers*: it buffers the step's updates, applies them together and then
-//! replies to everyone — making the threaded run semantically identical to
-//! Algorithm 1 (and bit-identical to the engine, which tests rely on).
+//! as x ← x − s·g (s = 1/R, or 1/|S_t| under `AggScale::Participants`) and
+//! the fresh model is returned to the sender. With a synchronous schedule
+//! every *participant* of a round blocks at the same step, so the master
+//! *barriers*: it buffers updates in per-step buckets, applies each round
+//! once its |S_t| updates arrived — in step order, because sampled
+//! participation lets non-participants run ahead into later rounds — and
+//! then replies to that round's participants, making the threaded run
+//! bit-identical to the engine (which tests rely on).
 //!
-//! Broadcast: Identity downlink shares one `Arc<[f32]>` model snapshot per
-//! aggregation round across all R reply channels; a non-Identity downlink
-//! sends each worker its own encoded error-compensated model delta.
+//! Broadcast: Identity downlink shares one cached `Arc<[f32]>` model
+//! snapshot (rebuilt only after the model changes) across a round's reply
+//! channels; a non-Identity downlink sends each participant its own encoded
+//! error-compensated model delta.
+//!
+//! Metrics are recorded on the engine's exact step grid
+//! (`step % eval_every == 0`, plus the final step): grid points that fall
+//! between sync rounds are emitted with the pre-round model, which is
+//! precisely the model the engine evaluates there.
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
 use crate::compress::{encode, Message};
@@ -18,7 +27,9 @@ use crate::data::Dataset;
 use crate::engine::{History, MetricPoint};
 use crate::grad::GradModel;
 use crate::protocol::MasterCore;
+use crate::topology::sync_participants_into;
 use crate::util::rng::Pcg64;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -42,6 +53,7 @@ where
     anyhow::ensure!(init.len() == d, "init length mismatch");
     let dense_down = cfg.down_compressor.is_identity();
     let mut core = MasterCore::new(init.clone(), cfg.workers, cfg.seed, !dense_down);
+    core.set_agg_scale(cfg.agg_scale);
 
     let shards = crate::data::shard_indices(&train, cfg.workers, cfg.sharding);
     let (to_master_tx, to_master_rx) = mpsc::channel::<ToMaster>();
@@ -80,18 +92,47 @@ where
         ts.gather(&eval_rng.sample_indices(ts.n, take))
     });
 
-    let mut history = History::new();
+    let mut grid = GridRecorder::new(cfg.eval_every);
     let mut bits_up = 0u64;
     let mut bits_down = 0u64;
     let mut finished = 0usize;
-    let mut last_eval_step = 0usize;
     let barrier = cfg.schedule.is_synchronous();
-    let mut pending: Vec<UpdateMsg> = Vec::new();
     // Last reported ‖m‖² per worker (memories live in worker threads, but
     // they only change at syncs, so the latest report is the current value).
     let mut mem_norms = vec![0.0f64; cfg.workers];
+    // Scratch buffer for the async path's per-step S_t.
+    let mut s_t = Vec::with_capacity(cfg.workers);
 
-    let mut record = |step: usize, global: &[f32], bits_up: u64, bits_down: u64, mem: f64| {
+    // Barrier mode: the ordered sync rounds (sync step t, participants S_t),
+    // shared with the engine by construction (same schedule, same
+    // materialized participation). The master waits for exactly |S_t|
+    // updates per round and applies rounds in step order — under sampled
+    // participation a skipped worker runs ahead and may deliver its *next*
+    // round's update before the current round completes.
+    let rounds: Vec<(usize, Vec<usize>)> = if barrier {
+        let mut rounds = Vec::new();
+        let mut set = Vec::with_capacity(cfg.workers);
+        for t in 0..cfg.steps {
+            sync_participants_into(
+                cfg.schedule.as_ref(),
+                &cfg.participation,
+                cfg.workers,
+                t,
+                &mut set,
+            );
+            if !set.is_empty() {
+                rounds.push((t, set.clone()));
+            }
+        }
+        rounds
+    } else {
+        Vec::new()
+    };
+    let mut round_idx = 0usize;
+    // Arrived-but-unapplied updates, keyed by their sync step.
+    let mut buckets: HashMap<usize, Vec<UpdateMsg>> = HashMap::new();
+
+    let measure = |step: usize, global: &[f32], bits_up: u64, bits_down: u64, mem: f64| {
         let train_loss = eval_model.loss(global, &train_eval);
         let (test_err, test_top5) = match &test_eval {
             Some(tb) => (
@@ -100,7 +141,7 @@ where
             ),
             None => (f64::NAN, f64::NAN),
         };
-        history.push(MetricPoint {
+        MetricPoint {
             step,
             train_loss,
             test_err,
@@ -108,81 +149,154 @@ where
             bits_up,
             bits_down,
             mem_norm_sq: mem,
-        });
+        }
     };
-    record(0, core.params(), 0, 0, 0.0);
+    grid.history.push(measure(0, core.params(), 0, 0, 0.0));
 
     while finished < cfg.workers {
         match to_master_rx.recv() {
             Err(_) => break,
             Ok(ToMaster::Finished(_)) => finished += 1,
             Ok(ToMaster::Update(upd)) => {
-                bits_up += upd.bit_len;
                 if barrier {
-                    let step = upd.step;
-                    pending.push(upd);
-                    if pending.len() == cfg.workers {
+                    buckets.entry(upd.step).or_default().push(upd);
+                    // Apply every round that is now complete, in step order.
+                    while round_idx < rounds.len() {
+                        let (step, parts) = &rounds[round_idx];
+                        let (step, expect) = (*step, parts.len());
+                        if buckets.get(&step).map_or(0, Vec::len) < expect {
+                            break;
+                        }
+                        let mut batch = buckets.remove(&step).expect("bucket checked above");
+                        // Grid points at or before this round's sync step see
+                        // the pre-round model — exactly what the engine
+                        // records between rounds (bits/memories are accounted
+                        // at application, so they too reflect applied rounds
+                        // only).
+                        grid.catch_up(step, |s| {
+                            measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                        });
                         // Apply in worker order: f32 addition is not
                         // associative, and a fixed order makes the threaded
                         // sync run bit-identical to the engine (tested).
-                        pending.sort_by_key(|u| u.worker);
-                        for u in pending.drain(..) {
+                        batch.sort_by_key(|u| u.worker);
+                        core.begin_round(expect);
+                        for u in batch {
+                            bits_up += u.bit_len;
                             mem_norms[u.worker] = u.mem_norm_sq;
                             core.apply_update(&decode_update(&u)?)?;
                         }
+                        // Reply to this round's participants only — a
+                        // non-participant never blocks on the master, and a
+                        // queued stale model would corrupt its next sync.
                         if dense_down {
-                            let payload: Arc<[f32]> = Arc::from(core.params());
+                            let payload = core.params_snapshot();
                             let bits = encode::dense_model_bits(d);
-                            for tx in &reply_txs {
+                            for &r in parts {
                                 bits_down += bits;
-                                let _ = tx.send(ModelMsg::Dense(Arc::clone(&payload)));
+                                let _ = reply_txs[r].send(ModelMsg::Dense(Arc::clone(&payload)));
                             }
                         } else {
-                            for (r, tx) in reply_txs.iter().enumerate() {
+                            for &r in parts {
                                 let msg =
                                     core.delta_broadcast(r, cfg.down_compressor.as_ref());
                                 let (bytes, bit_len) = encode::encode(&msg);
                                 bits_down += bit_len;
-                                let _ = tx.send(ModelMsg::Delta { bytes, bit_len });
+                                let _ = reply_txs[r].send(ModelMsg::Delta { bytes, bit_len });
                             }
                         }
-                        if step + 1 >= last_eval_step + cfg.eval_every || step + 1 == cfg.steps {
-                            last_eval_step = step + 1;
-                            record(step + 1, core.params(), bits_up, bits_down, avg(&mem_norms));
-                        }
+                        grid.boundary(step, |s| {
+                            measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                        });
+                        round_idx += 1;
                     }
                 } else {
+                    // Aggregate-on-arrival (asynchronous schedules).
                     let step = upd.step;
                     let worker = upd.worker;
+                    grid.catch_up(step, |s| {
+                        measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                    });
+                    bits_up += upd.bit_len;
                     mem_norms[worker] = upd.mem_norm_sq;
+                    // |S_t| for the unbiased scale (same shared predicate as
+                    // the engine; the sender is a member, so it is never
+                    // empty).
+                    sync_participants_into(
+                        cfg.schedule.as_ref(),
+                        &cfg.participation,
+                        cfg.workers,
+                        step,
+                        &mut s_t,
+                    );
+                    core.begin_round(s_t.len());
                     core.apply_update(&decode_update(&upd)?)?;
                     if dense_down {
                         bits_down += encode::dense_model_bits(d);
-                        let _ = reply_txs[worker].send(ModelMsg::Dense(Arc::from(core.params())));
+                        let _ = reply_txs[worker].send(ModelMsg::Dense(core.params_snapshot()));
                     } else {
                         let msg = core.delta_broadcast(worker, cfg.down_compressor.as_ref());
                         let (bytes, bit_len) = encode::encode(&msg);
                         bits_down += bit_len;
                         let _ = reply_txs[worker].send(ModelMsg::Delta { bytes, bit_len });
                     }
-                    if step + 1 >= last_eval_step + cfg.eval_every {
-                        last_eval_step = step + 1;
-                        record(step + 1, core.params(), bits_up, bits_down, avg(&mem_norms));
-                    }
+                    grid.boundary(step, |s| {
+                        measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                    });
                 }
             }
         }
     }
-    if last_eval_step != cfg.steps {
-        record(cfg.steps, core.params(), bits_up, bits_down, avg(&mem_norms));
+    // Tail of the grid (steps after the last sync leave the model frozen),
+    // then the final step if it is not itself a grid point.
+    grid.catch_up(cfg.steps, |s| {
+        measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+    });
+    let mut history = grid.history;
+    if history.points.last().map_or(true, |p| p.step != cfg.steps) {
+        history.push(measure(cfg.steps, core.params(), bits_up, bits_down, avg(&mem_norms)));
     }
-    drop(record);
 
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
     }
     history.final_params = core.into_params();
     Ok(history)
+}
+
+/// Records `MetricPoint`s on the engine's exact step grid: multiples of
+/// `eval_every`, with grid points between sync rounds evaluated on the
+/// pre-round state (the model is frozen there) and round boundaries on the
+/// post-round state — see `engine::run_from`'s recording rule.
+struct GridRecorder {
+    history: History,
+    /// Next unrecorded grid point.
+    next_eval: usize,
+    eval_every: usize,
+}
+
+impl GridRecorder {
+    fn new(eval_every: usize) -> Self {
+        GridRecorder { history: History::new(), next_eval: eval_every, eval_every }
+    }
+
+    /// Record every unrecorded grid point ≤ `step` with the *current*
+    /// (pre-round) state.
+    fn catch_up(&mut self, step: usize, mut mk: impl FnMut(usize) -> MetricPoint) {
+        while self.next_eval <= step {
+            self.history.push(mk(self.next_eval));
+            self.next_eval += self.eval_every;
+        }
+    }
+
+    /// Record the boundary `step + 1` of a just-applied round iff it is the
+    /// next grid point.
+    fn boundary(&mut self, step: usize, mk: impl FnOnce(usize) -> MetricPoint) {
+        if step + 1 == self.next_eval {
+            self.history.push(mk(step + 1));
+            self.next_eval += self.eval_every;
+        }
+    }
 }
 
 fn decode_update(upd: &UpdateMsg) -> anyhow::Result<Message> {

@@ -12,7 +12,12 @@
 //! All update/aggregate/broadcast arithmetic is delegated to
 //! `protocol::{WorkerCore, MasterCore}` — the same state machines the
 //! engine drives — so the synchronous threaded run is bit-identical to the
-//! engine by construction, not by parallel maintenance of two loops.
+//! engine by construction, not by parallel maintenance of two loops. This
+//! extends to sampled partial participation: participant sets are
+//! materialized from the seed (`topology::Participation`), the barrier
+//! waits for exactly |S_t| updates per round (buckets keyed by sync step,
+//! applied in step order), and metrics are recorded on the engine's exact
+//! step grid (`step % eval_every == 0`, plus the final step).
 //!
 //! Downlink: with `down_compressor = Identity` the master broadcasts one
 //! shared `Arc<[f32]>` model snapshot per round (no per-worker clone);
@@ -31,7 +36,8 @@ pub use master::run_threaded;
 use crate::compress::{Compressor, Identity};
 use crate::data::Sharding;
 use crate::optim::LrSchedule;
-use crate::topology::SyncSchedule;
+use crate::protocol::AggScale;
+use crate::topology::{Participation, SyncSchedule};
 use std::sync::Arc;
 
 /// Configuration for a threaded run (mirrors `engine::TrainSpec` minus the
@@ -48,6 +54,12 @@ pub struct CoordinatorConfig {
     /// broadcasts the dense model, preserving the historical behavior.
     pub down_compressor: Arc<dyn Compressor>,
     pub schedule: Arc<dyn SyncSchedule>,
+    /// Sampled partial participation (mirrors `TrainSpec::participation`).
+    /// Materialized up front, so worker threads and the master agree on
+    /// every round's S_t without coordination.
+    pub participation: Participation,
+    /// `1/R` (paper) vs unbiased `1/|S_t|` aggregation scaling.
+    pub agg_scale: AggScale,
     pub sharding: Sharding,
     pub seed: u64,
     pub eval_every: usize,
@@ -67,6 +79,8 @@ impl CoordinatorConfig {
             compressor,
             down_compressor: Arc::new(Identity),
             schedule,
+            participation: Participation::full(),
+            agg_scale: AggScale::Workers,
             sharding: Sharding::Iid,
             seed: 0,
             eval_every: 10,

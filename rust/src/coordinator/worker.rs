@@ -28,7 +28,10 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     for t in 0..cfg.steps {
         core.local_step(model.as_ref(), &train, cfg.lr.at(t));
 
-        if cfg.schedule.syncs_at(id, t) {
+        // Sync only when scheduled AND sampled into this round's S_t; a
+        // non-participant keeps its local run going (no uplink, no model
+        // refresh) exactly like the engine's simulated workers.
+        if cfg.schedule.syncs_at(id, t) && cfg.participation.participates(id, t) {
             let msg = core.make_update(cfg.compressor.as_ref());
             let (bytes, bit_len) = encode::encode(&msg);
             let update = UpdateMsg {

@@ -5,11 +5,14 @@
 //! fires at t compress their net progress (with error feedback) and the
 //! master folds the received messages into the global model:
 //!
-//!   x_{t+1} = x_t − (1/R) Σ_{r ∈ S_t} g_t^{(r)}      (Alg 1 line 18 / Alg 2 line 19)
+//!   x_{t+1} = x_t − s Σ_{r ∈ S_t} g_t^{(r)}      (Alg 1 line 18 / Alg 2 line 19)
 //!
-//! With a `FixedPeriod` schedule this is exactly Algorithm 1; with
-//! `RandomGaps` it is Algorithm 2. With `Identity` + H = 1 it degenerates to
-//! vanilla distributed SGD (validated bit-for-bit in tests).
+//! where S_t is the round's participant set (the scheduled workers, further
+//! filtered by the sampled `Participation` policy) and the scale s is `1/R`
+//! (the paper) or the unbiased `1/|S_t|` (`AggScale::Participants`). With a
+//! `FixedPeriod` schedule and full participation this is exactly Algorithm
+//! 1; with `RandomGaps` it is Algorithm 2. With `Identity` + H = 1 it
+//! degenerates to vanilla distributed SGD (validated bit-for-bit in tests).
 //!
 //! The worker/master arithmetic itself lives in `protocol::{WorkerCore,
 //! MasterCore}` and is shared verbatim with the threaded runtime in
@@ -31,8 +34,8 @@ use crate::compress::{encode, Compressor};
 use crate::data::{shard_indices, Batch, Dataset, Sharding};
 use crate::grad::GradModel;
 use crate::optim::LrSchedule;
-use crate::protocol::{MasterCore, WorkerCore};
-use crate::topology::SyncSchedule;
+use crate::protocol::{AggScale, MasterCore, WorkerCore};
+use crate::topology::{sync_participants_into, Participation, SyncSchedule};
 use crate::util::rng::Pcg64;
 
 /// Full specification of a training run.
@@ -56,6 +59,13 @@ pub struct TrainSpec<'a> {
     /// model deltas with server-side error feedback.
     pub down_compressor: &'a dyn Compressor,
     pub schedule: &'a dyn SyncSchedule,
+    /// Which scheduled workers actually sync each round (sampled partial
+    /// participation). `FULL_PARTICIPATION` (the default) is the paper's
+    /// setting: every scheduled worker syncs.
+    pub participation: &'a Participation,
+    /// `Workers` folds every update as `−(1/R)·g` (the paper); `Participants`
+    /// uses the unbiased `−(1/|S_t|)·g` under sampled participation.
+    pub agg_scale: AggScale,
     pub sharding: Sharding,
     pub seed: u64,
     /// Record metrics every `eval_every` steps (and at the last step).
@@ -84,6 +94,8 @@ impl<'a> TrainSpec<'a> {
             compressor,
             down_compressor: &crate::compress::IDENTITY,
             schedule,
+            participation: &crate::topology::FULL_PARTICIPATION,
+            agg_scale: AggScale::Workers,
             sharding: Sharding::Iid,
             seed: 0,
             eval_every: 10,
@@ -123,11 +135,14 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
         })
         .collect();
     let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
+    master.set_agg_scale(spec.agg_scale);
 
     let eval = EvalSets::new(spec);
     let mut history = History::new();
     let mut bits_up: u64 = 0;
     let mut bits_down: u64 = 0;
+    // Reused buffer for the round's participant set S_t.
+    let mut round = Vec::with_capacity(r_count);
 
     // t = 0 snapshot.
     history.push(eval.measure(spec, 0, master.params(), bits_up, bits_down, avg_mem(&workers)));
@@ -139,29 +154,26 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
             w.local_step(spec.model, spec.train, eta);
         }
         // -- synchronization: uplink then aggregation ------------------------
-        let mut any_sync = false;
-        for (r, w) in workers.iter_mut().enumerate() {
-            if !spec.schedule.syncs_at(r, t) {
-                continue;
+        // S_t = scheduled ∩ sampled participants; non-participants keep
+        // running local steps and neither their uplink memory nor the
+        // master's per-worker downlink state advances.
+        sync_participants_into(spec.schedule, spec.participation, r_count, t, &mut round);
+        if !round.is_empty() {
+            master.begin_round(round.len());
+            for &r in &round {
+                let msg = workers[r].make_update(spec.compressor);
+                bits_up += msg.wire_bits();
+                master.apply_update(&msg).expect("engine-internal update dim mismatch");
             }
-            any_sync = true;
-            let msg = w.make_update(spec.compressor);
-            bits_up += msg.wire_bits();
-            master.apply_update(&msg).expect("engine-internal update dim mismatch");
-        }
-        // -- broadcast to the workers that synced ----------------------------
-        if any_sync {
-            for (r, w) in workers.iter_mut().enumerate() {
-                if !spec.schedule.syncs_at(r, t) {
-                    continue;
-                }
+            // -- broadcast to the round's participants -----------------------
+            for &r in &round {
                 if dense_down {
-                    w.apply_dense_broadcast(master.params());
+                    workers[r].apply_dense_broadcast(master.params());
                     bits_down += encode::dense_model_bits(d);
                 } else {
                     let msg = master.delta_broadcast(r, spec.down_compressor);
                     bits_down += msg.wire_bits();
-                    w.apply_delta_broadcast(&msg);
+                    workers[r].apply_delta_broadcast(&msg);
                 }
             }
         }

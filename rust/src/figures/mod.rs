@@ -23,7 +23,8 @@ use crate::data::{gaussian_clusters_split, Dataset, Sharding};
 use crate::engine::{self, History, TrainSpec};
 use crate::grad::{GradModel, Mlp, SoftmaxRegression};
 use crate::optim::LrSchedule;
-use crate::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+use crate::protocol::AggScale;
+use crate::topology::{FixedPeriod, ParticipationSpec, RandomGaps, SyncSchedule};
 
 /// The two simulated workloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,6 +46,11 @@ pub struct SeriesSpec {
     pub h: usize,
     /// Use the asynchronous schedule of Algorithm 2 (random per-worker gaps).
     pub asynchronous: bool,
+    /// Sampled participation spec (`ParticipationSpec::parse`); `full` is
+    /// the paper's setting.
+    pub participation: String,
+    /// Aggregation scaling under sampled participation.
+    pub agg_scale: AggScale,
 }
 
 impl SeriesSpec {
@@ -55,6 +61,8 @@ impl SeriesSpec {
             down: "identity".to_string(),
             h,
             asynchronous: false,
+            participation: "full".to_string(),
+            agg_scale: AggScale::Workers,
         }
     }
 
@@ -65,6 +73,13 @@ impl SeriesSpec {
     /// Builder: compress the downlink with `spec` (bidirectional series).
     pub fn with_down(mut self, spec: &str) -> Self {
         self.down = spec.to_string();
+        self
+    }
+
+    /// Builder: sample worker participation per sync round.
+    pub fn with_participation(mut self, spec: &str, scale: AggScale) -> Self {
+        self.participation = spec.to_string();
+        self.agg_scale = scale;
         self
     }
 }
@@ -171,6 +186,8 @@ pub fn run_series(
     } else {
         Box::new(FixedPeriod::new(s.h))
     };
+    let participation =
+        ParticipationSpec::parse(&s.participation)?.materialize(w.workers, steps, seed);
     let spec = TrainSpec {
         model: w.model.as_ref(),
         train: &w.train,
@@ -183,6 +200,8 @@ pub fn run_series(
         compressor: compressor.as_ref(),
         down_compressor: down_compressor.as_ref(),
         schedule: schedule.as_ref(),
+        participation: &participation,
+        agg_scale: s.agg_scale,
         sharding: Sharding::Iid,
         seed,
         eval_every: w.eval_every,

@@ -5,11 +5,13 @@
 //! per-tensor min(d_t, 1000) amounts to 0.4% of ResNet-50).
 
 use super::{FigureSpec, SeriesSpec, Workload};
+use crate::protocol::AggScale;
 
-/// All figure ids in paper order (fig9 is this repo's bidirectional
-/// extension, not a paper figure).
+/// All figure ids in paper order (fig9 — bidirectional compression — and
+/// fig10 — sampled partial participation — are this repo's extensions, not
+/// paper figures).
 pub fn all_figure_ids() -> Vec<&'static str> {
-    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"]
+    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10"]
 }
 
 /// Build the spec for one figure id.
@@ -180,6 +182,36 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
                     .with_down("qtopk:k=400,bits=4"),
             ],
         },
+        // ---- sampled partial participation (not in the paper) ----------------
+        // Bits-to-target under sampled worker subsets per sync round: only
+        // S_t ⊆ [R] workers sync each round (federated-style client
+        // sampling), uplink QTop_k + compressed downlink. The unbiased
+        // 1/|S_t| scale is compared with the paper's 1/R fold, which under-
+        // steps by E|S_t|/R the moment participation is partial.
+        "fig10" => FigureSpec {
+            id: "fig10",
+            title: "convex: sampled participation p ∈ {1.0, 0.5, 0.25} (1/|S_t| vs 1/R)",
+            workload: Workload::ConvexSoftmax,
+            steps: 1500,
+            target_loss: 0.10,
+            target_test_err: 0.15,
+            series: vec![
+                s("QTopK-bidir_p1.00", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4"),
+                s("QTopK-bidir_p0.50", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_participation("bernoulli:0.5", AggScale::Participants),
+                s("QTopK-bidir_p0.25", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_participation("bernoulli:0.25", AggScale::Participants),
+                s("QTopK-bidir_m8", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_participation("fixed:8", AggScale::Participants),
+                s("QTopK-bidir_p0.50_1R", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_participation("bernoulli:0.5", AggScale::Workers),
+            ],
+        },
         _ => return None,
     })
 }
@@ -199,6 +231,8 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{id}/{}: {e}", s.label));
                 crate::compress::parse_spec(&s.down)
                     .unwrap_or_else(|e| panic!("{id}/{} downlink: {e}", s.label));
+                crate::topology::ParticipationSpec::parse(&s.participation)
+                    .unwrap_or_else(|e| panic!("{id}/{} participation: {e}", s.label));
                 assert!(s.h >= 1);
             }
         }

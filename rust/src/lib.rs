@@ -8,8 +8,10 @@
 //! * **L3 (this crate)** — the distributed coordinator: compression
 //!   operators with exact wire-format bit accounting, error-feedback memory
 //!   on both the uplink (workers) and the downlink (master), synchronous
-//!   (Algorithm 1) and asynchronous (Algorithm 2) schedules, a shared
-//!   protocol core (`protocol::{WorkerCore, MasterCore}`) driven by both a
+//!   (Algorithm 1) and asynchronous (Algorithm 2) schedules, sampled
+//!   partial participation with participation-aware aggregation scaling
+//!   (`topology::Participation` + `protocol::AggScale`), a shared protocol
+//!   core (`protocol::{WorkerCore, MasterCore}`) driven by both a
 //!   deterministic simulation engine and a threaded master/worker runtime.
 //! * **L2** — JAX models (`python/compile/model.py`), AOT-lowered to HLO
 //!   text and executed from rust via PJRT (`runtime::`).
@@ -34,4 +36,5 @@ pub mod util;
 pub use compress::{Compressor, Message};
 pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
-pub use protocol::{MasterCore, WorkerCore};
+pub use protocol::{AggScale, MasterCore, WorkerCore};
+pub use topology::{Participation, ParticipationSpec};

@@ -13,6 +13,10 @@
 //!   --compressor SPEC             e.g. topk:k=40 | qtopk:k=40,bits=4,scaled
 //!   --down-compressor SPEC        downlink (master→worker) compressor;
 //!                                 default identity = dense model broadcast
+//!   --participation SPEC          sampled worker participation per sync
+//!                                 round: full | bernoulli:P | fixed:M
+//!   --agg-scale MODE              workers (paper 1/R) | participants
+//!                                 (unbiased 1/|S_t| under sampling)
 //!   --h N                         sync period H (default 1)
 //!   --async                       Algorithm 2 random per-worker gaps
 //!   --threaded                    threaded master/worker runtime (vs engine)
@@ -27,8 +31,9 @@ use qsparse::engine::{self, TrainSpec};
 use qsparse::figures;
 use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
 use qsparse::optim::LrSchedule;
+use qsparse::protocol::AggScale;
 use qsparse::runtime::PjrtRuntime;
-use qsparse::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+use qsparse::topology::{FixedPeriod, ParticipationSpec, RandomGaps, SyncSchedule};
 use qsparse::util::stats::Stopwatch;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -63,7 +68,8 @@ USAGE: qsparse <figure|gamma-table|train|inspect|help> [options]
   figure <id|all> [--out results] [--quick]
   gamma-table [--d 7850] [--k 40]
   train [--workload convex|nonconvex] [--pjrt NAME] [--compressor SPEC]
-        [--down-compressor SPEC] [--h N] [--async] [--threaded] [--steps N]
+        [--down-compressor SPEC] [--participation SPEC] [--agg-scale MODE]
+        [--h N] [--async] [--threaded] [--steps N]
         [--workers N] [--batch N] [--eta F] [--momentum F] [--seed N]
         [--csv FILE] [--json]
   inspect [--artifacts DIR]
@@ -75,6 +81,13 @@ Compressor SPECs: identity | topk:k=K | randk:k=K | qsgd:bits=B | sign |
 downlink broadcast as an error-compensated model delta (server-side error
 feedback); the default `identity` broadcasts the dense model. bits_down in
 CSV/JSON output is the exact encoded wire length either way.
+
+--participation samples which scheduled workers sync each round:
+`full` (default) | `bernoulli:P` (each worker independently w.p. P) |
+`fixed:M` (exactly M workers, uniform without replacement). Sets are
+materialized from the seed, so engine and threaded runs see the same S_t.
+--agg-scale picks the fold scale: `workers` (the paper's 1/R, biased under
+sampling) or `participants` (unbiased 1/|S_t|).
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
@@ -243,6 +256,11 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     } else {
         Box::new(FixedPeriod::new(h))
     };
+    let part_spec = f.get_or("participation", "full");
+    let parsed_part = ParticipationSpec::parse(&part_spec)?;
+    parsed_part.validate(workers)?;
+    let participation = parsed_part.materialize(workers, steps, seed);
+    let agg_scale = AggScale::parse(&f.get_or("agg-scale", "workers"))?;
 
     let history = if f.has("threaded") {
         anyhow::ensure!(
@@ -261,6 +279,8 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         };
         let mut cfg = CoordinatorConfig::new(Arc::from(compressor), Arc::from(schedule));
         cfg.down_compressor = Arc::from(down_compressor);
+        cfg.participation = participation.clone();
+        cfg.agg_scale = agg_scale;
         cfg.workers = workers;
         cfg.batch = batch;
         cfg.steps = steps;
@@ -282,6 +302,8 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             compressor: compressor.as_ref(),
             down_compressor: down_compressor.as_ref(),
             schedule: schedule.as_ref(),
+            participation: &participation,
+            agg_scale,
             sharding: Sharding::Iid,
             seed,
             eval_every: f.parse_num("eval-every", 25)?,
@@ -294,22 +316,31 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         std::fs::write(csv, history.to_csv())?;
     }
     if f.has("json") {
-        let name = if down_spec == "identity" {
+        let mut name = if down_spec == "identity" {
             comp_spec.clone()
         } else {
             format!("{comp_spec}|down={down_spec}")
         };
+        if !participation.is_full() {
+            name = format!("{name}|part={part_spec}|scale={}", agg_scale.name());
+        }
         println!("{}", history.summary_json(&name, sw.secs()));
     } else {
         let last = history.points.last().unwrap();
+        let part_str = if participation.is_full() {
+            String::new()
+        } else {
+            format!(" part={part_spec}({})", agg_scale.name())
+        };
         println!(
-            "{}⇑ {}⇓ steps={} H={} workers={}  loss={:.4} test_err={:.4}  \
+            "{}⇑ {}⇓ steps={} H={} workers={}{}  loss={:.4} test_err={:.4}  \
              bits_up={:.2}M bits_down={:.2}M  ({:.1}s)",
             comp_spec,
             down_spec,
             last.step,
             h,
             workers,
+            part_str,
             last.train_loss,
             last.test_err,
             last.bits_up as f64 / 1e6,

@@ -1,14 +1,20 @@
 //! Master-side protocol state machine (Algorithm 1/2, master lines).
 //!
-//! Aggregation: every received update is folded as `x ← x − (1/R)·g`
-//! (Algorithm 1 line 18 / Algorithm 2 line 19). Broadcast: either the dense
-//! model (Identity downlink — the paper's setting) or a per-worker
-//! error-compensated compressed model delta (see the module docs of
-//! [`crate::protocol`] for the recursion and its invariant).
+//! Aggregation: every received update is folded as `x ← x − s·g` where the
+//! per-round scale `s` is `1/R` (Algorithm 1 line 18 / Algorithm 2 line 19)
+//! or, under sampled participation with [`AggScale::Participants`],
+//! `1/|S_t|` — the driver announces each round via [`MasterCore::begin_round`].
+//! Broadcast: either the dense model (Identity downlink — the paper's
+//! setting) or a per-worker error-compensated compressed model delta (see
+//! the module docs of [`crate::protocol`] for the recursion and its
+//! invariant). Per-worker downlink state (`prev`, `mems`, RNG streams) only
+//! advances for workers the driver actually broadcasts to, i.e. the round's
+//! participants.
 
-use super::DOWNLINK_RNG_SALT;
+use super::{AggScale, DOWNLINK_RNG_SALT};
 use crate::compress::{Compressor, ErrorMemory, Message};
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// Per-worker downlink compression state (only allocated when the run uses
 /// a non-Identity downlink operator).
@@ -28,6 +34,14 @@ pub struct MasterCore {
     workers: usize,
     down: Option<DownlinkState>,
     delta_buf: Vec<f32>,
+    agg: AggScale,
+    /// Scale applied to every update folded this round (set by
+    /// `begin_round`; `1/R` until the first round begins).
+    round_scale: f32,
+    /// Cached dense-broadcast payload, invalidated whenever the model
+    /// changes — one snapshot per aggregation round, however many workers
+    /// it is sent to.
+    snapshot: Option<Arc<[f32]>>,
 }
 
 impl MasterCore {
@@ -46,7 +60,45 @@ impl MasterCore {
                 .map(|r| Pcg64::new(seed ^ DOWNLINK_RNG_SALT, r as u64 + 1))
                 .collect(),
         });
-        MasterCore { global: init, workers, down, delta_buf: vec![0.0f32; d] }
+        MasterCore {
+            global: init,
+            workers,
+            down,
+            delta_buf: vec![0.0f32; d],
+            agg: AggScale::Workers,
+            round_scale: 1.0 / workers as f32,
+            snapshot: None,
+        }
+    }
+
+    /// Choose the aggregation scaling policy (default: the paper's `1/R`).
+    /// With `AggScale::Workers` this is a no-op arithmetically — the scale
+    /// is `1/R` whatever `begin_round` announces — so full-participation
+    /// trajectories are preserved bit-for-bit.
+    pub fn set_agg_scale(&mut self, agg: AggScale) {
+        self.agg = agg;
+        if agg == AggScale::Workers {
+            self.round_scale = 1.0 / self.workers as f32;
+        }
+    }
+
+    pub fn agg_scale(&self) -> AggScale {
+        self.agg
+    }
+
+    /// Announce a sync round with `participants = |S_t|` syncing workers.
+    /// Every update folded until the next `begin_round` is scaled by `1/R`
+    /// (`AggScale::Workers`) or `1/|S_t|` (`AggScale::Participants`).
+    pub fn begin_round(&mut self, participants: usize) {
+        assert!(
+            participants >= 1 && participants <= self.workers,
+            "round with {participants} participants out of {} workers",
+            self.workers
+        );
+        self.round_scale = match self.agg {
+            AggScale::Workers => 1.0 / self.workers as f32,
+            AggScale::Participants => 1.0 / participants as f32,
+        };
     }
 
     /// The current global model x_t.
@@ -68,8 +120,9 @@ impl MasterCore {
     }
 
     /// Fold one decoded worker update into the global model:
-    /// `x ← x − (1/R)·g`. Errors on dimension mismatch (malformed wire
-    /// message) rather than corrupting the model.
+    /// `x ← x − s·g` with the current round's scale (see `begin_round`).
+    /// Errors on dimension mismatch (malformed wire message) rather than
+    /// corrupting the model.
     pub fn apply_update(&mut self, msg: &Message) -> anyhow::Result<()> {
         anyhow::ensure!(
             msg.dim() == self.global.len(),
@@ -77,8 +130,19 @@ impl MasterCore {
             msg.dim(),
             self.global.len()
         );
-        msg.add_into(&mut self.global, -1.0 / self.workers as f32);
+        msg.add_into(&mut self.global, -self.round_scale);
+        self.snapshot = None;
         Ok(())
+    }
+
+    /// The dense-broadcast payload: a shared snapshot of the current model,
+    /// rebuilt only after the model has changed. All recipients of one
+    /// aggregation round share a single allocation.
+    pub fn params_snapshot(&mut self) -> Arc<[f32]> {
+        if self.snapshot.is_none() {
+            self.snapshot = Some(Arc::from(&self.global[..]));
+        }
+        Arc::clone(self.snapshot.as_ref().unwrap())
     }
 
     /// Produce the compressed downlink message for worker `r`: the

@@ -13,7 +13,9 @@
 //!   error-compensated compression (Algorithm 1 lines 6–10), and anchor
 //!   reconstruction from a master broadcast.
 //! * [`MasterCore`] — the master side: fold decoded updates as
-//!   `x ← x − (1/R)·g` (Algorithm 1 line 18 / Algorithm 2 line 19) and
+//!   `x ← x − s·g` (Algorithm 1 line 18 / Algorithm 2 line 19; the round
+//!   scale s is the paper's `1/R`, or the unbiased `1/|S_t|` under sampled
+//!   participation — see [`AggScale`] and [`MasterCore::begin_round`]) and
 //!   produce the broadcast payload for each syncing worker.
 //!
 //! # Downlink (master → worker) compression
@@ -54,6 +56,43 @@ mod worker;
 
 pub use master::MasterCore;
 pub use worker::WorkerCore;
+
+/// How the master scales each folded update when only a subset S_t of
+/// workers syncs in a round (sampled participation).
+///
+/// The paper's Algorithms 1/2 divide by the fleet size R. That is exact
+/// under full participation, but the moment S_t is a random subset the
+/// `1/R` step is biased low by a factor `E|S_t|/R` — the same unbiasedness
+/// concern that makes Wangni et al. rescale sampled coordinates by `d/k`.
+/// `Participants` divides by `|S_t|` instead, which keeps the expected
+/// round step equal to the full-participation step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggScale {
+    /// `x ← x − (1/R)·Σ g` — the paper's scaling (exact for S_t = [R]).
+    Workers,
+    /// `x ← x − (1/|S_t|)·Σ g` — unbiased under sampled participation.
+    Participants,
+}
+
+impl AggScale {
+    /// Parse a CLI spec: `workers` (aka `1/R`) | `participants` (aka `1/S`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "workers" | "1/R" => Ok(AggScale::Workers),
+            "participants" | "sampled" | "1/S" => Ok(AggScale::Participants),
+            other => anyhow::bail!(
+                "unknown aggregation scale `{other}` (expected workers | participants)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggScale::Workers => "1/R",
+            AggScale::Participants => "1/|S_t|",
+        }
+    }
+}
 
 /// Stream salt for the master's per-worker downlink RNGs (distinct from the
 /// worker-side uplink salt `0xc0ffee` so the two never share a stream).
@@ -161,6 +200,39 @@ mod tests {
             after < 0.05 * before + 1e-10,
             "staleness did not drain: {before:.3e} → {after:.3e}"
         );
+    }
+
+    #[test]
+    fn participant_scaling_divides_by_round_size() {
+        let d = 4;
+        let g = crate::compress::Message::Dense { values: vec![1.0f32; d] };
+        // Unbiased mode: two updates in a |S_t| = 2 round, each scaled 1/2.
+        let mut m = MasterCore::new(vec![0.0; d], 8, 0, false);
+        m.set_agg_scale(AggScale::Participants);
+        m.begin_round(2);
+        m.apply_update(&g).unwrap();
+        m.apply_update(&g).unwrap();
+        assert!(m.params().iter().all(|&x| (x + 1.0).abs() < 1e-7));
+        // Paper mode: the announced |S_t| is ignored, scale stays 1/R.
+        let mut w = MasterCore::new(vec![0.0; d], 8, 0, false);
+        w.begin_round(2);
+        w.apply_update(&g).unwrap();
+        w.apply_update(&g).unwrap();
+        assert!(w.params().iter().all(|&x| (x + 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn dense_snapshot_cached_until_model_changes() {
+        use std::sync::Arc;
+        let mut m = MasterCore::new(vec![1.0f32; 4], 2, 0, false);
+        let a = m.params_snapshot();
+        let b = m.params_snapshot();
+        assert!(Arc::ptr_eq(&a, &b), "snapshot rebuilt without a model change");
+        m.apply_update(&crate::compress::Message::Dense { values: vec![1.0; 4] })
+            .unwrap();
+        let c = m.params_snapshot();
+        assert!(!Arc::ptr_eq(&a, &c), "stale snapshot served after an update");
+        assert_eq!(&c[..], m.params());
     }
 
     #[test]

@@ -1,12 +1,24 @@
-//! Synchronization schedules I_T (paper Definition 4, §3, §4).
+//! Synchronization schedules I_T (paper Definition 4, §3, §4) and sampled
+//! worker participation.
 //!
 //! A schedule decides, per worker, at which global-clock steps t the worker
 //! synchronizes with the master (i.e. t+1 ∈ I_T^(r) in the paper's
 //! indexing). `gap()` of a schedule is the maximum distance between
 //! consecutive sync points; all theory constants are stated in terms of
 //! H ≥ gap(I_T).
+//!
+//! A [`Participation`] policy filters the schedule: a worker actually syncs
+//! at step t only if it is scheduled *and* sampled into the round's
+//! participant set S_t. Like [`RandomGaps`], participant sets are
+//! materialized deterministically from the seed up front, so the engine and
+//! the threaded coordinator see identical S_t regardless of thread
+//! interleaving or the order workers are served in.
 
 use crate::util::rng::Pcg64;
+
+/// Stream salt for participation sampling (distinct from the uplink/downlink
+/// compression salts and the schedule salt so no streams are shared).
+const PARTICIPATION_RNG_SALT: u64 = 0x5e7ec7;
 
 /// Per-worker synchronization schedule over a horizon of T steps.
 pub trait SyncSchedule: Send + Sync {
@@ -132,6 +144,200 @@ impl SyncSchedule for RandomGaps {
     }
 }
 
+/// How the per-round participant set S_t is sampled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParticipationSpec {
+    /// Every scheduled worker participates (the paper's setting).
+    Full,
+    /// Each worker independently participates with probability `p` per round
+    /// (fixed-fraction Bernoulli sampling).
+    Bernoulli { p: f64 },
+    /// Exactly `m` workers, uniform without replacement, per round.
+    FixedSize { m: usize },
+}
+
+impl ParticipationSpec {
+    /// Parse a CLI spec: `full` | `bernoulli:P` (`P ∈ (0, 1]`, also accepts
+    /// `bernoulli:p=P`) | `fixed:M` (also `choose:M`, `fixed:m=M`).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let (head, rest) = spec.split_once(':').map_or((spec, ""), |(h, r)| (h, r));
+        let arg = |key: &str| -> anyhow::Result<String> {
+            let r = rest.trim();
+            let r = r.strip_prefix(key).and_then(|s| s.strip_prefix('=')).unwrap_or(r);
+            anyhow::ensure!(!r.is_empty(), "participation `{head}` requires `{key}`");
+            Ok(r.to_string())
+        };
+        match head {
+            "full" => {
+                anyhow::ensure!(rest.is_empty(), "participation `full` takes no arguments");
+                Ok(ParticipationSpec::Full)
+            }
+            "bernoulli" => {
+                let p: f64 = arg("p")?.parse().map_err(|e| anyhow::anyhow!("bad `p`: {e}"))?;
+                anyhow::ensure!(p > 0.0 && p <= 1.0, "bernoulli p must be in (0, 1], got {p}");
+                Ok(ParticipationSpec::Bernoulli { p })
+            }
+            "fixed" | "choose" => {
+                let m: usize = arg("m")?.parse().map_err(|e| anyhow::anyhow!("bad `m`: {e}"))?;
+                anyhow::ensure!(m >= 1, "fixed-size participation needs m >= 1");
+                Ok(ParticipationSpec::FixedSize { m })
+            }
+            other => anyhow::bail!(
+                "unknown participation `{other}` (expected full | bernoulli:P | fixed:M)"
+            ),
+        }
+    }
+
+    /// Check this spec against a worker count, returning a clean error for
+    /// user-reachable misconfigurations (the asserts in `materialize` are
+    /// internal invariants; CLI-facing callers validate first).
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        match *self {
+            ParticipationSpec::Full => Ok(()),
+            ParticipationSpec::Bernoulli { .. } => {
+                anyhow::ensure!(
+                    workers <= 64,
+                    "sampled participation supports up to 64 workers (got R={workers})"
+                );
+                Ok(())
+            }
+            ParticipationSpec::FixedSize { m } => {
+                anyhow::ensure!(
+                    workers <= 64,
+                    "sampled participation supports up to 64 workers (got R={workers})"
+                );
+                anyhow::ensure!(
+                    m <= workers,
+                    "fixed-size participation m={m} exceeds the worker count R={workers}"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Materialize the per-step participant sets over `[0, horizon)`. One
+    /// RNG stream per step (salted from the seed), so the sets are a pure
+    /// function of `(seed, t)` — independent of worker service order and
+    /// shared verbatim by the engine and the threaded coordinator.
+    pub fn materialize(&self, workers: usize, horizon: usize, seed: u64) -> Participation {
+        assert!(workers >= 1);
+        // The sampling variants store per-step u64 bitmasks; Full never
+        // builds a mask, so it keeps working for arbitrarily many workers.
+        let mask_capacity = |spec: &str| {
+            assert!(
+                workers <= 64,
+                "{spec} participation masks hold up to 64 workers (R={workers})"
+            );
+        };
+        let masks = match *self {
+            ParticipationSpec::Full => None,
+            ParticipationSpec::Bernoulli { p } => {
+                mask_capacity("bernoulli");
+                assert!(p > 0.0 && p <= 1.0, "bernoulli p must be in (0, 1]");
+                let mut masks = Vec::with_capacity(horizon);
+                for t in 0..horizon {
+                    let mut rng = Pcg64::new(seed ^ PARTICIPATION_RNG_SALT, t as u64 + 1);
+                    let mut mask = 0u64;
+                    for r in 0..workers {
+                        if rng.f64() < p {
+                            mask |= 1 << r;
+                        }
+                    }
+                    masks.push(mask);
+                }
+                Some(masks)
+            }
+            ParticipationSpec::FixedSize { m } => {
+                mask_capacity("fixed-size");
+                assert!(
+                    (1..=workers).contains(&m),
+                    "fixed-size participation needs 1 <= m <= workers, got m={m}, R={workers}"
+                );
+                let mut masks = Vec::with_capacity(horizon);
+                for t in 0..horizon {
+                    let mut rng = Pcg64::new(seed ^ PARTICIPATION_RNG_SALT, t as u64 + 1);
+                    let mut mask = 0u64;
+                    for r in rng.sample_indices(workers, m) {
+                        mask |= 1 << r;
+                    }
+                    masks.push(mask);
+                }
+                Some(masks)
+            }
+        };
+        Participation { spec: *self, masks }
+    }
+}
+
+/// Materialized participant sets (see [`ParticipationSpec::materialize`]).
+///
+/// `participates(r, t)` is a pure lookup, so both execution substrates see
+/// the same S_t by construction. Steps at or beyond the materialized horizon
+/// fall back to full participation (mirroring `RandomGaps`, whose horizon
+/// also bounds the run length).
+#[derive(Clone, Debug)]
+pub struct Participation {
+    spec: ParticipationSpec,
+    /// Per-step participant bitmasks (bit r = worker r); None ⇔ full.
+    masks: Option<Vec<u64>>,
+}
+
+/// The default policy: every scheduled worker syncs every round.
+pub static FULL_PARTICIPATION: Participation =
+    Participation { spec: ParticipationSpec::Full, masks: None };
+
+impl Participation {
+    /// Full participation (no sampling) — the historical behavior.
+    pub fn full() -> Self {
+        FULL_PARTICIPATION.clone()
+    }
+
+    /// Does worker `r` participate in a sync round at step `t`?
+    pub fn participates(&self, r: usize, t: usize) -> bool {
+        match &self.masks {
+            None => true,
+            Some(masks) => t >= masks.len() || (masks[t] >> r) & 1 == 1,
+        }
+    }
+
+    /// True iff this is the full (unsampled) policy.
+    pub fn is_full(&self) -> bool {
+        self.masks.is_none()
+    }
+
+    pub fn spec(&self) -> ParticipationSpec {
+        self.spec
+    }
+
+    pub fn name(&self) -> String {
+        match self.spec {
+            ParticipationSpec::Full => "full".to_string(),
+            ParticipationSpec::Bernoulli { p } => format!("bernoulli(p={p})"),
+            ParticipationSpec::FixedSize { m } => format!("fixed(m={m})"),
+        }
+    }
+}
+
+/// Fill `out` with the round's participant set
+/// S_t = {r : r is scheduled at t and sampled into round t}, in worker
+/// order. Shared by the engine and the threaded coordinator so the two
+/// substrates agree on S_t (and hence on the `1/|S_t|` scale) by
+/// construction.
+pub fn sync_participants_into(
+    schedule: &dyn SyncSchedule,
+    participation: &Participation,
+    workers: usize,
+    t: usize,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for r in 0..workers {
+        if schedule.syncs_at(r, t) && participation.participates(r, t) {
+            out.push(r);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +389,126 @@ mod tests {
         for r in 0..4 {
             let pts: Vec<usize> = (0..50).filter(|&t| s.syncs_at(r, t)).collect();
             assert_eq!(pts, (0..50).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn participation_parse_specs() {
+        assert_eq!(ParticipationSpec::parse("full").unwrap(), ParticipationSpec::Full);
+        assert_eq!(
+            ParticipationSpec::parse("bernoulli:0.5").unwrap(),
+            ParticipationSpec::Bernoulli { p: 0.5 }
+        );
+        assert_eq!(
+            ParticipationSpec::parse("bernoulli:p=0.25").unwrap(),
+            ParticipationSpec::Bernoulli { p: 0.25 }
+        );
+        assert_eq!(
+            ParticipationSpec::parse("fixed:4").unwrap(),
+            ParticipationSpec::FixedSize { m: 4 }
+        );
+        assert_eq!(
+            ParticipationSpec::parse("choose:m=2").unwrap(),
+            ParticipationSpec::FixedSize { m: 2 }
+        );
+        assert!(ParticipationSpec::parse("bernoulli:0.0").is_err());
+        assert!(ParticipationSpec::parse("bernoulli:1.5").is_err());
+        assert!(ParticipationSpec::parse("fixed:0").is_err());
+        assert!(ParticipationSpec::parse("bogus").is_err());
+        assert!(ParticipationSpec::parse("full:x").is_err());
+    }
+
+    #[test]
+    fn fixed_size_rounds_have_exactly_m() {
+        let part = ParticipationSpec::FixedSize { m: 3 }.materialize(8, 200, 5);
+        for t in 0..200 {
+            let count = (0..8).filter(|&r| part.participates(r, t)).count();
+            assert_eq!(count, 3, "step {t}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_fraction_tracks_p() {
+        let part = ParticipationSpec::Bernoulli { p: 0.5 }.materialize(16, 400, 9);
+        let hits: usize = (0..400)
+            .map(|t| (0..16).filter(|&r| part.participates(r, t)).count())
+            .sum();
+        let frac = hits as f64 / (16.0 * 400.0);
+        assert!((frac - 0.5).abs() < 0.05, "fraction {frac}");
+    }
+
+    #[test]
+    fn participation_deterministic_in_seed() {
+        let mk = |seed| ParticipationSpec::FixedSize { m: 3 }.materialize(8, 150, seed);
+        let (a, b, c) = (mk(7), mk(7), mk(8));
+        let sets = |p: &Participation| -> Vec<Vec<usize>> {
+            (0..150)
+                .map(|t| (0..8).filter(|&r| p.participates(r, t)).collect())
+                .collect()
+        };
+        assert_eq!(sets(&a), sets(&b));
+        assert_ne!(sets(&a), sets(&c));
+    }
+
+    #[test]
+    fn participation_invariant_to_query_order() {
+        // `participates` is a pure lookup: querying workers in any order
+        // (the threaded master serves them in arrival order) yields the same
+        // sets as the engine's 0..R sweep.
+        let part = ParticipationSpec::Bernoulli { p: 0.4 }.materialize(10, 100, 3);
+        for t in 0..100 {
+            let fwd: Vec<usize> = (0..10).filter(|&r| part.participates(r, t)).collect();
+            let mut rev: Vec<usize> =
+                (0..10).rev().filter(|&r| part.participates(r, t)).collect();
+            rev.reverse();
+            assert_eq!(fwd, rev);
+        }
+    }
+
+    #[test]
+    fn bernoulli_p1_and_fixed_r_equal_full() {
+        let full = Participation::full();
+        let p1 = ParticipationSpec::Bernoulli { p: 1.0 }.materialize(6, 80, 11);
+        let all = ParticipationSpec::FixedSize { m: 6 }.materialize(6, 80, 11);
+        assert!(full.is_full());
+        for t in 0..80 {
+            for r in 0..6 {
+                assert!(full.participates(r, t));
+                assert!(p1.participates(r, t));
+                assert!(all.participates(r, t));
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cli_misconfigurations() {
+        assert!(ParticipationSpec::FixedSize { m: 20 }.validate(8).is_err());
+        assert!(ParticipationSpec::Bernoulli { p: 0.5 }.validate(65).is_err());
+        assert!(ParticipationSpec::Full.validate(1000).is_ok());
+        assert!(ParticipationSpec::FixedSize { m: 8 }.validate(8).is_ok());
+    }
+
+    #[test]
+    fn full_materializes_for_any_worker_count() {
+        // Only the sampling variants need the 64-worker bitmask bound.
+        let p = ParticipationSpec::Full.materialize(200, 50, 1);
+        assert!(p.is_full());
+        assert!(p.participates(199, 49));
+    }
+
+    #[test]
+    fn sync_participants_filters_schedule_and_sampling() {
+        let sched = FixedPeriod::new(4);
+        let part = ParticipationSpec::FixedSize { m: 2 }.materialize(5, 40, 21);
+        let mut buf = Vec::new();
+        for t in 0..40 {
+            sync_participants_into(&sched, &part, 5, t, &mut buf);
+            if (t + 1) % 4 != 0 {
+                assert!(buf.is_empty(), "no one syncs off-schedule (t={t})");
+            } else {
+                assert_eq!(buf.len(), 2, "t={t}");
+                assert!(buf.windows(2).all(|w| w[0] < w[1]), "worker order");
+            }
         }
     }
 }

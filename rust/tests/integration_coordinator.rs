@@ -63,6 +63,11 @@ fn threaded_sync_bitexact_vs_engine() {
             threaded_hist.total_bits_up(),
             "{comp_spec}: wire bit accounting differs"
         );
+        // The two substrates must sample metrics on the same step grid
+        // (H > 1 used to shift the threaded recorder onto sync boundaries).
+        let egrid: Vec<usize> = engine_hist.points.iter().map(|p| p.step).collect();
+        let tgrid: Vec<usize> = threaded_hist.points.iter().map(|p| p.step).collect();
+        assert_eq!(egrid, tgrid, "{comp_spec}: metric step grids differ");
     }
 }
 
@@ -114,6 +119,12 @@ fn threaded_async_converges_and_bits_match() {
     let lt = threaded_hist.final_loss();
     assert!(lt < (4.0f64).ln() * 0.6, "threaded async did not converge: {lt}");
     assert!((le - lt).abs() < 0.25, "engine {le} vs threaded {lt}");
+    // Even the aggregate-on-arrival path records on the engine's step grid,
+    // so async histories are comparable point-by-point (values approximate,
+    // steps exact).
+    let egrid: Vec<usize> = engine_hist.points.iter().map(|p| p.step).collect();
+    let tgrid: Vec<usize> = threaded_hist.points.iter().map(|p| p.step).collect();
+    assert_eq!(egrid, tgrid, "async metric step grids differ");
 }
 
 /// One worker (R = 1) degenerates to sequential SGD with compression.

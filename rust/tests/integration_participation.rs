@@ -1,0 +1,303 @@
+//! Sampled partial participation: engine ≡ threaded bit-identity under
+//! sampled worker subsets, unbiasedness of the `1/|S_t|` fold, determinism
+//! of the materialized participant sets, and exact backward compatibility
+//! of `p = 1.0` + `1/R` with the full-participation code path.
+
+use qsparse::compress::parse_spec;
+use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+use qsparse::engine::{run, History, TrainSpec};
+use qsparse::grad::{GradModel, SoftmaxRegression};
+use qsparse::optim::LrSchedule;
+use qsparse::protocol::{AggScale, MasterCore};
+use qsparse::topology::{FixedPeriod, ParticipationSpec, RandomGaps};
+use qsparse::Message;
+use std::sync::Arc;
+
+const N: usize = 300;
+
+fn data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
+    qsparse::data::gaussian_clusters_split(N, N / 4, 16, 4, 0.5, 1.0, 55)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(16, 4, 1.0 / N as f64)
+}
+
+fn feq(a: f64, b: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || a == b
+}
+
+/// Both histories must sample the same steps and carry identical values —
+/// the engine/threaded comparability guarantee the figures rely on.
+fn assert_histories_identical(e: &History, t: &History, ctx: &str) {
+    let es: Vec<usize> = e.points.iter().map(|p| p.step).collect();
+    let ts: Vec<usize> = t.points.iter().map(|p| p.step).collect();
+    assert_eq!(es, ts, "{ctx}: metric step grids differ");
+    for (ep, tp) in e.points.iter().zip(&t.points) {
+        assert_eq!(ep.bits_up, tp.bits_up, "{ctx}: bits_up at step {}", ep.step);
+        assert_eq!(ep.bits_down, tp.bits_down, "{ctx}: bits_down at step {}", ep.step);
+        assert!(
+            feq(ep.train_loss, tp.train_loss),
+            "{ctx}: train_loss at step {}: {} vs {}",
+            ep.step,
+            ep.train_loss,
+            tp.train_loss
+        );
+        assert!(
+            feq(ep.test_err, tp.test_err),
+            "{ctx}: test_err at step {}: {} vs {}",
+            ep.step,
+            ep.test_err,
+            tp.test_err
+        );
+        assert!(
+            feq(ep.mem_norm_sq, tp.mem_norm_sq),
+            "{ctx}: mem_norm_sq at step {}: {} vs {}",
+            ep.step,
+            ep.mem_norm_sq,
+            tp.mem_norm_sq
+        );
+    }
+    assert_eq!(e.final_params, t.final_params, "{ctx}: final params diverged");
+}
+
+/// The acceptance test: H > 1, a stochastic non-Identity downlink, sampled
+/// participation, unbiased scaling — the threaded run must still reproduce
+/// the engine's `History` exactly (same steps, same values), because rounds
+/// are applied in step order with per-round |S_t| barriers.
+#[test]
+fn engine_threaded_bitexact_under_sampled_participation() {
+    let (train, test) = data();
+    let m = model();
+    let steps = 80;
+    let workers = 6;
+    // Full-participation reference for the bits-thinning check below.
+    let full_bits = {
+        let up = parse_spec("topk:k=10").unwrap();
+        let down = parse_spec("qtopk:k=16,bits=4").unwrap();
+        let sched = FixedPeriod::new(4);
+        let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+        spec.down_compressor = down.as_ref();
+        spec.workers = workers;
+        spec.batch = 4;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.test = Some(&test);
+        run(&spec).total_bits_up()
+    };
+    for (part_spec, scale) in [
+        ("fixed:3", AggScale::Participants),
+        ("bernoulli:0.5", AggScale::Participants),
+        ("bernoulli:0.5", AggScale::Workers),
+    ] {
+        let participation =
+            ParticipationSpec::parse(part_spec).unwrap().materialize(workers, steps, 0);
+        let up = parse_spec("topk:k=10").unwrap();
+        let down = parse_spec("qtopk:k=16,bits=4").unwrap();
+        let sched = FixedPeriod::new(4);
+        let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+        spec.down_compressor = down.as_ref();
+        spec.participation = &participation;
+        spec.agg_scale = scale;
+        spec.workers = workers;
+        spec.batch = 4;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.test = Some(&test);
+        let engine_hist = run(&spec);
+
+        let mut cfg = CoordinatorConfig::new(
+            Arc::from(parse_spec("topk:k=10").unwrap()),
+            Arc::new(FixedPeriod::new(4)),
+        );
+        cfg.down_compressor = Arc::from(parse_spec("qtopk:k=16,bits=4").unwrap());
+        cfg.participation = participation.clone();
+        cfg.agg_scale = scale;
+        cfg.workers = workers;
+        cfg.batch = 4;
+        cfg.steps = steps;
+        cfg.lr = LrSchedule::Const { eta: 0.3 };
+        cfg.seed = spec.seed;
+        // Same eval subsets as the engine run, so metric *values* (not just
+        // the step grid) must agree bit-for-bit.
+        cfg.eval_rows = spec.eval_rows;
+        let threaded_hist = run_threaded(
+            &cfg,
+            || Box::new(model()) as Box<dyn GradModel>,
+            Arc::new(train.clone()),
+            Some(Arc::new(test.clone())),
+        )
+        .unwrap();
+
+        assert_histories_identical(
+            &engine_hist,
+            &threaded_hist,
+            &format!("{part_spec}/{scale:?}"),
+        );
+        // Sampling must actually have thinned the rounds: strictly fewer
+        // uplink bits than the full-participation run (a regression that
+        // ignored `Participation` would keep the substrates in agreement
+        // with each other but fail this).
+        let bits = engine_hist.total_bits_up();
+        assert!(
+            bits > 0 && bits < full_bits,
+            "{part_spec}: sampled bits {bits} not below full-participation {full_bits}"
+        );
+    }
+}
+
+/// `p = 1.0` participation with the paper's `1/R` fold is the identity
+/// configuration: it must reproduce the default (full-participation) seeded
+/// trajectory bit-for-bit, on both substrates.
+#[test]
+fn full_participation_one_over_r_is_bitexact_backcompat() {
+    let (train, test) = data();
+    let m = model();
+    let steps = 80;
+    let mk_engine = |explicit: bool| {
+        let up = parse_spec("signtopk:k=10,m=1").unwrap();
+        let sched = FixedPeriod::new(4);
+        let participation =
+            ParticipationSpec::parse("bernoulli:1.0").unwrap().materialize(4, steps, 0);
+        let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+        if explicit {
+            spec.participation = &participation;
+            spec.agg_scale = AggScale::Workers;
+        }
+        spec.workers = 4;
+        spec.batch = 4;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.test = Some(&test);
+        run(&spec)
+    };
+    let default_hist = mk_engine(false);
+    let explicit_hist = mk_engine(true);
+    assert_histories_identical(&default_hist, &explicit_hist, "engine p=1.0 vs default");
+
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("signtopk:k=10,m=1").unwrap()),
+        Arc::new(FixedPeriod::new(4)),
+    );
+    cfg.participation =
+        ParticipationSpec::parse("bernoulli:1.0").unwrap().materialize(4, steps, 0);
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = steps;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    cfg.eval_rows = 512; // match TrainSpec::new's eval subset exactly
+    let threaded_hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train.clone()),
+        Some(Arc::new(test.clone())),
+    )
+    .unwrap();
+    assert_histories_identical(&default_hist, &threaded_hist, "threaded p=1.0 vs default");
+}
+
+/// The `1/|S_t|` fold is unbiased: over many sampled rounds with fixed
+/// per-worker updates, the mean round step matches the full-participation
+/// step, while the paper's `1/R` fold under sampling is biased low by
+/// exactly E|S_t|/R.
+#[test]
+fn participant_scaling_unbiased_in_expectation() {
+    let d = 32;
+    let r_count = 10;
+    let m = 4;
+    let rounds = 6000;
+    let mut rng = qsparse::util::rng::Pcg64::seeded(77);
+    let updates: Vec<Vec<f32>> = (0..r_count)
+        .map(|_| (0..d).map(|_| rng.normal_f32() * 0.01).collect())
+        .collect();
+    let part = ParticipationSpec::FixedSize { m }.materialize(r_count, rounds, 123);
+
+    let run_sampled = |scale: AggScale| -> Vec<f32> {
+        let mut master = MasterCore::new(vec![0.0; d], r_count, 0, false);
+        master.set_agg_scale(scale);
+        for t in 0..rounds {
+            let s_t: Vec<usize> = (0..r_count).filter(|&r| part.participates(r, t)).collect();
+            master.begin_round(s_t.len());
+            for r in s_t {
+                master
+                    .apply_update(&Message::Dense { values: updates[r].clone() })
+                    .unwrap();
+            }
+        }
+        master.into_params()
+    };
+
+    // Full participation, 1/R — the reference drift.
+    let mut full = MasterCore::new(vec![0.0; d], r_count, 0, false);
+    for _t in 0..rounds {
+        full.begin_round(r_count);
+        for g in &updates {
+            full.apply_update(&Message::Dense { values: g.clone() }).unwrap();
+        }
+    }
+    let x_full = full.into_params();
+
+    let norm = |x: &[f32]| x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    let dist = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+
+    let x_unbiased = run_sampled(AggScale::Participants);
+    assert!(
+        dist(&x_unbiased, &x_full) < 0.1 * norm(&x_full),
+        "1/|S_t| drift {} deviates from full-participation drift {} by {}",
+        norm(&x_unbiased),
+        norm(&x_full),
+        dist(&x_unbiased, &x_full)
+    );
+
+    // 1/R under m-of-R sampling under-steps by ≈ m/R = 0.4.
+    let x_biased = run_sampled(AggScale::Workers);
+    let ratio = norm(&x_biased) / norm(&x_full);
+    assert!(
+        (0.3..0.5).contains(&ratio),
+        "1/R under sampling should shrink the step by ≈ m/R = 0.4, got {ratio}"
+    );
+}
+
+/// The aggregate-on-arrival (asynchronous) threaded path also honors
+/// sampled participation and the unbiased scale: the run converges, bits
+/// flow, and metrics sit on the engine's step grid.
+#[test]
+fn threaded_async_with_sampled_participation_converges() {
+    let (train, test) = data();
+    let steps = 150;
+    let sched = RandomGaps::generate(4, 6, steps, 999);
+    let participation =
+        ParticipationSpec::parse("bernoulli:0.5").unwrap().materialize(4, steps, 7);
+    let mut cfg =
+        CoordinatorConfig::new(Arc::from(parse_spec("topk:k=10").unwrap()), Arc::new(sched));
+    cfg.down_compressor = Arc::from(parse_spec("topk:k=8").unwrap());
+    cfg.participation = participation;
+    cfg.agg_scale = AggScale::Participants;
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = steps;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    let hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train),
+        Some(Arc::new(test)),
+    )
+    .unwrap();
+    assert!(
+        hist.final_loss() < 1.0,
+        "async sampled-participation run did not converge: {}",
+        hist.final_loss()
+    );
+    assert!(hist.total_bits_up() > 0 && hist.total_bits_down() > 0);
+    // Engine metric grid: 0, 10, …, 150.
+    let grid: Vec<usize> = hist.points.iter().map(|p| p.step).collect();
+    let expect: Vec<usize> = (0..=15).map(|k| k * 10).collect();
+    assert_eq!(grid, expect, "async path off the engine step grid");
+}

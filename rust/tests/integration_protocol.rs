@@ -86,6 +86,9 @@ fn threaded_sync_bitexact_vs_engine_with_compressed_downlink() {
             threaded_hist.total_bits_down(),
             "{up_spec}⇑ {down_spec}⇓: downlink bit accounting differs"
         );
+        let egrid: Vec<usize> = engine_hist.points.iter().map(|p| p.step).collect();
+        let tgrid: Vec<usize> = threaded_hist.points.iter().map(|p| p.step).collect();
+        assert_eq!(egrid, tgrid, "{up_spec}⇑ {down_spec}⇓: metric step grids differ");
     }
 }
 
