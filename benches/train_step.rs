@@ -1,19 +1,122 @@
-//! End-to-end step latency: native vs PJRT backends, and the coordinator
+//! End-to-end step latency: native vs PJRT backends, the coordinator
 //! overhead on top of raw gradient compute (DESIGN.md §Perf L3 target:
-//! coordination ≤ 10% of step time).
+//! coordination ≤ 10% of step time), the parallel engine's scaling, and the
+//! hot path's steady-state allocation count.
+//!
+//! Flags:
+//!   --quick   fewer iterations (CI)
+//!   --json    additionally write `BENCH_train_step.json`
+//!             (name → {mean, p50, iters}) so the perf trajectory is
+//!             machine-readable and accumulates per PR.
+//!
+//! The binary installs a counting global allocator; `alloc/...` entries
+//! report steady-state heap allocations per engine step (measured as the
+//! difference between a 2N-step and an N-step run, so setup and final-eval
+//! allocations cancel exactly). The sequential engine's compress → encode →
+//! fold path is allocation-free: expect 0 for `threads=1`.
 
-use qsparse::compress::parse_spec;
-use qsparse::data::{gaussian_clusters, Sharding};
+use qsparse::compress::{encode, parse_spec, Compressor, MessageBuf};
+use qsparse::data::{gaussian_clusters, Dataset, Sharding};
 use qsparse::engine::{run, TrainSpec};
 use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
 use qsparse::optim::LrSchedule;
 use qsparse::runtime::PjrtRuntime;
 use qsparse::topology::FixedPeriod;
-use qsparse::util::stats::{report, time_iters};
+use qsparse::util::json::Json;
+use qsparse::util::rng::Pcg64;
+use qsparse::util::stats::{fmt_duration, report, time_iters, Summary};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator: every alloc/realloc bumps a global counter (frees are
+/// not counted — the probe is "how often does the hot loop hit the heap").
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+/// Collects every reported number so `--json` can dump the machine-readable
+/// trajectory next to the human-readable lines.
+struct Recorder {
+    entries: Vec<(String, f64, f64, usize)>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Recorder { entries: Vec::new() }
+    }
+
+    /// Print the standard bench line and record (mean, p50, n).
+    fn report(&mut self, name: &str, samples: &[f64], bytes_per_iter: Option<usize>) -> f64 {
+        report(name, samples, bytes_per_iter);
+        let s = Summary::of(samples);
+        self.entries.push((name.to_string(), s.mean, s.p50, s.n));
+        s.mean
+    }
+
+    /// Record a scalar (counters, ratios) as a degenerate entry.
+    fn value(&mut self, name: &str, v: f64) {
+        println!("bench {name:<44} value={v}");
+        self.entries.push((name.to_string(), v, v, 1));
+    }
+
+    fn write_json(&self, path: &str) {
+        let obj = Json::obj(
+            self.entries
+                .iter()
+                .map(|(name, mean, p50, iters)| {
+                    (
+                        name.as_str(),
+                        Json::obj(vec![
+                            ("mean", Json::num(*mean)),
+                            ("p50", Json::num(*p50)),
+                            ("iters", Json::from(*iters)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        match std::fs::write(path, format!("{obj}\n")) {
+            Ok(()) => println!("\nwrote {path} ({} entries)", self.entries.len()),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
     let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let mut rec = Recorder::new();
 
     // Raw gradient latency — the floor the coordinator adds to.
     let ds = gaussian_clusters(2000, 784, 10, 0.2, 1.0, 1);
@@ -24,8 +127,7 @@ fn main() {
     let samples = time_iters(warm * 20, iters * 50, || {
         std::hint::black_box(softmax.loss_grad(&params, &batch, &mut grad));
     });
-    report("grad/native-softmax(b=8,d=7850)", &samples, None);
-    let native_softmax_grad = qsparse::util::stats::Summary::of(&samples).mean;
+    let native_softmax_grad = rec.report("grad/native-softmax(b=8,d=7850)", &samples, None);
 
     let mlp = Mlp::new(vec![256, 64, 10]);
     let ds2 = gaussian_clusters(2000, 256, 10, 0.2, 1.0, 2);
@@ -35,7 +137,7 @@ fn main() {
     let samples = time_iters(warm * 10, iters * 30, || {
         std::hint::black_box(mlp.loss_grad(&params, &batch2, &mut grad));
     });
-    report("grad/native-mlp(b=16,d=17k)", &samples, None);
+    rec.report("grad/native-mlp(b=16,d=17k)", &samples, None);
 
     // PJRT grad latency (if artifacts exist and this build can run them).
     if std::path::Path::new("artifacts/manifest.json").exists() && PjrtRuntime::backend_available()
@@ -47,7 +149,7 @@ fn main() {
         let samples = time_iters(warm * 5, iters * 10, || {
             std::hint::black_box(pj.loss_grad(&p, &batch, &mut g));
         });
-        report("grad/pjrt-softmax(b=8,d=7850)", &samples, None);
+        rec.report("grad/pjrt-softmax(b=8,d=7850)", &samples, None);
 
         let lm = rt.load_model("lm").unwrap();
         let e = lm.entry.clone();
@@ -59,7 +161,7 @@ fn main() {
         let samples = time_iters(1, if quick { 2 } else { 5 }, || {
             std::hint::black_box(lm.loss_grad(&lp, &lb, &mut lg));
         });
-        report("grad/pjrt-lm(b=8,d=471k)", &samples, None);
+        rec.report("grad/pjrt-lm(b=8,d=471k)", &samples, None);
     } else {
         println!(
             "(artifacts/ or the `pjrt` feature missing — skipping PJRT benches; \
@@ -68,10 +170,15 @@ fn main() {
     }
 
     // Full engine step (R=8) vs 8× raw grad: the difference is coordination.
+    // Sequential baseline first, then the parallel engine at the machine's
+    // core count — bit-identical histories, so this is a pure speed knob.
+    let steps = if quick { 20 } else { 100 };
+    let engine_iters = if quick { 2 } else { 4 };
+    // Operator/schedule construction hoisted out of the timed closure so the
+    // reported per-step cost is the engine's alone.
     let comp = parse_spec("signtopk:k=170,m=1").unwrap();
     let sched = FixedPeriod::new(1);
-    let steps = if quick { 20 } else { 100 };
-    let samples = time_iters(0, if quick { 2 } else { 4 }, || {
+    let run_engine = |threads: usize, steps: usize| {
         let mut spec = TrainSpec::new(&softmax, &ds, comp.as_ref(), &sched);
         spec.workers = 8;
         spec.batch = 8;
@@ -79,32 +186,142 @@ fn main() {
         spec.lr = LrSchedule::Const { eta: 0.1 };
         spec.sharding = Sharding::Iid;
         spec.eval_every = steps + 1; // exclude eval cost
+        spec.threads = threads;
         std::hint::black_box(run(&spec));
-    });
+    };
+    let samples = time_iters(0, engine_iters, || run_engine(1, steps));
     let per_step: Vec<f64> = samples.iter().map(|s| s / steps as f64).collect();
-    report("engine/step(R=8,signtopk,H=1)", &per_step, None);
-    let engine_step = qsparse::util::stats::Summary::of(&per_step).mean;
+    let engine_step = rec.report("engine/step(R=8,signtopk,H=1)", &per_step, None);
     let overhead = (engine_step - 8.0 * native_softmax_grad) / engine_step * 100.0;
     println!(
         "\ncoordination overhead: engine step {} vs 8x raw grad {} -> {overhead:.1}% of step",
-        qsparse::util::stats::fmt_duration(engine_step),
-        qsparse::util::stats::fmt_duration(8.0 * native_softmax_grad),
+        fmt_duration(engine_step),
+        fmt_duration(8.0 * native_softmax_grad),
     );
+
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let pool = cores.min(8);
+    if pool > 1 {
+        let samples = time_iters(0, engine_iters, || run_engine(pool, steps));
+        let per_step: Vec<f64> = samples.iter().map(|s| s / steps as f64).collect();
+        let name = format!("engine/step-par(R=8,signtopk,H=1,threads={pool})");
+        let par_step = rec.report(&name, &per_step, None);
+        let speedup = engine_step / par_step;
+        println!("parallel engine speedup at {pool} threads ({cores} cores): {speedup:.2}x");
+        rec.value(&format!("engine/speedup(R=8,threads={pool})"), speedup);
+    }
+
+    // Steady-state allocations per engine step: diff a 2N-step run against
+    // an N-step run so setup/teardown and the final eval cancel exactly.
+    let alloc_steps = if quick { 20 } else { 40 };
+    for threads in [1usize, pool] {
+        let a1 = count_allocs(|| run_engine(threads, alloc_steps));
+        let a2 = count_allocs(|| run_engine(threads, 2 * alloc_steps));
+        let per_step = a2.saturating_sub(a1) as f64 / alloc_steps as f64;
+        rec.value(
+            &format!("alloc/engine-steady-per-step(R=8,signtopk,H=1,threads={threads})"),
+            per_step,
+        );
+        if threads == 1 {
+            note_steady_alloc(per_step);
+        }
+        if threads == pool {
+            break;
+        }
+    }
+
+    // Compress / encode micro path: the allocating API vs the `_into`
+    // reusable-buffer API (before/after of §Perf iteration 5), plus the
+    // pure wire_bits cost walk.
+    bench_compress_paths(&mut rec, warm, iters, &ds, &softmax);
 
     // Broadcast path (master side, R=8, d=7850): dense model snapshot vs
     // error-compensated compressed delta per worker. Shows both the wall
     // cost of the downlink aggregation work and the wire-bit savings.
-    bench_broadcast(quick, warm, iters);
+    bench_broadcast(&mut rec, quick, warm, iters);
 
     // Aggregation under sampled participation: full R-worker rounds vs
     // |S_t| = m sampled rounds with the unbiased 1/|S_t| fold.
-    bench_participation_aggregation(warm, iters);
+    bench_participation_aggregation(&mut rec, warm, iters);
+
+    if json {
+        rec.write_json("BENCH_train_step.json");
+    }
 }
 
-fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
-    use qsparse::compress::encode;
+/// Loud marker (non-fatal: bench boxes are noisy) if the zero-allocation
+/// guarantee of the sequential engine regresses.
+fn note_steady_alloc(per_step: f64) {
+    if per_step > 0.5 {
+        eprintln!(
+            "WARNING: sequential engine steady state allocates {per_step:.1} times per step \
+             (expected 0) — the zero-allocation hot path has regressed"
+        );
+    } else {
+        println!("sequential engine steady state: {per_step:.1} allocations/step (target 0)");
+    }
+}
+
+fn bench_compress_paths(
+    rec: &mut Recorder,
+    warm: usize,
+    iters: usize,
+    ds: &Dataset,
+    softmax: &SoftmaxRegression,
+) {
+    // A realistic input: an actual anchored gradient-scale vector.
+    let d = softmax.dim();
+    let batch = ds.gather(&(0..32).collect::<Vec<_>>());
+    let params = vec![0.01f32; d];
+    let mut x = vec![0.0f32; d];
+    softmax.loss_grad(&params, &batch, &mut x);
+
+    for spec in ["signtopk:k=170,m=1", "qtopk:k=400,bits=4"] {
+        let op = parse_spec(spec).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(op.compress(&x, &mut rng));
+        });
+        rec.report(&format!("compress/{spec}(d=7850)"), &samples, None);
+
+        let mut rng = Pcg64::seeded(3);
+        let mut buf = MessageBuf::new();
+        let samples = time_iters(warm * 5, iters * 20, || {
+            op.compress_into(&x, &mut rng, &mut buf);
+            std::hint::black_box(buf.message().nnz());
+        });
+        rec.report(&format!("compress_into/{spec}(d=7850)"), &samples, None);
+        let calls = 50u64;
+        let mut rng = Pcg64::seeded(4);
+        let allocs = count_allocs(|| {
+            for _ in 0..calls {
+                op.compress_into(&x, &mut rng, &mut buf);
+            }
+        });
+        rec.value(&format!("alloc/compress_into-per-call/{spec}"), allocs as f64 / calls as f64);
+
+        // Encode the message: allocating vs reusable writer vs pure cost walk.
+        let mut rng = Pcg64::seeded(5);
+        let msg = op.compress(&x, &mut rng);
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(encode::encode(&msg));
+        });
+        rec.report(&format!("encode/{spec}(d=7850)"), &samples, None);
+        let mut w = encode::BitWriter::new();
+        let samples = time_iters(warm * 5, iters * 20, || {
+            encode::encode_into(&msg, &mut w);
+            std::hint::black_box(w.finish().1);
+        });
+        rec.report(&format!("encode_into/{spec}(d=7850)"), &samples, None);
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(encode::wire_bits(&msg));
+        });
+        rec.report(&format!("wire_bits/{spec}(d=7850)"), &samples, None);
+    }
+}
+
+fn bench_broadcast(rec: &mut Recorder, quick: bool, warm: usize, iters: usize) {
     use qsparse::protocol::MasterCore;
-    use qsparse::util::rng::Pcg64;
     use std::sync::Arc;
 
     let d = 7850usize;
@@ -118,37 +335,40 @@ fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
 
     // Dense downlink: one cached Arc snapshot per round (what the threaded
     // master sends — rebuilt only after the model changes), bits = encoded
-    // dense model per worker.
+    // dense model per worker. The drift update is prebuilt outside the
+    // timed closure so the clone does not pollute the measurement.
     let mut core = MasterCore::new(init.clone(), workers, 7, false);
-    let noise = drift();
+    let noise_upd = qsparse::Message::Dense { values: drift() };
     let samples = time_iters(warm * 5, iters * 20, || {
-        core.apply_update(&qsparse::Message::Dense { values: noise.clone() }).unwrap();
+        core.apply_update(&noise_upd).unwrap();
         let payload: Arc<[f32]> = core.params_snapshot();
         for _r in 0..workers {
             std::hint::black_box(Arc::clone(&payload));
         }
     });
-    report("broadcast/dense(R=8,d=7850)", &samples, Some(4 * d));
+    rec.report("broadcast/dense(R=8,d=7850)", &samples, Some(4 * d));
     let dense_bits = workers as u64 * encode::dense_model_bits(d);
 
-    // Compressed downlink: per-worker EF delta + wire encoding.
+    // Compressed downlink: per-worker EF delta + wire encoding, through the
+    // reusable buffer + writer (the engine/coordinator hot path).
     for spec in ["topk:k=400", "qtopk:k=400,bits=4"] {
         let down = parse_spec(spec).unwrap();
         let mut core = MasterCore::new(init.clone(), workers, 7, true);
-        let noise = drift();
+        let noise_upd = qsparse::Message::Dense { values: drift() };
+        let mut buf = MessageBuf::new();
+        let mut wire = encode::BitWriter::new();
         let mut round_bits = 0u64;
         let mut rounds = 0u64;
         let samples = time_iters(warm * 5, if quick { iters * 5 } else { iters * 20 }, || {
-            core.apply_update(&qsparse::Message::Dense { values: noise.clone() }).unwrap();
+            core.apply_update(&noise_upd).unwrap();
             for r in 0..workers {
-                let msg = core.delta_broadcast(r, down.as_ref());
-                let (bytes, bit_len) = encode::encode(&msg);
-                round_bits += bit_len;
-                std::hint::black_box(bytes);
+                core.delta_broadcast_into(r, down.as_ref(), &mut buf);
+                encode::encode_into(buf.message(), &mut wire);
+                round_bits += wire.finish().1;
             }
             rounds += 1;
         });
-        report(&format!("broadcast/{spec}(R=8,d=7850)"), &samples, None);
+        rec.report(&format!("broadcast/{spec}(R=8,d=7850)"), &samples, None);
         let avg_bits = round_bits / rounds.max(1);
         println!(
             "  downlink bits/round: {avg_bits} vs dense {dense_bits} ({:.1}x saving)",
@@ -159,17 +379,19 @@ fn bench_broadcast(quick: bool, warm: usize, iters: usize) {
 
 /// Master-side aggregation with sampled participation (the `begin_round` +
 /// per-round scale path): full R-worker rounds vs |S_t| = m sampled rounds.
-fn bench_participation_aggregation(warm: usize, iters: usize) {
+fn bench_participation_aggregation(rec: &mut Recorder, warm: usize, iters: usize) {
     use qsparse::protocol::{AggScale, MasterCore};
     use qsparse::topology::ParticipationSpec;
-    use qsparse::util::rng::Pcg64;
 
     let d = 7850usize;
     let workers = 8usize;
     let rounds_per_iter = 50usize;
     let mut rng = Pcg64::seeded(13);
-    let updates: Vec<Vec<f32>> = (0..workers)
-        .map(|_| (0..d).map(|_| rng.normal_f32() * 0.01).collect())
+    // Prebuilt dense update messages — no clone inside the timed closure.
+    let updates: Vec<qsparse::Message> = (0..workers)
+        .map(|_| qsparse::Message::Dense {
+            values: (0..d).map(|_| rng.normal_f32() * 0.01).collect(),
+        })
         .collect();
 
     for (label, spec, scale) in [
@@ -179,22 +401,20 @@ fn bench_participation_aggregation(warm: usize, iters: usize) {
         let part = spec.materialize(workers, rounds_per_iter, 29);
         let mut core = MasterCore::new(vec![0.0f32; d], workers, 29, false);
         core.set_agg_scale(scale);
+        let mut s_t: Vec<usize> = Vec::with_capacity(workers);
         let samples = time_iters(warm, iters * 4, || {
             for t in 0..rounds_per_iter {
-                let s_t: Vec<usize> =
-                    (0..workers).filter(|&r| part.participates(r, t)).collect();
+                s_t.clear();
+                s_t.extend((0..workers).filter(|&r| part.participates(r, t)));
                 core.begin_round(s_t.len());
-                for r in s_t {
-                    core.apply_update(&qsparse::Message::Dense {
-                        values: updates[r].clone(),
-                    })
-                    .unwrap();
+                for &r in &s_t {
+                    core.apply_update(&updates[r]).unwrap();
                 }
             }
             std::hint::black_box(core.params().len());
         });
         let per_round: Vec<f64> =
             samples.iter().map(|s| s / rounds_per_iter as f64).collect();
-        report(&format!("aggregate/{label}(d=7850)"), &per_round, None);
+        rec.report(&format!("aggregate/{label}(d=7850)"), &per_round, None);
     }
 }

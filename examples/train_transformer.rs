@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
         seed: 20190527,
         eval_every: 20,
         eval_rows: entry.batch * 2,
+        threads: 1,
     };
     println!(
         "Qsparse-local-SGD: R=4 workers, H=4 local steps, compressor={}, T={steps}",

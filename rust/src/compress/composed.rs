@@ -7,8 +7,8 @@
 //!   ‖Top_k(x)‖_m / k (Lemma 3).
 
 use super::quantize::Qsgd;
-use super::sparsify::top_k_indices;
-use super::{Compressor, Message};
+use super::sparsify::top_k_indices_into;
+use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
 use crate::util::stats::{norm1, norm2};
 
@@ -43,23 +43,28 @@ impl QTopK {
 
 impl Compressor for QTopK {
     fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        super::compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let (mut norms, mut idx, mut levels, mut neg) = buf.take_qsgd();
         let d = x.len();
         let k = self.k.min(d);
-        let idx: Vec<u32> = if self.rand {
-            let mut v: Vec<u32> = rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
-            v.sort_unstable();
-            v
+        if self.rand {
+            idx.extend(rng.sample_indices(d, k).into_iter().map(|i| i as u32));
+            idx.sort_unstable();
         } else {
-            top_k_indices(x, k)
-        };
-        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
-        let (norms, levels, neg) = self.q.quantize_values(&vals, rng);
+            top_k_indices_into(x, k, &mut idx, &mut buf.topk);
+        }
+        buf.vals.clear();
+        buf.vals.extend(idx.iter().map(|&i| x[i as usize]));
+        self.q.quantize_values_into(&buf.vals, rng, &mut norms, &mut levels, &mut neg);
         let post_scale = if self.scaled {
             (1.0 / (1.0 + self.beta_k())) as f32
         } else {
             1.0
         };
-        Message::Qsgd {
+        buf.msg = Message::Qsgd {
             d,
             s: self.q.s,
             bucket: self.q.bucket as u32,
@@ -68,7 +73,7 @@ impl Compressor for QTopK {
             idx: Some(idx),
             levels,
             neg,
-        }
+        };
     }
 
     fn gamma(&self, d: usize) -> f64 {
@@ -113,19 +118,32 @@ impl SignTopK {
 }
 
 impl Compressor for SignTopK {
-    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        super::compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], _rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let (mut idx, mut neg) = buf.take_sparse_sign();
         let d = x.len();
         let k = self.k.min(d);
-        let idx = top_k_indices(x, k);
-        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        top_k_indices_into(x, k, &mut idx, &mut buf.topk);
+        // Gather the selected values into scratch so the m-norm goes through
+        // the same helpers (same accumulation order) as the allocating path.
+        buf.vals.clear();
+        buf.vals.extend(idx.iter().map(|&i| x[i as usize]));
         let nm = match self.m {
-            1 => norm1(&vals),
-            2 => norm2(&vals),
-            m => vals.iter().map(|v| (v.abs() as f64).powi(m as i32)).sum::<f64>().powf(1.0 / m as f64),
+            1 => norm1(&buf.vals),
+            2 => norm2(&buf.vals),
+            m => buf
+                .vals
+                .iter()
+                .map(|v| (v.abs() as f64).powi(m as i32))
+                .sum::<f64>()
+                .powf(1.0 / m as f64),
         };
         let scale = (nm / k as f64) as f32;
-        let neg = vals.iter().map(|&v| v < 0.0).collect();
-        Message::SparseSign { d, scale, idx, neg }
+        neg.extend(buf.vals.iter().map(|&v| v < 0.0));
+        buf.msg = Message::SparseSign { d, scale, idx, neg };
     }
 
     fn gamma(&self, d: usize) -> f64 {

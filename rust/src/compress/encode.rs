@@ -95,11 +95,31 @@ impl BitWriter {
     }
 
     pub fn into_bytes(mut self) -> (Vec<u8>, u64) {
+        self.flush();
+        (self.buf, self.len)
+    }
+
+    /// Flush pending bits and borrow the encoded bytes (reusable-buffer
+    /// mode: call `clear` and write again without reallocating).
+    pub fn finish(&mut self) -> (&[u8], u64) {
+        self.flush();
+        (&self.buf, self.len)
+    }
+
+    /// Reset for reuse, keeping the byte buffer's capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.nacc = 0;
+        self.len = 0;
+    }
+
+    fn flush(&mut self) {
         if self.nacc > 0 {
             self.buf.push((self.acc >> 56) as u8);
+            self.acc = 0;
             self.nacc = 0;
         }
-        (self.buf, self.len)
     }
 }
 
@@ -191,18 +211,32 @@ const TAG_SPARSE_SIGN: u64 = 2;
 const TAG_DENSE_SIGN: u64 = 3;
 const TAG_QSGD: u64 = 4;
 
+/// Total Elias-γ cost of the successive-gap coding of ascending `idx`
+/// (first gap = idx[0]+1). Shared by the writer and the pure cost walk so
+/// the two cannot diverge.
+fn index_gap_bits(idx: &[u32]) -> u64 {
+    let mut total = 0u64;
+    let mut prev = 0u64;
+    for (j, &i) in idx.iter().enumerate() {
+        let gap = i as u64 - prev + u64::from(j == 0); // first gap = idx+1
+        total += elias_gamma_bits(gap.max(1));
+        prev = i as u64;
+    }
+    total
+}
+
+/// Exact bit cost of `write_indices` (flag bit + the cheaper coding).
+fn index_bits(idx: &[u32], d: usize) -> u64 {
+    let raw_total = ceil_log2(d as u64) as u64 * idx.len() as u64;
+    let gap_total = index_gap_bits(idx);
+    1 + if gap_total < raw_total { gap_total } else { raw_total }
+}
+
 /// Pick the cheaper index coding and write it. Indices must be ascending.
 fn write_indices(w: &mut BitWriter, idx: &[u32], d: usize) {
     let raw_bits_per = ceil_log2(d as u64);
     let raw_total = raw_bits_per as u64 * idx.len() as u64;
-    let mut gap_total = 0u64;
-    let mut prev = 0u64;
-    for (j, &i) in idx.iter().enumerate() {
-        let gap = i as u64 - prev + u64::from(j == 0); // first gap = idx+1
-        gap_total += elias_gamma_bits(gap.max(1));
-        prev = i as u64;
-    }
-    let use_gaps = gap_total < raw_total;
+    let use_gaps = index_gap_bits(idx) < raw_total;
     w.push_bit(use_gaps);
     if use_gaps {
         let mut prev = 0u64;
@@ -241,6 +275,15 @@ fn read_indices(r: &mut BitReader, count: usize, d: usize) -> Option<Vec<u32>> {
 /// Serialize a message to (bytes, bit length).
 pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
     let mut w = BitWriter::new();
+    encode_into(msg, &mut w);
+    w.into_bytes()
+}
+
+/// Serialize a message into a reusable writer (cleared first). The encoded
+/// bytes are available through `w.finish()`; with a long-lived writer the
+/// encode path performs no allocation once the buffer capacity is reached.
+pub fn encode_into(msg: &Message, w: &mut BitWriter) {
+    w.clear();
     w.push_bits(tag(msg), 3);
     w.push_elias_gamma(msg.dim() as u64 + 1);
     match msg {
@@ -251,7 +294,7 @@ pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
         }
         Message::SparseF32 { d, idx, vals } => {
             w.push_elias_gamma(idx.len() as u64 + 1);
-            write_indices(&mut w, idx, *d);
+            write_indices(w, idx, *d);
             for &v in vals {
                 w.push_f32(v);
             }
@@ -259,7 +302,7 @@ pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
         Message::SparseSign { d, scale, idx, neg } => {
             w.push_elias_gamma(idx.len() as u64 + 1);
             w.push_f32(*scale);
-            write_indices(&mut w, idx, *d);
+            write_indices(w, idx, *d);
             for &n in neg {
                 w.push_bit(n);
             }
@@ -278,7 +321,7 @@ pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
                 Some(idx) => {
                     w.push_bit(true);
                     w.push_elias_gamma(idx.len() as u64 + 1);
-                    write_indices(&mut w, idx, msg.dim());
+                    write_indices(w, idx, msg.dim());
                 }
                 None => w.push_bit(false),
             }
@@ -300,7 +343,6 @@ pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
             }
         }
     }
-    w.into_bytes()
 }
 
 fn tag(msg: &Message) -> u64 {
@@ -313,11 +355,41 @@ fn tag(msg: &Message) -> u64 {
     }
 }
 
-/// Exact wire size in bits (without materializing the bytes for the common
-/// fast-path callers in the metrics loop we still just encode; message sizes
-/// are small relative to gradient compute).
+/// Exact wire size in bits: a pure O(nnz) cost walk over the message —
+/// no byte buffer, no allocation. Mirrors `encode_into` field by field;
+/// `prop_wire_bits_matches_encoding` asserts equality with `encode(msg).1`
+/// for every operator.
 pub fn wire_bits(msg: &Message) -> u64 {
-    encode(msg).1
+    let mut bits = 3 + elias_gamma_bits(msg.dim() as u64 + 1);
+    match msg {
+        Message::Dense { values } => bits += 32 * values.len() as u64,
+        Message::SparseF32 { d, idx, .. } => {
+            bits += elias_gamma_bits(idx.len() as u64 + 1)
+                + index_bits(idx, *d)
+                + 32 * idx.len() as u64;
+        }
+        Message::SparseSign { d, idx, .. } => {
+            // count + f32 scale + indices + k sign bits.
+            bits += elias_gamma_bits(idx.len() as u64 + 1)
+                + 32
+                + index_bits(idx, *d)
+                + idx.len() as u64;
+        }
+        Message::DenseSign { neg, .. } => bits += 32 + neg.len() as u64,
+        Message::Qsgd { s, bucket, norms, idx, levels, .. } => {
+            // s + bucket + f32 post_scale + support-flag bit.
+            bits += elias_gamma_bits(*s as u64) + elias_gamma_bits(*bucket as u64) + 32 + 1;
+            if let Some(idx) = idx {
+                bits += elias_gamma_bits(idx.len() as u64 + 1) + index_bits(idx, msg.dim());
+            }
+            bits += elias_gamma_bits(norms.len() as u64 + 1) + 32 * norms.len() as u64;
+            for &l in levels {
+                // zero level: 1 flag bit; nonzero: flag + Elias-γ(l) + sign.
+                bits += if l == 0 { 1 } else { 2 + elias_gamma_bits(l as u64) };
+            }
+        }
+    }
+    bits
 }
 
 /// Wire size in bits of a dense model broadcast of dimension `d` — equal to
@@ -484,7 +556,28 @@ mod tests {
     fn dense_model_bits_matches_real_encoding() {
         for d in [1usize, 7, 300, 7850] {
             let msg = Message::Dense { values: vec![0.25f32; d] };
-            assert_eq!(dense_model_bits(d), wire_bits(&msg), "d={d}");
+            // Both closed forms agree with the actual serialized length.
+            assert_eq!(dense_model_bits(d), encode(&msg).1, "d={d}");
+            assert_eq!(wire_bits(&msg), encode(&msg).1, "d={d}");
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_writer_and_matches_encode() {
+        let mut rng = Pcg64::seeded(77);
+        let x: Vec<f32> = (0..200).map(|_| rng.normal_f32()).collect();
+        let mut w = BitWriter::new();
+        for op in [
+            Box::new(TopK::new(9)) as Box<dyn Compressor>,
+            Box::new(Qsgd::from_bits(3)),
+            Box::new(SignTopK::new(9, 1)),
+        ] {
+            let msg = op.compress(&x, &mut rng);
+            let (bytes, len) = encode(&msg);
+            encode_into(&msg, &mut w);
+            let (rbytes, rlen) = w.finish();
+            assert_eq!(len, rlen, "{}", op.name());
+            assert_eq!(bytes, rbytes, "{}", op.name());
         }
     }
 

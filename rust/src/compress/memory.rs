@@ -10,7 +10,7 @@
 //! O(η_t²) contraction for decaying η. Both are validated in tests against
 //! this implementation.
 
-use super::{Compressor, Message};
+use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
 use crate::util::stats::norm2_sq;
 
@@ -42,23 +42,38 @@ impl ErrorMemory {
 
     /// One synchronization round: given the net local progress
     /// `delta = x_sync − x_{t+1/2}` (Algorithm 1 line 8), produce the
-    /// compressed message and update the memory in place.
+    /// compressed message and update the memory in place. Allocating
+    /// wrapper around [`ErrorMemory::compress_update_into`].
     pub fn compress_update(
         &mut self,
         delta: &[f32],
         op: &dyn Compressor,
         rng: &mut Pcg64,
     ) -> Message {
+        let mut buf = MessageBuf::new();
+        self.compress_update_into(delta, op, rng, &mut buf);
+        buf.take()
+    }
+
+    /// As `compress_update`, producing the message into reusable storage —
+    /// the engine's allocation-free hot path (identical arithmetic and RNG
+    /// consumption).
+    pub fn compress_update_into(
+        &mut self,
+        delta: &[f32],
+        op: &dyn Compressor,
+        rng: &mut Pcg64,
+        buf: &mut MessageBuf,
+    ) {
         assert_eq!(delta.len(), self.m.len(), "memory dimension mismatch");
         // v = m + delta
         for (s, (m, d)) in self.scratch.iter_mut().zip(self.m.iter().zip(delta)) {
             *s = *m + *d;
         }
-        let msg = op.compress(&self.scratch, rng);
+        op.compress_into(&self.scratch, rng, buf);
         // m' = v − g : copy v into m, then subtract the reconstruction.
         self.m.copy_from_slice(&self.scratch);
-        msg.add_into(&mut self.m, -1.0);
-        msg
+        buf.message().add_into(&mut self.m, -1.0);
     }
 
     /// Reset (used when a run reuses worker state).

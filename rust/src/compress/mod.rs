@@ -148,9 +148,121 @@ impl Message {
     }
 
     /// Exact size of this message on the wire, in bits (delegates to
-    /// `encode`; equal to `encode::encode(self).bit_len()`).
+    /// `encode::wire_bits`, a pure O(nnz) cost walk; equal to
+    /// `encode::encode(self).1` — asserted by property tests).
     pub fn wire_bits(&self) -> u64 {
         encode::wire_bits(self)
+    }
+}
+
+/// Reusable storage for [`Compressor::compress_into`].
+///
+/// Holds the produced [`Message`] (whose internal vectors are recycled on
+/// the next call when the operator produces the same variant) plus the
+/// operator-side scratch (Top_k selection buffers, gathered sub-vectors).
+/// After the first few calls with a fixed operator and dimension, a
+/// `compress_into` through the same buffer performs no heap allocation —
+/// the steady-state guarantee the engine's hot path relies on.
+#[derive(Default)]
+pub struct MessageBuf {
+    /// The most recently produced message (empty `Dense` initially).
+    pub(crate) msg: Message,
+    /// Gathered sub-vector scratch (`QTopK`, `SignTopK`).
+    pub(crate) vals: Vec<f32>,
+    /// Top_k selection scratch.
+    pub(crate) topk: sparsify::TopKScratch,
+}
+
+impl MessageBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow the message produced by the last `compress_into`.
+    pub fn message(&self) -> &Message {
+        &self.msg
+    }
+
+    /// Take ownership of the produced message (e.g. to send it across a
+    /// thread boundary), leaving an empty placeholder behind. Pair with
+    /// [`MessageBuf::recycle`] to return the capacity afterwards.
+    pub fn take(&mut self) -> Message {
+        std::mem::take(&mut self.msg)
+    }
+
+    /// Return a previously `take`n (and since consumed) message so its
+    /// heap capacity is reused by the next `compress_into`.
+    pub fn recycle(&mut self, msg: Message) {
+        self.msg = msg;
+    }
+
+    /// Extract cleared `(idx, vals)` storage for a `SparseF32` message,
+    /// reusing the previous message's buffers when the variant matches.
+    pub(crate) fn take_sparse_f32(&mut self) -> (Vec<u32>, Vec<f32>) {
+        match std::mem::take(&mut self.msg) {
+            Message::SparseF32 { mut idx, mut vals, .. } => {
+                idx.clear();
+                vals.clear();
+                (idx, vals)
+            }
+            _ => (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// Extract cleared `values` storage for a `Dense` message.
+    pub(crate) fn take_dense(&mut self) -> Vec<f32> {
+        match std::mem::take(&mut self.msg) {
+            Message::Dense { mut values } => {
+                values.clear();
+                values
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Extract cleared `(idx, neg)` storage for a `SparseSign` message.
+    pub(crate) fn take_sparse_sign(&mut self) -> (Vec<u32>, Vec<bool>) {
+        match std::mem::take(&mut self.msg) {
+            Message::SparseSign { mut idx, mut neg, .. } => {
+                idx.clear();
+                neg.clear();
+                (idx, neg)
+            }
+            _ => (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// Extract cleared `neg` storage for a `DenseSign` message.
+    pub(crate) fn take_dense_sign(&mut self) -> Vec<bool> {
+        match std::mem::take(&mut self.msg) {
+            Message::DenseSign { mut neg, .. } => {
+                neg.clear();
+                neg
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Extract cleared `(norms, idx, levels, neg)` storage for a `Qsgd`
+    /// message (idx is empty for the dense quantizer).
+    pub(crate) fn take_qsgd(&mut self) -> (Vec<f32>, Vec<u32>, Vec<u32>, Vec<bool>) {
+        match std::mem::take(&mut self.msg) {
+            Message::Qsgd { mut norms, idx, mut levels, mut neg, .. } => {
+                let mut idx = idx.unwrap_or_default();
+                norms.clear();
+                idx.clear();
+                levels.clear();
+                neg.clear();
+                (norms, idx, levels, neg)
+            }
+            _ => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+        }
+    }
+}
+
+impl Default for Message {
+    fn default() -> Self {
+        Message::Dense { values: Vec::new() }
     }
 }
 
@@ -158,6 +270,16 @@ impl Message {
 pub trait Compressor: Send + Sync {
     /// Compress `x`. Stochastic operators draw from `rng`.
     fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message;
+
+    /// Compress `x` into reusable storage. Semantically identical to
+    /// `compress` (same RNG consumption, bit-identical message — property
+    /// tested), but the built-in operators reuse `buf`'s vectors so the
+    /// steady-state training loop performs no heap allocation here. The
+    /// default implementation falls back to `compress` (allocating), so
+    /// external operators stay source-compatible.
+    fn compress_into(&self, x: &[f32], rng: &mut Pcg64, buf: &mut MessageBuf) {
+        buf.msg = self.compress(x, rng);
+    }
 
     /// Worst-case compression coefficient γ ∈ (0, 1] for dimension `d`
     /// (Lemmas 1–3). Used by theory-facing code and tests.
@@ -179,8 +301,14 @@ pub trait Compressor: Send + Sync {
 pub struct Identity;
 
 impl Compressor for Identity {
-    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
-        Message::Dense { values: x.to_vec() }
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], _rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let mut values = buf.take_dense();
+        values.extend_from_slice(x);
+        buf.msg = Message::Dense { values };
     }
 
     fn gamma(&self, _d: usize) -> f64 {
@@ -199,6 +327,19 @@ impl Compressor for Identity {
 /// A `'static` identity operator, used as the default downlink compressor in
 /// borrowing configs (`TrainSpec`).
 pub static IDENTITY: Identity = Identity;
+
+/// Shared body for the built-in operators' `compress`: the allocating form
+/// is a thin wrapper over `compress_into` through a fresh buffer, so each
+/// operator's arithmetic exists exactly once and the two APIs cannot drift.
+pub(crate) fn compress_owned<C: Compressor + ?Sized>(
+    op: &C,
+    x: &[f32],
+    rng: &mut Pcg64,
+) -> Message {
+    let mut buf = MessageBuf::new();
+    op.compress_into(x, rng, &mut buf);
+    buf.take()
+}
 
 /// Parse a compressor spec string, e.g.
 /// `identity`, `topk:k=1000`, `randk:k=1000`, `qsgd:bits=4`,

@@ -7,7 +7,7 @@
 //!   transmitted as `(‖x‖₁/d) · Sign(x)` as in EF-SignSGD [KRSJ19], which
 //!   makes it a compression operator with data-dependent γ ≥ 1/d.
 
-use super::{Compressor, Message};
+use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
 use crate::util::stats::{norm1, norm2};
 
@@ -84,16 +84,37 @@ impl Qsgd {
     }
 
     /// Quantize `vals` bucket-by-bucket; returns (norms, levels, neg).
-    /// Shared by the dense operator and `QTop_k`.
+    /// Shared by the dense operator and `QTop_k`. Allocating wrapper around
+    /// [`Qsgd::quantize_values_into`].
     pub fn quantize_values(
         &self,
         vals: &[f32],
         rng: &mut Pcg64,
     ) -> (Vec<f32>, Vec<u32>, Vec<bool>) {
-        let n = vals.len();
-        let mut norms = Vec::with_capacity(n.div_ceil(self.bucket.max(1)));
-        let mut levels = Vec::with_capacity(n);
-        let mut neg = Vec::with_capacity(n);
+        let mut norms = Vec::new();
+        let mut levels = Vec::new();
+        let mut neg = Vec::new();
+        self.quantize_values_into(vals, rng, &mut norms, &mut levels, &mut neg);
+        (norms, levels, neg)
+    }
+
+    /// As `quantize_values`, appending into caller-provided (cleared)
+    /// buffers — the allocation-free hot-path variant. RNG consumption and
+    /// outputs are bit-identical to the wrapper.
+    pub fn quantize_values_into(
+        &self,
+        vals: &[f32],
+        rng: &mut Pcg64,
+        norms: &mut Vec<f32>,
+        levels: &mut Vec<u32>,
+        neg: &mut Vec<bool>,
+    ) {
+        norms.clear();
+        levels.clear();
+        neg.clear();
+        norms.reserve(vals.len().div_ceil(self.bucket.max(1)));
+        levels.reserve(vals.len());
+        neg.reserve(vals.len());
         let s = self.s as f32;
         for chunk in vals.chunks(self.bucket.max(1)) {
             let norm = norm2(chunk) as f32;
@@ -117,14 +138,18 @@ impl Qsgd {
                 neg.push(l != 0 && v < 0.0);
             }
         }
-        (norms, levels, neg)
     }
 }
 
 impl Compressor for Qsgd {
     fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
-        let (norms, levels, neg) = self.quantize_values(x, rng);
-        Message::Qsgd {
+        super::compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let (mut norms, _idx, mut levels, mut neg) = buf.take_qsgd();
+        self.quantize_values_into(x, rng, &mut norms, &mut levels, &mut neg);
+        buf.msg = Message::Qsgd {
             d: x.len(),
             s: self.s,
             bucket: self.bucket as u32,
@@ -133,7 +158,7 @@ impl Compressor for Qsgd {
             idx: None,
             levels,
             neg,
-        }
+        };
     }
 
     fn gamma(&self, d: usize) -> f64 {
@@ -161,11 +186,15 @@ impl SignDense {
 }
 
 impl Compressor for SignDense {
-    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
-        let d = x.len();
-        let scale = (norm1(x) / d.max(1) as f64) as f32;
-        let neg = x.iter().map(|&v| v < 0.0).collect();
-        Message::DenseSign { scale, neg }
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        super::compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], _rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let mut neg = buf.take_dense_sign();
+        let scale = (norm1(x) / x.len().max(1) as f64) as f32;
+        neg.extend(x.iter().map(|&v| v < 0.0));
+        buf.msg = Message::DenseSign { scale, neg };
     }
 
     fn gamma(&self, d: usize) -> f64 {

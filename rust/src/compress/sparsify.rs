@@ -5,8 +5,18 @@
 //! median-of-three pivots and a heapsort fallback) over |x_i| so the hot path
 //! is O(d) expected — no full sort of 25M-element gradients.
 
-use super::{Compressor, Message};
+use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
+
+/// Reusable buffers for the Top_k selection paths (packed introselect array,
+/// strided sample, candidate list). Owned by [`MessageBuf`] so steady-state
+/// selection allocates nothing once capacities are reached.
+#[derive(Default)]
+pub struct TopKScratch {
+    packed: Vec<u64>,
+    sample: Vec<u32>,
+    cand: Vec<u64>,
+}
 
 /// Keep the k largest-magnitude coordinates at full precision.
 #[derive(Clone, Debug)]
@@ -22,11 +32,15 @@ impl TopK {
 }
 
 impl Compressor for TopK {
-    fn compress(&self, x: &[f32], _rng: &mut Pcg64) -> Message {
-        let k = self.k.min(x.len());
-        let idx = top_k_indices(x, k);
-        let vals = idx.iter().map(|&i| x[i as usize]).collect();
-        Message::SparseF32 { d: x.len(), idx, vals }
+    fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        super::compress_owned(self, x, rng)
+    }
+
+    fn compress_into(&self, x: &[f32], _rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let (mut idx, mut vals) = buf.take_sparse_f32();
+        top_k_indices_into(x, self.k.min(x.len()), &mut idx, &mut buf.topk);
+        vals.extend(idx.iter().map(|&i| x[i as usize]));
+        buf.msg = Message::SparseF32 { d: x.len(), idx, vals };
     }
 
     fn gamma(&self, d: usize) -> f64 {
@@ -56,15 +70,19 @@ impl RandK {
 
 impl Compressor for RandK {
     fn compress(&self, x: &[f32], rng: &mut Pcg64) -> Message {
+        super::compress_owned(self, x, rng)
+    }
+
+    /// Reuses the message storage; the uniform sampler itself still
+    /// allocates O(k) (it must draw *distinct* indices), so Rand_k is not
+    /// part of the zero-allocation guarantee.
+    fn compress_into(&self, x: &[f32], rng: &mut Pcg64, buf: &mut MessageBuf) {
+        let (mut idx, mut vals) = buf.take_sparse_f32();
         let k = self.k.min(x.len());
-        let mut idx: Vec<u32> = rng
-            .sample_indices(x.len(), k)
-            .into_iter()
-            .map(|i| i as u32)
-            .collect();
+        idx.extend(rng.sample_indices(x.len(), k).into_iter().map(|i| i as u32));
         idx.sort_unstable();
-        let vals = idx.iter().map(|&i| x[i as usize]).collect();
-        Message::SparseF32 { d: x.len(), idx, vals }
+        vals.extend(idx.iter().map(|&i| x[i as usize]));
+        buf.msg = Message::SparseF32 { d: x.len(), idx, vals };
     }
 
     fn gamma(&self, d: usize) -> f64 {
@@ -80,86 +98,99 @@ impl Compressor for RandK {
 ///
 /// O(d) expected: introselect partitions an index array around the k-th
 /// magnitude. Ties are broken arbitrarily (any valid top-k set is returned,
-/// matching the paper's definition).
+/// matching the paper's definition). Allocating wrapper around
+/// [`top_k_indices_into`].
 pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut scratch = TopKScratch::default();
+    top_k_indices_into(x, k, &mut out, &mut scratch);
+    out
+}
+
+/// As [`top_k_indices`], writing into `out` and reusing `scratch` — the
+/// allocation-free hot-path variant (§Perf iteration 5). The selection
+/// logic (and its tie-breaking) is identical to the allocating wrapper.
+pub fn top_k_indices_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut TopKScratch) {
     let d = x.len();
     let k = k.min(d);
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == d {
-        return (0..d as u32).collect();
+        out.extend(0..d as u32);
+        return;
     }
     // §Perf iteration 4: for large d with small k, estimate the k-th
     // magnitude from a strided sample, collect the few candidates above it
     // in one read-only pass, and select exactly among those. Falls back to
     // the exact packed path when the estimate misfires.
-    if d >= (1 << 16) && k * 8 < d {
-        if let Some(idx) = top_k_sampled(x, k) {
-            return idx;
-        }
+    if d >= (1 << 16) && k * 8 < d && top_k_sampled_into(x, k, out, scratch) {
+        return;
     }
-    top_k_packed(x, k)
+    top_k_packed_into(x, k, out, scratch);
 }
 
 /// Exact path (§Perf iteration 2): pack (magnitude, index) into one u64 so
 /// the introselect partitions a flat array with no indirection back into `x`
 /// (the original by-key select was cache-miss bound at ResNet-50 scale).
 /// Magnitude occupies the high 32 bits, so u64 order = magnitude order.
-fn top_k_packed(x: &[f32], k: usize) -> Vec<u32> {
+fn top_k_packed_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut TopKScratch) {
     let d = x.len();
-    let mut packed: Vec<u64> = x
-        .iter()
-        .enumerate()
-        .map(|(i, &v)| ((ordered(v.abs()) as u64) << 32) | i as u64)
-        .collect();
+    let packed = &mut scratch.packed;
+    packed.clear();
+    packed.extend(
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| ((ordered(v.abs()) as u64) << 32) | i as u64),
+    );
     // Ascending select: the k largest live in packed[d-k..].
     packed.select_nth_unstable(d - k);
-    let mut idx: Vec<u32> = packed[d - k..].iter().map(|&p| p as u32).collect();
-    idx.sort_unstable();
-    idx
+    out.clear();
+    out.extend(packed[d - k..].iter().map(|&p| p as u32));
+    out.sort_unstable();
 }
 
 /// Sampled-threshold path: deterministic strided sample → conservative
 /// threshold near the (1 − 2k/d) quantile → one filtering pass → exact
-/// select among ~2k candidates. Returns None (caller falls back) when the
+/// select among ~2k candidates. Returns false (caller falls back) when the
 /// sample misjudges the tail (too few candidates, or a blow-up past 8k).
-fn top_k_sampled(x: &[f32], k: usize) -> Option<Vec<u32>> {
+fn top_k_sampled_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut TopKScratch) -> bool {
     let d = x.len();
     let sample_n = 8192.min(d / 2);
     let stride = d / sample_n;
-    let mut sample: Vec<u32> = x
-        .iter()
-        .step_by(stride)
-        .map(|&v| ordered(v.abs()))
-        .collect();
+    let sample = &mut scratch.sample;
+    sample.clear();
+    sample.extend(x.iter().step_by(stride).map(|&v| ordered(v.abs())));
     // Aim to collect ~2k candidates so the estimate has slack on both sides.
     let target = ((2 * k) as f64 / d as f64 * sample.len() as f64).ceil() as usize;
-    let pos = sample.len().checked_sub(target.max(1))?;
-    if pos == 0 {
-        return None;
-    }
+    let pos = match sample.len().checked_sub(target.max(1)) {
+        Some(0) | None => return false,
+        Some(pos) => pos,
+    };
     sample.select_nth_unstable(pos);
     let thresh = sample[pos];
     let cap = 8 * k;
-    let mut cand: Vec<u64> = Vec::with_capacity(4 * k);
+    let cand = &mut scratch.cand;
+    cand.clear();
     for (i, &v) in x.iter().enumerate() {
         let o = ordered(v.abs());
         if o >= thresh {
             if cand.len() == cap {
-                return None; // threshold too permissive — exact fallback
+                return false; // threshold too permissive — exact fallback
             }
             cand.push(((o as u64) << 32) | i as u64);
         }
     }
     if cand.len() < k {
-        return None; // threshold too strict — exact fallback
+        return false; // threshold too strict — exact fallback
     }
     let n = cand.len();
     cand.select_nth_unstable(n - k);
-    let mut idx: Vec<u32> = cand[n - k..].iter().map(|&p| p as u32).collect();
-    idx.sort_unstable();
-    Some(idx)
+    out.clear();
+    out.extend(cand[n - k..].iter().map(|&p| p as u32));
+    out.sort_unstable();
+    true
 }
 
 /// Map f32 magnitude to a totally ordered u32 (for non-negative inputs).
@@ -246,7 +277,8 @@ mod tests {
         let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
         for k in [16usize, 256, 1000] {
             let got = top_k_indices(&x, k);
-            let exact = top_k_packed(&x, k);
+            let mut exact = Vec::new();
+            top_k_packed_into(&x, k, &mut exact, &mut TopKScratch::default());
             assert_eq!(got.len(), k);
             let min_got = got.iter().map(|&i| x[i as usize].abs()).fold(f32::MAX, f32::min);
             let min_exact = exact.iter().map(|&i| x[i as usize].abs()).fold(f32::MAX, f32::min);

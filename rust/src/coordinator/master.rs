@@ -22,7 +22,7 @@
 //! precisely the model the engine evaluates there.
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::{encode, Message};
+use crate::compress::{encode, Message, MessageBuf};
 use crate::data::Dataset;
 use crate::engine::{History, MetricPoint};
 use crate::grad::GradModel;
@@ -131,6 +131,9 @@ where
     let mut round_idx = 0usize;
     // Arrived-but-unapplied updates, keyed by their sync step.
     let mut buckets: HashMap<usize, Vec<UpdateMsg>> = HashMap::new();
+    // Reused downlink compression buffer and wire encoder.
+    let mut down_buf = MessageBuf::new();
+    let mut wire = encode::BitWriter::new();
 
     let measure = |step: usize, global: &[f32], bits_up: u64, bits_down: u64, mem: f64| {
         let train_loss = eval_model.loss(global, &train_eval);
@@ -198,9 +201,13 @@ where
                             }
                         } else {
                             for &r in parts {
-                                let msg =
-                                    core.delta_broadcast(r, cfg.down_compressor.as_ref());
-                                let (bytes, bit_len) = encode::encode(&msg);
+                                let (bytes, bit_len) = encode_delta(
+                                    &mut core,
+                                    cfg.down_compressor.as_ref(),
+                                    &mut down_buf,
+                                    &mut wire,
+                                    r,
+                                );
                                 bits_down += bit_len;
                                 let _ = reply_txs[r].send(ModelMsg::Delta { bytes, bit_len });
                             }
@@ -235,8 +242,13 @@ where
                         bits_down += encode::dense_model_bits(d);
                         let _ = reply_txs[worker].send(ModelMsg::Dense(core.params_snapshot()));
                     } else {
-                        let msg = core.delta_broadcast(worker, cfg.down_compressor.as_ref());
-                        let (bytes, bit_len) = encode::encode(&msg);
+                        let (bytes, bit_len) = encode_delta(
+                            &mut core,
+                            cfg.down_compressor.as_ref(),
+                            &mut down_buf,
+                            &mut wire,
+                            worker,
+                        );
                         bits_down += bit_len;
                         let _ = reply_txs[worker].send(ModelMsg::Delta { bytes, bit_len });
                     }
@@ -297,6 +309,22 @@ impl GridRecorder {
             self.next_eval += self.eval_every;
         }
     }
+}
+
+/// Compress and wire-encode the downlink delta for worker `r` — shared by
+/// the barrier and aggregate-on-arrival paths so their encoding and bit
+/// accounting cannot diverge.
+fn encode_delta(
+    core: &mut MasterCore,
+    down: &dyn crate::compress::Compressor,
+    buf: &mut MessageBuf,
+    wire: &mut encode::BitWriter,
+    r: usize,
+) -> (Vec<u8>, u64) {
+    core.delta_broadcast_into(r, down, buf);
+    encode::encode_into(buf.message(), wire);
+    let (bytes, bit_len) = wire.finish();
+    (bytes.to_vec(), bit_len)
 }
 
 fn decode_update(upd: &UpdateMsg) -> anyhow::Result<Message> {

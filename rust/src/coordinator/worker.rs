@@ -3,7 +3,7 @@
 //! refresh on sync (Algorithm 1/2 worker side).
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::encode;
+use crate::compress::encode::{self, BitWriter};
 use crate::data::Dataset;
 use crate::grad::GradModel;
 use crate::protocol::WorkerCore;
@@ -24,6 +24,9 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     let WorkerArgs { id, cfg, train, shard, init, to_master, from_master } = args;
     assert_eq!(init.len(), model.dim(), "init/model dimension mismatch");
     let mut core = WorkerCore::new(id, init, shard, cfg.batch, cfg.momentum, cfg.seed);
+    // Reused wire encoder (the channel still needs an owned byte vector per
+    // send, but the bitstream is assembled without regrowing a writer).
+    let mut wire = BitWriter::new();
 
     for t in 0..cfg.steps {
         core.local_step(model.as_ref(), &train, cfg.lr.at(t));
@@ -32,8 +35,12 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
         // non-participant keeps its local run going (no uplink, no model
         // refresh) exactly like the engine's simulated workers.
         if cfg.schedule.syncs_at(id, t) && cfg.participation.participates(id, t) {
-            let msg = core.make_update(cfg.compressor.as_ref());
-            let (bytes, bit_len) = encode::encode(&msg);
+            let (bytes, bit_len) = {
+                let msg = core.make_update(cfg.compressor.as_ref());
+                encode::encode_into(msg, &mut wire);
+                let (bytes, bit_len) = wire.finish();
+                (bytes.to_vec(), bit_len)
+            };
             let update = UpdateMsg {
                 worker: id,
                 step: t,

@@ -26,23 +26,43 @@ impl Dataset {
 
     /// Gather rows `idx` into a dense batch (x: b×dim, y: b).
     pub fn gather(&self, idx: &[usize]) -> Batch {
-        let mut x = Vec::with_capacity(idx.len() * self.dim);
-        let mut y = Vec::with_capacity(idx.len());
+        let mut out = Batch::empty();
+        self.gather_into(idx, &mut out);
+        out
+    }
+
+    /// Gather rows `idx` into a reusable batch (cleared and refilled) — the
+    /// hot-path variant of `gather`: once the batch has reached capacity,
+    /// repeated gathers perform no heap allocation.
+    pub fn gather_into(&self, idx: &[usize], out: &mut Batch) {
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(idx.len() * self.dim);
+        out.y.reserve(idx.len());
         for &i in idx {
-            x.extend_from_slice(self.row(i));
-            y.push(self.labels[i]);
+            out.x.extend_from_slice(self.row(i));
+            out.y.push(self.labels[i]);
         }
-        Batch { x, y, b: idx.len(), dim: self.dim }
+        out.b = idx.len();
+        out.dim = self.dim;
     }
 }
 
 /// A minibatch (row-major features).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Batch {
     pub x: Vec<f32>,
     pub y: Vec<u32>,
     pub b: usize,
     pub dim: usize,
+}
+
+impl Batch {
+    /// An empty batch, ready to be filled via `Dataset::gather_into` /
+    /// `ShardSampler::next_batch_into` (per-worker scratch).
+    pub fn empty() -> Batch {
+        Batch::default()
+    }
 }
 
 /// Synthetic multi-class data: class means drawn N(0, I)·sep, points
@@ -190,10 +210,26 @@ impl ShardSampler {
     }
 
     pub fn next_batch(&mut self, ds: &Dataset) -> Batch {
-        let idx: Vec<usize> = (0..self.batch)
-            .map(|_| self.shard[self.rng.below_usize(self.shard.len())])
-            .collect();
-        ds.gather(&idx)
+        let mut out = Batch::empty();
+        self.next_batch_into(ds, &mut out);
+        out
+    }
+
+    /// Sample the next minibatch directly into a reusable batch — identical
+    /// RNG draws and rows as `next_batch`, but no index vector and no fresh
+    /// `Batch`, so steady-state sampling is allocation-free.
+    pub fn next_batch_into(&mut self, ds: &Dataset, out: &mut Batch) {
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(self.batch * ds.dim);
+        out.y.reserve(self.batch);
+        for _ in 0..self.batch {
+            let i = self.shard[self.rng.below_usize(self.shard.len())];
+            out.x.extend_from_slice(ds.row(i));
+            out.y.push(ds.labels[i]);
+        }
+        out.b = self.batch;
+        out.dim = ds.dim;
     }
 }
 

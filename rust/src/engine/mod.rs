@@ -25,12 +25,22 @@
 //! broadcasts the dense model exactly as the paper assumes; any other
 //! operator switches to error-compensated compressed model deltas (see
 //! `protocol::` docs), and `bits_down` reports the true encoded length.
+//!
+//! Multicore: `TrainSpec::threads` moves worker local steps and uplink
+//! compression onto a persistent scoped thread pool (`parallel::`) while
+//! keeping the `History` bit-for-bit identical to the sequential loop —
+//! each worker draws only from its own salted PCG streams, and the master
+//! folds sync updates in worker-index order regardless of arrival order.
+//! The hot path (gather → grad → compress → fold → broadcast) reuses
+//! per-worker scratch everywhere and performs no steady-state heap
+//! allocation in the sequential engine.
 
 pub mod metrics;
+mod parallel;
 
 pub use metrics::{History, MetricPoint};
 
-use crate::compress::{encode, Compressor};
+use crate::compress::{encode, Compressor, MessageBuf};
 use crate::data::{shard_indices, Batch, Dataset, Sharding};
 use crate::grad::GradModel;
 use crate::optim::LrSchedule;
@@ -72,6 +82,15 @@ pub struct TrainSpec<'a> {
     pub eval_every: usize,
     /// Rows subsampled for loss/error evaluation (caps eval cost).
     pub eval_rows: usize,
+    /// Worker-pool threads for the engine: `1` (the default) runs the
+    /// classic sequential loop; `0` uses all available cores; `n > 1` runs
+    /// worker steps and uplink compression on a persistent scoped thread
+    /// pool. Every setting produces a bit-identical `History` — each worker
+    /// draws only from its own salted RNG streams and sync updates are
+    /// folded in worker-index order — so this is purely a wall-clock knob.
+    /// Requires a model with a `Sync` view (`GradModel::as_sync`); others
+    /// (PJRT) silently fall back to sequential.
+    pub threads: usize,
 }
 
 impl<'a> TrainSpec<'a> {
@@ -100,6 +119,7 @@ impl<'a> TrainSpec<'a> {
             seed: 0,
             eval_every: 10,
             eval_rows: 512,
+            threads: 1,
         }
     }
 }
@@ -115,7 +135,33 @@ pub fn run(spec: &TrainSpec) -> History {
 
 /// As `run`, but from explicit initial parameters (used by the non-convex
 /// figures, which need a proper MLP init).
+///
+/// Dispatches on `spec.threads`: the parallel engine produces a `History`
+/// bit-identical to the sequential loop (tested across operators, schedules
+/// and thread counts in `integration_parallel.rs`), so the choice is purely
+/// about wall-clock.
 pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
+    let threads = resolve_threads(spec.threads, spec.workers);
+    if threads > 1 {
+        if let Some(model) = spec.model.as_sync() {
+            return parallel::run_from_parallel(spec, model, global, threads);
+        }
+    }
+    run_sequential(spec, global)
+}
+
+/// Effective pool size: 0 = all available cores, clamped to the worker
+/// count (more threads than workers cannot help).
+fn resolve_threads(threads: usize, workers: usize) -> usize {
+    let t = if threads == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        threads
+    };
+    t.min(workers.max(1))
+}
+
+fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
     let d = spec.model.dim();
     assert_eq!(global.len(), d);
     let r_count = spec.workers;
@@ -143,6 +189,8 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
     let mut bits_down: u64 = 0;
     // Reused buffer for the round's participant set S_t.
     let mut round = Vec::with_capacity(r_count);
+    // Reused downlink compression buffer (one message in flight at a time).
+    let mut down_buf = MessageBuf::new();
 
     // t = 0 snapshot.
     history.push(eval.measure(spec, 0, master.params(), bits_up, bits_down, avg_mem(&workers)));
@@ -163,7 +211,7 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
             for &r in &round {
                 let msg = workers[r].make_update(spec.compressor);
                 bits_up += msg.wire_bits();
-                master.apply_update(&msg).expect("engine-internal update dim mismatch");
+                master.apply_update(msg).expect("engine-internal update dim mismatch");
             }
             // -- broadcast to the round's participants -----------------------
             for &r in &round {
@@ -171,9 +219,9 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
                     workers[r].apply_dense_broadcast(master.params());
                     bits_down += encode::dense_model_bits(d);
                 } else {
-                    let msg = master.delta_broadcast(r, spec.down_compressor);
-                    bits_down += msg.wire_bits();
-                    workers[r].apply_delta_broadcast(&msg);
+                    master.delta_broadcast_into(r, spec.down_compressor, &mut down_buf);
+                    bits_down += down_buf.message().wire_bits();
+                    workers[r].apply_delta_broadcast(down_buf.message());
                 }
             }
         }
@@ -197,6 +245,13 @@ pub fn run_from(spec: &TrainSpec, global: Vec<f32>) -> History {
 
 fn avg_mem(workers: &[WorkerCore]) -> f64 {
     workers.iter().map(|w| w.mem_norm_sq()).sum::<f64>() / workers.len() as f64
+}
+
+/// As `avg_mem`, over pre-collected per-worker ‖m‖² values (the parallel
+/// engine tracks them from sync replies). Summation order is worker-index
+/// order in both, so the two are bit-identical.
+fn avg_mem_values(mem_norms: &[f64]) -> f64 {
+    mem_norms.iter().sum::<f64>() / mem_norms.len() as f64
 }
 
 /// Fixed evaluation subsets (deterministic, shared by every series in a

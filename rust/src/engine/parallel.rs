@@ -1,0 +1,307 @@
+//! Deterministic multicore engine: worker local steps and uplink
+//! compression on a persistent `std::thread::scope` pool (std-only).
+//!
+//! Why this is safe to parallelize bit-for-bit: within a tick, each
+//! worker's state transition depends only on its own `WorkerCore` (local
+//! iterate, error memory, shard sampler, salted per-worker PCG streams) and
+//! on immutable shared inputs (model parameters are per-worker copies, the
+//! dataset/schedule/participation are read-only). The only cross-worker
+//! arithmetic is the master's fold `x ← x − s·g` and the per-worker
+//! broadcasts — both run on the coordinating thread, in ascending worker
+//! index order, exactly as the sequential loop does. Hence the `History`
+//! (losses, bit counts, memory norms, final parameters) is bit-identical
+//! for every thread count — the same step-ordered-bucket argument the
+//! threaded coordinator's barrier uses, validated in
+//! `integration_parallel.rs`.
+//!
+//! Mechanics: `nthreads` long-lived pool threads each own a contiguous
+//! chunk of `WorkerCore`s. Per tick the coordinator sends one `Step`
+//! command per thread; on sync ticks each thread replies with its chunk's
+//! compressed updates (taking the reusable message out of the worker's
+//! buffer), the coordinator folds them in worker order, computes the
+//! per-participant broadcast payloads, and returns them — together with the
+//! now-consumed uplink messages, so their heap capacity is recycled into
+//! the workers' buffers. Non-sync ticks need no rendezvous at all: threads
+//! run ahead through queued `Step`s (H local steps per barrier, exactly the
+//! paper's communication pattern). Steady-state allocations are limited to
+//! the channel nodes and the small per-round command vectors; the
+//! compress → fold arithmetic itself reuses the same buffers as the
+//! sequential engine.
+
+use super::{avg_mem_values, EvalSets, TrainSpec};
+use crate::compress::{encode, Compressor, Message, MessageBuf};
+use crate::data::{shard_indices, Dataset};
+use crate::engine::History;
+use crate::grad::GradModel;
+use crate::protocol::{MasterCore, WorkerCore};
+use crate::topology::{sync_participants_into, Participation, SyncSchedule};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Ticks between forced rendezvous when no sync round occurs — bounds the
+/// coordinator's run-ahead (and the queued `Cmd::Step` memory) under very
+/// sparse schedules without adding a barrier to the common case.
+const MAX_RUNAHEAD: usize = 64;
+
+/// Coordinator → pool thread.
+enum Cmd {
+    /// Run one local step on every owned worker (global clock `t`); when
+    /// `ack` is true the thread must send a `Reply` after this tick — set
+    /// for every tick with a non-empty sync round (the reply carries the
+    /// chunk's compressed updates) and, as pure backpressure, after
+    /// `MAX_RUNAHEAD` consecutive roundless ticks (empty reply).
+    Step { t: usize, eta: f64, ack: bool },
+    /// Apply the round's broadcasts to owned participants. Each item also
+    /// returns the worker's consumed uplink message for buffer reuse.
+    Broadcast { items: Vec<BroadcastItem> },
+    /// Shut down.
+    Finish,
+}
+
+/// One participant's broadcast: (worker, payload, recycled uplink message).
+struct BroadcastItem {
+    worker: usize,
+    payload: Down,
+    recycled: Message,
+}
+
+/// Downlink payload (mirrors the two broadcast modes of the protocol).
+enum Down {
+    /// Dense model broadcast — one shared snapshot per round.
+    Dense(Arc<[f32]>),
+    /// Error-compensated compressed model delta for this worker.
+    Delta(Message),
+}
+
+/// Pool thread → coordinator, one per thread per sync tick.
+struct Reply {
+    /// (worker, update message, post-update ‖m‖²) for owned participants.
+    updates: Vec<(usize, Message, f64)>,
+    /// Downlink delta messages consumed since the previous reply, returned
+    /// so the coordinator's broadcast path reuses their capacity.
+    spent_down: Vec<Message>,
+}
+
+pub(super) fn run_from_parallel(
+    spec: &TrainSpec,
+    model: &(dyn GradModel + Sync),
+    global: Vec<f32>,
+    nthreads: usize,
+) -> History {
+    let d = spec.model.dim();
+    assert_eq!(global.len(), d);
+    let r_count = spec.workers;
+    assert!(r_count >= 1);
+    assert!(nthreads >= 1 && nthreads <= r_count);
+    let shards = shard_indices(spec.train, r_count, spec.sharding);
+    let dense_down = spec.down_compressor.is_identity();
+
+    // Contiguous worker → thread partition (sizes differ by at most one).
+    let mut owner = vec![0usize; r_count];
+    let mut chunks: Vec<Vec<WorkerCore>> = Vec::with_capacity(nthreads);
+    {
+        let base = r_count / nthreads;
+        let rem = r_count % nthreads;
+        let mut next = 0usize;
+        for ti in 0..nthreads {
+            let take = base + usize::from(ti < rem);
+            let mut chunk = Vec::with_capacity(take);
+            for r in next..next + take {
+                owner[r] = ti;
+                chunk.push(WorkerCore::new(
+                    r,
+                    global.clone(),
+                    shards[r].clone(),
+                    spec.batch,
+                    spec.momentum,
+                    spec.seed,
+                ));
+            }
+            next += take;
+            chunks.push(chunk);
+        }
+    }
+
+    let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
+    master.set_agg_scale(spec.agg_scale);
+    let eval = EvalSets::new(spec);
+
+    // Copies of the shared read-only inputs for the pool closures (the
+    // closures must not capture `spec` itself: it holds the non-`Sync`
+    // model reference).
+    let train: &Dataset = spec.train;
+    let compressor: &dyn Compressor = spec.compressor;
+    let schedule: &dyn SyncSchedule = spec.schedule;
+    let participation: &Participation = spec.participation;
+
+    std::thread::scope(|s| {
+        // One reply channel per thread: if a pool thread panics mid-run its
+        // sender drops, the coordinator's recv() errors, and the panic
+        // propagates at scope join — a shared channel would instead leave
+        // the coordinator waiting forever for the dead thread's reply.
+        let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(nthreads);
+        let mut reply_rxs: Vec<mpsc::Receiver<Reply>> = Vec::with_capacity(nthreads);
+        for chunk in chunks {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+            cmd_txs.push(cmd_tx);
+            reply_rxs.push(reply_rx);
+            s.spawn(move || {
+                pool_main(chunk, model, train, compressor, schedule, participation, cmd_rx, reply_tx)
+            });
+        }
+
+        let mut history = History::new();
+        let mut bits_up: u64 = 0;
+        let mut bits_down: u64 = 0;
+        // Reused buffers: round participant set, per-worker update slots,
+        // last-reported ‖m‖² per worker, recycled downlink messages.
+        let mut round = Vec::with_capacity(r_count);
+        let mut slots: Vec<Option<Message>> = (0..r_count).map(|_| None).collect();
+        let mut mem_norms = vec![0.0f64; r_count];
+        let mut down_pool: Vec<Message> = Vec::new();
+        let mut down_buf = MessageBuf::new();
+
+        history.push(eval.measure(spec, 0, master.params(), 0, 0, 0.0));
+        // Roundless ticks since the last rendezvous (run-ahead bound).
+        let mut unsynced = 0usize;
+
+        for t in 0..spec.steps {
+            let eta = spec.lr.at(t);
+            sync_participants_into(schedule, participation, r_count, t, &mut round);
+            let sync = !round.is_empty();
+            let ack = sync || unsynced + 1 >= MAX_RUNAHEAD;
+            unsynced = if ack { 0 } else { unsynced + 1 };
+            for tx in &cmd_txs {
+                tx.send(Cmd::Step { t, eta, ack }).expect("engine pool thread died");
+            }
+            if ack && !sync {
+                // Pure backpressure rendezvous: drain the (empty) replies.
+                for rx in &reply_rxs {
+                    let reply = rx.recv().expect("engine pool thread died");
+                    down_pool.extend(reply.spent_down);
+                    debug_assert!(reply.updates.is_empty());
+                }
+            }
+            if sync {
+                // One reply per thread (collected in thread order — the
+                // fold below re-imposes worker-index order anyway).
+                for rx in &reply_rxs {
+                    let reply = rx.recv().expect("engine pool thread died");
+                    down_pool.extend(reply.spent_down);
+                    for (r, msg, mem) in reply.updates {
+                        mem_norms[r] = mem;
+                        slots[r] = Some(msg);
+                    }
+                }
+                master.begin_round(round.len());
+                for &r in &round {
+                    let msg = slots[r].as_ref().expect("participant sent no update");
+                    bits_up += msg.wire_bits();
+                    master.apply_update(msg).expect("engine-internal update dim mismatch");
+                }
+                // Broadcasts, in worker order (the master's downlink state
+                // mutates per worker exactly as in the sequential loop).
+                let dense_payload = dense_down.then(|| master.params_snapshot());
+                let mut items: Vec<Vec<BroadcastItem>> =
+                    (0..cmd_txs.len()).map(|_| Vec::new()).collect();
+                for &r in &round {
+                    let recycled = slots[r].take().expect("participant sent no update");
+                    let payload = match &dense_payload {
+                        Some(p) => {
+                            bits_down += encode::dense_model_bits(d);
+                            Down::Dense(Arc::clone(p))
+                        }
+                        None => {
+                            if let Some(spare) = down_pool.pop() {
+                                down_buf.recycle(spare);
+                            }
+                            master.delta_broadcast_into(r, spec.down_compressor, &mut down_buf);
+                            bits_down += down_buf.message().wire_bits();
+                            Down::Delta(down_buf.take())
+                        }
+                    };
+                    items[owner[r]].push(BroadcastItem { worker: r, payload, recycled });
+                }
+                for (tx, its) in cmd_txs.iter().zip(items) {
+                    if !its.is_empty() {
+                        tx.send(Cmd::Broadcast { items: its }).expect("engine pool thread died");
+                    }
+                }
+            }
+            let step = t + 1;
+            if step % spec.eval_every == 0 || step == spec.steps {
+                history.push(eval.measure(
+                    spec,
+                    step,
+                    master.params(),
+                    bits_up,
+                    bits_down,
+                    avg_mem_values(&mem_norms),
+                ));
+            }
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Finish);
+        }
+        drop(cmd_txs);
+        history.final_params = master.into_params();
+        history
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pool_main(
+    mut cores: Vec<WorkerCore>,
+    model: &(dyn GradModel + Sync),
+    train: &Dataset,
+    compressor: &dyn Compressor,
+    schedule: &dyn SyncSchedule,
+    participation: &Participation,
+    cmd_rx: mpsc::Receiver<Cmd>,
+    reply_tx: mpsc::Sender<Reply>,
+) {
+    // Downlink messages consumed since the last reply (returned for reuse).
+    let mut spent_down: Vec<Message> = Vec::new();
+    for cmd in cmd_rx {
+        match cmd {
+            Cmd::Step { t, eta, ack } => {
+                let mut updates = Vec::new();
+                for core in cores.iter_mut() {
+                    core.local_step(model, train, eta);
+                    if ack
+                        && schedule.syncs_at(core.id(), t)
+                        && participation.participates(core.id(), t)
+                    {
+                        core.make_update(compressor);
+                        let mem = core.mem_norm_sq();
+                        updates.push((core.id(), core.take_update(), mem));
+                    }
+                }
+                if ack {
+                    let spent = std::mem::take(&mut spent_down);
+                    if reply_tx.send(Reply { updates, spent_down: spent }).is_err() {
+                        return; // coordinator gone
+                    }
+                }
+            }
+            Cmd::Broadcast { items } => {
+                for item in items {
+                    let core = cores
+                        .iter_mut()
+                        .find(|c| c.id() == item.worker)
+                        .expect("broadcast routed to a thread that does not own the worker");
+                    match item.payload {
+                        Down::Dense(params) => core.apply_dense_broadcast(&params),
+                        Down::Delta(msg) => {
+                            core.apply_delta_broadcast(&msg);
+                            spent_down.push(msg);
+                        }
+                    }
+                    core.recycle_update(item.recycled);
+                }
+            }
+            Cmd::Finish => return,
+        }
+    }
+}

@@ -206,6 +206,7 @@ pub fn run_series(
         seed,
         eval_every: w.eval_every,
         eval_rows: 512,
+        threads: 1,
     };
     Ok(engine::run_from(&spec, w.init.clone()))
 }

@@ -200,6 +200,10 @@ impl GradModel for Mlp {
     fn name(&self) -> String {
         format!("mlp({:?})", self.widths)
     }
+
+    fn as_sync(&self) -> Option<&(dyn GradModel + Sync)> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -41,6 +41,17 @@ pub trait GradModel {
     }
 
     fn name(&self) -> String;
+
+    /// A `Sync` view of this model, if the implementation supports sharing
+    /// one instance across threads. The parallel engine
+    /// (`TrainSpec::threads > 1`) requires it; models that cannot provide
+    /// one (e.g. the `Rc`-based PJRT backend) return `None` — the default —
+    /// and the engine falls back to the sequential path, which is
+    /// bit-identical anyway. Pure-data models implement this as
+    /// `Some(self)`.
+    fn as_sync(&self) -> Option<&(dyn GradModel + Sync)> {
+        None
+    }
 }
 
 /// Numerical-gradient check helper shared by the model tests:

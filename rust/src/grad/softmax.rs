@@ -72,7 +72,16 @@ impl GradModel for SoftmaxRegression {
         let b = batch.b;
         grad.iter_mut().for_each(|g| *g = 0.0);
         let (gw, gz) = grad.split_at_mut(self.w_len());
-        let mut probs = vec![0.0f32; c];
+        // Per-row probability scratch on the stack for realistic class
+        // counts, so the engine's steady-state step stays allocation-free.
+        let mut probs_stack = [0.0f32; 64];
+        let mut probs_heap;
+        let mut probs: &mut [f32] = if c <= 64 {
+            &mut probs_stack[..c]
+        } else {
+            probs_heap = vec![0.0f32; c];
+            &mut probs_heap
+        };
         let mut loss = 0.0f64;
         let inv_b = 1.0 / b as f32;
         for i in 0..b {
@@ -139,6 +148,10 @@ impl GradModel for SoftmaxRegression {
 
     fn name(&self) -> String {
         format!("softmax({}x{},λ={})", self.dim, self.classes, self.lambda)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn GradModel + Sync)> {
+        Some(self)
     }
 }
 

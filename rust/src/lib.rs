@@ -33,7 +33,7 @@ pub mod runtime;
 pub mod topology;
 pub mod util;
 
-pub use compress::{Compressor, Message};
+pub use compress::{Compressor, Message, MessageBuf};
 pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
 pub use protocol::{AggScale, MasterCore, WorkerCore};

@@ -20,6 +20,8 @@
 //!   --h N                         sync period H (default 1)
 //!   --async                       Algorithm 2 random per-worker gaps
 //!   --threaded                    threaded master/worker runtime (vs engine)
+//!   --threads N                   engine worker-pool threads (1 sequential,
+//!                                 0 = all cores; bit-identical either way)
 //!   --steps N --workers N --batch N --eta F --momentum F --seed N
 //!   --csv FILE                    write the metric history as CSV
 //!   --json                        print a JSON summary
@@ -69,7 +71,7 @@ USAGE: qsparse <figure|gamma-table|train|inspect|help> [options]
   gamma-table [--d 7850] [--k 40]
   train [--workload convex|nonconvex] [--pjrt NAME] [--compressor SPEC]
         [--down-compressor SPEC] [--participation SPEC] [--agg-scale MODE]
-        [--h N] [--async] [--threaded] [--steps N]
+        [--h N] [--async] [--threaded] [--threads N] [--steps N]
         [--workers N] [--batch N] [--eta F] [--momentum F] [--seed N]
         [--csv FILE] [--json]
   inspect [--artifacts DIR]
@@ -88,6 +90,8 @@ CSV/JSON output is the exact encoded wire length either way.
 materialized from the seed, so engine and threaded runs see the same S_t.
 --agg-scale picks the fold scale: `workers` (the paper's 1/R, biased under
 sampling) or `participants` (unbiased 1/|S_t|).
+--threads runs the engine's worker steps on a thread pool (0 = all cores).
+Histories are bit-identical across thread counts; it is purely a speed knob.
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
@@ -308,6 +312,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             seed,
             eval_every: f.parse_num("eval-every", 25)?,
             eval_rows: 512,
+            threads: f.parse_num("threads", 1)?,
         };
         engine::run_from(&spec, init)
     };

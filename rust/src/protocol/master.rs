@@ -7,22 +7,30 @@
 //! Broadcast: either the dense model (Identity downlink — the paper's
 //! setting) or a per-worker error-compensated compressed model delta (see
 //! the module docs of [`crate::protocol`] for the recursion and its
-//! invariant). Per-worker downlink state (`prev`, `mems`, RNG streams) only
+//! invariant). Per-worker downlink state (anchor mirrors, RNG streams) only
 //! advances for workers the driver actually broadcasts to, i.e. the round's
 //! participants.
 
 use super::{AggScale, DOWNLINK_RNG_SALT};
-use crate::compress::{Compressor, ErrorMemory, Message};
+use crate::compress::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
 /// Per-worker downlink compression state (only allocated when the run uses
 /// a non-Identity downlink operator).
+///
+/// Memory: `R·d` floats. The previous representation kept both a per-worker
+/// prev-sync model snapshot *and* an explicit error memory (`2·R·d`), but by
+/// the module invariant `m_t^{(r)} = x_t − anchor_r` the memory is a pure
+/// function of the global model and the worker's anchor — so only the
+/// anchor mirror is stored and the error compensation is implicit:
+/// `v_t = x_t − anchor_r` already equals `m_t + Δ_t` of the explicit
+/// recursion (exactly in ℝ; the collapse changes at most the last f32 ulp
+/// of the compressed stream, and both execution substrates share this code,
+/// so engine ≡ threaded parity is unaffected).
 struct DownlinkState {
-    /// Global model snapshot at this worker's previous broadcast.
-    prev: Vec<Vec<f32>>,
-    /// Server-side error memory m^{(r)} (≡ global − anchor_r, see mod docs).
-    mems: Vec<ErrorMemory>,
+    /// The master's mirror of each worker's anchor (reconstructed model).
+    anchors: Vec<Vec<f32>>,
     /// Per-worker streams so broadcast randomness is independent of the
     /// order workers are served in (engine vs threaded, sync vs async).
     rngs: Vec<Pcg64>,
@@ -48,14 +56,13 @@ impl MasterCore {
     /// `init` is the initial global model — it must equal the init handed to
     /// every `WorkerCore` (the downlink recursion starts from the shared
     /// anchor). Pass `compressed_downlink = true` iff the run broadcasts
-    /// compressed deltas; the per-worker state is `2·R·d` floats, skipped
-    /// entirely for the classic dense broadcast.
+    /// compressed deltas; the per-worker state is `R·d` floats (one anchor
+    /// mirror each), skipped entirely for the classic dense broadcast.
     pub fn new(init: Vec<f32>, workers: usize, seed: u64, compressed_downlink: bool) -> Self {
         assert!(workers >= 1);
         let d = init.len();
         let down = compressed_downlink.then(|| DownlinkState {
-            prev: vec![init.clone(); workers],
-            mems: (0..workers).map(|_| ErrorMemory::zeros(d)).collect(),
+            anchors: vec![init.clone(); workers],
             rngs: (0..workers)
                 .map(|r| Pcg64::new(seed ^ DOWNLINK_RNG_SALT, r as u64 + 1))
                 .collect(),
@@ -149,28 +156,46 @@ impl MasterCore {
     /// error-compensated model delta since `r`'s previous broadcast. The
     /// caller transmits it (engine: in-memory; coordinator: encoded) and the
     /// worker applies it via `WorkerCore::apply_delta_broadcast`.
+    /// Allocating wrapper around [`MasterCore::delta_broadcast_into`].
     ///
     /// Panics if the core was built with `compressed_downlink = false` —
     /// drivers choose the broadcast mode once, up front, from
     /// `Compressor::is_identity`.
     pub fn delta_broadcast(&mut self, r: usize, down: &dyn Compressor) -> Message {
+        let mut buf = MessageBuf::new();
+        self.delta_broadcast_into(r, down, &mut buf);
+        buf.take()
+    }
+
+    /// As `delta_broadcast`, producing the message into reusable storage —
+    /// the engine's allocation-free broadcast path.
+    pub fn delta_broadcast_into(&mut self, r: usize, down: &dyn Compressor, buf: &mut MessageBuf) {
         let st = self
             .down
             .as_mut()
             .expect("MasterCore built without compressed-downlink state");
-        // Δ = x_t − x_{prev sync of r} (model progress this worker missed).
-        for ((dv, g), p) in self.delta_buf.iter_mut().zip(&self.global).zip(&st.prev[r]) {
-            *dv = g - p;
+        // v = x_t − anchor_r: worker r's full staleness. Error compensation
+        // is implicit — the anchor already absorbed every past broadcast, so
+        // whatever compression dropped is still part of this difference.
+        for ((dv, g), a) in self.delta_buf.iter_mut().zip(&self.global).zip(&st.anchors[r]) {
+            *dv = g - a;
         }
-        let msg = st.mems[r].compress_update(&self.delta_buf, down, &mut st.rngs[r]);
-        st.prev[r].copy_from_slice(&self.global);
-        msg
+        down.compress_into(&self.delta_buf, &mut st.rngs[r], buf);
+        // Mirror the worker's reconstruction: anchor_r ← anchor_r + q_t.
+        buf.message().add_into(&mut st.anchors[r], 1.0);
     }
 
-    /// Server-side error memory of worker `r` (None for dense downlink).
-    /// Equals `global − anchor_r` up to f32 rounding — the staleness probe.
-    pub fn down_memory(&self, r: usize) -> Option<&[f32]> {
-        self.down.as_ref().map(|st| st.mems[r].as_slice())
+    /// Server-side error memory of worker `r` (None for dense downlink):
+    /// `global − anchor_r`, the staleness probe. Computed on demand — the
+    /// collapsed downlink state stores only the anchor mirror.
+    pub fn down_memory(&self, r: usize) -> Option<Vec<f32>> {
+        self.down.as_ref().map(|st| {
+            self.global
+                .iter()
+                .zip(&st.anchors[r])
+                .map(|(g, a)| g - a)
+                .collect()
+        })
     }
 
     /// Average ‖m^{(r)}‖² across workers (0.0 for dense downlink) — the
@@ -179,7 +204,21 @@ impl MasterCore {
         match &self.down {
             None => 0.0,
             Some(st) => {
-                st.mems.iter().map(|m| m.norm_sq()).sum::<f64>() / st.mems.len() as f64
+                let sum: f64 = st
+                    .anchors
+                    .iter()
+                    .map(|anchor| {
+                        self.global
+                            .iter()
+                            .zip(anchor)
+                            .map(|(g, a)| {
+                                let m = (g - a) as f64;
+                                m * m
+                            })
+                            .sum::<f64>()
+                    })
+                    .sum();
+                sum / st.anchors.len() as f64
             }
         }
     }

@@ -24,21 +24,23 @@
 //! `32·d` bits per worker per sync. On top of the cores this module adds the
 //! bidirectional extension studied in *Double Quantization* (Yu et al.) and
 //! *Error Compensated Quantized SGD* (Wu et al.): the master keeps, per
-//! worker, its own [`ErrorMemory`](crate::compress::ErrorMemory) and a
-//! snapshot of the global model at that worker's previous sync, and
-//! broadcasts the error-compensated, compressed *model delta*
+//! worker, a mirror of that worker's anchor (the model the worker has
+//! reconstructed so far) and broadcasts the error-compensated, compressed
+//! *model delta*
 //!
 //! ```text
-//!   Δ_t^{(r)} = x_t − x_{prev sync of r}         (model progress)
-//!   v_t       = m_t^{(r)} + Δ_t^{(r)}            (server error compensation)
+//!   v_t       = x_t − anchor_r                   (the worker's staleness)
 //!   q_t       = C_down(v_t)                      (broadcast, encoded wire)
-//!   m_{t+1}   = v_t − q_t
+//!   anchor_r  ← anchor_r + q_t                   (mirrors the worker)
 //! ```
 //!
-//! and the worker reconstructs its anchor as `x_anchor ← x_anchor + q_t`.
-//! By induction `m_t^{(r)} = x_t − x_anchor^{(r)}` exactly: the server
-//! memory *is* the worker's model staleness, so every dropped coordinate is
-//! re-offered at the next sync and the anchor tracks the global model.
+//! and the worker reconstructs its anchor identically. The server error
+//! memory of the explicit EF recursion (`v = m + Δ`, `m' = v − q`) satisfies
+//! `m_t^{(r)} = x_t − anchor_r` by induction, so it is *implicit* here:
+//! storing the anchor mirror alone (`R·d` floats, down from the historical
+//! `2·R·d` prev-snapshot + memory pair) gives the same recursion — every
+//! dropped coordinate stays part of `x_t − anchor_r` and is re-offered at
+//! the next sync, and the anchor tracks the global model.
 //!
 //! The `Identity` downlink operator short-circuits to the classic dense
 //! broadcast (`WorkerCore::apply_dense_broadcast` copies the model
@@ -129,7 +131,7 @@ mod tests {
         let msg = w.make_update(&Identity);
         // Identity: the transmitted delta is exactly the negative local step.
         assert_eq!(msg.dim(), d);
-        m.apply_update(&msg).unwrap();
+        m.apply_update(msg).unwrap();
         // R = 1 + identity ⇒ master model equals the worker's local iterate.
         for (g, l) in m.params().iter().zip(w.params()) {
             assert!((g - l).abs() < 1e-7);

@@ -8,13 +8,17 @@
 //! f32 rounding) cannot drift between the two substrates.
 
 use super::UPLINK_RNG_SALT;
-use crate::compress::{Compressor, ErrorMemory, Message};
-use crate::data::{Dataset, ShardSampler};
+use crate::compress::{Compressor, ErrorMemory, Message, MessageBuf};
+use crate::data::{Batch, Dataset, ShardSampler};
 use crate::grad::GradModel;
 use crate::optim::LocalSgd;
 use crate::util::rng::Pcg64;
 
 /// Per-worker state: local iterate, sync anchor, error memory, optimizer.
+///
+/// All per-step scratch (minibatch, gradient, delta, compressed message) is
+/// owned here and reused, so the steady-state `local_step`/`make_update`
+/// cycle performs no heap allocation.
 pub struct WorkerCore {
     id: usize,
     /// x̂_t^{(r)} — local iterate.
@@ -28,6 +32,8 @@ pub struct WorkerCore {
     rng: Pcg64,
     grad_buf: Vec<f32>,
     delta_buf: Vec<f32>,
+    batch_buf: Batch,
+    msg_buf: MessageBuf,
 }
 
 impl WorkerCore {
@@ -54,6 +60,8 @@ impl WorkerCore {
             rng: Pcg64::new(seed ^ UPLINK_RNG_SALT, id as u64 + 1),
             grad_buf: vec![0.0f32; d],
             delta_buf: vec![0.0f32; d],
+            batch_buf: Batch::empty(),
+            msg_buf: MessageBuf::new(),
         }
     }
 
@@ -77,19 +85,36 @@ impl WorkerCore {
 
     /// One local SGD(+momentum) step on the worker's shard (Alg 1 line 5).
     pub fn local_step(&mut self, model: &dyn GradModel, train: &Dataset, eta: f64) {
-        let batch = self.sampler.next_batch(train);
-        model.loss_grad(&self.local, &batch, &mut self.grad_buf);
+        self.sampler.next_batch_into(train, &mut self.batch_buf);
+        model.loss_grad(&self.local, &self.batch_buf, &mut self.grad_buf);
         self.opt.step(&mut self.local, &self.grad_buf, eta);
     }
 
     /// Synchronization, worker side (Alg 1 lines 6–10): net local progress
     /// `delta = x_anchor − x̂_{t+1/2}`, error-compensated and compressed.
-    /// The returned message is what goes on the wire (uplink).
-    pub fn make_update(&mut self, compressor: &dyn Compressor) -> Message {
+    /// The returned message is what goes on the wire (uplink); it borrows
+    /// the worker's reusable buffer — use [`WorkerCore::take_update`] when
+    /// ownership is needed (e.g. to send it to another thread).
+    pub fn make_update(&mut self, compressor: &dyn Compressor) -> &Message {
         for ((dv, a), l) in self.delta_buf.iter_mut().zip(&self.anchor).zip(&self.local) {
             *dv = a - l;
         }
-        self.memory.compress_update(&self.delta_buf, compressor, &mut self.rng)
+        self.memory
+            .compress_update_into(&self.delta_buf, compressor, &mut self.rng, &mut self.msg_buf);
+        self.msg_buf.message()
+    }
+
+    /// Take ownership of the message produced by the last `make_update`
+    /// (the parallel engine sends it to the master thread). Pair with
+    /// [`WorkerCore::recycle_update`] to return the buffer afterwards.
+    pub fn take_update(&mut self) -> Message {
+        self.msg_buf.take()
+    }
+
+    /// Return a consumed update message so its heap capacity is reused by
+    /// the next `make_update`.
+    pub fn recycle_update(&mut self, msg: Message) {
+        self.msg_buf.recycle(msg);
     }
 
     /// Dense broadcast (Identity downlink): adopt the master's model

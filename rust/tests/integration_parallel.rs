@@ -1,0 +1,155 @@
+//! Parallel engine ≡ sequential engine, bit for bit.
+//!
+//! `TrainSpec::threads` must be a pure wall-clock knob: for every operator,
+//! sync period, participation policy, downlink mode and thread count the
+//! `History` (losses, bit accounting, memory norms, final parameters) has
+//! to be identical to the sequential engine's — the engine folds sync
+//! updates in worker-index order and every worker draws only from its own
+//! salted PCG streams, so thread interleaving must be unobservable.
+
+use qsparse::compress::parse_spec;
+use qsparse::engine::{run, History, TrainSpec};
+use qsparse::grad::SoftmaxRegression;
+use qsparse::optim::LrSchedule;
+use qsparse::protocol::AggScale;
+use qsparse::topology::{FixedPeriod, ParticipationSpec};
+
+const N: usize = 240;
+const WORKERS: usize = 8;
+const STEPS: usize = 60;
+
+fn data() -> qsparse::data::Dataset {
+    qsparse::data::gaussian_clusters(N, 12, 4, 1.5, 0.5, 77)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(12, 4, 1.0 / N as f64)
+}
+
+/// Bitwise history equality — not tolerance-based: f64 metrics compared by
+/// bit pattern, parameters and bit counters by Eq.
+fn assert_bit_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    let asteps: Vec<usize> = a.points.iter().map(|p| p.step).collect();
+    let bsteps: Vec<usize> = b.points.iter().map(|p| p.step).collect();
+    assert_eq!(asteps, bsteps, "{ctx}: metric grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        let s = pa.step;
+        assert_eq!(pa.bits_up, pb.bits_up, "{ctx}: bits_up at step {s}");
+        assert_eq!(pa.bits_down, pb.bits_down, "{ctx}: bits_down at step {s}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {s} ({} vs {})",
+            pa.train_loss,
+            pb.train_loss
+        );
+        assert_eq!(
+            pa.mem_norm_sq.to_bits(),
+            pb.mem_norm_sq.to_bits(),
+            "{ctx}: mem_norm_sq at step {s}"
+        );
+    }
+}
+
+fn run_cfg(
+    up: &str,
+    down: &str,
+    h: usize,
+    part: &str,
+    scale: AggScale,
+    threads: usize,
+) -> History {
+    let ds = data();
+    let m = model();
+    let upc = parse_spec(up).unwrap();
+    let downc = parse_spec(down).unwrap();
+    let sched = FixedPeriod::new(h);
+    let participation = ParticipationSpec::parse(part)
+        .unwrap()
+        .materialize(WORKERS, STEPS, 5);
+    let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+    spec.down_compressor = downc.as_ref();
+    spec.workers = WORKERS;
+    spec.batch = 4;
+    spec.steps = STEPS;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.participation = &participation;
+    spec.agg_scale = scale;
+    spec.eval_every = 7; // off-grid vs H — exercises between-round metrics
+    spec.seed = 5;
+    spec.threads = threads;
+    run(&spec)
+}
+
+/// Operator × sync-period grid, full participation, dense downlink (the
+/// paper's setting): thread counts 1/2/8 must agree bit for bit.
+#[test]
+fn parallel_bit_identical_across_operators_and_h() {
+    for up in ["topk:k=10", "qtopk:k=10,bits=4", "signtopk:k=10,m=1", "qsgd:bits=4"] {
+        for h in [1usize, 4] {
+            let seq = run_cfg(up, "identity", h, "full", AggScale::Workers, 1);
+            assert!(
+                seq.final_loss().is_finite() && seq.total_bits_up() > 0,
+                "{up} H={h}: degenerate baseline"
+            );
+            for threads in [2usize, 8] {
+                let par = run_cfg(up, "identity", h, "full", AggScale::Workers, threads);
+                assert_bit_identical(&seq, &par, &format!("{up} H={h} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// Sampled participation (both policies and both fold scales) combined with
+/// a compressed downlink: the hardest case — per-worker downlink state and
+/// RNG streams advance only for participants, in worker order.
+#[test]
+fn parallel_bit_identical_sampled_participation_compressed_downlink() {
+    for (part, scale) in [
+        ("fixed:5", AggScale::Participants),
+        ("bernoulli:0.5", AggScale::Workers),
+    ] {
+        for down in ["topk:k=8", "qsgd:bits=2"] {
+            for h in [1usize, 4] {
+                let seq = run_cfg("qtopk:k=10,bits=4", down, h, part, scale, 1);
+                for threads in [2usize, 8] {
+                    let par = run_cfg("qtopk:k=10,bits=4", down, h, part, scale, threads);
+                    assert_bit_identical(
+                        &seq,
+                        &par,
+                        &format!("part={part} down={down} H={h} threads={threads}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Thread-count sweep incl. auto (`threads = 0`) and oversubscription
+/// (more threads than cores): same bits, same losses.
+#[test]
+fn parallel_thread_count_sweep_including_auto() {
+    let seq = run_cfg("signtopk:k=10,m=1", "topk:k=8", 1, "fixed:5", AggScale::Participants, 1);
+    for threads in [0usize, 2, 3, 8] {
+        let par = run_cfg(
+            "signtopk:k=10,m=1",
+            "topk:k=8",
+            1,
+            "fixed:5",
+            AggScale::Participants,
+            threads,
+        );
+        assert_bit_identical(&seq, &par, &format!("threads={threads}"));
+    }
+}
+
+/// `threads` larger than the worker count clamps cleanly (one worker per
+/// pool thread at most) and an H > 1 schedule lets threads run ahead
+/// between barriers without reordering anything observable.
+#[test]
+fn parallel_clamps_threads_to_workers() {
+    let seq = run_cfg("topk:k=10", "identity", 4, "full", AggScale::Workers, 1);
+    let par = run_cfg("topk:k=10", "identity", 4, "full", AggScale::Workers, 64);
+    assert_bit_identical(&seq, &par, "threads=64 (> R=8)");
+}

@@ -171,14 +171,14 @@ fn prop_downlink_roundtrip_and_staleness_drain() {
             }
         }
         // Freeze the model; EF must re-offer everything that was dropped.
-        let before: f64 = (0..workers).map(|r| norm2_sq(master.down_memory(r).unwrap())).sum();
+        let before: f64 = (0..workers).map(|r| norm2_sq(&master.down_memory(r).unwrap())).sum();
         for _round in 0..120 {
             for (r, anchor) in anchors.iter_mut().enumerate() {
                 let msg = master.delta_broadcast(r, down.as_ref());
                 msg.add_into(anchor, 1.0);
             }
         }
-        let after: f64 = (0..workers).map(|r| norm2_sq(master.down_memory(r).unwrap())).sum();
+        let after: f64 = (0..workers).map(|r| norm2_sq(&master.down_memory(r).unwrap())).sum();
         assert!(
             after <= 0.2 * before + 1e-9,
             "trial {trial}: staleness did not drain ({before:.3e} → {after:.3e})"

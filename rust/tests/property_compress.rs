@@ -2,7 +2,7 @@
 //! proptest crate, so these are randomized sweeps with fixed seeds — fully
 //! reproducible, wide input coverage including adversarial shapes).
 
-use qsparse::compress::{encode, parse_spec, Compressor, Message};
+use qsparse::compress::{encode, parse_spec, Compressor, Message, MessageBuf};
 use qsparse::util::rng::Pcg64;
 use qsparse::util::stats::norm2_sq;
 
@@ -64,6 +64,99 @@ fn prop_encode_decode_roundtrip() {
             // byte buffer is minimal
             assert!(bytes.len() as u64 * 8 < len + 8);
         }
+    }
+}
+
+/// The pure O(nnz) cost walk `encode::wire_bits` equals the serialized bit
+/// length `encode(msg).1` for every operator × input family × dimension —
+/// including the gap-vs-raw index-coding decision point (clustered supports
+/// take gaps, scattered high-d supports take raw).
+#[test]
+fn prop_wire_bits_matches_encoding() {
+    let mut rng = Pcg64::seeded(0xB175);
+    for trial in 0..120 {
+        let d = 1 + rng.below_usize(900);
+        let x = gen_vector(&mut rng, d, trial);
+        for op in operators(d, &mut rng) {
+            let msg = op.compress(&x, &mut rng);
+            let (_bytes, len) = encode::encode(&msg);
+            assert_eq!(
+                encode::wire_bits(&msg),
+                len,
+                "trial {trial} {}: cost walk diverged from serializer",
+                op.name()
+            );
+        }
+    }
+    // Hand-built clustered support (gap coding maximally favorable).
+    let d = 1 << 20;
+    let msg = Message::SparseF32 {
+        d,
+        idx: (500..628u32).collect(),
+        vals: vec![1.5f32; 128],
+    };
+    assert_eq!(encode::wire_bits(&msg), encode::encode(&msg).1);
+}
+
+/// `compress_into` is bit-identical to `compress` — same message, same RNG
+/// consumption — and stays so across repeated reuse of one `MessageBuf`
+/// (buffer recycling must not leak state between calls or operators).
+#[test]
+fn prop_compress_into_matches_compress() {
+    let mut rng = Pcg64::seeded(0x1A70);
+    let mut buf = MessageBuf::new();
+    for trial in 0..60 {
+        let d = 1 + rng.below_usize(500);
+        let x = gen_vector(&mut rng, d, trial);
+        for op in operators(d, &mut rng) {
+            let mut r1 = Pcg64::new(trial as u64, 9);
+            let mut r2 = r1.clone();
+            let direct = op.compress(&x, &mut r1);
+            // Same shared buf across operators/trials: variant switches and
+            // stale capacities must not change the result.
+            op.compress_into(&x, &mut r2, &mut buf);
+            assert_eq!(&direct, buf.message(), "trial {trial} {}", op.name());
+            assert_eq!(
+                r1.next_u64(),
+                r2.next_u64(),
+                "trial {trial} {}: RNG consumption diverged",
+                op.name()
+            );
+        }
+    }
+    // Large-d Top_k: exercise the sampled-threshold selection path through
+    // the scratch buffers (d ≥ 2^16, k ≪ d), twice for reuse.
+    let d = 1 << 17;
+    let mut rng = Pcg64::seeded(0x7071);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let op = parse_spec("topk:k=500").unwrap();
+    for _ in 0..2 {
+        let mut r1 = Pcg64::seeded(1);
+        let mut r2 = Pcg64::seeded(1);
+        let direct = op.compress(&x, &mut r1);
+        op.compress_into(&x, &mut r2, &mut buf);
+        assert_eq!(&direct, buf.message());
+    }
+}
+
+/// take/recycle keeps working mid-stream (the parallel engine's message
+/// hand-off): taking the produced message, using it, and recycling it must
+/// leave the next compress_into unaffected.
+#[test]
+fn prop_message_take_recycle_roundtrip() {
+    let mut rng = Pcg64::seeded(0x7A6E);
+    let mut buf = MessageBuf::new();
+    let op = parse_spec("qtopk:k=12,bits=4").unwrap();
+    for trial in 0..20 {
+        let d = 32 + rng.below_usize(200);
+        let x = gen_vector(&mut rng, d, trial);
+        let mut r1 = Pcg64::new(trial as u64, 3);
+        let mut r2 = r1.clone();
+        let direct = op.compress(&x, &mut r1);
+        op.compress_into(&x, &mut r2, &mut buf);
+        let taken = buf.take();
+        assert_eq!(direct, taken, "trial {trial}");
+        buf.recycle(taken);
     }
 }
 
