@@ -223,11 +223,31 @@ fn main() {
             per_step,
         );
         if threads == 1 {
-            note_steady_alloc(per_step);
+            note_steady_alloc("signtopk", per_step);
         }
         if threads == pool {
             break;
         }
+    }
+
+    // RandK joined the zero-allocation guarantee (its distinct-index sampler
+    // now draws through reusable scratch): probe it end-to-end too.
+    {
+        let randk = parse_spec("randk:k=170").unwrap();
+        let run_randk = |steps: usize| {
+            let mut spec = TrainSpec::new(&softmax, &ds, randk.as_ref(), &sched);
+            spec.workers = 8;
+            spec.batch = 8;
+            spec.steps = steps;
+            spec.lr = LrSchedule::Const { eta: 0.1 };
+            spec.eval_every = steps + 1;
+            std::hint::black_box(run(&spec));
+        };
+        let a1 = count_allocs(|| run_randk(alloc_steps));
+        let a2 = count_allocs(|| run_randk(2 * alloc_steps));
+        let per_step = a2.saturating_sub(a1) as f64 / alloc_steps as f64;
+        rec.value("alloc/engine-steady-per-step(R=8,randk,H=1,threads=1)", per_step);
+        note_steady_alloc("randk", per_step);
     }
 
     // Compress / encode micro path: the allocating API vs the `_into`
@@ -249,17 +269,18 @@ fn main() {
     }
 }
 
-/// Loud marker (non-fatal: bench boxes are noisy) if the zero-allocation
-/// guarantee of the sequential engine regresses.
-fn note_steady_alloc(per_step: f64) {
-    if per_step > 0.5 {
-        eprintln!(
-            "WARNING: sequential engine steady state allocates {per_step:.1} times per step \
-             (expected 0) — the zero-allocation hot path has regressed"
-        );
-    } else {
-        println!("sequential engine steady state: {per_step:.1} allocations/step (target 0)");
-    }
+/// Hard check: the sequential engine's steady state is allocation-free by
+/// design (and, since the Rand_k sampler rework, for every built-in
+/// operator). The probe is a deterministic allocator count — not timing —
+/// so a non-zero reading is a real regression, and this bench (which CI
+/// runs) fails loudly instead of warning.
+fn note_steady_alloc(op: &str, per_step: f64) {
+    assert!(
+        per_step == 0.0,
+        "sequential engine ({op}) steady state allocates {per_step:.2} times per step — \
+         the zero-allocation hot path has regressed"
+    );
+    println!("sequential engine ({op}) steady state: {per_step:.1} allocations/step (target 0)");
 }
 
 fn bench_compress_paths(
@@ -276,7 +297,7 @@ fn bench_compress_paths(
     let mut x = vec![0.0f32; d];
     softmax.loss_grad(&params, &batch, &mut x);
 
-    for spec in ["signtopk:k=170,m=1", "qtopk:k=400,bits=4"] {
+    for spec in ["signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400"] {
         let op = parse_spec(spec).unwrap();
         let mut rng = Pcg64::seeded(3);
         let samples = time_iters(warm * 5, iters * 20, || {

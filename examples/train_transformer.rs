@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         schedule: &schedule,
         participation: &qsparse::topology::FULL_PARTICIPATION,
         agg_scale: qsparse::protocol::AggScale::Workers,
+        server_opt: qsparse::optim::ServerOptSpec::Avg,
         sharding: Sharding::Iid,
         seed: 20190527,
         eval_every: 20,

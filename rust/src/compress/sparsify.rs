@@ -8,14 +8,20 @@
 use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
 
-/// Reusable buffers for the Top_k selection paths (packed introselect array,
-/// strided sample, candidate list). Owned by [`MessageBuf`] so steady-state
-/// selection allocates nothing once capacities are reached.
+/// Reusable buffers for the sparsifier selection paths: Top_k's packed
+/// introselect array, strided sample and candidate list, plus Rand_k's
+/// seen-index bitmap and Fisher–Yates arena. Owned by [`MessageBuf`] so
+/// steady-state selection allocates nothing once capacities are reached.
 #[derive(Default)]
 pub struct TopKScratch {
     packed: Vec<u64>,
     sample: Vec<u32>,
     cand: Vec<u64>,
+    /// Rand_k: per-call seen bitmap for Floyd's distinct-index sampler
+    /// (⌈d/64⌉ words, cleared by `resize`+`fill` each call).
+    seen: Vec<u64>,
+    /// Rand_k: partial Fisher–Yates arena for the dense regime (k·4 > d).
+    fy: Vec<u32>,
 }
 
 /// Keep the k largest-magnitude coordinates at full precision.
@@ -73,13 +79,16 @@ impl Compressor for RandK {
         super::compress_owned(self, x, rng)
     }
 
-    /// Reuses the message storage; the uniform sampler itself still
-    /// allocates O(k) (it must draw *distinct* indices), so Rand_k is not
-    /// part of the zero-allocation guarantee.
+    /// Allocation-free in steady state: the distinct-index sampler draws
+    /// through [`sample_indices_into`], which replays exactly the RNG
+    /// sequence of `Pcg64::sample_indices` against reusable scratch (a seen
+    /// bitmap / Fisher–Yates arena held in [`TopKScratch`]), so seeded
+    /// Rand_k trajectories are unchanged and the engine's zero-allocation
+    /// guarantee now covers Rand_k too.
     fn compress_into(&self, x: &[f32], rng: &mut Pcg64, buf: &mut MessageBuf) {
         let (mut idx, mut vals) = buf.take_sparse_f32();
         let k = self.k.min(x.len());
-        idx.extend(rng.sample_indices(x.len(), k).into_iter().map(|i| i as u32));
+        sample_indices_into(rng, x.len(), k, &mut idx, &mut buf.topk);
         idx.sort_unstable();
         vals.extend(idx.iter().map(|&i| x[i as usize]));
         buf.msg = Message::SparseF32 { d: x.len(), idx, vals };
@@ -91,6 +100,54 @@ impl Compressor for RandK {
 
     fn name(&self) -> String {
         format!("randk(k={})", self.k)
+    }
+}
+
+/// Sample `k` distinct indices from `[0, n)` into `out`, reusing `scratch`
+/// — the allocation-free twin of [`Pcg64::sample_indices`]. The two MUST
+/// stay in lockstep: same branch condition, same per-iteration draws, same
+/// output order, so seeded Rand_k trajectories are independent of which
+/// API produced them (property-tested via `compress` ≡ `compress_into`).
+pub(crate) fn sample_indices_into(
+    rng: &mut Pcg64,
+    n: usize,
+    k: usize,
+    out: &mut Vec<u32>,
+    scratch: &mut TopKScratch,
+) {
+    assert!(k <= n, "sample_indices_into: k={k} > n={n}");
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    if k * 4 <= n {
+        // Floyd's sampler; the hash set becomes a reusable bitmap.
+        let words = (n + 63) / 64;
+        let seen = &mut scratch.seen;
+        seen.clear();
+        seen.resize(words, 0);
+        for j in (n - k)..n {
+            let t = rng.below_usize(j + 1);
+            if (seen[t / 64] >> (t % 64)) & 1 == 0 {
+                seen[t / 64] |= 1 << (t % 64);
+                out.push(t as u32);
+            } else {
+                // j itself cannot have been drawn before (earlier draws are
+                // all < j), exactly as in Floyd's original.
+                seen[j / 64] |= 1 << (j % 64);
+                out.push(j as u32);
+            }
+        }
+    } else {
+        // Dense regime: partial Fisher–Yates over a reusable index arena.
+        let fy = &mut scratch.fy;
+        fy.clear();
+        fy.extend(0..n as u32);
+        for i in 0..k {
+            let j = i + rng.below_usize(n - i);
+            fy.swap(i, j);
+        }
+        out.extend_from_slice(&fy[..k]);
     }
 }
 
@@ -309,6 +366,24 @@ mod tests {
         let set: std::collections::HashSet<u32> = idx2.into_iter().collect();
         for i in 0..32u32 {
             assert!(set.contains(&(i * 919)), "missing spike {i}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_into_replays_sample_indices_exactly() {
+        // Same seed → same draws, same outputs, in both regimes (Floyd and
+        // partial Fisher–Yates) — the lockstep contract RandK relies on.
+        let mut scratch = TopKScratch::default();
+        let mut out = Vec::new();
+        for &(n, k) in &[(100usize, 5usize), (100, 90), (64, 16), (10, 10), (50, 0), (1, 1)] {
+            let mut a = Pcg64::seeded(42 + n as u64);
+            let mut b = a.clone();
+            let want = a.sample_indices(n, k);
+            sample_indices_into(&mut b, n, k, &mut out, &mut scratch);
+            let got: Vec<usize> = out.iter().map(|&i| i as usize).collect();
+            assert_eq!(got, want, "n={n} k={k}");
+            // RNG streams consumed identically.
+            assert_eq!(a.next_u64(), b.next_u64(), "n={n} k={k}: draw counts differ");
         }
     }
 

@@ -52,8 +52,16 @@ where
     let init = cfg.init.clone().unwrap_or_else(|| vec![0.0f32; d]);
     anyhow::ensure!(init.len() == d, "init length mismatch");
     let dense_down = cfg.down_compressor.is_identity();
+    let barrier = cfg.schedule.is_synchronous();
+    anyhow::ensure!(
+        barrier || cfg.server_opt.is_avg(),
+        "a non-averaging server optimizer requires a synchronous schedule on the threaded \
+         runtime: the aggregate-on-arrival path applies updates one at a time, so there is no \
+         round aggregate to step on (use the engine for asynchronous schedules)"
+    );
     let mut core = MasterCore::new(init.clone(), cfg.workers, cfg.seed, !dense_down);
     core.set_agg_scale(cfg.agg_scale);
+    core.set_server_opt(cfg.server_opt);
 
     let shards = crate::data::shard_indices(&train, cfg.workers, cfg.sharding);
     let (to_master_tx, to_master_rx) = mpsc::channel::<ToMaster>();
@@ -96,7 +104,6 @@ where
     let mut bits_up = 0u64;
     let mut bits_down = 0u64;
     let mut finished = 0usize;
-    let barrier = cfg.schedule.is_synchronous();
     // Last reported ‖m‖² per worker (memories live in worker threads, but
     // they only change at syncs, so the latest report is the current value).
     let mut mem_norms = vec![0.0f64; cfg.workers];
@@ -189,6 +196,9 @@ where
                             mem_norms[u.worker] = u.mem_norm_sq;
                             core.apply_update(&decode_update(&u)?)?;
                         }
+                        // Server optimizer step on the round aggregate
+                        // (no-op for Avg) — before any broadcast encoding.
+                        core.end_round();
                         // Reply to this round's participants only — a
                         // non-participant never blocks on the master, and a
                         // queued stale model would corrupt its next sync.
@@ -238,6 +248,9 @@ where
                     );
                     core.begin_round(s_t.len());
                     core.apply_update(&decode_update(&upd)?)?;
+                    // Avg is guaranteed here (non-Avg + async is rejected up
+                    // front), so this is a documented no-op.
+                    core.end_round();
                     if dense_down {
                         bits_down += encode::dense_model_bits(d);
                         let _ = reply_txs[worker].send(ModelMsg::Dense(core.params_snapshot()));

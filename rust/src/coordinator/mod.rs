@@ -35,7 +35,7 @@ pub use master::run_threaded;
 
 use crate::compress::{Compressor, Identity};
 use crate::data::Sharding;
-use crate::optim::LrSchedule;
+use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::AggScale;
 use crate::topology::{Participation, SyncSchedule};
 use std::sync::Arc;
@@ -60,6 +60,10 @@ pub struct CoordinatorConfig {
     pub participation: Participation,
     /// `1/R` (paper) vs unbiased `1/|S_t|` aggregation scaling.
     pub agg_scale: AggScale,
+    /// FedOpt-style server optimizer (mirrors `TrainSpec::server_opt`).
+    /// Non-`Avg` optimizers require a synchronous schedule here: the
+    /// aggregate-on-arrival path has no round boundary to step at.
+    pub server_opt: ServerOptSpec,
     pub sharding: Sharding,
     pub seed: u64,
     pub eval_every: usize,
@@ -81,6 +85,7 @@ impl CoordinatorConfig {
             schedule,
             participation: Participation::full(),
             agg_scale: AggScale::Workers,
+            server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: 0,
             eval_every: 10,

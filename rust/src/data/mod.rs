@@ -166,6 +166,25 @@ pub enum Sharding {
     LabelSkew,
 }
 
+impl Sharding {
+    /// Parse the spec token: `iid` | `label-skew`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "iid" => Ok(Sharding::Iid),
+            "label-skew" | "label_skew" | "skew" => Ok(Sharding::LabelSkew),
+            other => anyhow::bail!("unknown sharding `{other}` (expected iid | label-skew)"),
+        }
+    }
+
+    /// Canonical spec token — `parse(spec_str(s)) == s`.
+    pub fn spec_str(&self) -> &'static str {
+        match self {
+            Sharding::Iid => "iid",
+            Sharding::LabelSkew => "label-skew",
+        }
+    }
+}
+
 /// Partition row indices across workers.
 pub fn shard_indices(ds: &Dataset, workers: usize, sharding: Sharding) -> Vec<Vec<usize>> {
     assert!(workers >= 1);

@@ -36,14 +36,14 @@
 //! allocation in the sequential engine.
 
 pub mod metrics;
-mod parallel;
+pub(crate) mod parallel;
 
 pub use metrics::{History, MetricPoint};
 
 use crate::compress::{encode, Compressor, MessageBuf};
 use crate::data::{shard_indices, Batch, Dataset, Sharding};
 use crate::grad::GradModel;
-use crate::optim::LrSchedule;
+use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::{AggScale, MasterCore, WorkerCore};
 use crate::topology::{sync_participants_into, Participation, SyncSchedule};
 use crate::util::rng::Pcg64;
@@ -76,6 +76,10 @@ pub struct TrainSpec<'a> {
     /// `Workers` folds every update as `−(1/R)·g` (the paper); `Participants`
     /// uses the unbiased `−(1/|S_t|)·g` under sampled participation.
     pub agg_scale: AggScale,
+    /// FedOpt-style server optimizer applied to each round's aggregate
+    /// before broadcast. `Avg` (the default) is the paper's plain
+    /// averaging, bit-identical to the historical aggregation path.
+    pub server_opt: ServerOptSpec,
     pub sharding: Sharding,
     pub seed: u64,
     /// Record metrics every `eval_every` steps (and at the last step).
@@ -115,6 +119,7 @@ impl<'a> TrainSpec<'a> {
             schedule,
             participation: &crate::topology::FULL_PARTICIPATION,
             agg_scale: AggScale::Workers,
+            server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: 0,
             eval_every: 10,
@@ -182,6 +187,7 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
         .collect();
     let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
     master.set_agg_scale(spec.agg_scale);
+    master.set_server_opt(spec.server_opt);
 
     let eval = EvalSets::new(spec);
     let mut history = History::new();
@@ -213,6 +219,8 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
                 bits_up += msg.wire_bits();
                 master.apply_update(msg).expect("engine-internal update dim mismatch");
             }
+            // Server optimizer step on the round's aggregate (no-op for Avg).
+            master.end_round();
             // -- broadcast to the round's participants -----------------------
             for &r in &round {
                 if dense_down {

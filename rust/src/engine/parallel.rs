@@ -124,6 +124,7 @@ pub(super) fn run_from_parallel(
 
     let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
     master.set_agg_scale(spec.agg_scale);
+    master.set_server_opt(spec.server_opt);
     let eval = EvalSets::new(spec);
 
     // Copies of the shared read-only inputs for the pool closures (the
@@ -200,6 +201,10 @@ pub(super) fn run_from_parallel(
                     bits_up += msg.wire_bits();
                     master.apply_update(msg).expect("engine-internal update dim mismatch");
                 }
+                // Server optimizer step on the aggregate (no-op for Avg) —
+                // before the snapshot/deltas so broadcasts see the stepped
+                // model, exactly as in the sequential loop.
+                master.end_round();
                 // Broadcasts, in worker order (the master's downlink state
                 // mutates per worker exactly as in the sequential loop).
                 let dense_payload = dense_down.then(|| master.params_snapshot());
@@ -247,6 +252,31 @@ pub(super) fn run_from_parallel(
         drop(cmd_txs);
         history.final_params = master.into_params();
         history
+    })
+}
+
+/// Run `f` over `items` on scoped threads — one per item, results in item
+/// order. Used by the figure harness to run a figure's independent series
+/// concurrently (each series seeds its own RNG streams, so outputs are
+/// identical to the sequential loop's); the per-tick worker pool above
+/// stays dedicated to a single training run.
+pub(crate) fn map_parallel<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| s.spawn(move || f(i, item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel map worker panicked"))
+            .collect()
     })
 }
 

@@ -1,16 +1,19 @@
 //! Figure harness: one spec per paper figure (DESIGN.md §4).
 //!
-//! Every figure is a set of *series* (compressor × sync period × schedule
-//! kind) over one of two workloads:
+//! Every figure is a set of *series* — each an owned
+//! [`crate::spec::ExperimentSpec`] — over one of the two workloads
+//! (re-exported from `spec::workload`, where they moved so the spec layer
+//! can name them). The per-figure tables live in [`specs`], are bundled as
+//! JSON under `specs/` at the repo root (`qsparse specs dump` regenerates,
+//! `qsparse specs validate` smoke-runs them), and golden tests assert the
+//! two stay equal.
 //!
-//! * `ConvexSoftmax` — ℓ2-regularized softmax regression with the paper's
-//!   MNIST geometry (d = 7850, R = 15, b = 8; §5.2) on synthetic clusters.
-//! * `NonConvexMlp` — ReLU MLP with momentum 0.9 on local iterations,
-//!   standing in for ResNet-50/ImageNet (§5.1; substitution DESIGN.md §6).
-//!
-//! `run_figure` executes every series through the deterministic engine,
-//! writes `results/<fig>/<series>.csv` and prints the paper-style summary
-//! (bits-to-target ratios vs the uncompressed baseline).
+//! `run_figure` instantiates the workload once (all series share the same
+//! data/eval subsets, so curves are comparable), runs every series through
+//! the deterministic engine — concurrently, one scoped thread per series,
+//! when the model is `Sync`; per-series seeds are unchanged, so the CSVs
+//! are bit-identical to the sequential harness — and writes
+//! `results/<fig>/<series>.csv` plus the paper-style summary.
 
 pub mod report;
 pub mod specs;
@@ -18,78 +21,23 @@ pub mod specs;
 pub use report::FigureResult;
 pub use specs::{all_figure_ids, figure_spec};
 
-use crate::compress::Compressor;
-use crate::data::{gaussian_clusters_split, Dataset, Sharding};
+// Workload types live in `spec::` now; re-exported here so historical
+// `figures::Workload` / `figures::SEED` call sites keep working.
+pub use crate::spec::{Workload, WorkloadInstance, SEED};
+
+use crate::data::Dataset;
 use crate::engine::{self, History, TrainSpec};
-use crate::grad::{GradModel, Mlp, SoftmaxRegression};
-use crate::optim::LrSchedule;
-use crate::protocol::AggScale;
-use crate::topology::{FixedPeriod, ParticipationSpec, RandomGaps, SyncSchedule};
-
-/// The two simulated workloads.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Workload {
-    /// d = 7850 softmax regression, R = 15, b = 8 (paper §5.2).
-    ConvexSoftmax,
-    /// MLP classifier with momentum, R = 8, b = 16 (stand-in for §5.1).
-    NonConvexMlp,
-}
-
-/// One curve in a figure.
-pub struct SeriesSpec {
-    pub label: &'static str,
-    /// Compressor spec string (`compress::parse_spec`).
-    pub compressor: String,
-    /// Downlink compressor spec; `identity` = dense model broadcast.
-    pub down: String,
-    /// Sync period H (1 = sync every step).
-    pub h: usize,
-    /// Use the asynchronous schedule of Algorithm 2 (random per-worker gaps).
-    pub asynchronous: bool,
-    /// Sampled participation spec (`ParticipationSpec::parse`); `full` is
-    /// the paper's setting.
-    pub participation: String,
-    /// Aggregation scaling under sampled participation.
-    pub agg_scale: AggScale,
-}
-
-impl SeriesSpec {
-    pub fn new(label: &'static str, compressor: &str, h: usize) -> Self {
-        SeriesSpec {
-            label,
-            compressor: compressor.to_string(),
-            down: "identity".to_string(),
-            h,
-            asynchronous: false,
-            participation: "full".to_string(),
-            agg_scale: AggScale::Workers,
-        }
-    }
-
-    pub fn asynchronous(label: &'static str, compressor: &str, h: usize) -> Self {
-        SeriesSpec { asynchronous: true, ..SeriesSpec::new(label, compressor, h) }
-    }
-
-    /// Builder: compress the downlink with `spec` (bidirectional series).
-    pub fn with_down(mut self, spec: &str) -> Self {
-        self.down = spec.to_string();
-        self
-    }
-
-    /// Builder: sample worker participation per sync round.
-    pub fn with_participation(mut self, spec: &str, scale: AggScale) -> Self {
-        self.participation = spec.to_string();
-        self.agg_scale = scale;
-        self
-    }
-}
+use crate::grad::GradModel;
+use crate::spec::ExperimentSpec;
+use crate::util::json::Json;
 
 /// A full figure: workload + series + horizon + headline targets.
+#[derive(Debug, PartialEq)]
 pub struct FigureSpec {
-    pub id: &'static str,
-    pub title: &'static str,
+    pub id: String,
+    pub title: String,
     pub workload: Workload,
-    pub series: Vec<SeriesSpec>,
+    pub series: Vec<ExperimentSpec>,
     pub steps: usize,
     /// Train-loss target for the bits-to-target summary.
     pub target_loss: f64,
@@ -97,129 +45,175 @@ pub struct FigureSpec {
     pub target_test_err: f64,
 }
 
-/// Workload instantiation shared by all series of a figure (same data, same
-/// eval subsets, same seed ⇒ curves are directly comparable).
-pub struct WorkloadInstance {
-    pub train: Dataset,
-    pub test: Dataset,
-    pub model: Box<dyn GradModel>,
-    pub init: Vec<f32>,
-    pub workers: usize,
-    pub batch: usize,
-    pub lr: LrSchedule,
-    pub momentum: f64,
-    /// Reference k for Top_k in this workload (paper: 40 convex, ~1k/tensor
-    /// non-convex).
-    pub k: usize,
-    pub eval_every: usize,
-}
+impl FigureSpec {
+    /// Serialize (the bundled `specs/<id>.json` format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.as_str())),
+            ("title", Json::str(self.title.as_str())),
+            ("workload", Json::str(self.workload.spec_str())),
+            ("steps", Json::from(self.steps)),
+            ("target_loss", Json::num(self.target_loss)),
+            ("target_test_err", Json::num(self.target_test_err)),
+            ("series", Json::arr(self.series.iter().map(ExperimentSpec::to_json))),
+        ])
+    }
 
-pub const SEED: u64 = 20190527; // NeurIPS 2019 submission deadline :-)
-
-impl Workload {
-    pub fn instantiate(self, quick: bool) -> WorkloadInstance {
-        match self {
-            Workload::ConvexSoftmax => {
-                let (n, steps_scale) = if quick { (1500, 1) } else { (6000, 1) };
-                let dim = 784;
-                let classes = 10;
-                let (train, test) =
-                    gaussian_clusters_split(n, n / 4, dim, classes, 0.12, 1.0, SEED);
-                let model = SoftmaxRegression::new(dim, classes, 1.0 / n as f64);
-                let d = (dim + 1) * classes;
-                let _ = steps_scale;
-                let k = 40; // paper §5.2.2
-                let h_ref = 8usize;
-                // η_t = ξ/(a+t), a = dH/k (paper §5.2.2), ξ chosen so η_0 ≈ 1.2.
-                let a = (d * h_ref / k) as f64;
-                WorkloadInstance {
-                    init: vec![0.0; model.dim()],
-                    model: Box::new(model),
-                    train,
-                    test,
-                    workers: 15,
-                    batch: 8,
-                    lr: LrSchedule::InvTime { xi: 1.2 * a, a },
-                    momentum: 0.0,
-                    k,
-                    eval_every: 25,
-                }
-            }
-            Workload::NonConvexMlp => {
-                let n = if quick { 1200 } else { 4000 };
-                let dim = 256;
-                let classes = 10;
-                let widths = vec![dim, 64, classes];
-                let (train, test) =
-                    gaussian_clusters_split(n, n / 4, dim, classes, 0.22, 1.0, SEED ^ 2);
-                let model = Mlp::new(widths);
-                let init = model.init_params(SEED);
-                let d = model.dim();
-                WorkloadInstance {
-                    init,
-                    model: Box::new(model),
-                    train,
-                    test,
-                    workers: 8,
-                    batch: 16,
-                    lr: LrSchedule::Const { eta: 0.08 },
-                    momentum: 0.9,
-                    k: d / 100, // ~1% like the paper's per-tensor min(d_t, 1000)
-                    eval_every: 20,
-                }
-            }
+    /// Deserialize, with the same strict unknown-field policy as
+    /// `ExperimentSpec::from_json`.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("figure spec must be a JSON object"))?;
+        const KNOWN: &[&str] =
+            &["id", "title", "workload", "steps", "target_loss", "target_test_err", "series"];
+        for key in obj.keys() {
+            anyhow::ensure!(
+                KNOWN.contains(&key.as_str()),
+                "unknown field `{key}` in figure spec (known fields: {})",
+                KNOWN.join(", ")
+            );
         }
+        let get_str = |key: &str| -> anyhow::Result<String> {
+            j.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("figure field `{key}` must be a string"))
+        };
+        let get_f64 = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("figure field `{key}` must be a number"))
+        };
+        let series = j
+            .get("series")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("figure field `series` must be an array"))?
+            .iter()
+            .map(ExperimentSpec::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!series.is_empty(), "figure field `series` must be non-empty");
+        let steps = j
+            .get("steps")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("figure field `steps` must be an integer"))?;
+        let workload = Workload::parse(&get_str("workload")?)?;
+        // Series must agree with the figure on workload and horizon — the
+        // harness shares one workload instance and one step count across
+        // all series, so a mismatch would silently run a hybrid config.
+        for s in &series {
+            anyhow::ensure!(
+                s.workload == workload,
+                "series `{}` declares workload `{}` but the figure is `{}`",
+                s.label,
+                s.workload.spec_str(),
+                workload.spec_str()
+            );
+            anyhow::ensure!(
+                s.steps == steps,
+                "series `{}` declares {} steps but the figure runs {steps}",
+                s.label,
+                s.steps
+            );
+        }
+        Ok(FigureSpec {
+            id: get_str("id")?,
+            title: get_str("title")?,
+            workload,
+            series,
+            steps,
+            target_loss: get_f64("target_loss")?,
+            target_test_err: get_f64("target_test_err")?,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("figure spec: {e}"))?;
+        Self::from_json(&j)
     }
 }
 
-/// Run one series of a figure on an instantiated workload.
+/// Run one series on an instantiated workload, truncating the horizon to
+/// `steps` (the figure harness's quick mode). The series' own stored
+/// `steps` is the full-fidelity horizon.
 pub fn run_series(
     w: &WorkloadInstance,
-    s: &SeriesSpec,
+    s: &ExperimentSpec,
     steps: usize,
-    seed: u64,
 ) -> anyhow::Result<History> {
-    let compressor: Box<dyn Compressor> = crate::compress::parse_spec(&s.compressor)?;
-    let down_compressor: Box<dyn Compressor> = crate::compress::parse_spec(&s.down)?;
-    let schedule: Box<dyn SyncSchedule> = if s.asynchronous {
-        Box::new(RandomGaps::generate(w.workers, s.h, steps, seed ^ 0x5eed))
-    } else {
-        Box::new(FixedPeriod::new(s.h))
-    };
-    let participation =
-        ParticipationSpec::parse(&s.participation)?.materialize(w.workers, steps, seed);
+    run_series_on(w.model.as_ref(), &w.train, &w.test, &w.init, s, steps)
+}
+
+/// As [`run_series`], over the workload's individual (all `Sync`) pieces —
+/// the parallel harness hands each scoped thread the model's `Sync` view
+/// plus shared references to the datasets and init.
+fn run_series_on(
+    model: &dyn GradModel,
+    train: &Dataset,
+    test: &Dataset,
+    init: &[f32],
+    s: &ExperimentSpec,
+    steps: usize,
+) -> anyhow::Result<History> {
+    let ops = s.resolve_ops(steps)?;
     let spec = TrainSpec {
-        model: w.model.as_ref(),
-        train: &w.train,
-        test: Some(&w.test),
-        workers: w.workers,
-        batch: w.batch,
+        model,
+        train,
+        test: Some(test),
+        workers: s.workers,
+        batch: s.batch,
         steps,
-        lr: w.lr.clone(),
-        momentum: w.momentum,
-        compressor: compressor.as_ref(),
-        down_compressor: down_compressor.as_ref(),
-        schedule: schedule.as_ref(),
-        participation: &participation,
+        lr: s.lr.clone(),
+        momentum: s.momentum,
+        compressor: ops.up.as_ref(),
+        down_compressor: ops.down.as_ref(),
+        schedule: ops.schedule.as_ref(),
+        participation: &ops.participation,
         agg_scale: s.agg_scale,
-        sharding: Sharding::Iid,
-        seed,
-        eval_every: w.eval_every,
-        eval_rows: 512,
-        threads: 1,
+        server_opt: s.server_opt,
+        sharding: s.sharding,
+        seed: s.seed,
+        eval_every: s.eval_every,
+        eval_rows: s.eval_rows,
+        threads: s.threads,
     };
-    Ok(engine::run_from(&spec, w.init.clone()))
+    Ok(engine::run_from(&spec, init.to_vec()))
 }
 
 /// Run a whole figure; returns per-series histories with labels.
+///
+/// Independent series run concurrently (one scoped thread each) whenever
+/// the model exposes a `Sync` view — native workloads always do. Results
+/// are collected in series order and each series draws only from its own
+/// seeded streams, so the output is bit-identical to the sequential loop.
 pub fn run_figure(spec: &FigureSpec, quick: bool) -> anyhow::Result<FigureResult> {
     let w = spec.workload.instantiate(quick);
     let steps = if quick { spec.steps / 4 } else { spec.steps };
     let mut result = FigureResult::new(spec, steps);
-    for s in &spec.series {
-        let t0 = std::time::Instant::now();
-        let hist = run_series(&w, s, steps, SEED)?;
-        result.add(s.label, hist, t0.elapsed().as_secs_f64());
+    let runs: Vec<anyhow::Result<(History, f64)>> = match w.model.as_sync() {
+        Some(model) => {
+            // Capture only `Sync` pieces (the instance itself holds the
+            // non-`Sync`-bounded `Box<dyn GradModel>`).
+            let (train, test, init) = (&w.train, &w.test, &w.init[..]);
+            crate::engine::parallel::map_parallel(&spec.series, move |_i, s| {
+                let t0 = std::time::Instant::now();
+                let hist = run_series_on(model, train, test, init, s, steps)?;
+                Ok((hist, t0.elapsed().as_secs_f64()))
+            })
+        }
+        None => spec
+            .series
+            .iter()
+            .map(|s| {
+                let t0 = std::time::Instant::now();
+                let hist = run_series(&w, s, steps)?;
+                Ok((hist, t0.elapsed().as_secs_f64()))
+            })
+            .collect(),
+    };
+    for (s, run) in spec.series.iter().zip(runs) {
+        let (hist, secs) = run.map_err(|e| anyhow::anyhow!("series `{}`: {e}", s.label))?;
+        result.add(&s.label, hist, secs);
     }
     Ok(result)
 }
@@ -292,9 +286,52 @@ mod tests {
     #[test]
     fn quick_series_runs() {
         let w = Workload::ConvexSoftmax.instantiate(true);
-        let s = SeriesSpec::new("t", "topk:k=40", 4);
-        let h = run_series(&w, &s, 40, SEED).unwrap();
+        let s = ExperimentSpec::for_workload(Workload::ConvexSoftmax)
+            .with_label("t")
+            .with_up("topk:k=40")
+            .with_h(4);
+        let h = run_series(&w, &s, 40).unwrap();
         assert!(h.points.len() >= 2);
         assert!(h.final_loss().is_finite());
+    }
+
+    #[test]
+    fn figure_spec_json_roundtrips() {
+        for id in all_figure_ids() {
+            let spec = figure_spec(id).unwrap();
+            let back = FigureSpec::from_json(&spec.to_json())
+                .unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert_eq!(back, spec, "{id}");
+            let back = FigureSpec::from_json_str(&spec.to_json().pretty()).unwrap();
+            assert_eq!(back, spec, "{id} (pretty)");
+        }
+    }
+
+    #[test]
+    fn parallel_figure_harness_matches_sequential_series() {
+        // The concurrent per-series harness must reproduce the sequential
+        // runner bit for bit (per-series seeds are independent of the
+        // execution order).
+        let mut fig = figure_spec("fig9").unwrap();
+        fig.series.truncate(3);
+        let steps = 24;
+        let w = fig.workload.instantiate(true);
+        let seq: Vec<History> = fig
+            .series
+            .iter()
+            .map(|s| run_series(&w, s, steps).unwrap())
+            .collect();
+        fig.steps = steps * 4; // quick mode divides by 4
+        let par = run_figure(&fig, true).unwrap();
+        assert_eq!(par.series.len(), seq.len());
+        for ((label, hist, _), (s, want)) in par.series.iter().zip(fig.series.iter().zip(&seq)) {
+            assert_eq!(label, &s.label);
+            assert_eq!(hist.final_params, want.final_params, "{label}");
+            for (a, b) in hist.points.iter().zip(&want.points) {
+                assert_eq!(a.step, b.step, "{label}");
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{label}");
+                assert_eq!((a.bits_up, a.bits_down), (b.bits_up, b.bits_down), "{label}");
+            }
+        }
     }
 }

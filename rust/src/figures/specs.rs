@@ -1,17 +1,65 @@
-//! The per-figure series definitions (paper §5 + Appendix D).
+//! The per-figure series definitions (paper §5 + Appendix D), expressed as
+//! owned [`ExperimentSpec`] values — the same tables are bundled as JSON
+//! under `specs/` at the repo root (`qsparse specs dump` regenerates them;
+//! golden tests assert table ≡ bundle, and the pre-redesign hand-built
+//! runs are asserted bit-identical in `rust/tests/spec_roundtrip.rs`).
 //!
 //! Labels follow the paper's legends. k values: 40 for the convex workload
 //! (§5.2.2) and ~1% of d for the non-convex workload (the paper's
 //! per-tensor min(d_t, 1000) amounts to 0.4% of ResNet-50).
 
-use super::{FigureSpec, SeriesSpec, Workload};
+use super::{FigureSpec, Workload};
 use crate::protocol::AggScale;
+use crate::spec::ExperimentSpec;
 
-/// All figure ids in paper order (fig9 — bidirectional compression — and
-/// fig10 — sampled partial participation — are this repo's extensions, not
-/// paper figures).
+/// All figure ids in paper order (fig9 — bidirectional compression, fig10 —
+/// sampled partial participation, fig11 — server optimizers — are this
+/// repo's extensions, not paper figures).
 pub fn all_figure_ids() -> Vec<&'static str> {
-    vec!["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10"]
+    vec![
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    ]
+}
+
+/// Series factory for one figure: every series starts from the workload's
+/// defaults with the figure's horizon, exactly what the legacy tables
+/// hardcoded.
+struct Fig {
+    workload: Workload,
+    steps: usize,
+}
+
+impl Fig {
+    fn s(&self, label: &str, up: &str, h: usize) -> ExperimentSpec {
+        ExperimentSpec::for_workload(self.workload)
+            .with_label(label)
+            .with_up(up)
+            .with_h(h)
+            .with_steps(self.steps)
+    }
+
+    fn a(&self, label: &str, up: &str, h: usize) -> ExperimentSpec {
+        self.s(label, up, h).asynchronous(h)
+    }
+
+    fn build(
+        &self,
+        id: &str,
+        title: &str,
+        target_loss: f64,
+        target_test_err: f64,
+        series: Vec<ExperimentSpec>,
+    ) -> FigureSpec {
+        FigureSpec {
+            id: id.to_string(),
+            title: title.to_string(),
+            workload: self.workload,
+            series,
+            steps: self.steps,
+            target_loss,
+            target_test_err,
+        }
+    }
 }
 
 /// Build the spec for one figure id.
@@ -20,198 +68,206 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
     const KNC: &str = "170";
     // k for the convex softmax workload (paper: 40).
     const KC: &str = "40";
-    let s = SeriesSpec::new;
-    let a = SeriesSpec::asynchronous;
+    let nc = Fig { workload: Workload::NonConvexMlp, steps: 800 };
+    let cv = Fig { workload: Workload::ConvexSoftmax, steps: 1500 };
     Some(match id {
         // ---- non-convex (ResNet-50 stand-in) --------------------------------
-        "fig1" => FigureSpec {
-            id: "fig1",
-            title: "non-convex: Qsparse operators vs baselines (loss/acc vs iters & bits)",
-            workload: Workload::NonConvexMlp,
-            steps: 800,
-            target_loss: 0.05,
-            target_test_err: 0.12,
-            series: vec![
-                s("SGD", "identity", 1),
-                s("EF-QSGD-4bit", "qsgd:bits=4", 1),
-                s("EF-SignSGD", "sign", 1),
-                s("TopK", &format!("topk:k={KNC}"), 1),
-                s("QTopK-4bit", &format!("qtopk:k={KNC},bits=4"), 1),
-                s("SignTopK", &format!("signtopk:k={KNC},m=1"), 1),
+        "fig1" => nc.build(
+            "fig1",
+            "non-convex: Qsparse operators vs baselines (loss/acc vs iters & bits)",
+            0.05,
+            0.12,
+            vec![
+                nc.s("SGD", "identity", 1),
+                nc.s("EF-QSGD-4bit", "qsgd:bits=4", 1),
+                nc.s("EF-SignSGD", "sign", 1),
+                nc.s("TopK", &format!("topk:k={KNC}"), 1),
+                nc.s("QTopK-4bit", &format!("qtopk:k={KNC},bits=4"), 1),
+                nc.s("SignTopK", &format!("signtopk:k={KNC},m=1"), 1),
             ],
-        },
-        "fig2" => FigureSpec {
-            id: "fig2",
-            title: "non-convex: effect of local iterations H ∈ {1,4,8}",
-            workload: Workload::NonConvexMlp,
-            steps: 800,
-            target_loss: 0.05,
-            target_test_err: 0.12,
-            series: vec![
-                s("SGD_1L", "identity", 1),
-                s("SGD_4L", "identity", 4),
-                s("SGD_8L", "identity", 8),
-                s("SignTopK_1L", &format!("signtopk:k={KNC},m=1"), 1),
-                s("SignTopK_4L", &format!("signtopk:k={KNC},m=1"), 4),
-                s("SignTopK_8L", &format!("signtopk:k={KNC},m=1"), 8),
-                s("QTopK_4L", &format!("qtopk:k={KNC},bits=4"), 4),
-                s("TopK_4L", &format!("topk:k={KNC}"), 4),
+        ),
+        "fig2" => nc.build(
+            "fig2",
+            "non-convex: effect of local iterations H ∈ {1,4,8}",
+            0.05,
+            0.12,
+            vec![
+                nc.s("SGD_1L", "identity", 1),
+                nc.s("SGD_4L", "identity", 4),
+                nc.s("SGD_8L", "identity", 8),
+                nc.s("SignTopK_1L", &format!("signtopk:k={KNC},m=1"), 1),
+                nc.s("SignTopK_4L", &format!("signtopk:k={KNC},m=1"), 4),
+                nc.s("SignTopK_8L", &format!("signtopk:k={KNC},m=1"), 8),
+                nc.s("QTopK_4L", &format!("qtopk:k={KNC},bits=4"), 4),
+                nc.s("TopK_4L", &format!("topk:k={KNC}"), 4),
             ],
-        },
-        "fig3" => FigureSpec {
-            id: "fig3",
-            title: "non-convex: Qsparse-local-SGD vs EF-SignSGD / TopK-SGD / local SGD",
-            workload: Workload::NonConvexMlp,
-            steps: 800,
-            target_loss: 0.05,
-            target_test_err: 0.12,
-            series: vec![
-                s("SGD", "identity", 1),
-                s("LocalSGD_8L", "identity", 8),
-                s("EF-SignSGD", "sign", 1),
-                s("TopK-SGD", &format!("topk:k={KNC}"), 1),
-                s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KNC},m=1"), 8),
-                s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KNC},bits=4"), 8),
+        ),
+        "fig3" => nc.build(
+            "fig3",
+            "non-convex: Qsparse-local-SGD vs EF-SignSGD / TopK-SGD / local SGD",
+            0.05,
+            0.12,
+            vec![
+                nc.s("SGD", "identity", 1),
+                nc.s("LocalSGD_8L", "identity", 8),
+                nc.s("EF-SignSGD", "sign", 1),
+                nc.s("TopK-SGD", &format!("topk:k={KNC}"), 1),
+                nc.s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KNC},m=1"), 8),
+                nc.s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KNC},bits=4"), 8),
             ],
-        },
+        ),
         // ---- convex (MNIST-geometry softmax) --------------------------------
-        "fig4" => FigureSpec {
-            id: "fig4",
-            title: "convex: composed operators (2-bit vs 4-bit QSGD; loss vs iters & bits)",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                s("SGD", "identity", 1),
-                s("EF-QSGD-4bit", "qsgd:bits=4", 1),
-                s("EF-QSGD-2bit", "qsgd:bits=2", 1),
-                s("TopK", &format!("topk:k={KC}"), 1),
-                s("QTopK-4bit", &format!("qtopk:k={KC},bits=4,scaled"), 1),
-                s("QTopK-2bit", &format!("qtopk:k={KC},bits=2,scaled"), 1),
-                s("SignTopK", &format!("signtopk:k={KC},m=1"), 1),
+        "fig4" => cv.build(
+            "fig4",
+            "convex: composed operators (2-bit vs 4-bit QSGD; loss vs iters & bits)",
+            0.10,
+            0.15,
+            vec![
+                cv.s("SGD", "identity", 1),
+                cv.s("EF-QSGD-4bit", "qsgd:bits=4", 1),
+                cv.s("EF-QSGD-2bit", "qsgd:bits=2", 1),
+                cv.s("TopK", &format!("topk:k={KC}"), 1),
+                cv.s("QTopK-4bit", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                cv.s("QTopK-2bit", &format!("qtopk:k={KC},bits=2,scaled"), 1),
+                cv.s("SignTopK", &format!("signtopk:k={KC},m=1"), 1),
             ],
-        },
-        "fig5" => FigureSpec {
-            id: "fig5",
-            title: "convex: local iterations × operators; coarse vs fine quantizers",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                s("SGD_1L", "identity", 1),
-                s("SGD_8L", "identity", 8),
-                s("TopK_8L", &format!("topk:k={KC}"), 8),
-                s("SignTopK_1L", &format!("signtopk:k={KC},m=1"), 1),
-                s("SignTopK_4L", &format!("signtopk:k={KC},m=1"), 4),
-                s("SignTopK_8L", &format!("signtopk:k={KC},m=1"), 8),
-                s("QTopK-2bit_1L", &format!("qtopk:k={KC},bits=2,scaled"), 1),
-                s("QTopK-2bit_8L", &format!("qtopk:k={KC},bits=2,scaled"), 8),
-                s("QTopK-4bit_1L", &format!("qtopk:k={KC},bits=4,scaled"), 1),
-                s("QTopK-4bit_8L", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+        ),
+        "fig5" => cv.build(
+            "fig5",
+            "convex: local iterations × operators; coarse vs fine quantizers",
+            0.10,
+            0.15,
+            vec![
+                cv.s("SGD_1L", "identity", 1),
+                cv.s("SGD_8L", "identity", 8),
+                cv.s("TopK_8L", &format!("topk:k={KC}"), 8),
+                cv.s("SignTopK_1L", &format!("signtopk:k={KC},m=1"), 1),
+                cv.s("SignTopK_4L", &format!("signtopk:k={KC},m=1"), 4),
+                cv.s("SignTopK_8L", &format!("signtopk:k={KC},m=1"), 8),
+                cv.s("QTopK-2bit_1L", &format!("qtopk:k={KC},bits=2,scaled"), 1),
+                cv.s("QTopK-2bit_8L", &format!("qtopk:k={KC},bits=2,scaled"), 8),
+                cv.s("QTopK-4bit_1L", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                cv.s("QTopK-4bit_8L", &format!("qtopk:k={KC},bits=4,scaled"), 8),
             ],
-        },
-        "fig6" => FigureSpec {
-            id: "fig6",
-            title: "convex: Qsparse-local-SGD vs EF-QSGD / EF-SignSGD / TopK-SGD",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                s("SGD", "identity", 1),
-                s("EF-QSGD", "qsgd:bits=4", 1),
-                s("EF-SignSGD", "sign", 1),
-                s("TopK-SGD", &format!("topk:k={KC}"), 1),
-                s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KC},m=1"), 8),
-                s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+        ),
+        "fig6" => cv.build(
+            "fig6",
+            "convex: Qsparse-local-SGD vs EF-QSGD / EF-SignSGD / TopK-SGD",
+            0.10,
+            0.15,
+            vec![
+                cv.s("SGD", "identity", 1),
+                cv.s("EF-QSGD", "qsgd:bits=4", 1),
+                cv.s("EF-SignSGD", "sign", 1),
+                cv.s("TopK-SGD", &format!("topk:k={KC}"), 1),
+                cv.s("Qsparse-local(SignTopK,8L)", &format!("signtopk:k={KC},m=1"), 8),
+                cv.s("Qsparse-local(QTopK,8L)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
             ],
-        },
-        "fig7" => FigureSpec {
-            id: "fig7",
-            title: "convex asynchronous (Algorithm 2): random per-worker gaps U[1,H]",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                a("SGD-async", "identity", 8),
-                a("EF-SignSGD-async", "sign", 8),
-                a("TopK-async", &format!("topk:k={KC}"), 8),
-                a("Qsparse-async(SignTopK)", &format!("signtopk:k={KC},m=1"), 8),
-                a("Qsparse-async(QTopK)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
+        ),
+        "fig7" => cv.build(
+            "fig7",
+            "convex asynchronous (Algorithm 2): random per-worker gaps U[1,H]",
+            0.10,
+            0.15,
+            vec![
+                cv.a("SGD-async", "identity", 8),
+                cv.a("EF-SignSGD-async", "sign", 8),
+                cv.a("TopK-async", &format!("topk:k={KC}"), 8),
+                cv.a("Qsparse-async(SignTopK)", &format!("signtopk:k={KC},m=1"), 8),
+                cv.a("Qsparse-async(QTopK)", &format!("qtopk:k={KC},bits=4,scaled"), 8),
             ],
-        },
+        ),
         // ---- appendix D ------------------------------------------------------
-        "fig8" => FigureSpec {
-            id: "fig8",
-            title: "appendix D: scaled vs unscaled QTopK under local iterations",
-            workload: Workload::NonConvexMlp,
-            steps: 800,
-            target_loss: 0.05,
-            target_test_err: 0.12,
-            series: vec![
-                s("QTopK_L0", &format!("qtopk:k={KNC},bits=4"), 1),
-                s("QTopK-scaled_L0", &format!("qtopk:k={KNC},bits=4,scaled"), 1),
-                s("QTopK_L4", &format!("qtopk:k={KNC},bits=4"), 4),
-                s("QTopK-scaled_L4", &format!("qtopk:k={KNC},bits=4,scaled"), 4),
-                s("QTopK_L8", &format!("qtopk:k={KNC},bits=4"), 8),
-                s("QTopK-scaled_L8", &format!("qtopk:k={KNC},bits=4,scaled"), 8),
+        "fig8" => nc.build(
+            "fig8",
+            "appendix D: scaled vs unscaled QTopK under local iterations",
+            0.05,
+            0.12,
+            vec![
+                nc.s("QTopK_L0", &format!("qtopk:k={KNC},bits=4"), 1),
+                nc.s("QTopK-scaled_L0", &format!("qtopk:k={KNC},bits=4,scaled"), 1),
+                nc.s("QTopK_L4", &format!("qtopk:k={KNC},bits=4"), 4),
+                nc.s("QTopK-scaled_L4", &format!("qtopk:k={KNC},bits=4,scaled"), 4),
+                nc.s("QTopK_L8", &format!("qtopk:k={KNC},bits=4"), 8),
+                nc.s("QTopK-scaled_L8", &format!("qtopk:k={KNC},bits=4,scaled"), 8),
             ],
-        },
+        ),
         // ---- bidirectional extension (not in the paper) ----------------------
         // Downlink error-compensated compression (Double Quantization /
         // EC-QSGD style) on top of the paper's uplink operators. The downlink
         // k is 10× the uplink k: the broadcast carries the *aggregate* of R
         // worker updates, so its support is naturally wider.
-        "fig9" => FigureSpec {
-            id: "fig9",
-            title: "convex: bidirectional compression (downlink EF) vs dense broadcast",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                s("SGD", "identity", 1),
-                s("QTopK-up", &format!("qtopk:k={KC},bits=4,scaled"), 1),
-                s("QTopK-bidir", &format!("qtopk:k={KC},bits=4,scaled"), 1)
+        "fig9" => cv.build(
+            "fig9",
+            "convex: bidirectional compression (downlink EF) vs dense broadcast",
+            0.10,
+            0.15,
+            vec![
+                cv.s("SGD", "identity", 1),
+                cv.s("QTopK-up", &format!("qtopk:k={KC},bits=4,scaled"), 1),
+                cv.s("QTopK-bidir", &format!("qtopk:k={KC},bits=4,scaled"), 1)
                     .with_down("qtopk:k=400,bits=4"),
-                s("TopK-bidir", &format!("topk:k={KC}"), 1).with_down("topk:k=400"),
-                s("SignTopK-bidir_8L", &format!("signtopk:k={KC},m=1"), 8)
+                cv.s("TopK-bidir", &format!("topk:k={KC}"), 1).with_down("topk:k=400"),
+                cv.s("SignTopK-bidir_8L", &format!("signtopk:k={KC},m=1"), 8)
                     .with_down("qtopk:k=400,bits=4"),
             ],
-        },
+        ),
         // ---- sampled partial participation (not in the paper) ----------------
         // Bits-to-target under sampled worker subsets per sync round: only
         // S_t ⊆ [R] workers sync each round (federated-style client
         // sampling), uplink QTop_k + compressed downlink. The unbiased
         // 1/|S_t| scale is compared with the paper's 1/R fold, which under-
         // steps by E|S_t|/R the moment participation is partial.
-        "fig10" => FigureSpec {
-            id: "fig10",
-            title: "convex: sampled participation p ∈ {1.0, 0.5, 0.25} (1/|S_t| vs 1/R)",
-            workload: Workload::ConvexSoftmax,
-            steps: 1500,
-            target_loss: 0.10,
-            target_test_err: 0.15,
-            series: vec![
-                s("QTopK-bidir_p1.00", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+        "fig10" => cv.build(
+            "fig10",
+            "convex: sampled participation p ∈ {1.0, 0.5, 0.25} (1/|S_t| vs 1/R)",
+            0.10,
+            0.15,
+            vec![
+                cv.s("QTopK-bidir_p1.00", &format!("qtopk:k={KC},bits=4,scaled"), 4)
                     .with_down("qtopk:k=400,bits=4"),
-                s("QTopK-bidir_p0.50", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                cv.s("QTopK-bidir_p0.50", &format!("qtopk:k={KC},bits=4,scaled"), 4)
                     .with_down("qtopk:k=400,bits=4")
                     .with_participation("bernoulli:0.5", AggScale::Participants),
-                s("QTopK-bidir_p0.25", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                cv.s("QTopK-bidir_p0.25", &format!("qtopk:k={KC},bits=4,scaled"), 4)
                     .with_down("qtopk:k=400,bits=4")
                     .with_participation("bernoulli:0.25", AggScale::Participants),
-                s("QTopK-bidir_m8", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                cv.s("QTopK-bidir_m8", &format!("qtopk:k={KC},bits=4,scaled"), 4)
                     .with_down("qtopk:k=400,bits=4")
                     .with_participation("fixed:8", AggScale::Participants),
-                s("QTopK-bidir_p0.50_1R", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                cv.s("QTopK-bidir_p0.50_1R", &format!("qtopk:k={KC},bits=4,scaled"), 4)
                     .with_down("qtopk:k=400,bits=4")
                     .with_participation("bernoulli:0.5", AggScale::Workers),
             ],
-        },
+        ),
+        // ---- server optimizers (not in the paper) ----------------------------
+        // FedOpt-style server momentum/Adam on the round aggregate, composed
+        // with the error-compensated bidirectional path: bits-to-target of a
+        // stepped server vs the paper's plain averaging, everything else
+        // (QTopK uplink, compressed downlink, H = 4) held fixed. The
+        // momentum series use lr = 1 − β (EMA of round deltas: steady-state
+        // step magnitude matches Avg, so differences are pure smoothing).
+        "fig11" => cv.build(
+            "fig11",
+            "convex: server optimizer (FedOpt) vs plain averaging under QTopK + compressed downlink",
+            0.10,
+            0.15,
+            vec![
+                cv.s("QTopK-bidir_avg", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4"),
+                cv.s("QTopK-bidir_mom0.9", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_server_opt("momentum:beta=0.9,lr=0.1"),
+                cv.s("QTopK-bidir_mom0.5", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_server_opt("momentum:beta=0.5,lr=0.5"),
+                cv.s("QTopK-bidir_adam", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_server_opt("adam:b1=0.9,b2=0.99,eps=0.001,lr=0.01"),
+                cv.s("QTopK-up_mom0.9", &format!("qtopk:k={KC},bits=4,scaled"), 4)
+                    .with_server_opt("momentum:beta=0.9,lr=0.1"),
+            ],
+        ),
         _ => return None,
     })
 }
@@ -221,19 +277,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn every_id_has_a_spec_and_parses() {
+    fn every_id_has_a_spec_that_validates() {
         for id in all_figure_ids() {
             let spec = figure_spec(id).unwrap_or_else(|| panic!("{id} missing"));
             assert_eq!(spec.id, id);
             assert!(!spec.series.is_empty());
             for s in &spec.series {
-                crate::compress::parse_spec(&s.compressor)
-                    .unwrap_or_else(|e| panic!("{id}/{}: {e}", s.label));
-                crate::compress::parse_spec(&s.down)
-                    .unwrap_or_else(|e| panic!("{id}/{} downlink: {e}", s.label));
-                crate::topology::ParticipationSpec::parse(&s.participation)
-                    .unwrap_or_else(|e| panic!("{id}/{} participation: {e}", s.label));
-                assert!(s.h >= 1);
+                s.validate().unwrap_or_else(|e| panic!("{id}/{}: {e}", s.label));
+                assert_eq!(s.workload, spec.workload, "{id}/{}", s.label);
+                assert_eq!(s.steps, spec.steps, "{id}/{}", s.label);
+                assert!(s.schedule.h() >= 1);
             }
         }
         assert!(figure_spec("fig99").is_none());
@@ -243,10 +296,19 @@ mod tests {
     fn labels_unique_within_figure() {
         for id in all_figure_ids() {
             let spec = figure_spec(id).unwrap();
-            let mut labels: Vec<_> = spec.series.iter().map(|s| s.label).collect();
+            let mut labels: Vec<_> = spec.series.iter().map(|s| s.label.clone()).collect();
             labels.sort_unstable();
             labels.dedup();
             assert_eq!(labels.len(), spec.series.len(), "{id} duplicate labels");
         }
+    }
+
+    #[test]
+    fn fig11_varies_only_the_server_opt_on_the_bidir_axis() {
+        use crate::optim::ServerOptSpec;
+        let spec = figure_spec("fig11").unwrap();
+        assert!(spec.series[0].server_opt.is_avg(), "first series is the Avg baseline");
+        assert!(spec.series.iter().skip(1).all(|s| !s.server_opt.is_avg()));
+        assert!(matches!(spec.series[3].server_opt, ServerOptSpec::Adam { .. }));
     }
 }

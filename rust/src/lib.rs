@@ -30,11 +30,14 @@ pub mod grad;
 pub mod optim;
 pub mod protocol;
 pub mod runtime;
+pub mod spec;
 pub mod topology;
 pub mod util;
 
 pub use compress::{Compressor, Message, MessageBuf};
 pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
+pub use optim::{ServerOpt, ServerOptSpec};
 pub use protocol::{AggScale, MasterCore, WorkerCore};
+pub use spec::{CompressorSpec, ExperimentSpec, ResolvedExperiment, ScheduleSpec, Workload};
 pub use topology::{Participation, ParticipationSpec};

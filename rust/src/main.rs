@@ -4,41 +4,51 @@
 //!   figure <id|all> [--out results] [--quick]     regenerate paper figures
 //!   gamma-table [--d N] [--k N]                   Lemma 1–3 γ table
 //!   train [options]                               one training run
+//!   specs <dump|validate> [--dir specs]           bundled experiment specs
 //!   inspect [--artifacts DIR]                     list AOT artifacts
 //!
-//! `train` options:
+//! `train` describes the run as one owned `ExperimentSpec` (spec::): flags
+//! build or override it, `--spec FILE` loads it from JSON, `--dump-spec`
+//! prints the resulting JSON instead of training — so any flag combination
+//! round-trips through an artifact:
+//!
+//!   qsparse train --compressor topk:k=40 --h 8 --dump-spec > run.json
+//!   qsparse train --spec run.json
+//!
+//! `train` options (all optional; flags override `--spec` fields):
+//!   --spec FILE                   load an ExperimentSpec JSON
+//!   --dump-spec                   print the spec JSON and exit
 //!   --workload convex|nonconvex   native substrates (default convex)
 //!   --pjrt NAME                   use the AOT artifact NAME instead
 //!   --artifacts DIR               artifact dir (default artifacts)
+//!   --label NAME                  run label (summaries/CSV naming)
 //!   --compressor SPEC             e.g. topk:k=40 | qtopk:k=40,bits=4,scaled
 //!   --down-compressor SPEC        downlink (master→worker) compressor;
 //!                                 default identity = dense model broadcast
-//!   --participation SPEC          sampled worker participation per sync
-//!                                 round: full | bernoulli:P | fixed:M
-//!   --agg-scale MODE              workers (paper 1/R) | participants
-//!                                 (unbiased 1/|S_t| under sampling)
-//!   --h N                         sync period H (default 1)
+//!   --participation SPEC          full | bernoulli:P | fixed:M
+//!   --agg-scale MODE              workers (1/R) | participants (1/|S_t|)
+//!   --server-opt SPEC             avg | momentum:beta=B[,lr=L] |
+//!                                 adam[:b1=..,b2=..,eps=..,lr=..]
+//!   --h N                         sync period H (default 1; preserves the
+//!                                 loaded spec's sync/async kind)
+//!   --schedule SPEC               sync:H | async:H (replaces the schedule)
 //!   --async                       Algorithm 2 random per-worker gaps
 //!   --threaded                    threaded master/worker runtime (vs engine)
-//!   --threads N                   engine worker-pool threads (1 sequential,
-//!                                 0 = all cores; bit-identical either way)
+//!   --threads N                   engine worker-pool threads (0 = all cores)
 //!   --steps N --workers N --batch N --eta F --momentum F --seed N
 //!   --csv FILE                    write the metric history as CSV
 //!   --json                        print a JSON summary
 
-use qsparse::compress::parse_spec;
-use qsparse::coordinator::{run_threaded, CoordinatorConfig};
 use qsparse::data::{gaussian_clusters_split, Sharding};
 use qsparse::engine::{self, TrainSpec};
 use qsparse::figures;
-use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
-use qsparse::optim::LrSchedule;
+use qsparse::optim::{LrSchedule, ServerOptSpec};
 use qsparse::protocol::AggScale;
 use qsparse::runtime::PjrtRuntime;
-use qsparse::topology::{FixedPeriod, ParticipationSpec, RandomGaps, SyncSchedule};
+use qsparse::spec::{CompressorSpec, ExperimentSpec, ScheduleSpec, Workload};
+use qsparse::topology::ParticipationSpec;
 use qsparse::util::stats::Stopwatch;
 use std::collections::HashMap;
-use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -53,6 +63,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         Some("figure") => cmd_figure(&args[1..]),
         Some("gamma-table") => cmd_gamma(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
+        Some("specs") => cmd_specs(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{}", HELP);
@@ -65,31 +76,43 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 const HELP: &str = "\
 qsparse — Qsparse-local-SGD (NeurIPS 2019) reproduction
 
-USAGE: qsparse <figure|gamma-table|train|inspect|help> [options]
+USAGE: qsparse <figure|gamma-table|train|specs|inspect|help> [options]
 
   figure <id|all> [--out results] [--quick]
   gamma-table [--d 7850] [--k 40]
-  train [--workload convex|nonconvex] [--pjrt NAME] [--compressor SPEC]
+  train [--spec FILE] [--dump-spec] [--workload convex|nonconvex]
+        [--pjrt NAME] [--label NAME] [--compressor SPEC]
         [--down-compressor SPEC] [--participation SPEC] [--agg-scale MODE]
-        [--h N] [--async] [--threaded] [--threads N] [--steps N]
-        [--workers N] [--batch N] [--eta F] [--momentum F] [--seed N]
-        [--csv FILE] [--json]
+        [--server-opt SPEC] [--h N] [--schedule SPEC] [--async] [--threaded]
+        [--threads N]
+        [--steps N] [--workers N] [--batch N] [--eta F] [--momentum F]
+        [--seed N] [--csv FILE] [--json]
+  specs <dump|validate> [--dir specs]
   inspect [--artifacts DIR]
+
+`train` is spec-first: flags assemble one owned ExperimentSpec, `--spec
+FILE` loads it from JSON (remaining flags override individual fields), and
+`--dump-spec` prints the spec instead of training, so every run is
+reproducible from an artifact. `specs validate` parses, resolves and
+smoke-runs every bundled figure spec under specs/.
 
 Compressor SPECs: identity | topk:k=K | randk:k=K | qsgd:bits=B | sign |
   qtopk:k=K,bits=B[,scaled] | signtopk:k=K[,m=M]
 
 --compressor is the uplink (worker→master). --down-compressor compresses the
 downlink broadcast as an error-compensated model delta (server-side error
-feedback); the default `identity` broadcasts the dense model. bits_down in
-CSV/JSON output is the exact encoded wire length either way.
+feedback); the default `identity` broadcasts the dense model.
 
---participation samples which scheduled workers sync each round:
-`full` (default) | `bernoulli:P` (each worker independently w.p. P) |
-`fixed:M` (exactly M workers, uniform without replacement). Sets are
-materialized from the seed, so engine and threaded runs see the same S_t.
---agg-scale picks the fold scale: `workers` (the paper's 1/R, biased under
-sampling) or `participants` (unbiased 1/|S_t|).
+--participation samples which scheduled workers sync each round: `full`
+(default) | `bernoulli:P` | `fixed:M`; --agg-scale picks `workers` (the
+paper's 1/R) or `participants` (unbiased 1/|S_t|).
+
+--server-opt applies a FedOpt-style optimizer to each round's aggregate on
+the master before broadcast: `avg` (default, the paper's plain averaging,
+bit-identical to the historical path) | `momentum:beta=B[,lr=L]` (server
+heavy-ball; lr defaults to 1−beta, an EMA of round deltas) |
+`adam[:b1=..,b2=..,eps=..,lr=..]` (FedAdam; defaults 0.9/0.99/1e-8/0.01).
+
 --threads runs the engine's worker steps on a thread pool (0 = all cores).
 Histories are bit-identical across thread counts; it is purely a speed knob.
 ";
@@ -101,7 +124,7 @@ struct Flags {
     bools: Vec<String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["quick", "async", "threaded", "json"];
+const BOOL_FLAGS: &[&str] = &["quick", "async", "threaded", "json", "dump-spec"];
 
 impl Flags {
     fn parse(args: &[String]) -> anyhow::Result<Flags> {
@@ -188,72 +211,214 @@ fn cmd_gamma(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Assemble the run's `ExperimentSpec`: `--spec FILE` or workload defaults
+/// as the base, then every explicitly-given flag overrides its field.
+fn spec_from_flags(f: &Flags) -> anyhow::Result<ExperimentSpec> {
+    let mut spec = match f.get("spec") {
+        Some(path) => {
+            anyhow::ensure!(
+                f.get("workload").is_none(),
+                "--workload cannot override --spec (the workload shapes every default; \
+                 edit the file instead)"
+            );
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--spec {path}: {e}"))?;
+            ExperimentSpec::from_json_str(&text)
+                .map_err(|e| anyhow::anyhow!("--spec {path}: {e}"))?
+        }
+        None => {
+            let workload = Workload::parse(&f.get_or("workload", "convex"))?;
+            let mut s = ExperimentSpec::for_workload(workload);
+            // Historical `train` defaults (shorter than the figure horizon).
+            s.steps = 500;
+            s.eval_every = 25;
+            s
+        }
+    };
+    if let Some(label) = f.get("label") {
+        spec.label = label.to_string();
+    }
+    spec.steps = f.parse_num("steps", spec.steps)?;
+    spec.workers = f.parse_num("workers", spec.workers)?;
+    spec.batch = f.parse_num("batch", spec.batch)?;
+    spec.seed = f.parse_num("seed", spec.seed)?;
+    spec.threads = f.parse_num("threads", spec.threads)?;
+    spec.eval_every = f.parse_num("eval-every", spec.eval_every)?;
+    spec.momentum = f.parse_num("momentum", spec.momentum)?;
+    if let Some(e) = f.get("eta") {
+        spec.lr = LrSchedule::Const { eta: e.parse().map_err(|e| anyhow::anyhow!("--eta: {e}"))? };
+    }
+    if let Some(c) = f.get("compressor") {
+        spec.up = CompressorSpec::parse(c).map_err(|e| anyhow::anyhow!("--compressor: {e}"))?;
+    }
+    if let Some(c) = f.get("down-compressor") {
+        spec.down =
+            CompressorSpec::parse(c).map_err(|e| anyhow::anyhow!("--down-compressor: {e}"))?;
+    }
+    // `--schedule sync:H|async:H` replaces the whole schedule; `--h N`
+    // changes only the period (preserving a loaded spec's sync/async kind);
+    // `--async` switches the kind.
+    if let Some(s) = f.get("schedule") {
+        spec.schedule = ScheduleSpec::parse(s)?;
+    }
+    let h: usize = f.parse_num("h", spec.schedule.h())?;
+    if f.has("async") {
+        spec.schedule = ScheduleSpec::Async { h };
+    } else if f.get("h").is_some() {
+        spec.schedule = match spec.schedule {
+            ScheduleSpec::Sync { .. } => ScheduleSpec::Sync { h },
+            ScheduleSpec::Async { .. } => ScheduleSpec::Async { h },
+        };
+    }
+    if let Some(p) = f.get("participation") {
+        spec.participation = ParticipationSpec::parse(p)?;
+    }
+    if let Some(a) = f.get("agg-scale") {
+        spec.agg_scale = AggScale::parse(a)?;
+    }
+    if let Some(s) = f.get("server-opt") {
+        spec.server_opt = ServerOptSpec::parse(s)?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let f = Flags::parse(args)?;
+    if f.get("pjrt").is_some() {
+        anyhow::ensure!(
+            f.get("spec").is_none() && !f.has("dump-spec"),
+            "--spec/--dump-spec cover the native workloads; PJRT artifacts describe their own \
+             model geometry"
+        );
+        return cmd_train_pjrt(&f);
+    }
+    let spec = spec_from_flags(&f)?;
+    if f.has("dump-spec") {
+        print!("{}", spec.to_json().pretty());
+        return Ok(());
+    }
+    let sw = Stopwatch::start();
+    let resolved = spec.resolve(false)?;
+    let history = if f.has("threaded") {
+        resolved.run_threaded()?
+    } else {
+        resolved.run()
+    };
+    report_history(&f, &spec, &history, sw.secs())
+}
+
+/// Compose the run's summary name — `up[|down=..][|part=..|scale=..]
+/// [|server=..]` — shared by the native and PJRT output paths so runs
+/// differing in any knob stay distinguishable in both.
+fn run_name(
+    up: &str,
+    down: &str,
+    dense_down: bool,
+    part: Option<(&str, &str)>,
+    server: &ServerOptSpec,
+) -> String {
+    let mut name = if dense_down { up.to_string() } else { format!("{up}|down={down}") };
+    if let Some((p, scale)) = part {
+        name = format!("{name}|part={p}|scale={scale}");
+    }
+    if !server.is_avg() {
+        name = format!("{name}|server={}", server.name());
+    }
+    name
+}
+
+/// Shared `train` output: CSV, JSON summary or the one-line digest.
+fn report_history(
+    f: &Flags,
+    spec: &ExperimentSpec,
+    history: &qsparse::History,
+    secs: f64,
+) -> anyhow::Result<()> {
+    if let Some(csv) = f.get("csv") {
+        std::fs::write(csv, history.to_csv())?;
+    }
+    let comp_spec = spec.up.as_str();
+    let down_spec = spec.down.as_str();
+    if f.has("json") {
+        let part_spec = spec.participation.spec_str();
+        let part = (spec.participation != ParticipationSpec::Full)
+            .then(|| (part_spec.as_str(), spec.agg_scale.name()));
+        let name = run_name(
+            comp_spec,
+            down_spec,
+            spec.down.is_identity(),
+            part,
+            &spec.server_opt,
+        );
+        println!("{}", history.summary_json(&name, secs));
+    } else {
+        let last = history.points.last().unwrap();
+        let part_str = if spec.participation == ParticipationSpec::Full {
+            String::new()
+        } else {
+            format!(" part={}({})", spec.participation.spec_str(), spec.agg_scale.name())
+        };
+        let server_str = if spec.server_opt.is_avg() {
+            String::new()
+        } else {
+            format!(" server={}", spec.server_opt.name())
+        };
+        println!(
+            "{}⇑ {}⇓ steps={} H={} workers={}{}{}  loss={:.4} test_err={:.4}  \
+             bits_up={:.2}M bits_down={:.2}M  ({:.1}s)",
+            comp_spec,
+            down_spec,
+            last.step,
+            spec.schedule.h(),
+            spec.workers,
+            part_str,
+            server_str,
+            last.train_loss,
+            last.test_err,
+            last.bits_up as f64 / 1e6,
+            last.bits_down as f64 / 1e6,
+            secs
+        );
+    }
+    Ok(())
+}
+
+/// Legacy PJRT path: the model geometry comes from the AOT artifact, so the
+/// run is assembled directly as a `TrainSpec` (native runs go through
+/// `ExperimentSpec`).
+fn cmd_train_pjrt(f: &Flags) -> anyhow::Result<()> {
+    use qsparse::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+    let name = f.get("pjrt").expect("caller checked");
     let steps: usize = f.parse_num("steps", 500)?;
     let h: usize = f.parse_num("h", 1)?;
     let seed: u64 = f.parse_num("seed", figures::SEED)?;
     let comp_spec = f.get_or("compressor", "identity");
-    let compressor = parse_spec(&comp_spec)?;
+    let compressor = qsparse::compress::parse_spec(&comp_spec)?;
     let down_spec = f.get_or("down-compressor", "identity");
-    let down_compressor = parse_spec(&down_spec)?;
+    let down_compressor = qsparse::compress::parse_spec(&down_spec)?;
     let sw = Stopwatch::start();
 
-    // Model + data + defaults per workload.
-    type Setup = (
-        Box<dyn GradModel>,
-        qsparse::data::Dataset,
-        qsparse::data::Dataset,
-        Vec<f32>,
-        usize,
-        usize,
-        LrSchedule,
-        f64,
+    anyhow::ensure!(
+        !f.has("threaded"),
+        "--threaded requires a Send model factory; native workloads only \
+         (PJRT models are constructed per-thread in library/example code)"
     );
-    let (model, train, test, init, workers, batch, lr, momentum): Setup =
-        if let Some(name) = f.get("pjrt") {
-            let rt = PjrtRuntime::open(f.get_or("artifacts", "artifacts"))?;
-            let model = rt.load_model(name)?;
-            let entry = model.entry.clone();
-            anyhow::ensure!(
-                entry.kind != "lm",
-                "LM training has a dedicated driver: examples/train_transformer.rs"
-            );
-            let n = 4000;
-            let (train, test) =
-                gaussian_clusters_split(n, n / 4, entry.feat, entry.classes, 0.3, 1.0, seed);
-            let init = rt.load_init(name)?.unwrap_or_else(|| vec![0.0; entry.d]);
-            let batch = entry.batch;
-            (
-                Box::new(model),
-                train,
-                test,
-                init,
-                4,
-                batch,
-                LrSchedule::Const { eta: 0.1 },
-                0.0,
-            )
-        } else {
-            match f.get_or("workload", "convex").as_str() {
-                "convex" => {
-                    let w = figures::Workload::ConvexSoftmax.instantiate(false);
-                    (w.model, w.train, w.test, w.init, w.workers, w.batch, w.lr, w.momentum)
-                }
-                "nonconvex" => {
-                    let w = figures::Workload::NonConvexMlp.instantiate(false);
-                    (w.model, w.train, w.test, w.init, w.workers, w.batch, w.lr, w.momentum)
-                }
-                other => anyhow::bail!("unknown workload `{other}`"),
-            }
-        };
-    let workers: usize = f.parse_num("workers", workers)?;
-    let batch: usize = f.parse_num("batch", batch)?;
-    let lr = match f.get("eta") {
-        Some(e) => LrSchedule::Const { eta: e.parse()? },
-        None => lr,
-    };
-    let momentum: f64 = f.parse_num("momentum", momentum)?;
+    let rt = PjrtRuntime::open(f.get_or("artifacts", "artifacts"))?;
+    let model = rt.load_model(name)?;
+    let entry = model.entry.clone();
+    anyhow::ensure!(
+        entry.kind != "lm",
+        "LM training has a dedicated driver: examples/train_transformer.rs"
+    );
+    let n = 4000;
+    let (train, test) =
+        gaussian_clusters_split(n, n / 4, entry.feat, entry.classes, 0.3, 1.0, seed);
+    let init = rt.load_init(name)?.unwrap_or_else(|| vec![0.0; entry.d]);
+    let workers: usize = f.parse_num("workers", 4)?;
+    let batch: usize = f.parse_num("batch", entry.batch)?;
+    let lr = LrSchedule::Const { eta: f.parse_num("eta", 0.1)? };
+    let momentum: f64 = f.parse_num("momentum", 0.0)?;
 
     let schedule: Box<dyn SyncSchedule> = if f.has("async") {
         Box::new(RandomGaps::generate(workers, h, steps, seed ^ 0x5eed))
@@ -265,85 +430,58 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     parsed_part.validate(workers)?;
     let participation = parsed_part.materialize(workers, steps, seed);
     let agg_scale = AggScale::parse(&f.get_or("agg-scale", "workers"))?;
+    let server_opt = ServerOptSpec::parse(&f.get_or("server-opt", "avg"))?;
 
-    let history = if f.has("threaded") {
-        anyhow::ensure!(
-            f.get("pjrt").is_none(),
-            "--threaded requires a Send model factory; native workloads only \
-             (PJRT models are constructed per-thread in library/example code)"
-        );
-        let is_convex = f.get_or("workload", "convex") == "convex";
-        let (dim, classes, n) = (train.dim, train.classes, train.n);
-        let factory = move || -> Box<dyn GradModel> {
-            if is_convex {
-                Box::new(SoftmaxRegression::new(dim, classes, 1.0 / n as f64))
-            } else {
-                Box::new(Mlp::new(vec![dim, 64, classes]))
-            }
-        };
-        let mut cfg = CoordinatorConfig::new(Arc::from(compressor), Arc::from(schedule));
-        cfg.down_compressor = Arc::from(down_compressor);
-        cfg.participation = participation.clone();
-        cfg.agg_scale = agg_scale;
-        cfg.workers = workers;
-        cfg.batch = batch;
-        cfg.steps = steps;
-        cfg.lr = lr;
-        cfg.momentum = momentum;
-        cfg.seed = seed;
-        cfg.init = Some(init);
-        run_threaded(&cfg, factory, Arc::new(train), Some(Arc::new(test)))?
-    } else {
-        let spec = TrainSpec {
-            model: model.as_ref(),
-            train: &train,
-            test: Some(&test),
-            workers,
-            batch,
-            steps,
-            lr,
-            momentum,
-            compressor: compressor.as_ref(),
-            down_compressor: down_compressor.as_ref(),
-            schedule: schedule.as_ref(),
-            participation: &participation,
-            agg_scale,
-            sharding: Sharding::Iid,
-            seed,
-            eval_every: f.parse_num("eval-every", 25)?,
-            eval_rows: 512,
-            threads: f.parse_num("threads", 1)?,
-        };
-        engine::run_from(&spec, init)
+    let spec = TrainSpec {
+        model: &model,
+        train: &train,
+        test: Some(&test),
+        workers,
+        batch,
+        steps,
+        lr,
+        momentum,
+        compressor: compressor.as_ref(),
+        down_compressor: down_compressor.as_ref(),
+        schedule: schedule.as_ref(),
+        participation: &participation,
+        agg_scale,
+        server_opt,
+        sharding: Sharding::Iid,
+        seed,
+        eval_every: f.parse_num("eval-every", 25)?,
+        eval_rows: 512,
+        threads: f.parse_num("threads", 1)?,
     };
+    let history = engine::run_from(&spec, init);
 
     if let Some(csv) = f.get("csv") {
         std::fs::write(csv, history.to_csv())?;
     }
+    let part_str = if participation.is_full() {
+        String::new()
+    } else {
+        format!(" part={part_spec}({})", agg_scale.name())
+    };
     if f.has("json") {
-        let mut name = if down_spec == "identity" {
-            comp_spec.clone()
-        } else {
-            format!("{comp_spec}|down={down_spec}")
-        };
-        if !participation.is_full() {
-            name = format!("{name}|part={part_spec}|scale={}", agg_scale.name());
-        }
-        println!("{}", history.summary_json(&name, sw.secs()));
+        let part = (!participation.is_full()).then(|| (part_spec.as_str(), agg_scale.name()));
+        let summary_name = run_name(
+            &comp_spec,
+            &down_spec,
+            down_compressor.is_identity(),
+            part,
+            &server_opt,
+        );
+        println!("{}", history.summary_json(&summary_name, sw.secs()));
     } else {
         let last = history.points.last().unwrap();
-        let part_str = if participation.is_full() {
-            String::new()
-        } else {
-            format!(" part={part_spec}({})", agg_scale.name())
-        };
         println!(
-            "{}⇑ {}⇓ steps={} H={} workers={}{}  loss={:.4} test_err={:.4}  \
+            "{}⇑ {}⇓ pjrt={} steps={} H={h} workers={}{}  loss={:.4} test_err={:.4}  \
              bits_up={:.2}M bits_down={:.2}M  ({:.1}s)",
             comp_spec,
             down_spec,
+            name,
             last.step,
-            h,
             workers,
             part_str,
             last.train_loss,
@@ -354,6 +492,72 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `specs dump` regenerates the bundled figure specs; `specs validate`
+/// parses, resolves and 10-step smoke-runs every bundled file and fails on
+/// any drift from the in-code tables (schema, values or file set).
+fn cmd_specs(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let action = f.positional.first().map(String::as_str).unwrap_or("dump");
+    let dir = f.get_or("dir", "specs");
+    match action {
+        "dump" => {
+            std::fs::create_dir_all(&dir)?;
+            for id in figures::all_figure_ids() {
+                let spec = figures::figure_spec(id).expect("listed id must have a spec");
+                let path = format!("{dir}/{id}.json");
+                std::fs::write(&path, spec.to_json().pretty())?;
+                println!("wrote {path} ({} series)", spec.series.len());
+            }
+            Ok(())
+        }
+        "validate" => {
+            let mut bundled_ids: Vec<String> = std::fs::read_dir(&dir)
+                .map_err(|e| anyhow::anyhow!("{dir}: {e} (run `qsparse specs dump`?)"))?
+                .filter_map(|entry| {
+                    let name = entry.ok()?.file_name().into_string().ok()?;
+                    name.strip_suffix(".json").map(str::to_string)
+                })
+                .collect();
+            bundled_ids.sort();
+            let mut known: Vec<String> =
+                figures::all_figure_ids().iter().map(|s| s.to_string()).collect();
+            known.sort();
+            anyhow::ensure!(
+                bundled_ids == known,
+                "spec drift: {dir}/ holds {bundled_ids:?} but the figure registry knows \
+                 {known:?} — run `qsparse specs dump`"
+            );
+            for id in figures::all_figure_ids() {
+                let path = format!("{dir}/{id}.json");
+                let text = std::fs::read_to_string(&path)?;
+                let bundled = figures::FigureSpec::from_json_str(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let code = figures::figure_spec(id).expect("listed id must have a spec");
+                anyhow::ensure!(
+                    bundled == code,
+                    "{path} drifted from the in-code table — run `qsparse specs dump`"
+                );
+                let w = bundled.workload.instantiate(true);
+                for s in &bundled.series {
+                    let hist = figures::run_series(&w, s, 10)
+                        .map_err(|e| anyhow::anyhow!("{id}/{}: {e}", s.label))?;
+                    anyhow::ensure!(
+                        hist.final_loss().is_finite(),
+                        "{id}/{}: non-finite loss in the 10-step smoke run",
+                        s.label
+                    );
+                }
+                println!(
+                    "{id}: ok ({} series, parse + resolve + 10-step smoke)",
+                    code.series.len()
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown specs action `{other}` (expected dump | validate)"),
+    }
 }
 
 fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {

@@ -1,8 +1,16 @@
-//! Local optimizers and learning-rate schedules.
+//! Local optimizers, learning-rate schedules, and server-side optimizers.
 //!
 //! The paper's experiments run SGD with momentum 0.9 *on the local
 //! iterations* (§5.1.1) for the non-convex case, and plain SGD with an
 //! inverse-time decaying rate c/(λ(a+t)) for the convex case (§5.2.2).
+//!
+//! On top of the paper's plain averaging, [`ServerOpt`] adds the FedOpt
+//! family of *server* optimizers (Reddi et al., *Adaptive Federated
+//! Optimization*): the master treats each round's aggregated worker
+//! progress Δ_t = s·Σ_r g_t^{(r)} as a pseudo-gradient and applies a
+//! momentum or Adam step to the global model instead of subtracting Δ_t
+//! directly. [`ServerOptSpec::Avg`] short-circuits to the paper's exact
+//! incremental fold, so existing trajectories stay bit-identical.
 
 /// Learning-rate schedule η_t.
 #[derive(Clone, Debug, PartialEq)]
@@ -81,6 +89,252 @@ impl LocalSgd {
     }
 }
 
+/// Server optimizer selection — plain data, JSON/CLI round-trippable.
+///
+/// Grammar (`parse` / `spec_str`):
+///   `avg`                                     the paper's plain averaging
+///   `momentum:beta=B[,lr=L]`  (or `momentum:B`)   heavy-ball on Δ_t;
+///       `lr` defaults to `1 − beta`, which keeps the steady-state step
+///       magnitude equal to plain averaging (an EMA of round deltas)
+///   `adam[:b1=B1,b2=B2,eps=E,lr=L]`           FedAdam-style adaptive step;
+///       defaults b1=0.9, b2=0.99, eps=1e-8, lr=0.01
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ServerOptSpec {
+    /// `x ← x − Δ_t` folded incrementally per update — the paper's exact
+    /// aggregation arithmetic (bit-identical to the historical path).
+    #[default]
+    Avg,
+    /// `v ← β·v + Δ_t; x ← x − lr·v` (FedAvgM / server heavy-ball).
+    Momentum { beta: f64, lr: f64 },
+    /// `m ← b1·m + (1−b1)·Δ_t; v ← b2·v + (1−b2)·Δ_t²;
+    ///  x ← x − lr·m̂ / (√v̂ + eps)` with bias-corrected m̂, v̂ (FedAdam).
+    Adam { b1: f64, b2: f64, eps: f64, lr: f64 },
+}
+
+impl ServerOptSpec {
+    /// Parse the CLI/JSON grammar documented on the type.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let (head, rest) = spec.split_once(':').map_or((spec, ""), |(h, r)| (h, r));
+        let mut kv = std::collections::HashMap::new();
+        let mut bare: Option<&str> = None;
+        for part in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part.split_once('=') {
+                Some((k, v)) => {
+                    kv.insert(k.trim(), v.trim());
+                }
+                None => {
+                    anyhow::ensure!(
+                        bare.is_none(),
+                        "server-opt `{head}`: more than one bare value in `{rest}`"
+                    );
+                    bare = Some(part);
+                }
+            }
+        }
+        let allowed: &[&str] = match head {
+            "momentum" | "mom" => &["beta", "lr"],
+            "adam" => &["b1", "b2", "eps", "lr"],
+            _ => &[],
+        };
+        if let Some(unknown) = kv.keys().find(|k| !allowed.contains(*k)) {
+            anyhow::bail!(
+                "server-opt `{head}`: unknown parameter `{unknown}` (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+        let get = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match kv.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("server-opt `{head}`: bad `{key}`: {e}")),
+            }
+        };
+        let out = match head {
+            "avg" | "none" => {
+                anyhow::ensure!(
+                    rest.is_empty(),
+                    "server-opt `avg` takes no arguments (got `{rest}`)"
+                );
+                ServerOptSpec::Avg
+            }
+            "momentum" | "mom" => {
+                anyhow::ensure!(
+                    bare.is_none() || !kv.contains_key("beta"),
+                    "server-opt `momentum`: both a bare value and `beta=` given"
+                );
+                let beta = match bare {
+                    Some(v) => v
+                        .parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("server-opt `momentum`: bad beta: {e}"))?,
+                    None => get("beta", f64::NAN)?,
+                };
+                anyhow::ensure!(
+                    beta.is_finite(),
+                    "server-opt `momentum` requires `beta=` (e.g. momentum:beta=0.9)"
+                );
+                let lr = get("lr", 1.0 - beta)?;
+                ServerOptSpec::Momentum { beta, lr }
+            }
+            "adam" => {
+                anyhow::ensure!(bare.is_none(), "server-opt `adam` takes only key=value args");
+                ServerOptSpec::Adam {
+                    b1: get("b1", 0.9)?,
+                    b2: get("b2", 0.99)?,
+                    eps: get("eps", 1e-8)?,
+                    lr: get("lr", 0.01)?,
+                }
+            }
+            other => anyhow::bail!(
+                "unknown server-opt `{other}` (expected avg | momentum:beta=B[,lr=L] | \
+                 adam[:b1=..,b2=..,eps=..,lr=..])"
+            ),
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Range-check the parameters (shared by `parse` and spec validation).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            ServerOptSpec::Avg => Ok(()),
+            ServerOptSpec::Momentum { beta, lr } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&beta),
+                    "server-opt momentum beta must be in [0, 1), got {beta}"
+                );
+                anyhow::ensure!(lr > 0.0 && lr.is_finite(), "server-opt momentum lr must be > 0");
+                Ok(())
+            }
+            ServerOptSpec::Adam { b1, b2, eps, lr } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&b1) && (0.0..1.0).contains(&b2),
+                    "server-opt adam b1/b2 must be in [0, 1), got b1={b1} b2={b2}"
+                );
+                anyhow::ensure!(eps > 0.0 && eps.is_finite(), "server-opt adam eps must be > 0");
+                anyhow::ensure!(lr > 0.0 && lr.is_finite(), "server-opt adam lr must be > 0");
+                Ok(())
+            }
+        }
+    }
+
+    /// Canonical spec string — `parse(spec_str(s)) == s` (f64 `Display`
+    /// round-trips exactly).
+    pub fn spec_str(&self) -> String {
+        match *self {
+            ServerOptSpec::Avg => "avg".to_string(),
+            ServerOptSpec::Momentum { beta, lr } => format!("momentum:beta={beta},lr={lr}"),
+            ServerOptSpec::Adam { b1, b2, eps, lr } => {
+                format!("adam:b1={b1},b2={b2},eps={eps},lr={lr}")
+            }
+        }
+    }
+
+    /// Short human-readable name for legends/summaries.
+    pub fn name(&self) -> String {
+        match *self {
+            ServerOptSpec::Avg => "avg".to_string(),
+            ServerOptSpec::Momentum { beta, lr } => format!("mom(β={beta},lr={lr})"),
+            ServerOptSpec::Adam { lr, .. } => format!("adam(lr={lr})"),
+        }
+    }
+
+    /// True for the plain-averaging (no-op) server optimizer.
+    pub fn is_avg(&self) -> bool {
+        matches!(self, ServerOptSpec::Avg)
+    }
+
+    /// Build the stateful optimizer for a d-dimensional model. `None` for
+    /// `Avg`: callers keep the exact incremental fold instead.
+    pub fn build(&self, d: usize) -> Option<Box<dyn ServerOpt>> {
+        match *self {
+            ServerOptSpec::Avg => None,
+            ServerOptSpec::Momentum { beta, lr } => Some(Box::new(ServerMomentum {
+                beta: beta as f32,
+                lr: lr as f32,
+                v: vec![0.0; d],
+            })),
+            ServerOptSpec::Adam { b1, b2, eps, lr } => Some(Box::new(ServerAdam {
+                b1,
+                b2,
+                eps,
+                lr,
+                t: 0,
+                m: vec![0.0; d],
+                v: vec![0.0; d],
+            })),
+        }
+    }
+}
+
+/// A stateful server-side optimizer: consumes one aggregated round delta
+/// Δ_t = s·Σ_r g_t^{(r)} (the plain-average descent step — "Avg" semantics
+/// would be `x ← x − Δ_t`) and updates the global model in place.
+pub trait ServerOpt: Send {
+    /// Apply one round's aggregate `delta` to the model `x`.
+    fn apply(&mut self, x: &mut [f32], delta: &[f32]);
+
+    fn name(&self) -> String;
+}
+
+/// Server heavy-ball: `v ← β·v + Δ; x ← x − lr·v`.
+struct ServerMomentum {
+    beta: f32,
+    lr: f32,
+    v: Vec<f32>,
+}
+
+impl ServerOpt for ServerMomentum {
+    fn apply(&mut self, x: &mut [f32], delta: &[f32]) {
+        debug_assert_eq!(x.len(), delta.len());
+        debug_assert_eq!(x.len(), self.v.len());
+        for ((xi, di), vi) in x.iter_mut().zip(delta).zip(self.v.iter_mut()) {
+            *vi = self.beta * *vi + di;
+            *xi -= self.lr * *vi;
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("momentum(beta={},lr={})", self.beta, self.lr)
+    }
+}
+
+/// FedAdam: bias-corrected Adam on the round deltas.
+struct ServerAdam {
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    lr: f64,
+    t: i32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl ServerOpt for ServerAdam {
+    fn apply(&mut self, x: &mut [f32], delta: &[f32]) {
+        debug_assert_eq!(x.len(), delta.len());
+        self.t += 1;
+        let (b1, b2) = (self.b1 as f32, self.b2 as f32);
+        // Bias corrections in f64 (powi underflows late), applied as f32.
+        let c1 = (1.0 / (1.0 - self.b1.powi(self.t))) as f32;
+        let c2 = (1.0 / (1.0 - self.b2.powi(self.t))) as f32;
+        let (lr, eps) = (self.lr as f32, self.eps as f32);
+        for (((xi, di), mi), vi) in
+            x.iter_mut().zip(delta).zip(self.m.iter_mut()).zip(self.v.iter_mut())
+        {
+            *mi = b1 * *mi + (1.0 - b1) * di;
+            *vi = b2 * *vi + (1.0 - b2) * di * di;
+            let mhat = *mi * c1;
+            let vhat = *vi * c2;
+            *xi -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("adam(b1={},b2={},eps={},lr={})", self.b1, self.b2, self.eps, self.lr)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +387,88 @@ mod tests {
         let mut x = vec![10.0f32];
         opt.step(&mut x, &[0.0], 1.0);
         assert!((x[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn server_opt_spec_parse_and_roundtrip() {
+        for (s, want) in [
+            ("avg", ServerOptSpec::Avg),
+            ("none", ServerOptSpec::Avg),
+            ("momentum:0.9", ServerOptSpec::Momentum { beta: 0.9, lr: 1.0 - 0.9 }),
+            ("momentum:beta=0.5", ServerOptSpec::Momentum { beta: 0.5, lr: 0.5 }),
+            (
+                "momentum:beta=0.9,lr=0.25",
+                ServerOptSpec::Momentum { beta: 0.9, lr: 0.25 },
+            ),
+            (
+                "adam",
+                ServerOptSpec::Adam { b1: 0.9, b2: 0.99, eps: 1e-8, lr: 0.01 },
+            ),
+            (
+                "adam:lr=0.1,eps=0.001",
+                ServerOptSpec::Adam { b1: 0.9, b2: 0.99, eps: 0.001, lr: 0.1 },
+            ),
+        ] {
+            let got = ServerOptSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(got, want, "{s}");
+            // Canonical string round-trips exactly.
+            assert_eq!(ServerOptSpec::parse(&got.spec_str()).unwrap(), got, "{s}");
+        }
+        for bad in [
+            "bogus",
+            "momentum",
+            "momentum:beta=1.5",
+            "momentum:beta=0.9,gamma=1",
+            "momentum:0.9,beta=0.5",
+            "adam:b1=2",
+            "adam:0.9",
+            "avg:x",
+            "adam:lr=-1",
+        ] {
+            assert!(ServerOptSpec::parse(bad).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn server_momentum_matches_hand_computation() {
+        // β=0.5, lr=1: v1 = Δ1, x1 = −Δ1; v2 = 0.5Δ1 + Δ2, x2 = x1 − v2.
+        let mut opt = ServerOptSpec::Momentum { beta: 0.5, lr: 1.0 }.build(2).unwrap();
+        let mut x = vec![0.0f32; 2];
+        opt.apply(&mut x, &[1.0, -2.0]);
+        assert_eq!(x, vec![-1.0, 2.0]);
+        opt.apply(&mut x, &[1.0, 0.0]);
+        // v = [1.5, -1.0] → x = [-1 - 1.5, 2 + 1.0]
+        assert_eq!(x, vec![-2.5, 3.0]);
+    }
+
+    #[test]
+    fn server_adam_first_step_is_lr_sized() {
+        // Bias correction makes the very first Adam step ≈ lr·sign(Δ) for
+        // |Δ| ≫ eps.
+        let mut opt =
+            ServerOptSpec::Adam { b1: 0.9, b2: 0.99, eps: 1e-8, lr: 0.05 }.build(3).unwrap();
+        let mut x = vec![0.0f32; 3];
+        opt.apply(&mut x, &[0.5, -2.0, 1e-3]);
+        for (xi, di) in x.iter().zip([0.5f32, -2.0, 1e-3]) {
+            assert!(
+                (xi + 0.05 * di.signum()).abs() < 1e-3,
+                "first step {xi} vs ±lr for delta {di}"
+            );
+        }
+    }
+
+    #[test]
+    fn server_momentum_beta0_lr1_equals_plain_subtraction() {
+        let mut opt = ServerOptSpec::Momentum { beta: 0.0, lr: 1.0 }.build(2).unwrap();
+        let mut x = vec![3.0f32, -1.0];
+        opt.apply(&mut x, &[0.5, 0.25]);
+        assert_eq!(x, vec![2.5, -1.25]);
+    }
+
+    #[test]
+    fn avg_builds_nothing() {
+        assert!(ServerOptSpec::Avg.build(8).is_none());
+        assert!(ServerOptSpec::Avg.is_avg());
+        assert!(!ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 }.is_avg());
     }
 }

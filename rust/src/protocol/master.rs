@@ -13,6 +13,7 @@
 
 use super::{AggScale, DOWNLINK_RNG_SALT};
 use crate::compress::{Compressor, Message, MessageBuf};
+use crate::optim::{ServerOpt, ServerOptSpec};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -50,6 +51,22 @@ pub struct MasterCore {
     /// changes — one snapshot per aggregation round, however many workers
     /// it is sent to.
     snapshot: Option<Arc<[f32]>>,
+    /// FedOpt-style server optimizer state. `None` ⇔ `ServerOptSpec::Avg`:
+    /// updates are folded straight into the model (the paper's exact,
+    /// historically bit-identical arithmetic). Otherwise each round's
+    /// updates accumulate into `ServerRound::accum` and
+    /// [`MasterCore::end_round`] applies one optimizer step to the model.
+    server: Option<ServerRound>,
+}
+
+/// Per-round accumulator + optimizer for a non-`Avg` server optimizer.
+struct ServerRound {
+    opt: Box<dyn ServerOpt>,
+    /// Σ over the round of `round_scale · g_r` — the plain-average step
+    /// Δ_t the optimizer consumes. Cleared by `end_round`.
+    accum: Vec<f32>,
+    /// True when `accum` holds folded-but-unapplied updates.
+    pending: bool,
 }
 
 impl MasterCore {
@@ -75,7 +92,20 @@ impl MasterCore {
             agg: AggScale::Workers,
             round_scale: 1.0 / workers as f32,
             snapshot: None,
+            server: None,
         }
+    }
+
+    /// Install the server optimizer (default: `Avg`, the paper's plain
+    /// averaging — a no-op here). Any previous optimizer state is reset.
+    /// Drivers call this once, before the first round.
+    pub fn set_server_opt(&mut self, spec: ServerOptSpec) {
+        let d = self.global.len();
+        self.server = spec.build(d).map(|opt| ServerRound {
+            opt,
+            accum: vec![0.0f32; d],
+            pending: false,
+        });
     }
 
     /// Choose the aggregation scaling policy (default: the paper's `1/R`).
@@ -126,8 +156,10 @@ impl MasterCore {
         self.workers
     }
 
-    /// Fold one decoded worker update into the global model:
-    /// `x ← x − s·g` with the current round's scale (see `begin_round`).
+    /// Fold one decoded worker update into this round's aggregate:
+    /// `x ← x − s·g` with the current round's scale (see `begin_round`)
+    /// under plain averaging, or `accum ← accum + s·g` under a non-`Avg`
+    /// server optimizer (the model then moves in [`MasterCore::end_round`]).
     /// Errors on dimension mismatch (malformed wire message) rather than
     /// corrupting the model.
     pub fn apply_update(&mut self, msg: &Message) -> anyhow::Result<()> {
@@ -137,9 +169,33 @@ impl MasterCore {
             msg.dim(),
             self.global.len()
         );
-        msg.add_into(&mut self.global, -self.round_scale);
-        self.snapshot = None;
+        match &mut self.server {
+            None => {
+                msg.add_into(&mut self.global, -self.round_scale);
+                self.snapshot = None;
+            }
+            Some(sr) => {
+                msg.add_into(&mut sr.accum, self.round_scale);
+                sr.pending = true;
+            }
+        }
         Ok(())
+    }
+
+    /// Close the current aggregation round: under a non-`Avg` server
+    /// optimizer, apply one optimizer step on the accumulated round delta
+    /// Δ_t = s·Σ g and clear the accumulator. A no-op under `Avg` (updates
+    /// were already folded) and when the round folded nothing, so drivers
+    /// call it unconditionally after the fold loop, before broadcasting.
+    pub fn end_round(&mut self) {
+        if let Some(sr) = &mut self.server {
+            if sr.pending {
+                sr.opt.apply(&mut self.global, &sr.accum);
+                sr.accum.fill(0.0);
+                sr.pending = false;
+                self.snapshot = None;
+            }
+        }
     }
 
     /// The dense-broadcast payload: a shared snapshot of the current model,

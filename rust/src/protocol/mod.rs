@@ -94,6 +94,15 @@ impl AggScale {
             AggScale::Participants => "1/|S_t|",
         }
     }
+
+    /// Canonical spec token — `parse(spec_str(s)) == s` (unlike `name`,
+    /// whose display forms are not all accepted by `parse`).
+    pub fn spec_str(&self) -> &'static str {
+        match self {
+            AggScale::Workers => "workers",
+            AggScale::Participants => "participants",
+        }
+    }
 }
 
 /// Stream salt for the master's per-worker downlink RNGs (distinct from the
@@ -244,6 +253,57 @@ mod tests {
             master.delta_broadcast(0, &Identity)
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn server_avg_path_is_untouched_and_momentum_accumulates() {
+        use crate::optim::ServerOptSpec;
+        let d = 4;
+        let g = crate::compress::Message::Dense { values: vec![1.0f32; d] };
+        // Avg (explicit) ≡ default: fold is immediate, end_round a no-op.
+        let mut avg = MasterCore::new(vec![0.0; d], 4, 0, false);
+        avg.set_server_opt(ServerOptSpec::Avg);
+        avg.begin_round(4);
+        avg.apply_update(&g).unwrap();
+        assert!(avg.params().iter().all(|&x| (x + 0.25).abs() < 1e-7));
+        avg.end_round();
+        assert!(avg.params().iter().all(|&x| (x + 0.25).abs() < 1e-7));
+
+        // Momentum β=0.5, lr=1: model only moves at end_round; two rounds of
+        // the same Δ=0.5 give x = −Δ, then x = −Δ − (0.5Δ + Δ) = −2.5Δ.
+        let mut mom = MasterCore::new(vec![0.0; d], 4, 0, false);
+        mom.set_server_opt(ServerOptSpec::Momentum { beta: 0.5, lr: 1.0 });
+        mom.begin_round(2);
+        mom.apply_update(&g).unwrap();
+        mom.apply_update(&g).unwrap();
+        assert!(mom.params().iter().all(|&x| x == 0.0), "model moved before end_round");
+        mom.end_round();
+        assert!(mom.params().iter().all(|&x| (x + 0.5).abs() < 1e-7));
+        mom.begin_round(2);
+        mom.apply_update(&g).unwrap();
+        mom.apply_update(&g).unwrap();
+        mom.end_round();
+        assert!(mom.params().iter().all(|&x| (x + 1.25).abs() < 1e-7), "{:?}", mom.params());
+        // An empty round applies nothing.
+        mom.end_round();
+        assert!(mom.params().iter().all(|&x| (x + 1.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn server_opt_invalidates_snapshot_at_end_round() {
+        use crate::optim::ServerOptSpec;
+        use std::sync::Arc;
+        let mut m = MasterCore::new(vec![1.0f32; 4], 2, 0, false);
+        m.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 });
+        let a = m.params_snapshot();
+        m.begin_round(1);
+        m.apply_update(&crate::compress::Message::Dense { values: vec![1.0; 4] }).unwrap();
+        // Accumulation alone leaves the model (and thus the snapshot) valid.
+        assert!(Arc::ptr_eq(&a, &m.params_snapshot()));
+        m.end_round();
+        let b = m.params_snapshot();
+        assert!(!Arc::ptr_eq(&a, &b), "stale snapshot served after the optimizer step");
+        assert_eq!(&b[..], m.params());
     }
 
     #[test]

@@ -1,0 +1,738 @@
+//! The owned, serializable experiment description — the single place where
+//! "describe a training run" lives.
+//!
+//! Historically three layers re-implemented this: `engine::TrainSpec<'a>`
+//! (borrowed trait objects), the CLI flag parser in `main.rs`, and the
+//! hardcoded figure tables in `figures::specs`. [`ExperimentSpec`] replaces
+//! all three sources of truth with one plain-data struct that
+//!
+//! * round-trips through JSON (`to_json`/`from_json` over `util::json`,
+//!   with unknown-field and bad-value errors — specs are artifacts, so a
+//!   run is reproducible from a file: `qsparse train --spec FILE`, and
+//!   `--dump-spec` emits the spec any flag combination describes);
+//! * resolves every operator through one registry ([`ExperimentSpec::
+//!   resolve`]): compressor spec strings via `compress::parse_spec`,
+//!   schedules via `topology::{FixedPeriod, RandomGaps}` (same
+//!   `seed ^ 0x5eed` salt as the historical call sites), participation via
+//!   `ParticipationSpec::materialize`, the server optimizer via
+//!   `optim::ServerOptSpec` — so new knobs are added in exactly one place;
+//! * produces `TrainSpec<'a>` only as a short-lived borrowed view of a
+//!   [`ResolvedExperiment`] ([`ResolvedExperiment::train_spec`]).
+//!
+//! Resolution is deterministic: the same spec (and `quick` flag) yields
+//! bit-identical datasets, operators and RNG streams, hence bit-identical
+//! `History` — the figure tables are `ExperimentSpec` values now (bundled
+//! as JSON under `specs/`), asserted equal to the legacy hand-built runs.
+
+mod workload;
+
+pub use workload::{Workload, WorkloadDefaults, WorkloadInstance, SEED};
+
+use crate::compress::{parse_spec, Compressor};
+use crate::coordinator::{run_threaded, CoordinatorConfig};
+use crate::data::Sharding;
+use crate::engine::{self, History, TrainSpec};
+use crate::optim::{LrSchedule, ServerOptSpec};
+use crate::protocol::AggScale;
+use crate::topology::{FixedPeriod, Participation, ParticipationSpec, RandomGaps, SyncSchedule};
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// A validated compressor spec string (`compress::parse_spec` grammar),
+/// kept verbatim so it serializes exactly as the user wrote it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressorSpec(String);
+
+impl CompressorSpec {
+    /// Validate `spec` against the operator registry and wrap it.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        parse_spec(spec)?;
+        Ok(CompressorSpec(spec.to_string()))
+    }
+
+    /// The identity operator (dense payloads / dense broadcast).
+    pub fn identity() -> Self {
+        CompressorSpec("identity".to_string())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    /// Build the operator. Infallible for specs constructed via `parse`,
+    /// but kept fallible so `resolve()` reports corrupt hand-edited JSON.
+    pub fn resolve(&self) -> anyhow::Result<Box<dyn Compressor>> {
+        parse_spec(&self.0)
+    }
+
+    /// Does this spec name the identity operator (dense broadcast path)?
+    pub fn is_identity(&self) -> bool {
+        self.resolve().map(|c| c.is_identity()).unwrap_or(false)
+    }
+}
+
+/// When (and how) workers synchronize: the paper's fixed period H
+/// (Algorithm 1) or random per-worker gaps U[1, H] (Algorithm 2).
+/// Spec grammar: `sync:H` | `async:H` (`sync` alone means H = 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleSpec {
+    Sync { h: usize },
+    Async { h: usize },
+}
+
+impl ScheduleSpec {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (head, rest) = s.split_once(':').map_or((s, ""), |(h, r)| (h, r));
+        let h: usize = if rest.is_empty() {
+            1
+        } else {
+            rest.parse().map_err(|e| anyhow::anyhow!("schedule `{head}`: bad H: {e}"))?
+        };
+        anyhow::ensure!(h >= 1, "schedule `{head}`: H must be >= 1");
+        match head {
+            "sync" => Ok(ScheduleSpec::Sync { h }),
+            "async" => Ok(ScheduleSpec::Async { h }),
+            other => anyhow::bail!("unknown schedule `{other}` (expected sync:H | async:H)"),
+        }
+    }
+
+    pub fn spec_str(&self) -> String {
+        match self {
+            ScheduleSpec::Sync { h } => format!("sync:{h}"),
+            ScheduleSpec::Async { h } => format!("async:{h}"),
+        }
+    }
+
+    pub fn h(&self) -> usize {
+        match self {
+            ScheduleSpec::Sync { h } | ScheduleSpec::Async { h } => *h,
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, ScheduleSpec::Async { .. })
+    }
+
+    /// Build the schedule. `RandomGaps` is salted exactly as every
+    /// historical call site (`seed ^ 0x5eed`), so seeded async runs are
+    /// preserved across the spec redesign.
+    pub fn materialize(&self, workers: usize, steps: usize, seed: u64) -> Box<dyn SyncSchedule> {
+        match *self {
+            ScheduleSpec::Sync { h } => Box::new(FixedPeriod::new(h)),
+            ScheduleSpec::Async { h } => {
+                Box::new(RandomGaps::generate(workers, h, steps, seed ^ 0x5eed))
+            }
+        }
+    }
+}
+
+/// Owned, plain-data description of one training run. Every field is
+/// concrete (no borrowed trait objects) and JSON-serializable; see the
+/// module docs for the lifecycle (describe → serialize → resolve → run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// Series / run label (figure legends, CSV file names).
+    pub label: String,
+    /// Which model + data geometry to instantiate (`convex` | `nonconvex`).
+    pub workload: Workload,
+    /// Global-clock steps T.
+    pub steps: usize,
+    pub workers: usize,
+    /// Per-worker minibatch size b.
+    pub batch: usize,
+    pub lr: LrSchedule,
+    /// Momentum on the local iterations (paper §5.1.1); 0 disables.
+    pub momentum: f64,
+    /// Uplink (worker → master) compressor.
+    pub up: CompressorSpec,
+    /// Downlink (master → worker) compressor; `identity` = dense broadcast.
+    pub down: CompressorSpec,
+    pub schedule: ScheduleSpec,
+    pub participation: ParticipationSpec,
+    pub agg_scale: AggScale,
+    /// FedOpt-style server optimizer (`avg` = the paper's plain averaging).
+    pub server_opt: ServerOptSpec,
+    pub sharding: Sharding,
+    pub seed: u64,
+    /// Engine worker-pool threads (wall-clock only; histories are
+    /// bit-identical for every value). 0 = all cores.
+    pub threads: usize,
+    /// Metric grid: record every `eval_every` steps plus the final step.
+    pub eval_every: usize,
+    /// Rows subsampled for loss/error evaluation.
+    pub eval_rows: usize,
+}
+
+/// The JSON field names of [`ExperimentSpec`], in emission order. Shared by
+/// `to_json` and the unknown-field check in `from_json`.
+const FIELDS: &[&str] = &[
+    "label",
+    "workload",
+    "steps",
+    "workers",
+    "batch",
+    "lr",
+    "momentum",
+    "up",
+    "down",
+    "schedule",
+    "participation",
+    "agg_scale",
+    "server_opt",
+    "sharding",
+    "seed",
+    "threads",
+    "eval_every",
+    "eval_rows",
+];
+
+impl ExperimentSpec {
+    /// A spec pre-filled with `workload`'s defaults (the historical figure
+    /// hyperparameters): identity compression both ways, H = 1 synchronous,
+    /// full participation, plain averaging, seed [`SEED`].
+    pub fn for_workload(workload: Workload) -> Self {
+        let dflt = workload.defaults();
+        ExperimentSpec {
+            label: "run".to_string(),
+            workload,
+            steps: dflt.steps,
+            workers: dflt.workers,
+            batch: dflt.batch,
+            lr: dflt.lr,
+            momentum: dflt.momentum,
+            up: CompressorSpec::identity(),
+            down: CompressorSpec::identity(),
+            schedule: ScheduleSpec::Sync { h: 1 },
+            participation: ParticipationSpec::Full,
+            agg_scale: AggScale::Workers,
+            server_opt: ServerOptSpec::Avg,
+            sharding: Sharding::Iid,
+            seed: SEED,
+            threads: 1,
+            eval_every: dflt.eval_every,
+            eval_rows: 512,
+        }
+    }
+
+    // -- builders (used by the static figure tables; panic on bad specs,
+    //    which the figure tests exercise) ---------------------------------
+
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn with_up(mut self, spec: &str) -> Self {
+        self.up = CompressorSpec::parse(spec).expect("bad uplink compressor spec");
+        self
+    }
+
+    pub fn with_down(mut self, spec: &str) -> Self {
+        self.down = CompressorSpec::parse(spec).expect("bad downlink compressor spec");
+        self
+    }
+
+    pub fn with_h(mut self, h: usize) -> Self {
+        self.schedule = ScheduleSpec::Sync { h };
+        self
+    }
+
+    pub fn asynchronous(mut self, h: usize) -> Self {
+        self.schedule = ScheduleSpec::Async { h };
+        self
+    }
+
+    pub fn with_participation(mut self, spec: &str, scale: AggScale) -> Self {
+        self.participation =
+            ParticipationSpec::parse(spec).expect("bad participation spec");
+        self.agg_scale = scale;
+        self
+    }
+
+    pub fn with_server_opt(mut self, spec: &str) -> Self {
+        self.server_opt = ServerOptSpec::parse(spec).expect("bad server-opt spec");
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    // -- validation ---------------------------------------------------------
+
+    /// Range-check every field (called by `from_json` and `resolve`, so a
+    /// spec that reaches the engine is always well-formed).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.steps >= 1, "`steps` must be >= 1, got {}", self.steps);
+        anyhow::ensure!(self.workers >= 1, "`workers` must be >= 1, got {}", self.workers);
+        anyhow::ensure!(self.batch >= 1, "`batch` must be >= 1, got {}", self.batch);
+        anyhow::ensure!(
+            self.eval_every >= 1,
+            "`eval_every` must be >= 1, got {}",
+            self.eval_every
+        );
+        anyhow::ensure!(self.eval_rows >= 1, "`eval_rows` must be >= 1");
+        anyhow::ensure!(
+            self.schedule.h() >= 1,
+            "`schedule` H must be >= 1, got {}",
+            self.schedule.h()
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.momentum),
+            "`momentum` must be in [0, 1), got {}",
+            self.momentum
+        );
+        anyhow::ensure!(
+            self.seed <= (1u64 << 53),
+            "`seed` must be <= 2^53 (JSON numbers are f64), got {}",
+            self.seed
+        );
+        self.up.resolve().map_err(|e| anyhow::anyhow!("`up`: {e}"))?;
+        self.down.resolve().map_err(|e| anyhow::anyhow!("`down`: {e}"))?;
+        self.server_opt.validate()?;
+        self.participation.validate(self.workers)?;
+        Ok(())
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    /// Serialize to a JSON object (all fields, canonical spellings).
+    /// `from_json(to_json(s)) == s` — property-tested.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.as_str())),
+            ("workload", Json::str(self.workload.spec_str())),
+            ("steps", Json::from(self.steps)),
+            ("workers", Json::from(self.workers)),
+            ("batch", Json::from(self.batch)),
+            ("lr", lr_to_json(&self.lr)),
+            ("momentum", Json::num(self.momentum)),
+            ("up", Json::str(self.up.as_str())),
+            ("down", Json::str(self.down.as_str())),
+            ("schedule", Json::str(self.schedule.spec_str())),
+            ("participation", Json::str(self.participation.spec_str())),
+            ("agg_scale", Json::str(self.agg_scale.spec_str())),
+            ("server_opt", Json::str(self.server_opt.spec_str())),
+            ("sharding", Json::str(self.sharding.spec_str())),
+            ("seed", Json::from(self.seed)),
+            ("threads", Json::from(self.threads)),
+            ("eval_every", Json::from(self.eval_every)),
+            ("eval_rows", Json::from(self.eval_rows)),
+        ])
+    }
+
+    /// Deserialize. Missing fields take the workload defaults (so sparse
+    /// hand-written specs work); unknown fields and out-of-range values are
+    /// hard errors naming the offending field.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("experiment spec must be a JSON object"))?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                FIELDS.contains(&key.as_str()),
+                "unknown field `{key}` in experiment spec (known fields: {})",
+                FIELDS.join(", ")
+            );
+        }
+        let workload = match j.get("workload") {
+            Json::Null => Workload::ConvexSoftmax,
+            v => Workload::parse(str_field(v, "workload")?)?,
+        };
+        let mut s = ExperimentSpec::for_workload(workload);
+        if let Some(v) = opt(j, "label") {
+            s.label = str_field(v, "label")?.to_string();
+        }
+        if let Some(v) = opt(j, "steps") {
+            s.steps = usize_field(v, "steps")?;
+        }
+        if let Some(v) = opt(j, "workers") {
+            s.workers = usize_field(v, "workers")?;
+        }
+        if let Some(v) = opt(j, "batch") {
+            s.batch = usize_field(v, "batch")?;
+        }
+        if let Some(v) = opt(j, "lr") {
+            s.lr = lr_from_json(v)?;
+        }
+        if let Some(v) = opt(j, "momentum") {
+            s.momentum = f64_field(v, "momentum")?;
+        }
+        if let Some(v) = opt(j, "up") {
+            s.up = CompressorSpec::parse(str_field(v, "up")?)
+                .map_err(|e| anyhow::anyhow!("`up`: {e}"))?;
+        }
+        if let Some(v) = opt(j, "down") {
+            s.down = CompressorSpec::parse(str_field(v, "down")?)
+                .map_err(|e| anyhow::anyhow!("`down`: {e}"))?;
+        }
+        if let Some(v) = opt(j, "schedule") {
+            s.schedule = ScheduleSpec::parse(str_field(v, "schedule")?)?;
+        }
+        if let Some(v) = opt(j, "participation") {
+            s.participation = ParticipationSpec::parse(str_field(v, "participation")?)?;
+        }
+        if let Some(v) = opt(j, "agg_scale") {
+            s.agg_scale = AggScale::parse(str_field(v, "agg_scale")?)?;
+        }
+        if let Some(v) = opt(j, "server_opt") {
+            s.server_opt = ServerOptSpec::parse(str_field(v, "server_opt")?)?;
+        }
+        if let Some(v) = opt(j, "sharding") {
+            s.sharding = Sharding::parse(str_field(v, "sharding")?)?;
+        }
+        if let Some(v) = opt(j, "seed") {
+            s.seed = u64_field(v, "seed")?;
+        }
+        if let Some(v) = opt(j, "threads") {
+            s.threads = usize_field(v, "threads")?;
+        }
+        if let Some(v) = opt(j, "eval_every") {
+            s.eval_every = usize_field(v, "eval_every")?;
+        }
+        if let Some(v) = opt(j, "eval_rows") {
+            s.eval_rows = usize_field(v, "eval_rows")?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("experiment spec: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    // -- resolution ---------------------------------------------------------
+
+    /// Build the concrete operators this spec names — the single registry
+    /// point for every plug-in axis (compression, schedule, participation).
+    /// `steps` governs the materialized horizons (schedules and participant
+    /// sets), so the figure harness can shorten runs in quick mode without
+    /// touching the stored spec.
+    pub(crate) fn resolve_ops(&self, steps: usize) -> anyhow::Result<ResolvedOps> {
+        let up = self.up.resolve().map_err(|e| anyhow::anyhow!("`up`: {e}"))?;
+        let down = self.down.resolve().map_err(|e| anyhow::anyhow!("`down`: {e}"))?;
+        let schedule = self.schedule.materialize(self.workers, steps, self.seed);
+        self.participation.validate(self.workers)?;
+        let participation = self.participation.materialize(self.workers, steps, self.seed);
+        Ok(ResolvedOps { up, down, schedule, participation })
+    }
+
+    /// Resolve the whole spec: instantiate the workload (model + datasets +
+    /// init; `quick` shrinks the synthetic data exactly as the figure
+    /// harness's quick mode) and every trait object, in one place. The
+    /// result owns everything a run needs; `TrainSpec` exists only as its
+    /// short-lived borrowed view.
+    pub fn resolve(&self, quick: bool) -> anyhow::Result<ResolvedExperiment> {
+        self.validate()?;
+        let workload = self.workload.instantiate(quick);
+        let ops = self.resolve_ops(self.steps)?;
+        Ok(ResolvedExperiment { spec: self.clone(), workload, ops })
+    }
+}
+
+/// The trait objects a spec resolves to (one bundle per run).
+pub(crate) struct ResolvedOps {
+    pub up: Box<dyn Compressor>,
+    pub down: Box<dyn Compressor>,
+    pub schedule: Box<dyn SyncSchedule>,
+    pub participation: Participation,
+}
+
+/// A fully resolved experiment: owned workload instance + owned operators.
+/// Borrow a [`TrainSpec`] view via [`ResolvedExperiment::train_spec`] or
+/// just call [`ResolvedExperiment::run`].
+pub struct ResolvedExperiment {
+    pub spec: ExperimentSpec,
+    pub workload: WorkloadInstance,
+    ops: ResolvedOps,
+}
+
+impl ResolvedExperiment {
+    /// The short-lived borrowed view the engine consumes.
+    pub fn train_spec(&self) -> TrainSpec<'_> {
+        TrainSpec {
+            model: self.workload.model.as_ref(),
+            train: &self.workload.train,
+            test: Some(&self.workload.test),
+            workers: self.spec.workers,
+            batch: self.spec.batch,
+            steps: self.spec.steps,
+            lr: self.spec.lr.clone(),
+            momentum: self.spec.momentum,
+            compressor: self.ops.up.as_ref(),
+            down_compressor: self.ops.down.as_ref(),
+            schedule: self.ops.schedule.as_ref(),
+            participation: &self.ops.participation,
+            agg_scale: self.spec.agg_scale,
+            server_opt: self.spec.server_opt,
+            sharding: self.spec.sharding,
+            seed: self.spec.seed,
+            eval_every: self.spec.eval_every,
+            eval_rows: self.spec.eval_rows,
+            threads: self.spec.threads,
+        }
+    }
+
+    /// Run on the deterministic engine (from the workload's init).
+    pub fn run(&self) -> History {
+        engine::run_from(&self.train_spec(), self.workload.init.clone())
+    }
+
+    /// Run on the threaded master/worker runtime (consumes the resolution:
+    /// datasets move into `Arc`s, operators into the config). Native
+    /// workloads only — the model factory is derived from the workload.
+    pub fn run_threaded(self) -> anyhow::Result<History> {
+        let ResolvedExperiment { spec, workload, ops } = self;
+        let factory = spec.workload.model_factory(
+            workload.train.dim,
+            workload.train.classes,
+            workload.train.n,
+        );
+        let mut cfg = CoordinatorConfig::new(Arc::from(ops.up), Arc::from(ops.schedule));
+        cfg.down_compressor = Arc::from(ops.down);
+        cfg.participation = ops.participation;
+        cfg.agg_scale = spec.agg_scale;
+        cfg.server_opt = spec.server_opt;
+        cfg.workers = spec.workers;
+        cfg.batch = spec.batch;
+        cfg.steps = spec.steps;
+        cfg.lr = spec.lr.clone();
+        cfg.momentum = spec.momentum;
+        cfg.sharding = spec.sharding;
+        cfg.seed = spec.seed;
+        cfg.eval_every = spec.eval_every;
+        cfg.eval_rows = spec.eval_rows;
+        cfg.init = Some(workload.init);
+        run_threaded(&cfg, factory, Arc::new(workload.train), Some(Arc::new(workload.test)))
+    }
+}
+
+// -- JSON field helpers -----------------------------------------------------
+
+/// `Some(value)` for present keys, `None` for absent ones (obj lookup
+/// returns `Null` for both an explicit `null` and a missing key; treating
+/// explicit `null` as "use the default" is fine here).
+fn opt<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j.get(key) {
+        Json::Null => None,
+        v => Some(v),
+    }
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    v.as_str().ok_or_else(|| anyhow::anyhow!("field `{key}` must be a string"))
+}
+
+fn f64_field(v: &Json, key: &str) -> anyhow::Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("field `{key}` must be a number"))
+}
+
+fn usize_field(v: &Json, key: &str) -> anyhow::Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a non-negative integer"))
+}
+
+fn u64_field(v: &Json, key: &str) -> anyhow::Result<u64> {
+    let n = f64_field(v, key)?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64,
+        "field `{key}` must be a non-negative integer <= 2^53"
+    );
+    Ok(n as u64)
+}
+
+/// Learning-rate schedule codec: `{"kind": "const", "eta": ..}` |
+/// `{"kind": "invtime", "xi": .., "a": ..}` |
+/// `{"kind": "warmup", "peak": .., "warmup": .., "milestones": [..],
+///   "decay": ..}`.
+fn lr_to_json(lr: &LrSchedule) -> Json {
+    match lr {
+        LrSchedule::Const { eta } => {
+            Json::obj(vec![("kind", Json::str("const")), ("eta", Json::num(*eta))])
+        }
+        LrSchedule::InvTime { xi, a } => Json::obj(vec![
+            ("kind", Json::str("invtime")),
+            ("xi", Json::num(*xi)),
+            ("a", Json::num(*a)),
+        ]),
+        LrSchedule::WarmupPiecewise { peak, warmup, milestones, decay } => Json::obj(vec![
+            ("kind", Json::str("warmup")),
+            ("peak", Json::num(*peak)),
+            ("warmup", Json::from(*warmup)),
+            ("milestones", Json::arr(milestones.iter().map(|&m| Json::from(m)))),
+            ("decay", Json::num(*decay)),
+        ]),
+    }
+}
+
+fn lr_from_json(v: &Json) -> anyhow::Result<LrSchedule> {
+    let kind = str_field(v.get("kind"), "lr.kind")
+        .map_err(|_| anyhow::anyhow!("field `lr` must be an object with a string `kind`"))?;
+    match kind {
+        "const" => Ok(LrSchedule::Const { eta: f64_field(v.get("eta"), "lr.eta")? }),
+        "invtime" => Ok(LrSchedule::InvTime {
+            xi: f64_field(v.get("xi"), "lr.xi")?,
+            a: f64_field(v.get("a"), "lr.a")?,
+        }),
+        "warmup" => {
+            let milestones = v
+                .get("milestones")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("field `lr.milestones` must be an array"))?
+                .iter()
+                .map(|m| usize_field(m, "lr.milestones[..]"))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            Ok(LrSchedule::WarmupPiecewise {
+                peak: f64_field(v.get("peak"), "lr.peak")?,
+                warmup: usize_field(v.get("warmup"), "lr.warmup")?,
+                milestones,
+                decay: f64_field(v.get("decay"), "lr.decay")?,
+            })
+        }
+        other => anyhow::bail!("unknown lr kind `{other}` (expected const | invtime | warmup)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_workload_roundtrips_through_json() {
+        for w in [Workload::ConvexSoftmax, Workload::NonConvexMlp] {
+            let s = ExperimentSpec::for_workload(w);
+            let j = s.to_json();
+            let back = ExperimentSpec::from_json(&j).unwrap();
+            assert_eq!(back, s);
+            // And through the textual form (compact and pretty).
+            assert_eq!(ExperimentSpec::from_json_str(&j.to_string()).unwrap(), s);
+            assert_eq!(ExperimentSpec::from_json_str(&j.pretty()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn builders_compose_and_roundtrip() {
+        let s = ExperimentSpec::for_workload(Workload::ConvexSoftmax)
+            .with_label("QTopK-bidir_mom")
+            .with_up("qtopk:k=40,bits=4,scaled")
+            .with_down("qtopk:k=400,bits=4")
+            .with_h(4)
+            .with_participation("bernoulli:0.5", AggScale::Participants)
+            .with_server_opt("momentum:beta=0.9,lr=0.1")
+            .with_steps(321);
+        assert_eq!(ExperimentSpec::from_json(&s.to_json()).unwrap(), s);
+        assert_eq!(s.schedule, ScheduleSpec::Sync { h: 4 });
+        assert_eq!(s.server_opt, ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 });
+    }
+
+    #[test]
+    fn sparse_json_takes_workload_defaults() {
+        let s = ExperimentSpec::from_json_str(
+            r#"{"workload": "nonconvex", "up": "topk:k=170", "steps": 99}"#,
+        )
+        .unwrap();
+        let dflt = Workload::NonConvexMlp.defaults();
+        assert_eq!(s.steps, 99);
+        assert_eq!(s.workers, dflt.workers);
+        assert_eq!(s.lr, dflt.lr);
+        assert_eq!(s.up.as_str(), "topk:k=170");
+        assert_eq!(s.down.as_str(), "identity");
+    }
+
+    #[test]
+    fn unknown_field_and_bad_values_are_named_errors() {
+        let err = ExperimentSpec::from_json_str(r#"{"workload": "convex", "stepz": 5}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stepz"), "{err}");
+        for (json, needle) in [
+            (r#"{"steps": 0}"#, "steps"),
+            (r#"{"workers": 0}"#, "workers"),
+            (r#"{"momentum": 1.5}"#, "momentum"),
+            (r#"{"up": "bogus:k=1"}"#, "up"),
+            (r#"{"schedule": "sometimes:3"}"#, "schedule"),
+            (r#"{"lr": {"kind": "cosine"}}"#, "lr"),
+            (r#"{"server_opt": "momentum:beta=2"}"#, "beta"),
+            (r#"{"seed": 1.5}"#, "seed"),
+            (r#"{"participation": "fixed:99"}"#, "fixed"),
+        ] {
+            let err = ExperimentSpec::from_json_str(json).unwrap_err().to_string();
+            assert!(err.contains(needle), "{json}: {err}");
+        }
+    }
+
+    #[test]
+    fn lr_codec_covers_all_variants() {
+        for lr in [
+            LrSchedule::Const { eta: 0.25 },
+            LrSchedule::InvTime { xi: 1884.0, a: 1570.0 },
+            LrSchedule::WarmupPiecewise {
+                peak: 1.5,
+                warmup: 10,
+                milestones: vec![30, 60],
+                decay: 0.1,
+            },
+        ] {
+            assert_eq!(lr_from_json(&lr_to_json(&lr)).unwrap(), lr);
+        }
+    }
+
+    #[test]
+    fn resolve_runs_and_matches_handbuilt_trainspec() {
+        // The resolved view must reproduce a hand-built TrainSpec run
+        // bit for bit (same ops, same salts, same horizons).
+        let spec = ExperimentSpec::for_workload(Workload::ConvexSoftmax)
+            .with_up("topk:k=40")
+            .with_h(4)
+            .with_steps(30);
+        let resolved = spec.resolve(true).unwrap();
+        let h_spec = resolved.run();
+
+        let w = Workload::ConvexSoftmax.instantiate(true);
+        let up = crate::compress::parse_spec("topk:k=40").unwrap();
+        let down = crate::compress::parse_spec("identity").unwrap();
+        let sched = FixedPeriod::new(4);
+        let part = ParticipationSpec::Full.materialize(w.workers, 30, SEED);
+        let hand = TrainSpec {
+            model: w.model.as_ref(),
+            train: &w.train,
+            test: Some(&w.test),
+            workers: w.workers,
+            batch: w.batch,
+            steps: 30,
+            lr: w.lr.clone(),
+            momentum: w.momentum,
+            compressor: up.as_ref(),
+            down_compressor: down.as_ref(),
+            schedule: &sched,
+            participation: &part,
+            agg_scale: AggScale::Workers,
+            server_opt: ServerOptSpec::Avg,
+            sharding: Sharding::Iid,
+            seed: SEED,
+            eval_every: w.eval_every,
+            eval_rows: 512,
+            threads: 1,
+        };
+        let h_hand = engine::run_from(&hand, w.init.clone());
+        assert_eq!(h_spec.final_params, h_hand.final_params);
+        for (a, b) in h_spec.points.iter().zip(&h_hand.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.bits_up, b.bits_up);
+            assert_eq!(a.bits_down, b.bits_down);
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_invalid_specs() {
+        let mut s = ExperimentSpec::for_workload(Workload::ConvexSoftmax);
+        s.steps = 0;
+        assert!(s.resolve(true).is_err());
+        let mut s = ExperimentSpec::for_workload(Workload::ConvexSoftmax);
+        s.participation = ParticipationSpec::FixedSize { m: 99 };
+        assert!(s.resolve(true).is_err());
+    }
+}

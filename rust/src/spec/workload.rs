@@ -1,0 +1,228 @@
+//! The two native simulated workloads (moved here from `figures::` so the
+//! owned [`crate::spec::ExperimentSpec`] can name them without a layering
+//! cycle; `figures::` re-exports everything for backwards compatibility).
+//!
+//! * `ConvexSoftmax` — ℓ2-regularized softmax regression with the paper's
+//!   MNIST geometry (d = 7850, R = 15, b = 8; §5.2) on synthetic clusters.
+//! * `NonConvexMlp` — ReLU MLP with momentum 0.9 on local iterations,
+//!   standing in for ResNet-50/ImageNet (§5.1; substitution DESIGN.md §6).
+//!
+//! [`Workload::defaults`] exposes the per-workload hyperparameters without
+//! building any data — that is what `ExperimentSpec::for_workload` records
+//! — while [`Workload::instantiate`] materializes model + datasets + init
+//! (deterministically from [`SEED`]-derived constants, so every
+//! instantiation of the same `(workload, quick)` pair is bit-identical).
+
+use crate::data::{gaussian_clusters_split, Dataset};
+use crate::grad::{GradModel, Mlp, SoftmaxRegression};
+use crate::optim::LrSchedule;
+
+/// Seed shared by all figures/workloads (NeurIPS 2019 submission deadline).
+pub const SEED: u64 = 20190527;
+
+/// The two simulated workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// d = 7850 softmax regression, R = 15, b = 8 (paper §5.2).
+    ConvexSoftmax,
+    /// MLP classifier with momentum, R = 8, b = 16 (stand-in for §5.1).
+    NonConvexMlp,
+}
+
+/// Per-workload hyperparameter defaults — the values `ExperimentSpec`
+/// records as concrete fields. Pure data; no datasets are built.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadDefaults {
+    pub steps: usize,
+    pub workers: usize,
+    pub batch: usize,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    /// Reference k for Top_k in this workload (paper: 40 convex, ~1% of d
+    /// non-convex).
+    pub k: usize,
+    pub eval_every: usize,
+}
+
+/// Workload instantiation shared by all series of a figure (same data, same
+/// eval subsets, same seed ⇒ curves are directly comparable).
+pub struct WorkloadInstance {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub model: Box<dyn GradModel>,
+    pub init: Vec<f32>,
+    pub workers: usize,
+    pub batch: usize,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    /// Reference k for Top_k in this workload (paper: 40 convex, ~1k/tensor
+    /// non-convex).
+    pub k: usize,
+    pub eval_every: usize,
+}
+
+impl Workload {
+    /// Parse the spec token: `convex` | `nonconvex`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "convex" => Ok(Workload::ConvexSoftmax),
+            "nonconvex" => Ok(Workload::NonConvexMlp),
+            other => anyhow::bail!("unknown workload `{other}` (expected convex | nonconvex)"),
+        }
+    }
+
+    /// Canonical spec token — `parse(spec_str(w)) == w`.
+    pub fn spec_str(&self) -> &'static str {
+        match self {
+            Workload::ConvexSoftmax => "convex",
+            Workload::NonConvexMlp => "nonconvex",
+        }
+    }
+
+    /// The workload's hyperparameter defaults (no data is built). The
+    /// numeric values are identical to the historical `instantiate` table,
+    /// so specs recorded from these defaults reproduce the legacy figures
+    /// bit for bit.
+    pub fn defaults(&self) -> WorkloadDefaults {
+        match self {
+            Workload::ConvexSoftmax => {
+                let d = (784 + 1) * 10;
+                let k = 40; // paper §5.2.2
+                let h_ref = 8usize;
+                // η_t = ξ/(a+t), a = dH/k (paper §5.2.2), ξ so η_0 ≈ 1.2.
+                let a = (d * h_ref / k) as f64;
+                WorkloadDefaults {
+                    steps: 1500,
+                    workers: 15,
+                    batch: 8,
+                    lr: LrSchedule::InvTime { xi: 1.2 * a, a },
+                    momentum: 0.0,
+                    k,
+                    eval_every: 25,
+                }
+            }
+            Workload::NonConvexMlp => {
+                let d = Mlp::new(vec![256, 64, 10]).dim();
+                WorkloadDefaults {
+                    steps: 800,
+                    workers: 8,
+                    batch: 16,
+                    lr: LrSchedule::Const { eta: 0.08 },
+                    momentum: 0.9,
+                    k: d / 100, // ~1% like the paper's per-tensor min(d_t, 1000)
+                    eval_every: 20,
+                }
+            }
+        }
+    }
+
+    /// Build model + train/test data + init. Deterministic in
+    /// `(self, quick)`: the data seeds are fixed constants, so repeated
+    /// instantiations are bit-identical (figure series may therefore share
+    /// one instance purely as a compute optimization).
+    pub fn instantiate(self, quick: bool) -> WorkloadInstance {
+        let dflt = self.defaults();
+        match self {
+            Workload::ConvexSoftmax => {
+                let n = if quick { 1500 } else { 6000 };
+                let dim = 784;
+                let classes = 10;
+                let (train, test) =
+                    gaussian_clusters_split(n, n / 4, dim, classes, 0.12, 1.0, SEED);
+                let model = SoftmaxRegression::new(dim, classes, 1.0 / n as f64);
+                WorkloadInstance {
+                    init: vec![0.0; model.dim()],
+                    model: Box::new(model),
+                    train,
+                    test,
+                    workers: dflt.workers,
+                    batch: dflt.batch,
+                    lr: dflt.lr,
+                    momentum: dflt.momentum,
+                    k: dflt.k,
+                    eval_every: dflt.eval_every,
+                }
+            }
+            Workload::NonConvexMlp => {
+                let n = if quick { 1200 } else { 4000 };
+                let dim = 256;
+                let classes = 10;
+                let widths = vec![dim, 64, classes];
+                let (train, test) =
+                    gaussian_clusters_split(n, n / 4, dim, classes, 0.22, 1.0, SEED ^ 2);
+                let model = Mlp::new(widths);
+                let init = model.init_params(SEED);
+                WorkloadInstance {
+                    init,
+                    model: Box::new(model),
+                    train,
+                    test,
+                    workers: dflt.workers,
+                    batch: dflt.batch,
+                    lr: dflt.lr,
+                    momentum: dflt.momentum,
+                    k: dflt.k,
+                    eval_every: dflt.eval_every,
+                }
+            }
+        }
+    }
+
+    /// A `Send + Clone` model factory over the given data geometry — what
+    /// the threaded runtime needs (each worker thread constructs its own
+    /// model). `n` is the training-set size (the convex model's ℓ2
+    /// regularization is 1/n, matching `instantiate`).
+    pub fn model_factory(
+        self,
+        dim: usize,
+        classes: usize,
+        n: usize,
+    ) -> impl Fn() -> Box<dyn GradModel> + Send + Clone + 'static {
+        move || -> Box<dyn GradModel> {
+            match self {
+                Workload::ConvexSoftmax => {
+                    Box::new(SoftmaxRegression::new(dim, classes, 1.0 / n as f64))
+                }
+                Workload::NonConvexMlp => Box::new(Mlp::new(vec![dim, 64, classes])),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        for w in [Workload::ConvexSoftmax, Workload::NonConvexMlp] {
+            assert_eq!(Workload::parse(w.spec_str()).unwrap(), w);
+        }
+        assert!(Workload::parse("resnet").is_err());
+    }
+
+    #[test]
+    fn defaults_match_instantiate() {
+        for w in [Workload::ConvexSoftmax, Workload::NonConvexMlp] {
+            let d = w.defaults();
+            let inst = w.instantiate(true);
+            assert_eq!(d.workers, inst.workers);
+            assert_eq!(d.batch, inst.batch);
+            assert_eq!(d.lr, inst.lr);
+            assert_eq!(d.momentum, inst.momentum);
+            assert_eq!(d.k, inst.k);
+            assert_eq!(d.eval_every, inst.eval_every);
+            assert_eq!(inst.init.len(), inst.model.dim());
+            assert!(inst.train.n > 0 && inst.test.n > 0);
+        }
+    }
+
+    #[test]
+    fn factory_models_match_instance_geometry() {
+        for w in [Workload::ConvexSoftmax, Workload::NonConvexMlp] {
+            let inst = w.instantiate(true);
+            let factory = w.model_factory(inst.train.dim, inst.train.classes, inst.train.n);
+            assert_eq!(factory().dim(), inst.model.dim());
+        }
+    }
+}

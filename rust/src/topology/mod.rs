@@ -188,6 +188,16 @@ impl ParticipationSpec {
         }
     }
 
+    /// Canonical spec string — `parse(spec_str(s)) == s` (f64 `Display`
+    /// round-trips exactly, so `bernoulli:p` survives serialization).
+    pub fn spec_str(&self) -> String {
+        match *self {
+            ParticipationSpec::Full => "full".to_string(),
+            ParticipationSpec::Bernoulli { p } => format!("bernoulli:{p}"),
+            ParticipationSpec::FixedSize { m } => format!("fixed:{m}"),
+        }
+    }
+
     /// Check this spec against a worker count, returning a clean error for
     /// user-reachable misconfigurations (the asserts in `materialize` are
     /// internal invariants; CLI-facing callers validate first).
@@ -389,6 +399,18 @@ mod tests {
         for r in 0..4 {
             let pts: Vec<usize> = (0..50).filter(|&t| s.syncs_at(r, t)).collect();
             assert_eq!(pts, (0..50).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn participation_spec_str_roundtrips() {
+        for spec in [
+            ParticipationSpec::Full,
+            ParticipationSpec::Bernoulli { p: 0.5 },
+            ParticipationSpec::Bernoulli { p: 1.0 / 3.0 },
+            ParticipationSpec::FixedSize { m: 7 },
+        ] {
+            assert_eq!(ParticipationSpec::parse(&spec.spec_str()).unwrap(), spec);
         }
     }
 

@@ -109,6 +109,52 @@ impl Json {
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+
+    /// Pretty-print with 2-space indentation (objects keep their stable
+    /// BTreeMap key order). Scalars and empty containers stay inline, so
+    /// `parse(pretty()) == self` exactly like the compact `Display` form.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    push_indent(out, indent + 1);
+                    v.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    push_indent(out, indent + 1);
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+            scalar => out.push_str(&scalar.to_string()),
+        }
+    }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
 }
 
 impl From<f64> for Json {
@@ -464,6 +510,19 @@ mod tests {
     fn surrogate_pair() {
         let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
         assert_eq!(v.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let v = Json::parse(
+            r#"{"b": [1, 2, {"x": null}], "a": "s\"tr", "empty": [], "eobj": {}, "n": 1.5}"#,
+        )
+        .unwrap();
+        let p = v.pretty();
+        assert_eq!(Json::parse(&p).unwrap(), v);
+        assert!(p.contains("\n  \"a\": \"s\\\"tr\""), "{p}");
+        assert!(p.contains("\"empty\": []"), "{p}");
+        assert!(p.ends_with("}\n"), "{p}");
     }
 
     #[test]

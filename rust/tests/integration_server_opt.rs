@@ -1,0 +1,229 @@
+//! FedOpt-style server optimizers: `Avg` stays bit-identical to the
+//! historical aggregation, non-`Avg` optimizers are bit-identical across
+//! every execution substrate (sequential engine, parallel engine, threaded
+//! coordinator), compose with compressed downlink + sampled participation,
+//! and actually optimize.
+
+use qsparse::compress::parse_spec;
+use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+use qsparse::engine::{run, History, TrainSpec};
+use qsparse::grad::{GradModel, SoftmaxRegression};
+use qsparse::optim::{LrSchedule, ServerOptSpec};
+use qsparse::protocol::AggScale;
+use qsparse::topology::{FixedPeriod, ParticipationSpec, RandomGaps};
+use std::sync::Arc;
+
+const N: usize = 240;
+const WORKERS: usize = 8;
+const STEPS: usize = 60;
+
+fn data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
+    qsparse::data::gaussian_clusters_split(N, N / 4, 12, 4, 1.5, 0.5, 77)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(12, 4, 1.0 / N as f64)
+}
+
+fn feq(a: f64, b: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+}
+
+fn assert_histories_identical(a: &History, b: &History, ctx: &str) {
+    let sa: Vec<usize> = a.points.iter().map(|p| p.step).collect();
+    let sb: Vec<usize> = b.points.iter().map(|p| p.step).collect();
+    assert_eq!(sa, sb, "{ctx}: metric step grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.bits_up, pb.bits_up, "{ctx}: bits_up at step {}", pa.step);
+        assert_eq!(pa.bits_down, pb.bits_down, "{ctx}: bits_down at step {}", pa.step);
+        assert!(
+            feq(pa.train_loss, pb.train_loss),
+            "{ctx}: train_loss at step {}: {} vs {}",
+            pa.step,
+            pa.train_loss,
+            pb.train_loss
+        );
+        assert!(
+            feq(pa.mem_norm_sq, pb.mem_norm_sq),
+            "{ctx}: mem_norm_sq at step {}",
+            pa.step
+        );
+    }
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params diverged");
+}
+
+fn run_engine(
+    up: &str,
+    down: &str,
+    h: usize,
+    part: &str,
+    scale: AggScale,
+    server: ServerOptSpec,
+    threads: usize,
+) -> History {
+    let (train, test) = data();
+    let m = model();
+    let upc = parse_spec(up).unwrap();
+    let downc = parse_spec(down).unwrap();
+    let sched = FixedPeriod::new(h);
+    let participation = ParticipationSpec::parse(part)
+        .unwrap()
+        .materialize(WORKERS, STEPS, 5);
+    let mut spec = TrainSpec::new(&m, &train, upc.as_ref(), &sched);
+    spec.down_compressor = downc.as_ref();
+    spec.test = Some(&test);
+    spec.workers = WORKERS;
+    spec.batch = 4;
+    spec.steps = STEPS;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.participation = &participation;
+    spec.agg_scale = scale;
+    spec.server_opt = server;
+    spec.eval_every = 7;
+    spec.seed = 5;
+    spec.threads = threads;
+    run(&spec)
+}
+
+const MOMENTUM: ServerOptSpec = ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 };
+const ADAM: ServerOptSpec = ServerOptSpec::Adam { b1: 0.9, b2: 0.99, eps: 1e-3, lr: 0.05 };
+
+/// `Avg` set explicitly is the very same code path as the default —
+/// trivially bit-identical, pinned so a future regression is loud.
+#[test]
+fn explicit_avg_is_bit_identical_to_default() {
+    let dflt = run_engine("topk:k=10", "identity", 4, "full", AggScale::Workers,
+        ServerOptSpec::Avg, 1);
+    let expl = run_engine("topk:k=10", "identity", 4, "full", AggScale::Workers,
+        ServerOptSpec::Avg, 1);
+    assert_histories_identical(&dflt, &expl, "avg determinism");
+    assert!(dflt.final_loss() < dflt.points[0].train_loss, "no optimization happened");
+}
+
+/// The hardest substrate sweep: momentum and Adam, compressed stochastic
+/// downlink, sampled participation, H > 1 — the parallel engine must agree
+/// with the sequential engine bit for bit at every thread count.
+#[test]
+fn server_opt_bit_identical_across_engine_thread_counts() {
+    for (name, server) in [("momentum", MOMENTUM), ("adam", ADAM)] {
+        for (part, scale) in [
+            ("full", AggScale::Workers),
+            ("fixed:5", AggScale::Participants),
+        ] {
+            let seq = run_engine("qtopk:k=10,bits=4", "qsgd:bits=2", 4, part, scale, server, 1);
+            assert!(seq.final_loss().is_finite(), "{name}/{part}: diverged");
+            for threads in [2usize, 8] {
+                let par =
+                    run_engine("qtopk:k=10,bits=4", "qsgd:bits=2", 4, part, scale, server, threads);
+                assert_histories_identical(
+                    &seq,
+                    &par,
+                    &format!("{name}/{part} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Engine ≡ threaded coordinator under server momentum with a compressed
+/// downlink: both substrates share `MasterCore`, so the optimizer step
+/// lands identically (parity by construction, verified end-to-end).
+#[test]
+fn server_momentum_engine_threaded_bit_identical() {
+    let (train, test) = data();
+    let engine_hist =
+        run_engine("topk:k=10", "qtopk:k=16,bits=4", 4, "fixed:5", AggScale::Participants,
+            MOMENTUM, 1);
+
+    let participation = ParticipationSpec::parse("fixed:5")
+        .unwrap()
+        .materialize(WORKERS, STEPS, 5);
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("topk:k=10").unwrap()),
+        Arc::new(FixedPeriod::new(4)),
+    );
+    cfg.down_compressor = Arc::from(parse_spec("qtopk:k=16,bits=4").unwrap());
+    cfg.participation = participation;
+    cfg.agg_scale = AggScale::Participants;
+    cfg.server_opt = MOMENTUM;
+    cfg.workers = WORKERS;
+    cfg.batch = 4;
+    cfg.steps = STEPS;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    cfg.seed = 5;
+    cfg.eval_every = 7;
+    cfg.eval_rows = 512; // match TrainSpec::new's eval subset exactly
+    let threaded_hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train),
+        Some(Arc::new(test)),
+    )
+    .unwrap();
+    assert_histories_identical(&engine_hist, &threaded_hist, "momentum engine vs threaded");
+}
+
+/// A non-Avg optimizer must actually change the trajectory (it is wired,
+/// not silently ignored) while still optimizing: the dampened-momentum EMA
+/// tracks plain averaging's final loss.
+#[test]
+fn server_momentum_changes_trajectory_and_still_converges() {
+    let avg = run_engine("topk:k=10", "identity", 1, "full", AggScale::Workers,
+        ServerOptSpec::Avg, 1);
+    let mom = run_engine("topk:k=10", "identity", 1, "full", AggScale::Workers, MOMENTUM, 1);
+    assert_ne!(
+        avg.final_params, mom.final_params,
+        "server momentum did not change the trajectory"
+    );
+    let (l_avg, l_mom) = (avg.final_loss(), mom.final_loss());
+    assert!(l_mom < avg.points[0].train_loss * 0.9, "momentum failed to optimize: {l_mom}");
+    assert!(
+        l_mom < l_avg + 0.5,
+        "dampened server momentum diverged from plain averaging: {l_mom} vs {l_avg}"
+    );
+}
+
+/// Asynchronous schedules on the engine: every worker syncing at step t
+/// forms one round, so a server optimizer is well-defined there (unlike
+/// the threaded aggregate-on-arrival path, which rejects it below).
+#[test]
+fn engine_async_with_server_opt_runs_and_converges() {
+    let (train, test) = data();
+    let m = model();
+    let up = parse_spec("topk:k=10").unwrap();
+    let sched = RandomGaps::generate(WORKERS, 4, STEPS, 5 ^ 0x5eed);
+    let mut spec = TrainSpec::new(&m, &train, up.as_ref(), &sched);
+    spec.test = Some(&test);
+    spec.workers = WORKERS;
+    spec.batch = 4;
+    spec.steps = STEPS;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.server_opt = MOMENTUM;
+    let hist = run(&spec);
+    assert!(hist.final_loss().is_finite());
+    assert!(hist.final_loss() < hist.points[0].train_loss, "async + momentum did not optimize");
+}
+
+/// The threaded runtime's aggregate-on-arrival path has no round boundary,
+/// so a non-Avg server optimizer there is a configuration error, caught up
+/// front with an actionable message.
+#[test]
+fn threaded_async_with_server_opt_is_rejected() {
+    let (train, test) = data();
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("topk:k=10").unwrap()),
+        Arc::new(RandomGaps::generate(WORKERS, 4, STEPS, 5 ^ 0x5eed)),
+    );
+    cfg.server_opt = MOMENTUM;
+    cfg.workers = WORKERS;
+    cfg.steps = STEPS;
+    let err = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train),
+        Some(Arc::new(test)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("synchronous"), "unexpected error: {err}");
+}

@@ -1,0 +1,299 @@
+//! `ExperimentSpec` serialization properties (randomized round-trip,
+//! unknown-field/bad-value error quality), golden equality of the bundled
+//! `specs/*.json` against the in-code figure tables, and bit-identity of
+//! the spec-resolved figure path vs the pre-redesign hand-built
+//! `TrainSpec` construction (fig9 + fig10, quick-mode workload).
+
+use qsparse::compress::parse_spec;
+use qsparse::data::Sharding;
+use qsparse::engine::{self, History, TrainSpec};
+use qsparse::figures::{self, FigureSpec};
+use qsparse::optim::{LrSchedule, ServerOptSpec};
+use qsparse::protocol::AggScale;
+use qsparse::spec::{
+    CompressorSpec, ExperimentSpec, ScheduleSpec, Workload, WorkloadInstance, SEED,
+};
+use qsparse::topology::{FixedPeriod, ParticipationSpec, RandomGaps, SyncSchedule};
+use qsparse::util::rng::Pcg64;
+
+// -- randomized round-trip --------------------------------------------------
+
+fn random_spec(rng: &mut Pcg64) -> ExperimentSpec {
+    let workload = if rng.f64() < 0.5 {
+        Workload::ConvexSoftmax
+    } else {
+        Workload::NonConvexMlp
+    };
+    let mut s = ExperimentSpec::for_workload(workload);
+    s.label = format!("run-{}", rng.below(10_000));
+    s.steps = 1 + rng.below_usize(3000);
+    s.workers = 1 + rng.below_usize(32);
+    s.batch = 1 + rng.below_usize(64);
+    s.lr = match rng.below(3) {
+        0 => LrSchedule::Const { eta: rng.f64() },
+        1 => LrSchedule::InvTime { xi: rng.f64() * 100.0, a: 1.0 + rng.f64() * 50.0 },
+        _ => LrSchedule::WarmupPiecewise {
+            peak: rng.f64(),
+            warmup: rng.below_usize(20),
+            milestones: vec![rng.below_usize(100), 100 + rng.below_usize(100)],
+            decay: 0.01 + rng.f64() * 0.9,
+        },
+    };
+    s.momentum = rng.f64() * 0.999;
+    const OPS: &[&str] = &[
+        "identity",
+        "topk:k=7",
+        "randk:k=3",
+        "qsgd:bits=2",
+        "sign",
+        "qtopk:k=9,bits=4,scaled",
+        "signtopk:k=5,m=2",
+    ];
+    s.up = CompressorSpec::parse(OPS[rng.below_usize(OPS.len())]).unwrap();
+    s.down = CompressorSpec::parse(OPS[rng.below_usize(OPS.len())]).unwrap();
+    let h = 1 + rng.below_usize(9);
+    s.schedule = if rng.f64() < 0.5 {
+        ScheduleSpec::Sync { h }
+    } else {
+        ScheduleSpec::Async { h }
+    };
+    s.participation = match rng.below(3) {
+        0 => ParticipationSpec::Full,
+        1 => ParticipationSpec::Bernoulli { p: 0.05 + 0.9 * rng.f64() },
+        _ => ParticipationSpec::FixedSize { m: 1 + rng.below_usize(s.workers) },
+    };
+    s.agg_scale = if rng.f64() < 0.5 { AggScale::Workers } else { AggScale::Participants };
+    s.server_opt = match rng.below(3) {
+        0 => ServerOptSpec::Avg,
+        1 => ServerOptSpec::Momentum { beta: rng.f64() * 0.99, lr: 0.01 + rng.f64() },
+        _ => ServerOptSpec::Adam {
+            b1: rng.f64() * 0.99,
+            b2: rng.f64() * 0.99,
+            eps: 1e-8 + rng.f64() * 1e-3,
+            lr: 0.001 + rng.f64(),
+        },
+    };
+    s.sharding = if rng.f64() < 0.5 { Sharding::Iid } else { Sharding::LabelSkew };
+    s.seed = rng.below(1 << 48);
+    s.threads = rng.below_usize(9);
+    s.eval_every = 1 + rng.below_usize(50);
+    s.eval_rows = 1 + rng.below_usize(1024);
+    s
+}
+
+#[test]
+fn randomized_specs_roundtrip_through_json() {
+    let mut rng = Pcg64::seeded(0x57ec);
+    for case in 0..200 {
+        let s = random_spec(&mut rng);
+        s.validate()
+            .unwrap_or_else(|e| panic!("case {case}: generated spec invalid: {e}\n{s:?}"));
+        let j = s.to_json();
+        let back = ExperimentSpec::from_json(&j)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{j}"));
+        assert_eq!(back, s, "case {case} (value round-trip)");
+        let back = ExperimentSpec::from_json_str(&j.to_string()).unwrap();
+        assert_eq!(back, s, "case {case} (compact text round-trip)");
+        let back = ExperimentSpec::from_json_str(&j.pretty()).unwrap();
+        assert_eq!(back, s, "case {case} (pretty text round-trip)");
+    }
+}
+
+#[test]
+fn figure_spec_unknown_field_is_rejected() {
+    let mut j = figures::figure_spec("fig9").unwrap().to_json().to_string();
+    assert!(FigureSpec::from_json_str(&j).is_ok());
+    j.insert_str(1, "\"serie\":[],");
+    let err = FigureSpec::from_json_str(&j).unwrap_err().to_string();
+    assert!(err.contains("serie"), "{err}");
+}
+
+#[test]
+fn experiment_spec_error_messages_name_the_field() {
+    for (json, needle) in [
+        (r#"{"workload": "convex", "bogus_knob": 1}"#, "bogus_knob"),
+        (r#"{"eval_every": 0}"#, "eval_every"),
+        (r#"{"down": "topk"}"#, "down"),
+        (r#"{"agg_scale": "both"}"#, "agg"),
+        (r#"{"threads": -1}"#, "threads"),
+        (r#"{"workload": "transformer"}"#, "workload"),
+    ] {
+        let err = ExperimentSpec::from_json_str(json).unwrap_err().to_string();
+        assert!(err.contains(needle), "{json}: {err}");
+    }
+}
+
+// -- golden: bundled JSON ≡ in-code tables ---------------------------------
+
+#[test]
+fn bundled_specs_match_in_code_tables() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/specs");
+    for id in figures::all_figure_ids() {
+        let path = format!("{dir}/{id}.json");
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{path}: {e} — run `qsparse specs dump`"));
+        let bundled = FigureSpec::from_json_str(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let code = figures::figure_spec(id).unwrap();
+        assert_eq!(bundled, code, "{id}: bundle drifted — run `qsparse specs dump`");
+    }
+}
+
+// -- bit-identity vs the pre-redesign hand-built path -----------------------
+
+/// The legacy `run_series` body, verbatim: parse spec strings, build the
+/// schedule/participation with the historical salts, hand-assemble a
+/// `TrainSpec` from the workload instance's fields.
+#[allow(clippy::too_many_arguments)]
+fn legacy_run_series(
+    w: &WorkloadInstance,
+    up: &str,
+    down: &str,
+    h: usize,
+    part: &str,
+    agg: AggScale,
+    steps: usize,
+    seed: u64,
+) -> History {
+    let compressor = parse_spec(up).unwrap();
+    let down_compressor = parse_spec(down).unwrap();
+    let schedule: Box<dyn SyncSchedule> = Box::new(FixedPeriod::new(h));
+    let participation =
+        ParticipationSpec::parse(part).unwrap().materialize(w.workers, steps, seed);
+    let spec = TrainSpec {
+        model: w.model.as_ref(),
+        train: &w.train,
+        test: Some(&w.test),
+        workers: w.workers,
+        batch: w.batch,
+        steps,
+        lr: w.lr.clone(),
+        momentum: w.momentum,
+        compressor: compressor.as_ref(),
+        down_compressor: down_compressor.as_ref(),
+        schedule: schedule.as_ref(),
+        participation: &participation,
+        agg_scale: agg,
+        server_opt: ServerOptSpec::Avg,
+        sharding: Sharding::Iid,
+        seed,
+        eval_every: w.eval_every,
+        eval_rows: 512,
+        threads: 1,
+    };
+    engine::run_from(&spec, w.init.clone())
+}
+
+fn assert_bit_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    let sa: Vec<usize> = a.points.iter().map(|p| p.step).collect();
+    let sb: Vec<usize> = b.points.iter().map(|p| p.step).collect();
+    assert_eq!(sa, sb, "{ctx}: metric grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.bits_up, pb.bits_up, "{ctx}: bits_up at step {}", pa.step);
+        assert_eq!(pa.bits_down, pb.bits_down, "{ctx}: bits_down at step {}", pa.step);
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {}",
+            pa.step
+        );
+        assert_eq!(
+            pa.mem_norm_sq.to_bits(),
+            pb.mem_norm_sq.to_bits(),
+            "{ctx}: mem_norm_sq at step {}",
+            pa.step
+        );
+    }
+}
+
+/// Acceptance: every fig9 and fig10 series regenerated through
+/// `ExperimentSpec` is bit-identical to the pre-redesign hardcoded table
+/// (quick-mode workload; the horizon is shortened uniformly on both sides,
+/// which the per-step trajectory comparison is insensitive to).
+#[test]
+fn fig9_fig10_spec_path_bit_identical_to_legacy_tables() {
+    let steps = 40;
+    let w = Workload::ConvexSoftmax.instantiate(true);
+
+    // The legacy fig9 table rows: (label, up, down, h).
+    let fig9: &[(&str, &str, &str, usize)] = &[
+        ("SGD", "identity", "identity", 1),
+        ("QTopK-up", "qtopk:k=40,bits=4,scaled", "identity", 1),
+        ("QTopK-bidir", "qtopk:k=40,bits=4,scaled", "qtopk:k=400,bits=4", 1),
+        ("TopK-bidir", "topk:k=40", "topk:k=400", 1),
+        ("SignTopK-bidir_8L", "signtopk:k=40,m=1", "qtopk:k=400,bits=4", 8),
+    ];
+    let spec9 = figures::figure_spec("fig9").unwrap();
+    assert_eq!(spec9.series.len(), fig9.len());
+    for (s, &(label, up, down, h)) in spec9.series.iter().zip(fig9) {
+        assert_eq!(s.label, label, "fig9 series order changed");
+        let want = legacy_run_series(&w, up, down, h, "full", AggScale::Workers, steps, SEED);
+        let got = figures::run_series(&w, s, steps).unwrap();
+        assert_bit_identical(&got, &want, &format!("fig9/{label}"));
+    }
+
+    // The legacy fig10 table rows: (label, participation, scale).
+    let fig10: &[(&str, &str, AggScale)] = &[
+        ("QTopK-bidir_p1.00", "full", AggScale::Workers),
+        ("QTopK-bidir_p0.50", "bernoulli:0.5", AggScale::Participants),
+        ("QTopK-bidir_p0.25", "bernoulli:0.25", AggScale::Participants),
+        ("QTopK-bidir_m8", "fixed:8", AggScale::Participants),
+        ("QTopK-bidir_p0.50_1R", "bernoulli:0.5", AggScale::Workers),
+    ];
+    let spec10 = figures::figure_spec("fig10").unwrap();
+    assert_eq!(spec10.series.len(), fig10.len());
+    for (s, &(label, part, scale)) in spec10.series.iter().zip(fig10) {
+        assert_eq!(s.label, label, "fig10 series order changed");
+        let want = legacy_run_series(
+            &w,
+            "qtopk:k=40,bits=4,scaled",
+            "qtopk:k=400,bits=4",
+            4,
+            part,
+            scale,
+            steps,
+            SEED,
+        );
+        let got = figures::run_series(&w, s, steps).unwrap();
+        assert_bit_identical(&got, &want, &format!("fig10/{label}"));
+    }
+}
+
+/// The async figure (fig7) exercises the `RandomGaps` salt through the
+/// spec path — one series suffices to pin the `seed ^ 0x5eed` derivation.
+#[test]
+fn fig7_async_series_bit_identical_to_legacy_schedule() {
+    let steps = 40;
+    let w = Workload::ConvexSoftmax.instantiate(true);
+    let spec7 = figures::figure_spec("fig7").unwrap();
+    let s = &spec7.series[2]; // TopK-async
+    assert_eq!(s.label, "TopK-async");
+    let up = parse_spec("topk:k=40").unwrap();
+    let down = parse_spec("identity").unwrap();
+    let schedule = RandomGaps::generate(w.workers, 8, steps, SEED ^ 0x5eed);
+    let participation = ParticipationSpec::Full.materialize(w.workers, steps, SEED);
+    let legacy = TrainSpec {
+        model: w.model.as_ref(),
+        train: &w.train,
+        test: Some(&w.test),
+        workers: w.workers,
+        batch: w.batch,
+        steps,
+        lr: w.lr.clone(),
+        momentum: w.momentum,
+        compressor: up.as_ref(),
+        down_compressor: down.as_ref(),
+        schedule: &schedule,
+        participation: &participation,
+        agg_scale: AggScale::Workers,
+        server_opt: ServerOptSpec::Avg,
+        sharding: Sharding::Iid,
+        seed: SEED,
+        eval_every: w.eval_every,
+        eval_rows: 512,
+        threads: 1,
+    };
+    let want = engine::run_from(&legacy, w.init.clone());
+    let got = figures::run_series(&w, s, steps).unwrap();
+    assert_bit_identical(&got, &want, "fig7/TopK-async");
+}
