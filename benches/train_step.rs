@@ -107,7 +107,13 @@ impl Recorder {
         );
         match std::fs::write(path, format!("{obj}\n")) {
             Ok(()) => println!("\nwrote {path} ({} entries)", self.entries.len()),
-            Err(e) => eprintln!("failed to write {path}: {e}"),
+            // Fatal: CI gates on this file — exiting 0 with a stale (or
+            // committed seed) file on disk would validate numbers this run
+            // never produced.
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                std::process::exit(1);
+            }
         }
     }
 }
@@ -264,6 +270,16 @@ fn main() {
     // |S_t| = m sampled rounds with the unbiased 1/|S_t| fold.
     bench_participation_aggregation(&mut rec, warm, iters);
 
+    // The master's round in isolation (fold + downlink compression),
+    // sequential vs sharded across a persistent pool, over the R × threads
+    // grid — the tail the parallel master round removes.
+    bench_master_round(&mut rec, quick, warm, iters);
+
+    // Threaded-coordinator steady state: the decode → fold path must be
+    // allocation-free per update; the whole-run residual is channel
+    // transport, recorded for the trajectory.
+    bench_threaded_coordinator(&mut rec, quick);
+
     if json {
         rec.write_json("BENCH_train_step.json");
     }
@@ -338,6 +354,33 @@ fn bench_compress_paths(
             std::hint::black_box(encode::wire_bits(&msg));
         });
         rec.report(&format!("wire_bits/{spec}(d=7850)"), &samples, None);
+
+        // Decode the wire bytes back: the allocating decoder vs the
+        // recycled-buffer `decode_into` (the threaded master's receive
+        // path), whose steady state must not touch the heap.
+        let (bytes, bit_len) = encode::encode(&msg);
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(encode::decode(&bytes, bit_len).is_some());
+        });
+        rec.report(&format!("decode/{spec}(d=7850)"), &samples, None);
+        let mut dbuf = MessageBuf::new();
+        let samples = time_iters(warm * 5, iters * 20, || {
+            encode::decode_into(&bytes, bit_len, &mut dbuf).expect("bench message decodes");
+            std::hint::black_box(dbuf.message().nnz());
+        });
+        rec.report(&format!("decode_into/{spec}(d=7850)"), &samples, None);
+        let allocs = count_allocs(|| {
+            for _ in 0..calls {
+                encode::decode_into(&bytes, bit_len, &mut dbuf).expect("bench message decodes");
+            }
+        });
+        let per_call = allocs as f64 / calls as f64;
+        rec.value(&format!("alloc/decode_into-per-call/{spec}"), per_call);
+        assert!(
+            per_call == 0.0,
+            "decode_into allocated {per_call:.2} times per call for {spec} — \
+             the zero-allocation decode path has regressed"
+        );
     }
 }
 
@@ -396,6 +439,239 @@ fn bench_broadcast(rec: &mut Recorder, quick: bool, warm: usize, iters: usize) {
             dense_bits as f64 / avg_bits as f64
         );
     }
+}
+
+/// The master's round in isolation: fold R decoded updates into the fold
+/// target, then compute/compress/account R error-compensated downlink
+/// deltas — sequential (the pre-parallelization tail) vs sharded across a
+/// persistent pool. The parallel harness mirrors `engine/parallel.rs`'s
+/// ownership split exactly: each thread owns a disjoint contiguous chunk
+/// of the fold target (folded with `Message::add_into_range`, messages in
+/// worker order) and the `DownlinkWorker`s of a contiguous stripe of
+/// workers; one rendezvous per round. Only the channel plumbing is bench-
+/// local — the arithmetic is the library's.
+fn bench_master_round(rec: &mut Recorder, quick: bool, warm: usize, iters: usize) {
+    let d = 7850usize;
+    let up = parse_spec("qtopk:k=400,bits=4").unwrap();
+    let down = parse_spec("topk:k=400").unwrap();
+    let rounds = if quick { 8 } else { 30 };
+    let mut speedup_base = f64::NAN;
+    for workers in [8usize, 32, 128] {
+        // The round's decoded updates: realistic sparse uplink messages.
+        let mut rng = Pcg64::seeded(17);
+        let msgs: Vec<qsparse::Message> = (0..workers)
+            .map(|_| {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.01).collect();
+                up.compress(&x, &mut rng)
+            })
+            .collect();
+        // Post-round model the downlink compresses against — held fixed so
+        // every round's work is comparable (the EF anchors still advance).
+        let global: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+        let scale = -1.0 / workers as f32;
+        for threads in [1usize, 2, 8] {
+            let samples = if threads == 1 {
+                master_round_seq(&msgs, &global, scale, down.as_ref(), rounds, warm, iters)
+            } else {
+                master_round_par(
+                    threads,
+                    &msgs,
+                    &global,
+                    scale,
+                    down.as_ref(),
+                    rounds,
+                    warm,
+                    iters,
+                )
+            };
+            let per_round: Vec<f64> = samples.iter().map(|s| s / rounds as f64).collect();
+            let mean = rec.report(
+                &format!("master/round(R={workers},d=7850,down=topk400,threads={threads})"),
+                &per_round,
+                None,
+            );
+            if workers == 32 && threads == 1 {
+                speedup_base = mean;
+            }
+            if workers == 32 && threads == 8 {
+                let speedup = speedup_base / mean;
+                println!("master round speedup at R=32, 8 threads: {speedup:.2}x");
+                rec.value("master/round-speedup(R=32,threads=8)", speedup);
+            }
+        }
+    }
+}
+
+/// One sequential master round ×`rounds` per timed iteration.
+fn master_round_seq(
+    msgs: &[qsparse::Message],
+    global: &[f32],
+    scale: f32,
+    down: &dyn Compressor,
+    rounds: usize,
+    warm: usize,
+    iters: usize,
+) -> Vec<f64> {
+    use qsparse::protocol::DownlinkWorker;
+    let d = global.len();
+    let mut target = vec![0.0f32; d];
+    let mut downs: Vec<DownlinkWorker> = (0..msgs.len())
+        .map(|r| DownlinkWorker::new(vec![0.0f32; d], 23, r))
+        .collect();
+    let mut scratch = vec![0.0f32; d];
+    let mut buf = MessageBuf::new();
+    let mut bits = 0u64;
+    time_iters(warm, iters, || {
+        for _ in 0..rounds {
+            for m in msgs {
+                m.add_into(&mut target, scale);
+            }
+            for dw in downs.iter_mut() {
+                dw.delta_into(global, &mut scratch, down, &mut buf);
+                bits += buf.message().wire_bits();
+            }
+        }
+        std::hint::black_box(bits);
+    })
+}
+
+/// As `master_round_seq`, sharded over a persistent pool of `threads`.
+#[allow(clippy::too_many_arguments)]
+fn master_round_par(
+    threads: usize,
+    msgs: &[qsparse::Message],
+    global: &[f32],
+    scale: f32,
+    down: &dyn Compressor,
+    rounds: usize,
+    warm: usize,
+    iters: usize,
+) -> Vec<f64> {
+    use qsparse::protocol::DownlinkWorker;
+    use std::sync::mpsc;
+    let d = global.len();
+    let workers = msgs.len();
+    std::thread::scope(|s| {
+        let mut go_txs = Vec::with_capacity(threads);
+        let mut done_rxs = Vec::with_capacity(threads);
+        for ti in 0..threads {
+            let (lo, hi) = (ti * d / threads, (ti + 1) * d / threads);
+            let (wlo, whi) = (ti * workers / threads, (ti + 1) * workers / threads);
+            let (go_tx, go_rx) = mpsc::channel::<()>();
+            let (done_tx, done_rx) = mpsc::channel::<u64>();
+            go_txs.push(go_tx);
+            done_rxs.push(done_rx);
+            s.spawn(move || {
+                // Thread-owned shards, as in engine/parallel.rs: a chunk of
+                // the fold target plus a stripe of downlink states.
+                let mut chunk = vec![0.0f32; hi - lo];
+                let mut downs: Vec<DownlinkWorker> = (wlo..whi)
+                    .map(|r| DownlinkWorker::new(vec![0.0f32; d], 23, r))
+                    .collect();
+                let mut scratch = vec![0.0f32; d];
+                let mut buf = MessageBuf::new();
+                while go_rx.recv().is_ok() {
+                    let mut bits = 0u64;
+                    for m in msgs {
+                        m.add_into_range(&mut chunk, scale, lo..hi);
+                    }
+                    for dw in downs.iter_mut() {
+                        dw.delta_into(global, &mut scratch, down, &mut buf);
+                        bits += buf.message().wire_bits();
+                    }
+                    if done_tx.send(bits).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        let samples = time_iters(warm, iters, || {
+            for _ in 0..rounds {
+                for tx in &go_txs {
+                    tx.send(()).expect("master-round pool thread died");
+                }
+                for rx in &done_rxs {
+                    std::hint::black_box(rx.recv().expect("master-round pool thread died"));
+                }
+            }
+        });
+        drop(go_txs);
+        samples
+    })
+}
+
+/// Threaded-coordinator steady state. (a) The master's decode → fold path
+/// — `decode_into` through per-worker recycled buffers plus the
+/// incremental `apply_update` fold — must be allocation-free per update;
+/// asserted. (b) The whole `run_threaded` loop's steady allocations per
+/// step, recorded (not asserted): the residual is mpsc transport — one
+/// node per message — which is the threaded runtime's design cost.
+fn bench_threaded_coordinator(rec: &mut Recorder, quick: bool) {
+    use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+    use qsparse::protocol::MasterCore;
+    use std::sync::Arc;
+
+    // (a) decode + fold per update, isolated from transport.
+    let d = 7850usize;
+    let workers = 8usize;
+    let op = parse_spec("qtopk:k=400,bits=4").unwrap();
+    let mut rng = Pcg64::seeded(41);
+    let encoded: Vec<(Vec<u8>, u64)> = (0..workers)
+        .map(|_| {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.01).collect();
+            encode::encode(&op.compress(&x, &mut rng))
+        })
+        .collect();
+    let mut core = MasterCore::new(vec![0.0f32; d], workers, 11, false);
+    let mut bufs: Vec<MessageBuf> = (0..workers).map(|_| MessageBuf::new()).collect();
+    let mut fold_round = |core: &mut MasterCore, bufs: &mut [MessageBuf]| {
+        core.begin_round(workers);
+        for (r, (bytes, bit_len)) in encoded.iter().enumerate() {
+            encode::decode_into(bytes, *bit_len, &mut bufs[r]).expect("bench update decodes");
+            core.apply_update(bufs[r].message()).unwrap();
+        }
+        core.end_round();
+    };
+    fold_round(&mut core, &mut bufs); // warm the recycled buffers
+    let rounds = 50u64;
+    let allocs = count_allocs(|| {
+        for _ in 0..rounds {
+            fold_round(&mut core, &mut bufs);
+        }
+    });
+    let per_update = allocs as f64 / (rounds * workers as u64) as f64;
+    rec.value("alloc/threaded-decode-fold-per-update(R=8,qtopk)", per_update);
+    assert!(
+        per_update == 0.0,
+        "threaded master decode+fold allocated {per_update:.3} times per update — \
+         the zero-allocation receive path has regressed"
+    );
+    println!("threaded master decode+fold steady state: {per_update:.1} allocations/update");
+
+    // (b) whole threaded run (R=4, topk uplink, H=2), 2N-vs-N diff.
+    let train = Arc::new(gaussian_clusters(1000, 784, 10, 0.2, 1.0, 3));
+    let comp: Arc<dyn Compressor> = Arc::from(parse_spec("topk:k=170").unwrap());
+    let factory = || Box::new(SoftmaxRegression::new(784, 10, 1e-4)) as Box<dyn GradModel>;
+    let steps = if quick { 24 } else { 60 };
+    let run_thr = |steps: usize| {
+        let mut cfg = CoordinatorConfig::new(
+            Arc::clone(&comp),
+            Arc::new(qsparse::topology::FixedPeriod::new(2)),
+        );
+        cfg.workers = 4;
+        cfg.batch = 8;
+        cfg.steps = steps;
+        cfg.lr = LrSchedule::Const { eta: 0.1 };
+        cfg.eval_every = steps + 1; // exclude the eval grid
+        cfg.eval_rows = 64;
+        let h = run_threaded(&cfg, factory, Arc::clone(&train), None).unwrap();
+        std::hint::black_box(h.final_loss());
+    };
+    let a1 = count_allocs(|| run_thr(steps));
+    let a2 = count_allocs(|| run_thr(2 * steps));
+    let per_step = a2.saturating_sub(a1) as f64 / steps as f64;
+    rec.value("threaded/steady-allocs-per-step(R=4,topk,H=2)", per_step);
+    println!("threaded coordinator steady state: {per_step:.1} allocations/step (channel transport)");
 }
 
 /// Master-side aggregation with sampled participation (the `begin_round` +

@@ -19,7 +19,7 @@
 //! indices, or (b) Elias-γ coded successive gaps (indices must be ascending),
 //! signalled by one flag bit.
 
-use super::Message;
+use super::{Message, MessageBuf};
 
 /// Growable bitstream writer (MSB-first within each byte).
 ///
@@ -252,9 +252,17 @@ fn write_indices(w: &mut BitWriter, idx: &[u32], d: usize) {
     }
 }
 
-fn read_indices(r: &mut BitReader, count: usize, d: usize) -> Option<Vec<u32>> {
+/// Read `count` indices into caller-provided (cleared) storage — the
+/// decode path's allocation-free core.
+fn read_indices_into(
+    r: &mut BitReader,
+    count: usize,
+    d: usize,
+    idx: &mut Vec<u32>,
+) -> Option<()> {
+    debug_assert!(idx.is_empty());
     let use_gaps = r.read_bit()?;
-    let mut idx = Vec::with_capacity(count);
+    idx.reserve(count);
     if use_gaps {
         let mut prev = 0u64;
         for j in 0..count {
@@ -269,7 +277,7 @@ fn read_indices(r: &mut BitReader, count: usize, d: usize) -> Option<Vec<u32>> {
             idx.push(r.read_bits(n)? as u32);
         }
     }
-    Some(idx)
+    Some(())
 }
 
 /// Serialize a message to (bytes, bit length).
@@ -400,64 +408,87 @@ pub fn dense_model_bits(d: usize) -> u64 {
     3 + elias_gamma_bits(d as u64 + 1) + 32 * d as u64
 }
 
-/// Decode a message produced by `encode`.
+/// Decode a message produced by `encode` — allocating wrapper over
+/// [`decode_into`] through a fresh buffer, so the two cannot drift.
 pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
+    let mut buf = MessageBuf::new();
+    decode_into(bytes, bit_len, &mut buf)?;
+    Some(buf.take())
+}
+
+/// Decode a message produced by `encode` into reusable storage: the message
+/// lands in `buf` (borrow via `MessageBuf::message`, or move out with
+/// `MessageBuf::take`), recycling the previous message's vectors when the
+/// variant matches. With a fixed operator per sender — the steady state of
+/// every run — repeated decodes through the same buffer perform no heap
+/// allocation once capacities have grown to the message size, which is what
+/// lets the threaded master's receive loop stay off the allocator.
+///
+/// Returns `None` on a malformed stream; the buffer's previous message is
+/// consumed either way (its storage is dropped on the error path).
+pub fn decode_into(bytes: &[u8], bit_len: u64, buf: &mut MessageBuf) -> Option<()> {
     let mut r = BitReader::new(bytes, bit_len);
     let tag = r.read_bits(3)?;
     let d = (r.read_elias_gamma()? - 1) as usize;
     match tag {
         TAG_DENSE => {
-            let mut values = Vec::with_capacity(d);
+            let mut values = buf.take_dense();
+            values.reserve(d);
             for _ in 0..d {
                 values.push(r.read_f32()?);
             }
-            Some(Message::Dense { values })
+            buf.msg = Message::Dense { values };
         }
         TAG_SPARSE_F32 => {
             let k = (r.read_elias_gamma()? - 1) as usize;
-            let idx = read_indices(&mut r, k, d)?;
-            let mut vals = Vec::with_capacity(k);
+            let (mut idx, mut vals) = buf.take_sparse_f32();
+            read_indices_into(&mut r, k, d, &mut idx)?;
+            vals.reserve(k);
             for _ in 0..k {
                 vals.push(r.read_f32()?);
             }
-            Some(Message::SparseF32 { d, idx, vals })
+            buf.msg = Message::SparseF32 { d, idx, vals };
         }
         TAG_SPARSE_SIGN => {
             let k = (r.read_elias_gamma()? - 1) as usize;
             let scale = r.read_f32()?;
-            let idx = read_indices(&mut r, k, d)?;
-            let mut neg = Vec::with_capacity(k);
+            let (mut idx, mut neg) = buf.take_sparse_sign();
+            read_indices_into(&mut r, k, d, &mut idx)?;
+            neg.reserve(k);
             for _ in 0..k {
                 neg.push(r.read_bit()?);
             }
-            Some(Message::SparseSign { d, scale, idx, neg })
+            buf.msg = Message::SparseSign { d, scale, idx, neg };
         }
         TAG_DENSE_SIGN => {
             let scale = r.read_f32()?;
-            let mut neg = Vec::with_capacity(d);
+            let mut neg = buf.take_dense_sign();
+            neg.reserve(d);
             for _ in 0..d {
                 neg.push(r.read_bit()?);
             }
-            Some(Message::DenseSign { scale, neg })
+            buf.msg = Message::DenseSign { scale, neg };
         }
         TAG_QSGD => {
             let s = r.read_elias_gamma()? as u32;
             let bucket = r.read_elias_gamma()? as u32;
             let post_scale = r.read_f32()?;
             let has_idx = r.read_bit()?;
-            let (idx, count) = if has_idx {
+            let (mut norms, mut idx, mut levels, mut neg) = buf.take_qsgd();
+            let count = if has_idx {
                 let k = (r.read_elias_gamma()? - 1) as usize;
-                (Some(read_indices(&mut r, k, d)?), k)
+                read_indices_into(&mut r, k, d, &mut idx)?;
+                k
             } else {
-                (None, d)
+                d
             };
             let n_norms = (r.read_elias_gamma()? - 1) as usize;
-            let mut norms = Vec::with_capacity(n_norms);
+            norms.reserve(n_norms);
             for _ in 0..n_norms {
                 norms.push(r.read_f32()?);
             }
-            let mut levels = Vec::with_capacity(count);
-            let mut neg = Vec::with_capacity(count);
+            levels.reserve(count);
+            neg.reserve(count);
             for _ in 0..count {
                 if r.read_bit()? {
                     levels.push(r.read_elias_gamma()? as u32);
@@ -467,10 +498,26 @@ pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
                     neg.push(false);
                 }
             }
-            Some(Message::Qsgd { d, s, bucket, norms, post_scale, idx, levels, neg })
+            buf.msg = Message::Qsgd {
+                d,
+                s,
+                bucket,
+                norms,
+                post_scale,
+                idx: has_idx.then_some(idx),
+                levels,
+                neg,
+            };
         }
-        _ => None,
+        _ => {
+            // Unknown tag: consume the previous message too (the documented
+            // contract), so no caller can mistake a stale decode for this
+            // malformed sender's payload.
+            buf.msg = Message::default();
+            return None;
+        }
     }
+    Some(())
 }
 
 #[cfg(test)]
@@ -579,6 +626,54 @@ mod tests {
             assert_eq!(len, rlen, "{}", op.name());
             assert_eq!(bytes, rbytes, "{}", op.name());
         }
+    }
+
+    #[test]
+    fn decode_into_matches_decode_and_recycles() {
+        let mut rng = Pcg64::seeded(83);
+        let d = 300;
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(crate::compress::Identity),
+            Box::new(TopK::new(13)),
+            Box::new(Qsgd::from_bits(4)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(13, Qsgd::from_bits(2), false)),
+            Box::new(SignTopK::new(13, 1)),
+        ];
+        // One shared buffer across *different* variants (worst case for
+        // recycling: every decode changes the message shape) — results must
+        // still match the allocating decoder exactly.
+        let mut buf = MessageBuf::new();
+        for op in &ops {
+            for round in 0..3 {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let msg = op.compress(&x, &mut rng);
+                let (bytes, len) = encode(&msg);
+                assert_eq!(
+                    decode_into(&bytes, len, &mut buf),
+                    Some(()),
+                    "{} round {round}",
+                    op.name()
+                );
+                assert_eq!(buf.message(), &msg, "{} round {round}", op.name());
+                assert_eq!(decode(&bytes, len).as_ref(), Some(&msg), "{}", op.name());
+            }
+        }
+        // Malformed stream: truncated bits fail cleanly and leave the
+        // buffer reusable.
+        let msg = TopK::new(13).compress(&vec![1.0f32; d], &mut rng);
+        let (bytes, len) = encode(&msg);
+        assert_eq!(decode_into(&bytes, len / 2, &mut buf), None);
+        assert_eq!(decode_into(&bytes, len, &mut buf), Some(()));
+        assert_eq!(buf.message(), &msg);
+        // Unknown tag: fails AND consumes the previous message (documented
+        // contract) — no stale decode is observable afterwards.
+        let mut w = BitWriter::new();
+        w.push_bits(7, 3); // unused tag
+        w.push_elias_gamma(5);
+        let (bad, bad_len) = w.into_bytes();
+        assert_eq!(decode_into(&bad, bad_len, &mut buf), None);
+        assert_eq!(buf.message(), &Message::default());
     }
 
     #[test]

@@ -153,6 +153,105 @@ impl Message {
     pub fn wire_bits(&self) -> u64 {
         encode::wire_bits(self)
     }
+
+    /// Visit every coordinate of `C(x)` that [`Message::add_into`] would
+    /// touch, restricted to indices in `range`, in ascending index order:
+    /// `f(i, v)` receives the *global* coordinate `i` and the exact signed
+    /// value `v` such that `add_into` performs `out[i] += scale * v`.
+    ///
+    /// The visit set matches `add_into` exactly — explicitly transmitted
+    /// coordinates are visited even when their value happens to be `0.0`
+    /// (a dense zero is on the wire), while structural zeros (Qsgd zero
+    /// levels) are skipped, exactly as `add_into` skips them. Sparse
+    /// supports are ascending (the wire encoder's index coding relies on
+    /// it), so the in-range span is located by binary search:
+    /// O(log nnz + nnz_in_range) per call.
+    pub fn for_each_nonzero_in(
+        &self,
+        range: std::ops::Range<usize>,
+        mut f: impl FnMut(usize, f32),
+    ) {
+        debug_assert!(range.end <= self.dim());
+        match self {
+            Message::Dense { values } => {
+                for (j, &v) in values[range.clone()].iter().enumerate() {
+                    f(range.start + j, v);
+                }
+            }
+            Message::SparseF32 { idx, vals, .. } => {
+                let (a, b) = idx_span(idx, &range);
+                for (&i, &v) in idx[a..b].iter().zip(&vals[a..b]) {
+                    f(i as usize, v);
+                }
+            }
+            Message::SparseSign { scale: s, idx, neg, .. } => {
+                let (a, b) = idx_span(idx, &range);
+                for (&i, &n) in idx[a..b].iter().zip(&neg[a..b]) {
+                    f(i as usize, if n { -s } else { *s });
+                }
+            }
+            Message::DenseSign { scale: s, neg } => {
+                for (j, &n) in neg[range.clone()].iter().enumerate() {
+                    f(range.start + j, if n { -s } else { *s });
+                }
+            }
+            Message::Qsgd { s, bucket, norms, post_scale, idx, levels, neg, .. } => {
+                let unit0 = *post_scale / *s as f32;
+                let bucket = (*bucket).max(1) as usize;
+                match idx {
+                    None => {
+                        let span = range.clone();
+                        for (j, (&l, &n)) in
+                            levels[span.clone()].iter().zip(&neg[span]).enumerate()
+                        {
+                            if l != 0 {
+                                let i = range.start + j;
+                                let v = unit0 * norms[i / bucket] * l as f32;
+                                f(i, if n { -v } else { v });
+                            }
+                        }
+                    }
+                    Some(idx) => {
+                        let (a, b) = idx_span(idx, &range);
+                        for (j, ((&i, &l), &n)) in
+                            idx[a..b].iter().zip(&levels[a..b]).zip(&neg[a..b]).enumerate()
+                        {
+                            if l != 0 {
+                                // norms are indexed by position in the
+                                // transmitted list, not by coordinate.
+                                let v = unit0 * norms[(a + j) / bucket] * l as f32;
+                                f(i as usize, if n { -v } else { v });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `out[i − range.start] += scale * C(x)[i]` for every `i ∈ range` —
+    /// the range-restricted form of [`Message::add_into`] the sharded
+    /// master fold is built on (`engine/parallel`). `out` is the chunk
+    /// covering `range` (`out.len() == range.len()`).
+    ///
+    /// Per coordinate this performs the *same* f32 expression `add_into`
+    /// evaluates (same value reconstruction, same `scale` multiply, same
+    /// addition), so folding a partition of `0..d` chunk by chunk — each
+    /// chunk processing messages in the same order — is bit-identical to
+    /// one full `add_into` sequence.
+    pub fn add_into_range(&self, out: &mut [f32], scale: f32, range: std::ops::Range<usize>) {
+        debug_assert_eq!(out.len(), range.len());
+        let lo = range.start;
+        self.for_each_nonzero_in(range, |i, v| out[i - lo] += scale * v);
+    }
+}
+
+/// Half-open span `[a, b)` of the ascending index list `idx` whose values
+/// fall in `range` (binary search at both ends).
+fn idx_span(idx: &[u32], range: &std::ops::Range<usize>) -> (usize, usize) {
+    let a = idx.partition_point(|&i| (i as usize) < range.start);
+    let b = a + idx[a..].partition_point(|&i| (i as usize) < range.end);
+    (a, b)
 }
 
 /// Reusable storage for [`Compressor::compress_into`].
@@ -430,6 +529,89 @@ mod tests {
         }
         assert!(parse_spec("topk").is_err());
         assert!(parse_spec("bogus:k=1").is_err());
+    }
+
+    /// The operator set exercised by the range-restricted traversal tests —
+    /// one of every message variant, including clustered/sparse supports.
+    fn range_test_ops() -> Vec<Box<dyn Compressor>> {
+        vec![
+            Box::new(Identity),
+            Box::new(TopK::new(9)),
+            Box::new(RandK::new(9)),
+            Box::new(Qsgd::from_bits(2)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(9, Qsgd::from_bits(4), false)),
+            Box::new(SignTopK::new(9, 1)),
+        ]
+    }
+
+    #[test]
+    fn add_into_range_partition_is_bit_identical_to_add_into() {
+        let mut rng = Pcg64::seeded(91);
+        let d = 97; // prime: chunk boundaries land mid-support
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for op in range_test_ops() {
+            let m = op.compress(&x, &mut rng);
+            for scale in [1.0f32, -0.125] {
+                let mut whole = vec![0.25f32; d];
+                m.add_into(&mut whole, scale);
+                // Fold the same message chunk by chunk over several
+                // partition granularities, including empty head/tail chunks.
+                for nchunks in [1usize, 2, 3, 8, 97, 120] {
+                    let mut parts = vec![0.25f32; d];
+                    for c in 0..nchunks {
+                        let lo = c * d / nchunks;
+                        let hi = (c + 1) * d / nchunks;
+                        m.add_into_range(&mut parts[lo..hi], scale, lo..hi);
+                    }
+                    for (i, (w, p)) in whole.iter().zip(&parts).enumerate() {
+                        assert_eq!(
+                            w.to_bits(),
+                            p.to_bits(),
+                            "{} scale={scale} nchunks={nchunks} i={i}",
+                            op.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_nonzero_in_visits_exactly_the_add_into_set() {
+        let mut rng = Pcg64::seeded(92);
+        let d = 64;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for op in range_test_ops() {
+            let m = op.compress(&x, &mut rng);
+            // Reconstruct via the visitor and compare with add_into(1.0)
+            // from zero — both the values and the visited set must agree.
+            let mut via_visit = vec![0.0f32; d];
+            let mut last: isize = -1;
+            m.for_each_nonzero_in(0..d, |i, v| {
+                assert!(i as isize > last, "{}: indices not ascending", op.name());
+                last = i as isize;
+                via_visit[i] += v;
+            });
+            let mut via_add = vec![0.0f32; d];
+            m.add_into(&mut via_add, 1.0);
+            // add_into from zero and the visitor write the same values
+            // (modulo +0/−0 on unvisited coords, which both leave at +0).
+            for i in 0..d {
+                assert_eq!(via_visit[i].to_bits(), via_add[i].to_bits(), "{} i={i}", op.name());
+            }
+            // Sub-range visits partition the full visit.
+            let mut count_full = 0usize;
+            m.for_each_nonzero_in(0..d, |_, _| count_full += 1);
+            let mut count_split = 0usize;
+            for (lo, hi) in [(0usize, 17usize), (17, 17), (17, 40), (40, d)] {
+                m.for_each_nonzero_in(lo..hi, |i, _| {
+                    assert!((lo..hi).contains(&i));
+                    count_split += 1;
+                });
+            }
+            assert_eq!(count_full, count_split, "{}", op.name());
+        }
     }
 
     #[test]

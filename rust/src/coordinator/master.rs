@@ -20,9 +20,19 @@
 //! (`step % eval_every == 0`, plus the final step): grid points that fall
 //! between sync rounds are emitted with the pre-round model, which is
 //! precisely the model the engine evaluates there.
+//!
+//! Receive path: every update is decoded *on arrival* into the sender's
+//! recycled `MessageBuf` (`encode::decode_into`) — each worker has at most
+//! one update in flight (it blocks on the reply), so one buffer per worker
+//! suffices and the decode work overlaps the barrier wait instead of
+//! serializing into the round-application tail. Spent wire buffers are
+//! recycled through the command channels in both directions (see
+//! `UpdateMsg`/`ModelMsg`), so the master's steady-state decode → fold →
+//! encode cycle stays off the allocator; what remains per message is the
+//! channel transport itself.
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::{encode, Message, MessageBuf};
+use crate::compress::{encode, MessageBuf};
 use crate::data::Dataset;
 use crate::engine::{History, MetricPoint};
 use crate::grad::GradModel;
@@ -136,8 +146,14 @@ where
         Vec::new()
     };
     let mut round_idx = 0usize;
-    // Arrived-but-unapplied updates, keyed by their sync step.
-    let mut buckets: HashMap<usize, Vec<UpdateMsg>> = HashMap::new();
+    // Arrived-but-unapplied update *metadata*, keyed by sync step — the
+    // decoded messages themselves sit in their senders' `upd_bufs` slots
+    // (at most one in-flight update per worker, so a slot is never
+    // overwritten before its round applies).
+    let mut buckets: HashMap<usize, Vec<UpdateMeta>> = HashMap::new();
+    // Per-worker recycled decode buffers and the spent wire-byte pool.
+    let mut upd_bufs: Vec<MessageBuf> = (0..cfg.workers).map(|_| MessageBuf::new()).collect();
+    let mut spare_bytes: Vec<Vec<u8>> = Vec::new();
     // Reused downlink compression buffer and wire encoder.
     let mut down_buf = MessageBuf::new();
     let mut wire = encode::BitWriter::new();
@@ -167,9 +183,19 @@ where
         match to_master_rx.recv() {
             Err(_) => break,
             Ok(ToMaster::Finished(_)) => finished += 1,
-            Ok(ToMaster::Update(upd)) => {
+            Ok(ToMaster::Update(mut upd)) => {
+                // Decode on arrival into the sender's recycled buffer, then
+                // return the spent byte vectors to the recycle pool.
+                decode_update_into(&upd, &mut upd_bufs[upd.worker])?;
+                recycle(&mut spare_bytes, std::mem::take(&mut upd.bytes));
+                recycle(&mut spare_bytes, std::mem::take(&mut upd.spent_down));
+                let meta = UpdateMeta {
+                    worker: upd.worker,
+                    bit_len: upd.bit_len,
+                    mem_norm_sq: upd.mem_norm_sq,
+                };
                 if barrier {
-                    buckets.entry(upd.step).or_default().push(upd);
+                    buckets.entry(upd.step).or_default().push(meta);
                     // Apply every round that is now complete, in step order.
                     while round_idx < rounds.len() {
                         let (step, parts) = &rounds[round_idx];
@@ -194,7 +220,7 @@ where
                         for u in batch {
                             bits_up += u.bit_len;
                             mem_norms[u.worker] = u.mem_norm_sq;
-                            core.apply_update(&decode_update(&u)?)?;
+                            core.apply_update(upd_bufs[u.worker].message())?;
                         }
                         // Server optimizer step on the round aggregate
                         // (no-op for Avg) — before any broadcast encoding.
@@ -207,7 +233,10 @@ where
                             let bits = encode::dense_model_bits(d);
                             for &r in parts {
                                 bits_down += bits;
-                                let _ = reply_txs[r].send(ModelMsg::Dense(Arc::clone(&payload)));
+                                let _ = reply_txs[r].send(ModelMsg::Dense {
+                                    params: Arc::clone(&payload),
+                                    recycled: spare_bytes.pop().unwrap_or_default(),
+                                });
                             }
                         } else {
                             for &r in parts {
@@ -217,9 +246,14 @@ where
                                     &mut down_buf,
                                     &mut wire,
                                     r,
+                                    spare_bytes.pop().unwrap_or_default(),
                                 );
                                 bits_down += bit_len;
-                                let _ = reply_txs[r].send(ModelMsg::Delta { bytes, bit_len });
+                                let _ = reply_txs[r].send(ModelMsg::Delta {
+                                    bytes,
+                                    bit_len,
+                                    recycled: spare_bytes.pop().unwrap_or_default(),
+                                });
                             }
                         }
                         grid.boundary(step, |s| {
@@ -230,12 +264,12 @@ where
                 } else {
                     // Aggregate-on-arrival (asynchronous schedules).
                     let step = upd.step;
-                    let worker = upd.worker;
+                    let worker = meta.worker;
                     grid.catch_up(step, |s| {
                         measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
                     });
-                    bits_up += upd.bit_len;
-                    mem_norms[worker] = upd.mem_norm_sq;
+                    bits_up += meta.bit_len;
+                    mem_norms[worker] = meta.mem_norm_sq;
                     // |S_t| for the unbiased scale (same shared predicate as
                     // the engine; the sender is a member, so it is never
                     // empty).
@@ -247,13 +281,16 @@ where
                         &mut s_t,
                     );
                     core.begin_round(s_t.len());
-                    core.apply_update(&decode_update(&upd)?)?;
+                    core.apply_update(upd_bufs[worker].message())?;
                     // Avg is guaranteed here (non-Avg + async is rejected up
                     // front), so this is a documented no-op.
                     core.end_round();
                     if dense_down {
                         bits_down += encode::dense_model_bits(d);
-                        let _ = reply_txs[worker].send(ModelMsg::Dense(core.params_snapshot()));
+                        let _ = reply_txs[worker].send(ModelMsg::Dense {
+                            params: core.params_snapshot(),
+                            recycled: spare_bytes.pop().unwrap_or_default(),
+                        });
                     } else {
                         let (bytes, bit_len) = encode_delta(
                             &mut core,
@@ -261,9 +298,14 @@ where
                             &mut down_buf,
                             &mut wire,
                             worker,
+                            spare_bytes.pop().unwrap_or_default(),
                         );
                         bits_down += bit_len;
-                        let _ = reply_txs[worker].send(ModelMsg::Delta { bytes, bit_len });
+                        let _ = reply_txs[worker].send(ModelMsg::Delta {
+                            bytes,
+                            bit_len,
+                            recycled: spare_bytes.pop().unwrap_or_default(),
+                        });
                     }
                     grid.boundary(step, |s| {
                         measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
@@ -324,24 +366,48 @@ impl GridRecorder {
     }
 }
 
-/// Compress and wire-encode the downlink delta for worker `r` — shared by
-/// the barrier and aggregate-on-arrival paths so their encoding and bit
-/// accounting cannot diverge.
+/// Per-update bookkeeping kept while a round waits behind the barrier; the
+/// decoded message itself stays in the sender's `upd_bufs` slot.
+struct UpdateMeta {
+    worker: usize,
+    bit_len: u64,
+    mem_norm_sq: f64,
+}
+
+/// Return a spent wire buffer to the recycle pool (empty vectors carry no
+/// capacity and are dropped instead of occupying a slot).
+fn recycle(pool: &mut Vec<Vec<u8>>, bytes: Vec<u8>) {
+    if bytes.capacity() > 0 {
+        pool.push(bytes);
+    }
+}
+
+/// Compress and wire-encode the downlink delta for worker `r` into the
+/// recycled `spare` buffer — shared by the barrier and
+/// aggregate-on-arrival paths so their encoding and bit accounting cannot
+/// diverge.
 fn encode_delta(
     core: &mut MasterCore,
     down: &dyn crate::compress::Compressor,
     buf: &mut MessageBuf,
     wire: &mut encode::BitWriter,
     r: usize,
+    spare: Vec<u8>,
 ) -> (Vec<u8>, u64) {
     core.delta_broadcast_into(r, down, buf);
     encode::encode_into(buf.message(), wire);
     let (bytes, bit_len) = wire.finish();
-    (bytes.to_vec(), bit_len)
+    let mut out = spare;
+    out.clear();
+    out.extend_from_slice(bytes);
+    (out, bit_len)
 }
 
-fn decode_update(upd: &UpdateMsg) -> anyhow::Result<Message> {
-    encode::decode(&upd.bytes, upd.bit_len)
+/// Decode an update into the sender's recycled buffer (`decode_into`
+/// recycles the previous message's vectors, so with a fixed per-worker
+/// operator the steady state allocates nothing here).
+fn decode_update_into(upd: &UpdateMsg, buf: &mut MessageBuf) -> anyhow::Result<()> {
+    encode::decode_into(&upd.bytes, upd.bit_len, buf)
         .ok_or_else(|| anyhow::anyhow!("undecodable update from worker {}", upd.worker))
 }
 

@@ -96,6 +96,12 @@ impl CoordinatorConfig {
 }
 
 /// Worker → master: an encoded compressed update.
+///
+/// Byte buffers are recycled through the command channels in both
+/// directions: the master returns each update's spent `bytes` with its
+/// reply (`ModelMsg::recycled`), and the worker returns the previous
+/// downlink delta's bytes here (`spent_down`) — so in steady state neither
+/// side's wire path allocates fresh byte storage.
 pub(crate) struct UpdateMsg {
     pub worker: usize,
     /// Global-clock step at which the worker synchronized.
@@ -105,6 +111,10 @@ pub(crate) struct UpdateMsg {
     /// ‖m_t^{(r)}‖² after this sync — aggregated by the master so the
     /// threaded `History` carries the same memory probe as the engine's.
     pub mem_norm_sq: f64,
+    /// The byte buffer of the previous downlink delta this worker decoded,
+    /// returned to the master's recycle pool (empty when the downlink is
+    /// dense or this is the worker's first sync).
+    pub spent_down: Vec<u8>,
 }
 
 /// Worker → master control messages.
@@ -113,12 +123,14 @@ pub(crate) enum ToMaster {
     Finished(#[allow(dead_code)] usize),
 }
 
-/// Master → worker: the model refresh after aggregation.
+/// Master → worker: the model refresh after aggregation. Either variant
+/// carries `recycled`: a spent uplink byte buffer handed back so the
+/// worker's next encoded update reuses its capacity.
 pub(crate) enum ModelMsg {
     /// Dense model broadcast (Identity downlink). The payload is shared —
     /// one snapshot per aggregation round, not one clone per worker.
-    Dense(Arc<[f32]>),
+    Dense { params: Arc<[f32]>, recycled: Vec<u8> },
     /// Encoded error-compensated compressed model delta vs this worker's
     /// anchor (see `protocol::` module docs).
-    Delta { bytes: Vec<u8>, bit_len: u64 },
+    Delta { bytes: Vec<u8>, bit_len: u64, recycled: Vec<u8> },
 }

@@ -24,9 +24,15 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     let WorkerArgs { id, cfg, train, shard, init, to_master, from_master } = args;
     assert_eq!(init.len(), model.dim(), "init/model dimension mismatch");
     let mut core = WorkerCore::new(id, init, shard, cfg.batch, cfg.momentum, cfg.seed);
-    // Reused wire encoder (the channel still needs an owned byte vector per
-    // send, but the bitstream is assembled without regrowing a writer).
+    // Reused wire encoder plus the recycled byte buffers: the uplink buffer
+    // comes back with every master reply, the downlink delta's buffer goes
+    // back with the next update — so the steady-state sync loop assembles,
+    // copies and decodes wire bytes without fresh allocation.
     let mut wire = BitWriter::new();
+    let mut up_bytes: Vec<u8> = Vec::new();
+    let mut spent_down: Vec<u8> = Vec::new();
+    // Reused downlink delta decode storage (`encode::decode_into`).
+    let mut down_buf = crate::compress::MessageBuf::new();
 
     for t in 0..cfg.steps {
         core.local_step(model.as_ref(), &train, cfg.lr.at(t));
@@ -35,28 +41,36 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
         // non-participant keeps its local run going (no uplink, no model
         // refresh) exactly like the engine's simulated workers.
         if cfg.schedule.syncs_at(id, t) && cfg.participation.participates(id, t) {
-            let (bytes, bit_len) = {
+            let bit_len = {
                 let msg = core.make_update(cfg.compressor.as_ref());
                 encode::encode_into(msg, &mut wire);
                 let (bytes, bit_len) = wire.finish();
-                (bytes.to_vec(), bit_len)
+                up_bytes.clear();
+                up_bytes.extend_from_slice(bytes);
+                bit_len
             };
             let update = UpdateMsg {
                 worker: id,
                 step: t,
-                bytes,
+                bytes: std::mem::take(&mut up_bytes),
                 bit_len,
                 mem_norm_sq: core.mem_norm_sq(),
+                spent_down: std::mem::take(&mut spent_down),
             };
             if to_master.send(ToMaster::Update(update)).is_err() {
                 return; // master gone
             }
             match from_master.recv() {
-                Ok(ModelMsg::Dense(params)) => core.apply_dense_broadcast(&params),
-                Ok(ModelMsg::Delta { bytes, bit_len }) => {
-                    let delta = encode::decode(&bytes, bit_len)
+                Ok(ModelMsg::Dense { params, recycled }) => {
+                    up_bytes = recycled;
+                    core.apply_dense_broadcast(&params);
+                }
+                Ok(ModelMsg::Delta { bytes, bit_len, recycled }) => {
+                    up_bytes = recycled;
+                    encode::decode_into(&bytes, bit_len, &mut down_buf)
                         .unwrap_or_else(|| panic!("worker {id}: undecodable downlink delta"));
-                    core.apply_delta_broadcast(&delta);
+                    core.apply_delta_broadcast(down_buf.message());
+                    spent_down = bytes;
                 }
                 Err(_) => return,
             }

@@ -26,14 +26,17 @@
 //! operator switches to error-compensated compressed model deltas (see
 //! `protocol::` docs), and `bits_down` reports the true encoded length.
 //!
-//! Multicore: `TrainSpec::threads` moves worker local steps and uplink
-//! compression onto a persistent scoped thread pool (`parallel::`) while
-//! keeping the `History` bit-for-bit identical to the sequential loop —
-//! each worker draws only from its own salted PCG streams, and the master
-//! folds sync updates in worker-index order regardless of arrival order.
-//! The hot path (gather → grad → compress → fold → broadcast) reuses
-//! per-worker scratch everywhere and performs no steady-state heap
-//! allocation in the sequential engine.
+//! Multicore: `TrainSpec::threads` moves worker local steps, uplink
+//! compression *and the master round itself* — the sharded fold plus the
+//! per-worker downlink compression — onto one persistent scoped thread
+//! pool (`parallel::`) while keeping the `History` bit-for-bit identical
+//! to the sequential loop: each worker draws only from its own salted PCG
+//! streams, every fold-target chunk folds the round's messages in
+//! worker-index order (per-coordinate the addition sequence is exactly the
+//! sequential one), and per-worker downlink state lives on the thread that
+//! owns the worker. The hot path (gather → grad → compress → fold →
+//! broadcast) reuses per-worker scratch everywhere and performs no
+//! steady-state heap allocation in the sequential engine.
 
 pub mod metrics;
 pub(crate) mod parallel;
@@ -88,12 +91,14 @@ pub struct TrainSpec<'a> {
     pub eval_rows: usize,
     /// Worker-pool threads for the engine: `1` (the default) runs the
     /// classic sequential loop; `0` uses all available cores; `n > 1` runs
-    /// worker steps and uplink compression on a persistent scoped thread
-    /// pool. Every setting produces a bit-identical `History` — each worker
-    /// draws only from its own salted RNG streams and sync updates are
-    /// folded in worker-index order — so this is purely a wall-clock knob.
-    /// Requires a model with a `Sync` view (`GradModel::as_sync`); others
-    /// (PJRT) silently fall back to sequential.
+    /// worker steps, uplink compression and the master round (sharded
+    /// fold + per-worker downlink compression) on a persistent scoped
+    /// thread pool. Every setting produces a bit-identical `History` —
+    /// each worker draws only from its own salted RNG streams, and every
+    /// fold-target chunk processes the round's updates in worker-index
+    /// order — so this is purely a wall-clock knob. Requires a model with
+    /// a `Sync` view (`GradModel::as_sync`); others (PJRT) silently fall
+    /// back to sequential.
     pub threads: usize,
 }
 

@@ -1,39 +1,67 @@
-//! Deterministic multicore engine: worker local steps and uplink
-//! compression on a persistent `std::thread::scope` pool (std-only).
+//! Deterministic multicore engine: worker local steps, uplink compression
+//! — and, since the master-round parallelization, the master's own round
+//! (sharded fold + per-worker downlink) — on one persistent
+//! `std::thread::scope` pool (std-only).
 //!
 //! Why this is safe to parallelize bit-for-bit: within a tick, each
 //! worker's state transition depends only on its own `WorkerCore` (local
 //! iterate, error memory, shard sampler, salted per-worker PCG streams) and
 //! on immutable shared inputs (model parameters are per-worker copies, the
-//! dataset/schedule/participation are read-only). The only cross-worker
-//! arithmetic is the master's fold `x ← x − s·g` and the per-worker
-//! broadcasts — both run on the coordinating thread, in ascending worker
-//! index order, exactly as the sequential loop does. Hence the `History`
-//! (losses, bit counts, memory norms, final parameters) is bit-identical
-//! for every thread count — the same step-ordered-bucket argument the
-//! threaded coordinator's barrier uses, validated in
-//! `integration_parallel.rs`.
+//! dataset/schedule/participation are read-only). The cross-worker
+//! arithmetic is the master's round, and both halves of it parallelize
+//! without changing a single f32 operation:
+//!
+//! * **Sharded fold** — the fold `x ← x − s·g` (or `accum ← accum + s·g`
+//!   under a non-`Avg` server optimizer) is a per-coordinate sum over the
+//!   round's messages. Each pool thread owns a disjoint contiguous chunk of
+//!   the fold target and folds *every* round message over its chunk in
+//!   worker-index order (`Message::add_into_range`; sparse supports are
+//!   ascending, so each message's in-chunk span is binary-searched). Per
+//!   coordinate the addition sequence is exactly the sequential loop's, so
+//!   the result — and hence `History` — is bit-identical for every thread
+//!   count.
+//! * **Parallel downlink** — per-worker delta + compress + error-feedback
+//!   advance touch only that worker's `DownlinkWorker` (anchor mirror +
+//!   salted RNG stream), which lives on the pool thread that owns the
+//!   worker. Against the same post-round model every worker's broadcast is
+//!   independent of the order workers are served in — embarrassingly
+//!   parallel and deterministic by construction. A side effect is that the
+//!   master's `R·d` downlink anchor mirrors are sharded across the pool
+//!   instead of centralized on the coordinator.
 //!
 //! Mechanics: `nthreads` long-lived pool threads each own a contiguous
-//! chunk of `WorkerCore`s. Per tick the coordinator sends one `Step`
-//! command per thread; on sync ticks each thread replies with its chunk's
-//! compressed updates (taking the reusable message out of the worker's
-//! buffer), the coordinator folds them in worker order, computes the
-//! per-participant broadcast payloads, and returns them — together with the
-//! now-consumed uplink messages, so their heap capacity is recycled into
-//! the workers' buffers. Non-sync ticks need no rendezvous at all: threads
-//! run ahead through queued `Step`s (H local steps per barrier, exactly the
-//! paper's communication pattern). Steady-state allocations are limited to
-//! the channel nodes and the small per-round command vectors; the
-//! compress → fold arithmetic itself reuses the same buffers as the
-//! sequential engine.
+//! chunk of `WorkerCore`s (plus their `DownlinkWorker`s under a compressed
+//! downlink). Per tick the coordinator sends one `Step` command per thread;
+//! on sync ticks each thread replies with its chunk's compressed updates,
+//! the coordinator orders them by worker index and hands every thread a
+//! raw view of the round's message list plus its disjoint chunk of the
+//! fold target (`Cmd::Fold`), barriers on the fold acks, runs the server
+//! optimizer step (`end_round`), and fans the broadcast out (`Cmd::Down`)
+//! — dense payloads as one shared `Arc` snapshot (fire-and-forget),
+//! compressed payloads as a read-only view of the model whose acks carry
+//! the downlink wire bits and double as the barrier that keeps the model
+//! immutable while threads read it. Consumed uplink messages ride the
+//! `Down` command back to their owners so their heap capacity is recycled.
+//! Non-sync ticks need no rendezvous at all: threads run ahead through
+//! queued `Step`s (H local steps per barrier, exactly the paper's
+//! communication pattern). Steady-state allocations are limited to the
+//! channel nodes and the small per-round command vectors; the
+//! compress → fold → broadcast arithmetic itself reuses the same buffers
+//! as the sequential engine.
+//!
+//! The raw views (`MsgsView`, `ChunkView`, `GlobalView`) are the only
+//! unsafe code in the crate. Their contract is the classic fork-join one
+//! (what `rayon`'s scoped splits do): the coordinator carves disjoint
+//! `&mut` chunks, sends the pointers, and does not touch the borrowed data
+//! again until every ack for that phase has been received; threads only
+//! dereference between receiving the command and sending the ack.
 
 use super::{avg_mem_values, EvalSets, TrainSpec};
 use crate::compress::{encode, Compressor, Message, MessageBuf};
 use crate::data::{shard_indices, Dataset};
 use crate::engine::History;
 use crate::grad::GradModel;
-use crate::protocol::{MasterCore, WorkerCore};
+use crate::protocol::{DownlinkWorker, MasterCore, WorkerCore};
 use crate::topology::{sync_participants_into, Participation, SyncSchedule};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -43,6 +71,47 @@ use std::sync::Arc;
 /// sparse schedules without adding a barrier to the common case.
 const MAX_RUNAHEAD: usize = 64;
 
+/// Raw view of the coordinator's round-message list (worker-index order),
+/// shared read-only with every pool thread for the sharded fold.
+///
+/// Safety contract: the coordinator keeps the backing `Vec<Message>` alive
+/// and unmodified from the moment the view is sent until it has received
+/// `Reply::FoldDone` from every thread; threads only dereference between
+/// receiving `Cmd::Fold` and sending that ack. `Message` is `Sync`, so
+/// shared `&` access from several threads is sound.
+#[derive(Clone, Copy)]
+struct MsgsView {
+    ptr: *const Message,
+    len: usize,
+}
+
+unsafe impl Send for MsgsView {}
+
+/// Raw view of one thread's chunk `[lo, hi)` of the round's fold target.
+/// The coordinator derives one per thread from the *same* exclusive borrow
+/// (`MasterCore::fold_target`) over non-overlapping ranges, and re-borrows
+/// the target only after every `Reply::FoldDone` ack — so at any moment
+/// each coordinate is reachable from exactly one live view.
+struct ChunkView {
+    ptr: *mut f32,
+    lo: usize,
+    hi: usize,
+}
+
+unsafe impl Send for ChunkView {}
+
+/// Raw read-only view of the post-round global model for the parallel
+/// downlink. The coordinator blocks for every `Reply::DownDone` ack before
+/// anything can mutate the model again (the next round's fold, the server
+/// optimizer step, `into_params`).
+#[derive(Clone, Copy)]
+struct GlobalView {
+    ptr: *const f32,
+    len: usize,
+}
+
+unsafe impl Send for GlobalView {}
+
 /// Coordinator → pool thread.
 enum Cmd {
     /// Run one local step on every owned worker (global clock `t`); when
@@ -51,35 +120,55 @@ enum Cmd {
     /// chunk's compressed updates) and, as pure backpressure, after
     /// `MAX_RUNAHEAD` consecutive roundless ticks (empty reply).
     Step { t: usize, eta: f64, ack: bool },
-    /// Apply the round's broadcasts to owned participants. Each item also
-    /// returns the worker's consumed uplink message for buffer reuse.
-    Broadcast { items: Vec<BroadcastItem> },
+    /// Sharded master fold: fold every round message, in worker-index
+    /// order, over this thread's disjoint chunk of the fold target.
+    /// Replies `Reply::FoldDone`.
+    Fold { msgs: MsgsView, chunk: ChunkView, scale: f32 },
+    /// Round broadcast for this thread's owned participants, which are
+    /// exactly the workers listed in `recycled` (each paired with its
+    /// consumed uplink message, returned for buffer reuse). A compressed
+    /// payload replies `Reply::DownDone` with the encoded downlink bits;
+    /// a dense payload needs no rendezvous (the `Arc` keeps it alive).
+    Down { payload: DownPayload, recycled: Vec<(usize, Message)> },
     /// Shut down.
     Finish,
 }
 
-/// One participant's broadcast: (worker, payload, recycled uplink message).
-struct BroadcastItem {
-    worker: usize,
-    payload: Down,
-    recycled: Message,
-}
-
 /// Downlink payload (mirrors the two broadcast modes of the protocol).
-enum Down {
+enum DownPayload {
     /// Dense model broadcast — one shared snapshot per round.
     Dense(Arc<[f32]>),
-    /// Error-compensated compressed model delta for this worker.
-    Delta(Message),
+    /// Compressed downlink: each thread compresses its owned participants'
+    /// error-compensated deltas against this view of the post-round model.
+    Global(GlobalView),
 }
 
-/// Pool thread → coordinator, one per thread per sync tick.
-struct Reply {
-    /// (worker, update message, post-update ‖m‖²) for owned participants.
-    updates: Vec<(usize, Message, f64)>,
-    /// Downlink delta messages consumed since the previous reply, returned
-    /// so the coordinator's broadcast path reuses their capacity.
-    spent_down: Vec<Message>,
+/// Pool thread → coordinator.
+enum Reply {
+    /// (worker, update message, post-update ‖m‖²) for owned participants
+    /// of a sync tick; empty for the pure backpressure rendezvous.
+    Updates(Vec<(usize, Message, f64)>),
+    /// Sharded-fold ack: this thread's chunk is fully folded.
+    FoldDone,
+    /// Compressed-downlink ack: deltas computed, applied and accounted.
+    DownDone { bits_down: u64 },
+}
+
+/// Everything one pool thread owns: a contiguous chunk of workers, their
+/// downlink state (compressed downlink only, index-aligned with `cores`),
+/// the shared read-only inputs, and the per-thread downlink scratch.
+struct PoolThread<'a> {
+    cores: Vec<WorkerCore>,
+    down: Vec<DownlinkWorker>,
+    model: &'a (dyn GradModel + Sync),
+    train: &'a Dataset,
+    compressor: &'a dyn Compressor,
+    down_compressor: &'a dyn Compressor,
+    schedule: &'a dyn SyncSchedule,
+    participation: &'a Participation,
+    /// d-float delta scratch + message buffer for the parallel downlink.
+    delta_scratch: Vec<f32>,
+    down_buf: MessageBuf,
 }
 
 pub(super) fn run_from_parallel(
@@ -97,18 +186,22 @@ pub(super) fn run_from_parallel(
     let dense_down = spec.down_compressor.is_identity();
 
     // Contiguous worker → thread partition (sizes differ by at most one).
+    // Under a compressed downlink each thread also owns its workers'
+    // `DownlinkWorker`s — the coordinator's master then carries no
+    // per-worker downlink state at all.
     let mut owner = vec![0usize; r_count];
-    let mut chunks: Vec<Vec<WorkerCore>> = Vec::with_capacity(nthreads);
+    let mut thread_states: Vec<PoolThread> = Vec::with_capacity(nthreads);
     {
         let base = r_count / nthreads;
         let rem = r_count % nthreads;
         let mut next = 0usize;
         for ti in 0..nthreads {
             let take = base + usize::from(ti < rem);
-            let mut chunk = Vec::with_capacity(take);
+            let mut cores = Vec::with_capacity(take);
+            let mut down = Vec::new();
             for r in next..next + take {
                 owner[r] = ti;
-                chunk.push(WorkerCore::new(
+                cores.push(WorkerCore::new(
                     r,
                     global.clone(),
                     shards[r].clone(),
@@ -116,22 +209,35 @@ pub(super) fn run_from_parallel(
                     spec.momentum,
                     spec.seed,
                 ));
+                if !dense_down {
+                    down.push(DownlinkWorker::new(global.clone(), spec.seed, r));
+                }
             }
             next += take;
-            chunks.push(chunk);
+            thread_states.push(PoolThread {
+                cores,
+                down,
+                model,
+                train: spec.train,
+                compressor: spec.compressor,
+                down_compressor: spec.down_compressor,
+                schedule: spec.schedule,
+                participation: spec.participation,
+                delta_scratch: if dense_down { Vec::new() } else { vec![0.0f32; d] },
+                down_buf: MessageBuf::new(),
+            });
         }
     }
 
-    let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
+    // `compressed_downlink = false` even when the run compresses the
+    // downlink: the per-worker state lives on the pool threads (above).
+    let mut master = MasterCore::new(global, r_count, spec.seed, false);
     master.set_agg_scale(spec.agg_scale);
     master.set_server_opt(spec.server_opt);
     let eval = EvalSets::new(spec);
 
-    // Copies of the shared read-only inputs for the pool closures (the
-    // closures must not capture `spec` itself: it holds the non-`Sync`
-    // model reference).
-    let train: &Dataset = spec.train;
-    let compressor: &dyn Compressor = spec.compressor;
+    // Copies for the coordinator loop (the pool closures must not capture
+    // `spec` itself: it holds the non-`Sync` model reference).
     let schedule: &dyn SyncSchedule = spec.schedule;
     let participation: &Participation = spec.participation;
 
@@ -142,26 +248,29 @@ pub(super) fn run_from_parallel(
         // the coordinator waiting forever for the dead thread's reply.
         let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(nthreads);
         let mut reply_rxs: Vec<mpsc::Receiver<Reply>> = Vec::with_capacity(nthreads);
-        for chunk in chunks {
+        for st in thread_states {
             let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
             let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
             cmd_txs.push(cmd_tx);
             reply_rxs.push(reply_rx);
-            s.spawn(move || {
-                pool_main(chunk, model, train, compressor, schedule, participation, cmd_rx, reply_tx)
-            });
+            s.spawn(move || pool_main(st, cmd_rx, reply_tx));
         }
 
         let mut history = History::new();
         let mut bits_up: u64 = 0;
         let mut bits_down: u64 = 0;
         // Reused buffers: round participant set, per-worker update slots,
-        // last-reported ‖m‖² per worker, recycled downlink messages.
+        // last-reported ‖m‖² per worker, the round's fold list (messages in
+        // worker-index order), and the which-threads-owe-a-DownDone mask.
+        // `items` reuses only its outer Vec — the per-thread routing Vecs
+        // ride the Down command to the pool and are consumed there, the
+        // same per-round channel cost class as the command nodes.
         let mut round = Vec::with_capacity(r_count);
         let mut slots: Vec<Option<Message>> = (0..r_count).map(|_| None).collect();
         let mut mem_norms = vec![0.0f64; r_count];
-        let mut down_pool: Vec<Message> = Vec::new();
-        let mut down_buf = MessageBuf::new();
+        let mut round_msgs: Vec<Message> = Vec::with_capacity(r_count);
+        let mut items: Vec<Vec<(usize, Message)>> = (0..nthreads).map(|_| Vec::new()).collect();
+        let mut expect_down = vec![false; nthreads];
 
         history.push(eval.measure(spec, 0, master.params(), 0, 0, 0.0));
         // Roundless ticks since the last rendezvous (run-ahead bound).
@@ -179,58 +288,108 @@ pub(super) fn run_from_parallel(
             if ack && !sync {
                 // Pure backpressure rendezvous: drain the (empty) replies.
                 for rx in &reply_rxs {
-                    let reply = rx.recv().expect("engine pool thread died");
-                    down_pool.extend(reply.spent_down);
-                    debug_assert!(reply.updates.is_empty());
+                    match rx.recv().expect("engine pool thread died") {
+                        Reply::Updates(u) => debug_assert!(u.is_empty()),
+                        _ => unreachable!("unexpected reply at backpressure rendezvous"),
+                    }
                 }
             }
             if sync {
                 // One reply per thread (collected in thread order — the
-                // fold below re-imposes worker-index order anyway).
+                // fold list below re-imposes worker-index order anyway).
                 for rx in &reply_rxs {
-                    let reply = rx.recv().expect("engine pool thread died");
-                    down_pool.extend(reply.spent_down);
-                    for (r, msg, mem) in reply.updates {
-                        mem_norms[r] = mem;
-                        slots[r] = Some(msg);
+                    match rx.recv().expect("engine pool thread died") {
+                        Reply::Updates(updates) => {
+                            for (r, msg, mem) in updates {
+                                mem_norms[r] = mem;
+                                slots[r] = Some(msg);
+                            }
+                        }
+                        _ => unreachable!("expected the round's update reply"),
                     }
                 }
                 master.begin_round(round.len());
+                // The fold list: the round's messages in worker-index
+                // order, with uplink bits accounted exactly as the
+                // sequential loop does.
+                round_msgs.clear();
                 for &r in &round {
-                    let msg = slots[r].as_ref().expect("participant sent no update");
+                    let msg = slots[r].take().expect("participant sent no update");
+                    assert_eq!(msg.dim(), d, "engine-internal update dim mismatch");
                     bits_up += msg.wire_bits();
-                    master.apply_update(msg).expect("engine-internal update dim mismatch");
+                    round_msgs.push(msg);
+                }
+                // Sharded fold: each thread folds every message over its
+                // own disjoint chunk, in the same message order — per
+                // coordinate the addition sequence is identical to the
+                // sequential fold, so the result is bit-identical.
+                {
+                    let msgs = MsgsView { ptr: round_msgs.as_ptr(), len: round_msgs.len() };
+                    let (target, scale) = master.fold_target();
+                    let base = target.as_mut_ptr();
+                    for (ti, tx) in cmd_txs.iter().enumerate() {
+                        let (lo, hi) = (ti * d / nthreads, (ti + 1) * d / nthreads);
+                        // SAFETY: `base.add(lo)` stays within (or one past)
+                        // the `d`-element fold target; the [lo, hi) ranges
+                        // partition 0..d, so the views are disjoint.
+                        let chunk = ChunkView { ptr: unsafe { base.add(lo) }, lo, hi };
+                        tx.send(Cmd::Fold { msgs, chunk, scale })
+                            .expect("engine pool thread died");
+                    }
+                    for rx in &reply_rxs {
+                        match rx.recv().expect("engine pool thread died") {
+                            Reply::FoldDone => {}
+                            _ => unreachable!("expected the fold ack"),
+                        }
+                    }
                 }
                 // Server optimizer step on the aggregate (no-op for Avg) —
                 // before the snapshot/deltas so broadcasts see the stepped
                 // model, exactly as in the sequential loop.
                 master.end_round();
-                // Broadcasts, in worker order (the master's downlink state
-                // mutates per worker exactly as in the sequential loop).
-                let dense_payload = dense_down.then(|| master.params_snapshot());
-                let mut items: Vec<Vec<BroadcastItem>> =
-                    (0..cmd_txs.len()).map(|_| Vec::new()).collect();
-                for &r in &round {
-                    let recycled = slots[r].take().expect("participant sent no update");
-                    let payload = match &dense_payload {
-                        Some(p) => {
-                            bits_down += encode::dense_model_bits(d);
-                            Down::Dense(Arc::clone(p))
-                        }
-                        None => {
-                            if let Some(spare) = down_pool.pop() {
-                                down_buf.recycle(spare);
-                            }
-                            master.delta_broadcast_into(r, spec.down_compressor, &mut down_buf);
-                            bits_down += down_buf.message().wire_bits();
-                            Down::Delta(down_buf.take())
-                        }
-                    };
-                    items[owner[r]].push(BroadcastItem { worker: r, payload, recycled });
+                // Broadcast fan-out: route each participant's consumed
+                // uplink message back to its owner thread alongside the
+                // round's payload.
+                for (&r, msg) in round.iter().zip(round_msgs.drain(..)) {
+                    items[owner[r]].push((r, msg));
                 }
-                for (tx, its) in cmd_txs.iter().zip(items) {
-                    if !its.is_empty() {
-                        tx.send(Cmd::Broadcast { items: its }).expect("engine pool thread died");
+                if dense_down {
+                    let payload = master.params_snapshot();
+                    bits_down += round.len() as u64 * encode::dense_model_bits(d);
+                    for (tx, its) in cmd_txs.iter().zip(items.iter_mut()) {
+                        if !its.is_empty() {
+                            tx.send(Cmd::Down {
+                                payload: DownPayload::Dense(Arc::clone(&payload)),
+                                recycled: std::mem::take(its),
+                            })
+                            .expect("engine pool thread died");
+                        }
+                    }
+                } else {
+                    // Parallel downlink: each owner thread compresses its
+                    // participants' deltas against one read-only view of
+                    // the post-round model. The acks return the wire bits
+                    // and barrier the model against mutation while threads
+                    // read it.
+                    let global = GlobalView { ptr: master.params().as_ptr(), len: d };
+                    expect_down.fill(false);
+                    for (ti, (tx, its)) in cmd_txs.iter().zip(items.iter_mut()).enumerate() {
+                        if !its.is_empty() {
+                            tx.send(Cmd::Down {
+                                payload: DownPayload::Global(global),
+                                recycled: std::mem::take(its),
+                            })
+                            .expect("engine pool thread died");
+                            expect_down[ti] = true;
+                        }
+                    }
+                    for (rx, expected) in reply_rxs.iter().zip(&expect_down) {
+                        if *expected {
+                            match rx.recv().expect("engine pool thread died") {
+                                Reply::DownDone { bits_down: b } => bits_down += b,
+                                _ => unreachable!("expected the downlink ack"),
+                            }
+                        }
                     }
                 }
             }
@@ -280,55 +439,71 @@ where
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn pool_main(
-    mut cores: Vec<WorkerCore>,
-    model: &(dyn GradModel + Sync),
-    train: &Dataset,
-    compressor: &dyn Compressor,
-    schedule: &dyn SyncSchedule,
-    participation: &Participation,
-    cmd_rx: mpsc::Receiver<Cmd>,
-    reply_tx: mpsc::Sender<Reply>,
-) {
-    // Downlink messages consumed since the last reply (returned for reuse).
-    let mut spent_down: Vec<Message> = Vec::new();
+fn pool_main(mut st: PoolThread, cmd_rx: mpsc::Receiver<Cmd>, reply_tx: mpsc::Sender<Reply>) {
     for cmd in cmd_rx {
         match cmd {
             Cmd::Step { t, eta, ack } => {
                 let mut updates = Vec::new();
-                for core in cores.iter_mut() {
-                    core.local_step(model, train, eta);
+                for core in st.cores.iter_mut() {
+                    core.local_step(st.model, st.train, eta);
                     if ack
-                        && schedule.syncs_at(core.id(), t)
-                        && participation.participates(core.id(), t)
+                        && st.schedule.syncs_at(core.id(), t)
+                        && st.participation.participates(core.id(), t)
                     {
-                        core.make_update(compressor);
+                        core.make_update(st.compressor);
                         let mem = core.mem_norm_sq();
                         updates.push((core.id(), core.take_update(), mem));
                     }
                 }
-                if ack {
-                    let spent = std::mem::take(&mut spent_down);
-                    if reply_tx.send(Reply { updates, spent_down: spent }).is_err() {
-                        return; // coordinator gone
-                    }
+                if ack && reply_tx.send(Reply::Updates(updates)).is_err() {
+                    return; // coordinator gone
                 }
             }
-            Cmd::Broadcast { items } => {
-                for item in items {
-                    let core = cores
-                        .iter_mut()
-                        .find(|c| c.id() == item.worker)
+            Cmd::Fold { msgs, chunk, scale } => {
+                // SAFETY: per the view contracts, the coordinator keeps the
+                // message list and the fold target untouched until this
+                // FoldDone ack, and no other thread's chunk overlaps
+                // [lo, hi).
+                let msgs = unsafe { std::slice::from_raw_parts(msgs.ptr, msgs.len) };
+                let out =
+                    unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.hi - chunk.lo) };
+                for m in msgs {
+                    m.add_into_range(out, scale, chunk.lo..chunk.hi);
+                }
+                if reply_tx.send(Reply::FoldDone).is_err() {
+                    return;
+                }
+            }
+            Cmd::Down { payload, recycled } => {
+                let mut bits = 0u64;
+                for (r, spent) in recycled {
+                    let i = st
+                        .cores
+                        .iter()
+                        .position(|c| c.id() == r)
                         .expect("broadcast routed to a thread that does not own the worker");
-                    match item.payload {
-                        Down::Dense(params) => core.apply_dense_broadcast(&params),
-                        Down::Delta(msg) => {
-                            core.apply_delta_broadcast(&msg);
-                            spent_down.push(msg);
+                    match &payload {
+                        DownPayload::Dense(params) => st.cores[i].apply_dense_broadcast(params),
+                        DownPayload::Global(g) => {
+                            // SAFETY: the coordinator blocks for this
+                            // thread's DownDone before the model can change.
+                            let global = unsafe { std::slice::from_raw_parts(g.ptr, g.len) };
+                            st.down[i].delta_into(
+                                global,
+                                &mut st.delta_scratch,
+                                st.down_compressor,
+                                &mut st.down_buf,
+                            );
+                            bits += st.down_buf.message().wire_bits();
+                            st.cores[i].apply_delta_broadcast(st.down_buf.message());
                         }
                     }
-                    core.recycle_update(item.recycled);
+                    st.cores[i].recycle_update(spent);
+                }
+                if matches!(payload, DownPayload::Global(_))
+                    && reply_tx.send(Reply::DownDone { bits_down: bits }).is_err()
+                {
+                    return;
                 }
             }
             Cmd::Finish => return,

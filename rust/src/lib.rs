@@ -38,6 +38,6 @@ pub use compress::{Compressor, Message, MessageBuf};
 pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
 pub use optim::{ServerOpt, ServerOptSpec};
-pub use protocol::{AggScale, MasterCore, WorkerCore};
+pub use protocol::{AggScale, DownlinkWorker, MasterCore, WorkerCore};
 pub use spec::{CompressorSpec, ExperimentSpec, ResolvedExperiment, ScheduleSpec, Workload};
 pub use topology::{Participation, ParticipationSpec};

@@ -17,31 +17,77 @@ use crate::optim::{ServerOpt, ServerOptSpec};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
-/// Per-worker downlink compression state (only allocated when the run uses
-/// a non-Identity downlink operator).
+/// One worker's downlink compression state: the master's mirror of that
+/// worker's anchor (reconstructed model) plus the worker's dedicated
+/// broadcast RNG stream, so broadcast randomness is independent of the
+/// order workers are served in (engine vs threaded, sync vs async).
 ///
-/// Memory: `R·d` floats. The previous representation kept both a per-worker
-/// prev-sync model snapshot *and* an explicit error memory (`2·R·d`), but by
-/// the module invariant `m_t^{(r)} = x_t − anchor_r` the memory is a pure
-/// function of the global model and the worker's anchor — so only the
-/// anchor mirror is stored and the error compensation is implicit:
-/// `v_t = x_t − anchor_r` already equals `m_t + Δ_t` of the explicit
-/// recursion (exactly in ℝ; the collapse changes at most the last f32 ulp
-/// of the compressed stream, and both execution substrates share this code,
-/// so engine ≡ threaded parity is unaffected).
-struct DownlinkState {
-    /// The master's mirror of each worker's anchor (reconstructed model).
-    anchors: Vec<Vec<f32>>,
-    /// Per-worker streams so broadcast randomness is independent of the
-    /// order workers are served in (engine vs threaded, sync vs async).
-    rngs: Vec<Pcg64>,
+/// Memory: `d` floats per worker (`R·d` total). An earlier representation
+/// kept both a per-worker prev-sync model snapshot *and* an explicit error
+/// memory (`2·R·d`), but by the module invariant `m_t^{(r)} = x_t −
+/// anchor_r` the memory is a pure function of the global model and the
+/// worker's anchor — so only the anchor mirror is stored and the error
+/// compensation is implicit: `v_t = x_t − anchor_r` already equals
+/// `m_t + Δ_t` of the explicit recursion.
+///
+/// [`MasterCore`] owns one per worker on the sequential and threaded
+/// substrates; the parallel engine instead constructs each worker's state
+/// on the pool thread that owns the worker (`engine/parallel`), so the
+/// per-round delta + compress + encode fan out with zero sharing. Either
+/// way the arithmetic lives here — the substrates cannot drift.
+pub struct DownlinkWorker {
+    anchor: Vec<f32>,
+    rng: Pcg64,
+}
+
+impl DownlinkWorker {
+    /// `init` must equal the initial global model handed to worker `r` —
+    /// the shared anchor the downlink recursion starts from.
+    pub fn new(init: Vec<f32>, seed: u64, r: usize) -> Self {
+        DownlinkWorker {
+            anchor: init,
+            rng: Pcg64::new(seed ^ DOWNLINK_RNG_SALT, r as u64 + 1),
+        }
+    }
+
+    /// Produce this worker's error-compensated compressed model delta into
+    /// `buf` and advance the anchor mirror, exactly the recursion from the
+    /// module docs: `v = global − anchor; q = C_down(v); anchor += q`.
+    /// `scratch` is caller-owned `d`-float storage for `v` (shared across
+    /// workers by `MasterCore`, per-thread in the parallel engine).
+    pub fn delta_into(
+        &mut self,
+        global: &[f32],
+        scratch: &mut [f32],
+        down: &dyn Compressor,
+        buf: &mut MessageBuf,
+    ) {
+        debug_assert_eq!(global.len(), self.anchor.len());
+        debug_assert_eq!(scratch.len(), self.anchor.len());
+        // v = x_t − anchor_r: the worker's full staleness. Error
+        // compensation is implicit — the anchor already absorbed every past
+        // broadcast, so whatever compression dropped is still part of this
+        // difference.
+        for ((dv, g), a) in scratch.iter_mut().zip(global).zip(&self.anchor) {
+            *dv = g - a;
+        }
+        down.compress_into(scratch, &mut self.rng, buf);
+        // Mirror the worker's reconstruction: anchor_r ← anchor_r + q_t.
+        buf.message().add_into(&mut self.anchor, 1.0);
+    }
+
+    /// The mirrored anchor — the model this worker has reconstructed from
+    /// the broadcasts it received so far.
+    pub fn anchor(&self) -> &[f32] {
+        &self.anchor
+    }
 }
 
 /// Master state: the global model plus optional downlink compression state.
 pub struct MasterCore {
     global: Vec<f32>,
     workers: usize,
-    down: Option<DownlinkState>,
+    down: Option<Vec<DownlinkWorker>>,
     delta_buf: Vec<f32>,
     agg: AggScale,
     /// Scale applied to every update folded this round (set by
@@ -78,11 +124,8 @@ impl MasterCore {
     pub fn new(init: Vec<f32>, workers: usize, seed: u64, compressed_downlink: bool) -> Self {
         assert!(workers >= 1);
         let d = init.len();
-        let down = compressed_downlink.then(|| DownlinkState {
-            anchors: vec![init.clone(); workers],
-            rngs: (0..workers)
-                .map(|r| Pcg64::new(seed ^ DOWNLINK_RNG_SALT, r as u64 + 1))
-                .collect(),
+        let down = compressed_downlink.then(|| {
+            (0..workers).map(|r| DownlinkWorker::new(init.clone(), seed, r)).collect()
         });
         MasterCore {
             global: init,
@@ -224,21 +267,36 @@ impl MasterCore {
     }
 
     /// As `delta_broadcast`, producing the message into reusable storage —
-    /// the engine's allocation-free broadcast path.
+    /// the engine's allocation-free broadcast path. Delegates to worker
+    /// `r`'s [`DownlinkWorker`] — the same state machine the parallel
+    /// engine drives on the pool threads.
     pub fn delta_broadcast_into(&mut self, r: usize, down: &dyn Compressor, buf: &mut MessageBuf) {
         let st = self
             .down
             .as_mut()
             .expect("MasterCore built without compressed-downlink state");
-        // v = x_t − anchor_r: worker r's full staleness. Error compensation
-        // is implicit — the anchor already absorbed every past broadcast, so
-        // whatever compression dropped is still part of this difference.
-        for ((dv, g), a) in self.delta_buf.iter_mut().zip(&self.global).zip(&st.anchors[r]) {
-            *dv = g - a;
+        st[r].delta_into(&self.global, &mut self.delta_buf, down, buf);
+    }
+
+    /// Split view for a parallel driver's sharded fold: the round's fold
+    /// target — the model itself under plain averaging, the round
+    /// accumulator under a non-`Avg` server optimizer — plus the signed
+    /// per-message scale `s` such that `target[i] += s * g[i]` is exactly
+    /// the per-coordinate operation [`MasterCore::apply_update`] performs.
+    /// Marks the target dirty exactly as `apply_update` would (snapshot
+    /// invalidation under `Avg`, pending round otherwise), so take it only
+    /// for a round that folds at least one update.
+    pub fn fold_target(&mut self) -> (&mut [f32], f32) {
+        match &mut self.server {
+            None => {
+                self.snapshot = None;
+                (self.global.as_mut_slice(), -self.round_scale)
+            }
+            Some(sr) => {
+                sr.pending = true;
+                (sr.accum.as_mut_slice(), self.round_scale)
+            }
         }
-        down.compress_into(&self.delta_buf, &mut st.rngs[r], buf);
-        // Mirror the worker's reconstruction: anchor_r ← anchor_r + q_t.
-        buf.message().add_into(&mut st.anchors[r], 1.0);
     }
 
     /// Server-side error memory of worker `r` (None for dense downlink):
@@ -248,7 +306,7 @@ impl MasterCore {
         self.down.as_ref().map(|st| {
             self.global
                 .iter()
-                .zip(&st.anchors[r])
+                .zip(st[r].anchor())
                 .map(|(g, a)| g - a)
                 .collect()
         })
@@ -261,12 +319,11 @@ impl MasterCore {
             None => 0.0,
             Some(st) => {
                 let sum: f64 = st
-                    .anchors
                     .iter()
-                    .map(|anchor| {
+                    .map(|w| {
                         self.global
                             .iter()
-                            .zip(anchor)
+                            .zip(w.anchor())
                             .map(|(g, a)| {
                                 let m = (g - a) as f64;
                                 m * m
@@ -274,7 +331,7 @@ impl MasterCore {
                             .sum::<f64>()
                     })
                     .sum();
-                sum / st.anchors.len() as f64
+                sum / st.len() as f64
             }
         }
     }

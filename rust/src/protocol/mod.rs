@@ -56,7 +56,7 @@
 mod master;
 mod worker;
 
-pub use master::MasterCore;
+pub use master::{DownlinkWorker, MasterCore};
 pub use worker::WorkerCore;
 
 /// How the master scales each folded update when only a subset S_t of
@@ -230,6 +230,68 @@ mod tests {
         w.apply_update(&g).unwrap();
         w.apply_update(&g).unwrap();
         assert!(w.params().iter().all(|&x| (x + 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn fold_target_partition_matches_apply_update() {
+        use crate::compress::Message;
+        use crate::optim::ServerOptSpec;
+        let d = 37;
+        let mut rng = Pcg64::seeded(55);
+        let updates: Vec<Message> = (0..3)
+            .map(|_| Message::Dense { values: (0..d).map(|_| rng.normal_f32()).collect() })
+            .collect();
+        for spec in [ServerOptSpec::Avg, ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 }] {
+            let mk = || {
+                let mut m = MasterCore::new(vec![0.125f32; d], 4, 0, false);
+                m.set_server_opt(spec);
+                m.begin_round(3);
+                m
+            };
+            // Reference: the sequential apply_update fold.
+            let mut seq = mk();
+            for u in &updates {
+                seq.apply_update(u).unwrap();
+            }
+            seq.end_round();
+            // Sharded: every chunk folds all messages in the same order.
+            let mut par = mk();
+            {
+                let (target, scale) = par.fold_target();
+                for (lo, hi) in [(0usize, 10usize), (10, 10), (10, 37)] {
+                    for u in &updates {
+                        u.add_into_range(&mut target[lo..hi], scale, lo..hi);
+                    }
+                }
+            }
+            par.end_round();
+            assert_eq!(seq.params(), par.params(), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn downlink_worker_matches_master_broadcast_stream() {
+        // MasterCore's per-worker broadcast and a standalone DownlinkWorker
+        // (the parallel engine's form) produce identical message streams.
+        let d = 48;
+        let down = parse_spec("qsgd:bits=2").unwrap();
+        let mut rng = Pcg64::seeded(63);
+        let init = vec![0.5f32; d];
+        let mut master = MasterCore::new(init.clone(), 2, 17, true);
+        let mut lone = super::DownlinkWorker::new(init, 17, 1);
+        let mut scratch = vec![0.0f32; d];
+        let mut buf = crate::compress::MessageBuf::new();
+        for _round in 0..6 {
+            let noise: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+            master
+                .apply_update(&crate::compress::Message::Dense { values: noise })
+                .unwrap();
+            let _ = master.delta_broadcast(0, down.as_ref());
+            let from_master = master.delta_broadcast(1, down.as_ref());
+            lone.delta_into(master.params(), &mut scratch, down.as_ref(), &mut buf);
+            assert_eq!(&from_master, buf.message());
+            assert!(master.down_memory(1).is_some());
+        }
     }
 
     #[test]

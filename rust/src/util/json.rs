@@ -412,7 +412,13 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity tokens; follow
+                    // `JSON.stringify` and emit null so one degenerate
+                    // value (e.g. a NaN bench probe) cannot make the whole
+                    // document unparseable.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -484,6 +490,21 @@ mod tests {
         let emitted = v.to_string();
         let v2 = Json::parse(&emitted).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null_not_invalid_tokens() {
+        // A NaN probe value (e.g. a degenerate bench ratio) must not make
+        // the emitted document unparseable.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("v", Json::num(bad)), ("ok", Json::num(1.5))]);
+            let emitted = doc.to_string();
+            let back = Json::parse(&emitted).unwrap_or_else(|e| {
+                panic!("emitted JSON unparseable for {bad}: {e:?} ({emitted})")
+            });
+            assert!(matches!(back.get("v"), Json::Null), "{emitted}");
+            assert_eq!(back.get("ok").as_f64(), Some(1.5));
+        }
     }
 
     #[test]

@@ -20,7 +20,9 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty());
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Total order so NaN samples (e.g. a probe that divided by a zero
+        // count) summarize instead of panicking; NaNs sort after +inf.
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -133,6 +135,17 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert!((s.p50 - 50.0).abs() <= 1.0);
         assert!((s.p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // total_cmp sorts (positive) NaN after every finite sample — no
+        // panic, finite order statistics stay meaningful.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.p50.is_finite());
+        assert!(s.max.is_nan());
     }
 
     #[test]

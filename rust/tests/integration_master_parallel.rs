@@ -1,0 +1,161 @@
+//! Parallel master round ≡ sequential master round, bit for bit.
+//!
+//! PR 5 moved the master's round onto the persistent pool: the fold is
+//! sharded (each pool thread folds every round message over a disjoint
+//! chunk of the fold target, in worker-index order) and the per-worker
+//! downlink compression fans out to the threads that own the workers. The
+//! claim is that none of this changes a single f32 operation, so for every
+//! uplink operator × downlink mode × participation policy × server
+//! optimizer the `History` (losses, bit accounting, memory norms, final
+//! parameters) is identical to the sequential engine's for every thread
+//! count — the acceptance matrix of the parallel-master-round issue.
+
+use qsparse::compress::parse_spec;
+use qsparse::engine::{run, History, TrainSpec};
+use qsparse::grad::SoftmaxRegression;
+use qsparse::optim::{LrSchedule, ServerOptSpec};
+use qsparse::protocol::AggScale;
+use qsparse::topology::{FixedPeriod, ParticipationSpec};
+
+const N: usize = 240;
+const WORKERS: usize = 8;
+const STEPS: usize = 60;
+
+const UPLINKS: [&str; 3] = ["topk:k=10", "qtopk:k=10,bits=4", "signtopk:k=10,m=1"];
+const DOWNLINKS: [&str; 3] = ["identity", "topk:k=8", "qsgd:bits=2"];
+const PARTICIPATIONS: [&str; 2] = ["full", "fixed:5"];
+const SERVER_OPTS: [ServerOptSpec; 2] = [
+    ServerOptSpec::Avg,
+    ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 },
+];
+const THREADS: [usize; 2] = [2, 8];
+
+fn data() -> qsparse::data::Dataset {
+    qsparse::data::gaussian_clusters(N, 12, 4, 1.5, 0.5, 77)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(12, 4, 1.0 / N as f64)
+}
+
+/// Bitwise history equality — not tolerance-based: f64 metrics compared by
+/// bit pattern, parameters and bit counters by Eq.
+fn assert_bit_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    let asteps: Vec<usize> = a.points.iter().map(|p| p.step).collect();
+    let bsteps: Vec<usize> = b.points.iter().map(|p| p.step).collect();
+    assert_eq!(asteps, bsteps, "{ctx}: metric grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        let s = pa.step;
+        assert_eq!(pa.bits_up, pb.bits_up, "{ctx}: bits_up at step {s}");
+        assert_eq!(pa.bits_down, pb.bits_down, "{ctx}: bits_down at step {s}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {s} ({} vs {})",
+            pa.train_loss,
+            pb.train_loss
+        );
+        assert_eq!(
+            pa.mem_norm_sq.to_bits(),
+            pb.mem_norm_sq.to_bits(),
+            "{ctx}: mem_norm_sq at step {s}"
+        );
+    }
+}
+
+fn run_cfg(up: &str, down: &str, part: &str, server: ServerOptSpec, threads: usize) -> History {
+    let ds = data();
+    let m = model();
+    let upc = parse_spec(up).unwrap();
+    let downc = parse_spec(down).unwrap();
+    let sched = FixedPeriod::new(2);
+    let participation = ParticipationSpec::parse(part)
+        .unwrap()
+        .materialize(WORKERS, STEPS, 5);
+    let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+    spec.down_compressor = downc.as_ref();
+    spec.workers = WORKERS;
+    spec.batch = 4;
+    spec.steps = STEPS;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.participation = &participation;
+    // Unbiased scaling under sampling exercises `begin_round` on the
+    // sharded path too; under full participation it equals 1/R anyway.
+    spec.agg_scale = if part == "full" { AggScale::Workers } else { AggScale::Participants };
+    spec.server_opt = server;
+    spec.eval_every = 7; // off-grid vs H=2 — exercises between-round metrics
+    spec.seed = 5;
+    spec.threads = threads;
+    run(&spec)
+}
+
+/// One uplink operator's full sub-matrix: downlink × participation ×
+/// server-opt, thread counts {1 (reference), 2, 8}.
+fn sweep_uplink(up: &str) {
+    for down in DOWNLINKS {
+        for part in PARTICIPATIONS {
+            for server in SERVER_OPTS {
+                let seq = run_cfg(up, down, part, server, 1);
+                assert!(
+                    seq.final_loss().is_finite() && seq.total_bits_up() > 0,
+                    "{up}/{down}/{part}/{server:?}: degenerate baseline"
+                );
+                for threads in THREADS {
+                    let par = run_cfg(up, down, part, server, threads);
+                    assert_bit_identical(
+                        &seq,
+                        &par,
+                        &format!("{up} down={down} part={part} server={server:?} threads={threads}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn master_parallel_matrix_topk_uplink() {
+    sweep_uplink(UPLINKS[0]);
+}
+
+#[test]
+fn master_parallel_matrix_qtopk_uplink() {
+    sweep_uplink(UPLINKS[1]);
+}
+
+#[test]
+fn master_parallel_matrix_signtopk_uplink() {
+    sweep_uplink(UPLINKS[2]);
+}
+
+/// The sharded fold also has to agree under H = 1 (a round every tick —
+/// the fold-heaviest schedule) with the momentum server optimizer, whose
+/// fold target is the round accumulator rather than the model.
+#[test]
+fn master_parallel_h1_momentum_accum_fold() {
+    let ds = data();
+    let m = model();
+    let upc = parse_spec("qtopk:k=10,bits=4").unwrap();
+    let downc = parse_spec("topk:k=8").unwrap();
+    let sched = FixedPeriod::new(1);
+    let participation = ParticipationSpec::parse("full").unwrap().materialize(WORKERS, STEPS, 5);
+    let mk = |threads: usize| {
+        let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+        spec.down_compressor = downc.as_ref();
+        spec.workers = WORKERS;
+        spec.batch = 4;
+        spec.steps = STEPS;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.participation = &participation;
+        spec.server_opt = ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 };
+        spec.eval_every = 7;
+        spec.seed = 5;
+        spec.threads = threads;
+        run(&spec)
+    };
+    let seq = mk(1);
+    for threads in [2usize, 3, 8] {
+        assert_bit_identical(&seq, &mk(threads), &format!("H=1 momentum threads={threads}"));
+    }
+}

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""CI gate for BENCH_train_step.json (the machine-readable perf trajectory).
+
+The bench binary (`cargo bench --bench train_step -- --quick --json`) writes
+one entry per probe. A probe that silently disappears — a renamed case, a
+skipped section — used to pass CI while the trajectory quietly went blind.
+This script fails the job when
+
+  1. any expected probe key is missing (exact names for the
+     hardware-independent probes, prefixes for the ones whose names embed
+     the runner's core count), or
+  2. any steady-state allocation probe reports a nonzero count.
+
+Zero-allocation rule: every `alloc/...` probe is a steady-state allocation
+count and must be exactly 0, *except* the parallel-engine probe
+(`threads=N` for N > 1), whose residual is mpsc channel transport by
+design — that one is trajectory-only. Concretely: an `alloc/` key must be
+zero when it has no `threads=` parameter or when it says `threads=1`.
+(The bench binary asserts the same invariants in-process; this script is
+the belt to that suspender — it still bites if someone deletes the probe
+or its assert.)
+
+Usage: scripts/check_bench.py [path-to-BENCH_train_step.json]
+"""
+
+import json
+import os
+import sys
+
+# Probes whose names are hardware-independent: exact match required.
+REQUIRED_EXACT = [
+    "grad/native-softmax(b=8,d=7850)",
+    "grad/native-mlp(b=16,d=17k)",
+    "engine/step(R=8,signtopk,H=1)",
+    "alloc/engine-steady-per-step(R=8,signtopk,H=1,threads=1)",
+    "alloc/engine-steady-per-step(R=8,randk,H=1,threads=1)",
+    "broadcast/dense(R=8,d=7850)",
+    "broadcast/topk:k=400(R=8,d=7850)",
+    "broadcast/qtopk:k=400,bits=4(R=8,d=7850)",
+    "aggregate/full(R=8,1/R)(d=7850)",
+    "aggregate/fixed(m=2,1/|S|)(d=7850)",
+    "master/round-speedup(R=32,threads=8)",
+    "alloc/threaded-decode-fold-per-update(R=8,qtopk)",
+    "threaded/steady-allocs-per-step(R=4,topk,H=2)",
+] + [
+    f"master/round(R={r},d=7850,down=topk400,threads={t})"
+    for r in (8, 32, 128)
+    for t in (1, 2, 8)
+] + [
+    f"{kind}/{spec}(d=7850)"
+    for spec in ("signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400")
+    for kind in ("compress", "compress_into", "encode", "encode_into",
+                 "wire_bits", "decode", "decode_into")
+] + [
+    f"alloc/{kind}-per-call/{spec}"
+    for spec in ("signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400")
+    for kind in ("compress_into", "decode_into")
+]
+
+# Probes whose names embed the runner's core count (threads={pool}), and
+# which the bench only emits at all when the machine has >1 core: at least
+# one key with each prefix must exist — unless this runner is single-core
+# (the checker runs on the same machine that ran the bench in CI).
+REQUIRED_PREFIX = (
+    [
+        "engine/step-par(R=8,signtopk,H=1,threads=",
+        "engine/speedup(R=8,threads=",
+    ]
+    if (os.cpu_count() or 1) > 1
+    else []
+)
+
+
+def alloc_must_be_zero(key: str) -> bool:
+    if not key.startswith("alloc/"):
+        return False
+    return "threads=" not in key or "threads=1)" in key
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_train_step.json"
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: cannot read {path}: {e}")
+        return 1
+
+    failures = []
+    # The committed seed baseline carries a "_note" provenance marker (its
+    # numbers are hand-estimated, not measured). The bench's own output
+    # never writes that key, so its presence means the bench did not
+    # regenerate the file this run — refuse to validate estimates.
+    if any(k.startswith("_") for k in entries):
+        failures.append(
+            "file carries a seed/provenance marker (_*) — it is the committed "
+            "estimate, not this run's bench output; regenerate with "
+            "`cargo bench --bench train_step -- --quick --json`"
+        )
+    for key in REQUIRED_EXACT:
+        if key not in entries:
+            failures.append(f"missing probe: {key}")
+    for prefix in REQUIRED_PREFIX:
+        if not any(k.startswith(prefix) for k in entries):
+            failures.append(f"missing probe with prefix: {prefix}")
+    for key, entry in sorted(entries.items()):
+        if key.startswith("_"):  # provenance/meta keys, not probes
+            continue
+        mean = entry.get("mean") if isinstance(entry, dict) else None
+        if alloc_must_be_zero(key) and mean != 0:
+            failures.append(f"nonzero steady-state alloc count: {key} = {mean}")
+
+    if failures:
+        print(f"FAIL: {path} ({len(entries)} entries)")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    zeros = sum(1 for k in entries if alloc_must_be_zero(k))
+    print(
+        f"OK: {path} has all {len(REQUIRED_EXACT)} exact + "
+        f"{len(REQUIRED_PREFIX)} prefixed probes; {zeros} alloc probes at 0"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
