@@ -15,7 +15,7 @@
 //! allocations cancel exactly). The sequential engine's compress → encode →
 //! fold path is allocation-free: expect 0 for `threads=1`.
 
-use qsparse::compress::{encode, parse_spec, Compressor, MessageBuf};
+use qsparse::compress::{encode, parse_spec, Codec, Compressor, MessageBuf, WireEncoder};
 use qsparse::data::{gaussian_clusters, Dataset, Sharding};
 use qsparse::engine::{run, TrainSpec};
 use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
@@ -313,7 +313,7 @@ fn bench_compress_paths(
     let mut x = vec![0.0f32; d];
     softmax.loss_grad(&params, &batch, &mut x);
 
-    for spec in ["signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400"] {
+    for spec in ["signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4", "randk:k=400"] {
         let op = parse_spec(spec).unwrap();
         let mut rng = Pcg64::seeded(3);
         let samples = time_iters(warm * 5, iters * 20, || {
@@ -381,7 +381,79 @@ fn bench_compress_paths(
             "decode_into allocated {per_call:.2} times per call for {spec} — \
              the zero-allocation decode path has regressed"
         );
+
+        // The rANS codec over the same message: entropy-coded encode/decode
+        // latency, the pure cost walk, the steady-state allocation probes
+        // (the reused `WireEncoder` scratch must make both directions heap-
+        // free after warm-up), and the realized rans-vs-raw wire-bit ratio
+        // (≤ 1.0 by construction — the per-message fallback keeps raw
+        // whenever the entropy-coded container would not be strictly
+        // smaller; `scripts/check_bench.py` gates the savings).
+        let mut rwire = WireEncoder::new(Codec::Rans);
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(rwire.encode(&msg).1);
+        });
+        rec.report(&format!("encode-rans/{spec}(d=7850)"), &samples, None);
+        let allocs = count_allocs(|| {
+            for _ in 0..calls {
+                std::hint::black_box(rwire.encode(&msg).1);
+            }
+        });
+        let per_call = allocs as f64 / calls as f64;
+        rec.value(&format!("alloc/encode-rans-per-call/{spec}"), per_call);
+        assert!(
+            per_call == 0.0,
+            "rANS encode allocated {per_call:.2} times per call for {spec} — \
+             the zero-allocation encode path has regressed"
+        );
+
+        let (rbytes, rbits) = rwire.encode(&msg);
+        let rbytes = rbytes.to_vec();
+        assert_eq!(
+            msg.wire_bits_with(Codec::Rans),
+            rbits,
+            "wire_bits_with(Rans) disagrees with the rANS encoder for {spec}"
+        );
+        let samples = time_iters(warm * 5, iters * 20, || {
+            encode::decode_into(&rbytes, rbits, &mut dbuf).expect("bench rans message decodes");
+            std::hint::black_box(dbuf.message().nnz());
+        });
+        rec.report(&format!("decode-rans/{spec}(d=7850)"), &samples, None);
+        let allocs = count_allocs(|| {
+            for _ in 0..calls {
+                encode::decode_into(&rbytes, rbits, &mut dbuf).expect("bench rans message decodes");
+            }
+        });
+        let per_call = allocs as f64 / calls as f64;
+        rec.value(&format!("alloc/decode-rans-per-call/{spec}"), per_call);
+        assert!(
+            per_call == 0.0,
+            "rANS decode allocated {per_call:.2} times per call for {spec} — \
+             the zero-allocation decode path has regressed"
+        );
+
+        let samples = time_iters(warm * 5, iters * 20, || {
+            std::hint::black_box(msg.wire_bits_with(Codec::Rans));
+        });
+        rec.report(&format!("wire_bits-rans/{spec}(d=7850)"), &samples, None);
+        let ratio = rbits as f64 / bit_len as f64;
+        rec.value(&format!("codec/rans-vs-raw-bits/{spec}(d=7850)"), ratio);
+        println!("  rans wire bits for {spec}: {rbits} vs raw {bit_len} ({ratio:.3}x)");
     }
+
+    // Skewed-gap probe: a clustered support (a dense run of indices inside a
+    // large model) is the regime the gap/level entropy coder targets — the
+    // γ-class symbols collapse to near-zero entropy. Deterministic input, so
+    // the ratio is a hard number `scripts/check_bench.py` can gate.
+    let d_big = 1usize << 20;
+    let idx: Vec<u32> = (500u32..628).collect();
+    let vals: Vec<f32> = idx.iter().map(|&i| 1.5 + (i % 4) as f32 * 0.25).collect();
+    let skewed = qsparse::Message::SparseF32 { d: d_big, idx, vals };
+    let raw_bits = skewed.wire_bits();
+    let rans_bits = skewed.wire_bits_with(Codec::Rans);
+    let ratio = rans_bits as f64 / raw_bits as f64;
+    rec.value("codec/rans-vs-raw-bits/skewed-gaps(d=1M)", ratio);
+    println!("  rans wire bits for skewed gaps: {rans_bits} vs raw {raw_bits} ({ratio:.3}x)");
 }
 
 fn bench_broadcast(rec: &mut Recorder, quick: bool, warm: usize, iters: usize) {

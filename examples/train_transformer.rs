@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         participation: &qsparse::topology::FULL_PARTICIPATION,
         agg_scale: qsparse::protocol::AggScale::Workers,
         server_opt: qsparse::optim::ServerOptSpec::Avg,
+        codec: qsparse::compress::Codec::Raw,
         sharding: Sharding::Iid,
         seed: 20190527,
         eval_every: 20,

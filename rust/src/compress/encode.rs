@@ -186,6 +186,33 @@ impl<'a> BitReader<'a> {
         let rest = self.read_bits(zeros)?;
         Some((1u64 << zeros) | rest)
     }
+
+    /// Current cursor position in bits (rANS container framing).
+    #[inline]
+    pub(crate) fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// A bounded sub-reader over the same bytes, from the current position
+    /// to absolute bit `end` — the rANS blob cursor, read alongside the
+    /// main reader's raw-bits tail.
+    pub(crate) fn sub(&self, end: u64) -> Option<BitReader<'a>> {
+        if end < self.pos || end > self.len {
+            return None;
+        }
+        Some(BitReader { buf: self.buf, pos: self.pos, len: end })
+    }
+
+    /// Advance the cursor by `bits` without reading (skips the blob region).
+    pub(crate) fn skip(&mut self, bits: u64) -> Option<()> {
+        let np = self.pos.checked_add(bits)?;
+        if np > self.len {
+            self.pos = self.len; // poison, matching read_bits
+            return None;
+        }
+        self.pos = np;
+        Some(())
+    }
 }
 
 /// Cost in bits of the Elias-γ code of v ≥ 1.
@@ -204,12 +231,13 @@ fn ceil_log2(n: u64) -> u32 {
     }
 }
 
-// Message tags.
-const TAG_DENSE: u64 = 0;
-const TAG_SPARSE_F32: u64 = 1;
-const TAG_SPARSE_SIGN: u64 = 2;
-const TAG_DENSE_SIGN: u64 = 3;
-const TAG_QSGD: u64 = 4;
+// Message tags. Shared with the rANS container (`rans.rs`), which claims
+// wire tag 5 and repeats the inner variant tag inside its own header.
+pub(crate) const TAG_DENSE: u64 = 0;
+pub(crate) const TAG_SPARSE_F32: u64 = 1;
+pub(crate) const TAG_SPARSE_SIGN: u64 = 2;
+pub(crate) const TAG_DENSE_SIGN: u64 = 3;
+pub(crate) const TAG_QSGD: u64 = 4;
 
 /// Total Elias-γ cost of the successive-gap coding of ascending `idx`
 /// (first gap = idx[0]+1). Shared by the writer and the pure cost walk so
@@ -292,7 +320,7 @@ pub fn encode(msg: &Message) -> (Vec<u8>, u64) {
 /// encode path performs no allocation once the buffer capacity is reached.
 pub fn encode_into(msg: &Message, w: &mut BitWriter) {
     w.clear();
-    w.push_bits(tag(msg), 3);
+    w.push_bits(raw_tag(msg), 3);
     w.push_elias_gamma(msg.dim() as u64 + 1);
     match msg {
         Message::Dense { values } => {
@@ -353,7 +381,8 @@ pub fn encode_into(msg: &Message, w: &mut BitWriter) {
     }
 }
 
-fn tag(msg: &Message) -> u64 {
+/// The variant's wire tag — also the *inner* tag of the rANS container.
+pub(crate) fn raw_tag(msg: &Message) -> u64 {
     match msg {
         Message::Dense { .. } => TAG_DENSE,
         Message::SparseF32 { .. } => TAG_SPARSE_F32,
@@ -429,6 +458,12 @@ pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
 pub fn decode_into(bytes: &[u8], bit_len: u64, buf: &mut MessageBuf) -> Option<()> {
     let mut r = BitReader::new(bytes, bit_len);
     let tag = r.read_bits(3)?;
+    if tag == super::rans::TAG_RANS {
+        // Entropy-coded container: self-describing (it repeats the variant
+        // tag inside), so decoding needs no codec parameter and raw/rANS
+        // messages interleave freely on one stream.
+        return super::rans::decode_body(&mut r, buf);
+    }
     let d = (r.read_elias_gamma()? - 1) as usize;
     match tag {
         TAG_DENSE => {

@@ -20,12 +20,14 @@ pub mod encode;
 pub mod memory;
 pub mod piecewise;
 pub mod quantize;
+pub mod rans;
 pub mod sparsify;
 
 pub use composed::{QTopK, SignTopK};
 pub use memory::ErrorMemory;
 pub use piecewise::Piecewise;
 pub use quantize::{Qsgd, SignDense};
+pub use rans::{Codec, WireEncoder};
 pub use sparsify::{RandK, TopK};
 
 use crate::util::rng::Pcg64;
@@ -152,6 +154,13 @@ impl Message {
     /// `encode::encode(self).1` — asserted by property tests).
     pub fn wire_bits(&self) -> u64 {
         encode::wire_bits(self)
+    }
+
+    /// Exact wire size in bits under the given codec — still a pure cost
+    /// walk (no serialization); equal to what a [`WireEncoder`] with the
+    /// same codec would emit for this message (property-tested).
+    pub fn wire_bits_with(&self, codec: Codec) -> u64 {
+        rans::wire_bits(self, codec)
     }
 
     /// Visit every coordinate of `C(x)` that [`Message::add_into`] would

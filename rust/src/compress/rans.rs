@@ -1,0 +1,1054 @@
+//! Entropy-coded wire format: a range-ANS (rANS) layer over the raw
+//! bitstream of `encode.rs`, selectable per run as `codec: raw | rans`.
+//!
+//! The paper's headline metric is *bits to reach a target accuracy*; the raw
+//! format already spends Elias-γ gaps and per-level codes, but Top_k index
+//! gaps are heavily skewed toward small values and quantizer levels are far
+//! from uniform, so a static-frequency entropy coder harvests the remaining
+//! slack without touching one f32 of the optimization trajectory.
+//!
+//! Container format (wire tag 5; tags 0–4 stay the raw variants, so decode
+//! is self-describing and needs no codec parameter):
+//!
+//! ```text
+//! 3b tag=5 | 3b inner variant tag | Elias-γ(d+1) | variant header fields
+//! | frequency tables (per stream, ascending symbol ids, Elias-γ deltas +
+//!   Elias-γ freqs, last freq derived from the 2^12 total)
+//! | Elias-γ(blob_len_bytes+1) | blob (rANS renorm bytes + 32-bit state)
+//! | raw-bits tail (gap low bits, f32 mantissas)
+//! ```
+//!
+//! Symbol streams per variant (everything else rides in the raw tail, so
+//! decoding stays exactly invertible for any f32 bit pattern):
+//!
+//! * index gaps  → class `⌊log2 gap⌋` (≤ 33 symbols) + `class` raw low bits
+//! * f32 values  → sign+exponent (top 9 bits, ≤ 512 symbols) + 23 raw
+//!   mantissa bits
+//! * QSGD levels → the level itself (alphabet `0..=s`, requires s ≤ 255 —
+//!   larger quantizers fall back to the raw format)
+//! * sign flags  → 2-symbol table (QSGD signs only where the level ≠ 0,
+//!   mirroring the raw format)
+//!
+//! Invariants inherited from the seed architecture:
+//!
+//! * [`wire_bits`] is a pure O(nnz) cost walk — it runs the same rANS state
+//!   machine as the encoder against a byte *counter*, so it equals
+//!   `encode().1` exactly (property-tested) without materializing a buffer.
+//! * The encoder emits the rANS container only when it is *strictly* smaller
+//!   than the raw encoding, so `rans ≤ raw` holds per message by
+//!   construction and mixed streams decode transparently.
+//! * [`WireEncoder`] reuses its writer and blob scratch; frequency tables
+//!   and coder state live on the stack, so steady-state encode/decode touch
+//!   the heap exactly as often as the raw path: never.
+//!
+//! Coder math is the byte-wise rANS of Duda's range variant (ryg_rans
+//! idiom, cf. the Draco `AnsCoder`/`RAnsSymbolCoder` pair): 32-bit state,
+//! renormalization interval `[2^23, 2^31)`, 12-bit frequency scale. The
+//! encoder feeds symbols in reverse decode order and the reversed byte
+//! stream starts with the big-endian final state.
+
+use super::encode::{elias_gamma_bits, BitReader, BitWriter};
+use super::{encode, Message, MessageBuf};
+
+/// Frequency scale: all tables are normalized to sum to `1 << SCALE_BITS`.
+const SCALE_BITS: u32 = 12;
+const TOTAL: u32 = 1 << SCALE_BITS;
+/// Lower bound of the coder's renormalization interval.
+const RANS_L: u32 = 1 << 23;
+
+/// Wire tag of the rANS container (encode.rs owns tags 0–4).
+pub(crate) const TAG_RANS: u64 = 5;
+
+/// Gap classes `⌊log2 gap⌋` for gaps up to 2^33 (u32 index + the +1 first
+/// gap), f32 sign+exponent (top 9 bits), QSGD levels, binary flags.
+const GAP_SYMS: usize = 33;
+const VAL_SYMS: usize = 512;
+const LVL_SYMS: usize = 256;
+const BIT_SYMS: usize = 2;
+
+/// Wire codec selection: `raw` is the seed bitstream (bit-identical to
+/// every historical trajectory), `rans` wraps each message in the entropy
+/// container whenever that is strictly smaller. The decoded message — and
+/// therefore every `History` — is identical under either choice; only the
+/// accounted wire length changes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    #[default]
+    Raw,
+    Rans,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "raw" => Some(Codec::Raw),
+            "rans" => Some(Codec::Rans),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::Rans => "rans",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks: one generic emit path serves both the real writer and the pure
+// cost walk, so the two cannot drift.
+
+trait BitSink {
+    fn bits(&mut self, v: u64, n: u32);
+    fn elias(&mut self, v: u64);
+    /// The rANS blob: counted as `8·len` by the cost walk, written
+    /// byte-by-byte by the real writer (`blob` is `None` only when counting).
+    fn raw_blob(&mut self, blob: Option<&[u8]>, len_bytes: u64);
+    fn bit(&mut self, b: bool) {
+        self.bits(u64::from(b), 1);
+    }
+    fn f32v(&mut self, v: f32) {
+        self.bits(v.to_bits() as u64, 32);
+    }
+}
+
+impl BitSink for BitWriter {
+    fn bits(&mut self, v: u64, n: u32) {
+        self.push_bits(v, n);
+    }
+    fn elias(&mut self, v: u64) {
+        self.push_elias_gamma(v);
+    }
+    fn raw_blob(&mut self, blob: Option<&[u8]>, len_bytes: u64) {
+        let blob = blob.expect("writer emit requires the materialized blob");
+        debug_assert_eq!(blob.len() as u64, len_bytes);
+        for &b in blob {
+            self.push_bits(b as u64, 8);
+        }
+    }
+}
+
+/// Pure bit counter — the cost-walk back end.
+struct BitCost(u64);
+
+impl BitSink for BitCost {
+    fn bits(&mut self, _v: u64, n: u32) {
+        self.0 += n as u64;
+    }
+    fn elias(&mut self, v: u64) {
+        self.0 += elias_gamma_bits(v);
+    }
+    fn raw_blob(&mut self, _blob: Option<&[u8]>, len_bytes: u64) {
+        self.0 += 8 * len_bytes;
+    }
+}
+
+/// Byte sink for the rANS coder: the encoder pushes into a reusable `Vec`,
+/// the cost walk into a counter — same state machine either way.
+trait ByteSink {
+    fn push_byte(&mut self, b: u8);
+}
+
+impl ByteSink for Vec<u8> {
+    fn push_byte(&mut self, b: u8) {
+        self.push(b);
+    }
+}
+
+struct ByteCount(u64);
+
+impl ByteSink for ByteCount {
+    fn push_byte(&mut self, _b: u8) {
+        self.0 += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static-frequency tables.
+
+/// A normalized frequency table over a fixed alphabet of `N` symbols.
+/// Frequencies of the present symbols sum to exactly `TOTAL`; absent
+/// symbols have frequency 0 and never reach the coder.
+struct Table<const N: usize> {
+    freq: [u16; N],
+    cum: [u16; N],
+    /// Present (nonzero-frequency) symbol count.
+    m: u32,
+}
+
+impl<const N: usize> Table<N> {
+    /// Deterministic integer normalization: floor-scale each count to the
+    /// 2^12 grid, clamp to ≥ 1, then settle the remainder on the
+    /// largest-frequency symbol (lowest index on ties) so every present
+    /// symbol keeps a nonzero slot.
+    fn build(counts: &[u32; N]) -> Table<N> {
+        let n: u64 = counts.iter().map(|&c| c as u64).sum();
+        let mut freq = [0u16; N];
+        let mut m = 0u32;
+        if n > 0 {
+            let mut sum: i64 = 0;
+            for s in 0..N {
+                if counts[s] == 0 {
+                    continue;
+                }
+                m += 1;
+                let f = ((counts[s] as u64 * TOTAL as u64) / n).max(1);
+                freq[s] = f as u16;
+                sum += f as i64;
+            }
+            let mut diff = TOTAL as i64 - sum;
+            if diff > 0 {
+                freq[Self::argmax(&freq)] += diff as u16;
+            }
+            while diff < 0 {
+                let best = Self::argmax(&freq);
+                let take = (freq[best] as i64 - 1).min(-diff);
+                debug_assert!(take > 0, "cannot normalize: alphabet too large");
+                freq[best] -= take as u16;
+                diff += take;
+            }
+        }
+        let mut cum = [0u16; N];
+        let mut c = 0u32;
+        for s in 0..N {
+            cum[s] = c as u16;
+            c += freq[s] as u32;
+        }
+        debug_assert!(n == 0 || c == TOTAL);
+        Table { freq, cum, m }
+    }
+
+    /// First index of the maximal frequency (deterministic tie-break).
+    fn argmax(freq: &[u16; N]) -> usize {
+        let mut best = 0usize;
+        for (s, &f) in freq.iter().enumerate().skip(1) {
+            if f > freq[best] {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Serialize: Elias-γ(m+1), then per present symbol (ascending) the
+    /// Elias-γ id delta (first = id+1) and — except for the last symbol,
+    /// whose frequency is implied by the 2^12 total — Elias-γ(freq).
+    fn write<S: BitSink>(&self, s: &mut S) {
+        s.elias(self.m as u64 + 1);
+        let mut prev = 0u64;
+        let mut j = 0u32;
+        for (sym, &f) in self.freq.iter().enumerate() {
+            if f == 0 {
+                continue;
+            }
+            s.elias(sym as u64 - prev + u64::from(j == 0));
+            if j + 1 < self.m {
+                s.elias(f as u64);
+            }
+            prev = sym as u64;
+            j += 1;
+        }
+    }
+
+    #[inline]
+    fn put<B: ByteSink>(&self, enc: &mut RansEnc, sym: usize, out: &mut B) {
+        enc.put(self.freq[sym], self.cum[sym], out);
+    }
+}
+
+/// Decoder-side table: serialized form plus a slot → symbol lookup. Lives
+/// on the stack (≈ 10 KB) so `decode_into` stays allocation-free.
+struct DecTable<const N: usize> {
+    slot: [u16; TOTAL as usize],
+    freq: [u16; N],
+    cum: [u16; N],
+    m: u32,
+}
+
+impl<const N: usize> DecTable<N> {
+    fn zeroed() -> Self {
+        DecTable { slot: [0; TOTAL as usize], freq: [0; N], cum: [0; N], m: 0 }
+    }
+
+    /// Read the serialized table; `None` on any inconsistency (symbol out
+    /// of alphabet, frequencies not summing to the 2^12 total).
+    fn read(&mut self, r: &mut BitReader) -> Option<()> {
+        self.freq = [0; N];
+        let m = (r.read_elias_gamma()? - 1) as u32;
+        if m as usize > N {
+            return None;
+        }
+        self.m = m;
+        if m == 0 {
+            return Some(());
+        }
+        let mut prev = 0u64;
+        let mut sum: u64 = 0;
+        for j in 0..m {
+            let delta = r.read_elias_gamma()?;
+            let sym = if j == 0 { delta - 1 } else { prev + delta };
+            if sym as usize >= N {
+                return None;
+            }
+            prev = sym;
+            let f = if j + 1 < m {
+                let f = r.read_elias_gamma()?;
+                if f > TOTAL as u64 {
+                    return None;
+                }
+                f
+            } else {
+                if sum >= TOTAL as u64 {
+                    return None;
+                }
+                TOTAL as u64 - sum
+            };
+            self.freq[sym as usize] = f as u16;
+            sum += f;
+            if sum > TOTAL as u64 {
+                return None;
+            }
+        }
+        let mut c = 0u32;
+        for s in 0..N {
+            self.cum[s] = c as u16;
+            let f = self.freq[s] as u32;
+            for t in c..c + f {
+                self.slot[t as usize] = s as u16;
+            }
+            c += f;
+        }
+        if c != TOTAL {
+            return None;
+        }
+        Some(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The rANS coder (byte-wise renormalization, 32-bit state).
+
+struct RansEnc {
+    x: u32,
+}
+
+impl RansEnc {
+    fn new() -> Self {
+        RansEnc { x: RANS_L }
+    }
+
+    #[inline]
+    fn put<B: ByteSink>(&mut self, freq: u16, cum: u16, out: &mut B) {
+        let f = freq as u32;
+        debug_assert!(f > 0, "coded symbol must have nonzero frequency");
+        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+        let mut x = self.x;
+        while x >= x_max {
+            out.push_byte((x & 0xff) as u8);
+            x >>= 8;
+        }
+        self.x = ((x / f) << SCALE_BITS) + (x % f) + cum as u32;
+    }
+
+    /// Emit the final state (4 bytes, low first — the reversed stream then
+    /// opens with the state big-endian, read back via `read_bits(32)`).
+    fn flush<B: ByteSink>(&mut self, out: &mut B) {
+        let mut x = self.x;
+        for _ in 0..4 {
+            out.push_byte((x & 0xff) as u8);
+            x >>= 8;
+        }
+    }
+}
+
+struct RansDec {
+    x: u32,
+}
+
+impl RansDec {
+    fn init(blob: &mut BitReader) -> Option<Self> {
+        Some(RansDec { x: blob.read_bits(32)? as u32 })
+    }
+
+    #[inline]
+    fn get<const N: usize>(&mut self, t: &DecTable<N>, blob: &mut BitReader) -> Option<usize> {
+        let slot = (self.x & (TOTAL - 1)) as usize;
+        let sym = t.slot[slot] as usize;
+        self.x = t.freq[sym] as u32 * (self.x >> SCALE_BITS) + slot as u32 - t.cum[sym] as u32;
+        while self.x < RANS_L {
+            self.x = (self.x << 8) | blob.read_bits(8)? as u32;
+        }
+        Some(sym)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Symbol-stream plumbing shared by histogram, feed and tail passes.
+
+/// The j-th successive index gap (first gap = idx[0]+1), exactly as the raw
+/// format's gap coder computes it.
+#[inline]
+fn gap_at(idx: &[u32], j: usize) -> u64 {
+    let prev = if j == 0 { 0 } else { idx[j - 1] as u64 };
+    (idx[j] as u64 - prev + u64::from(j == 0)).max(1)
+}
+
+#[inline]
+fn gap_class(gap: u64) -> u32 {
+    63 - gap.leading_zeros()
+}
+
+/// Top 9 bits (sign + exponent) of an f32 — the entropy-coded part; the 23
+/// mantissa bits ride raw, so every bit pattern (±0, subnormals, inf, NaN)
+/// round-trips exactly.
+#[inline]
+fn top9(v: f32) -> usize {
+    (v.to_bits() >> 23) as usize
+}
+
+/// All four stream tables; the message variant decides which are written.
+struct Tables {
+    gap: Table<GAP_SYMS>,
+    val: Table<VAL_SYMS>,
+    lvl: Table<LVL_SYMS>,
+    bit: Table<BIT_SYMS>,
+}
+
+/// Histogram pass. `None` when the message cannot take the rANS container
+/// (QSGD with more than 255 levels — the level alphabet would overflow).
+fn build_tables(msg: &Message) -> Option<Tables> {
+    let mut gap = [0u32; GAP_SYMS];
+    let mut val = [0u32; VAL_SYMS];
+    let mut lvl = [0u32; LVL_SYMS];
+    let mut bit = [0u32; BIT_SYMS];
+    let count_gaps = |hist: &mut [u32; GAP_SYMS], idx: &[u32]| {
+        for j in 0..idx.len() {
+            hist[gap_class(gap_at(idx, j)) as usize] += 1;
+        }
+    };
+    match msg {
+        Message::Dense { values } => {
+            for &v in values {
+                val[top9(v)] += 1;
+            }
+        }
+        Message::SparseF32 { idx, vals, .. } => {
+            count_gaps(&mut gap, idx);
+            for &v in vals {
+                val[top9(v)] += 1;
+            }
+        }
+        Message::SparseSign { idx, neg, .. } => {
+            count_gaps(&mut gap, idx);
+            for &n in neg {
+                bit[n as usize] += 1;
+            }
+        }
+        Message::DenseSign { neg, .. } => {
+            for &n in neg {
+                bit[n as usize] += 1;
+            }
+        }
+        Message::Qsgd { s, idx, levels, neg, .. } => {
+            if *s as usize >= LVL_SYMS {
+                return None;
+            }
+            if let Some(idx) = idx {
+                count_gaps(&mut gap, idx);
+            }
+            for (&l, &n) in levels.iter().zip(neg) {
+                if l as usize >= LVL_SYMS {
+                    return None;
+                }
+                lvl[l as usize] += 1;
+                if l != 0 {
+                    bit[n as usize] += 1;
+                }
+            }
+        }
+    }
+    Some(Tables {
+        gap: Table::build(&gap),
+        val: Table::build(&val),
+        lvl: Table::build(&lvl),
+        bit: Table::build(&bit),
+    })
+}
+
+fn feed_gaps_rev<B: ByteSink>(idx: &[u32], t: &Table<GAP_SYMS>, enc: &mut RansEnc, out: &mut B) {
+    for j in (0..idx.len()).rev() {
+        t.put(enc, gap_class(gap_at(idx, j)) as usize, out);
+    }
+}
+
+/// Feed every entropy-coded symbol in exact *reverse* decode order (rANS is
+/// LIFO). One code path serves the counter and the writer.
+fn feed<B: ByteSink>(msg: &Message, t: &Tables, enc: &mut RansEnc, out: &mut B) {
+    match msg {
+        Message::Dense { values } => {
+            for v in values.iter().rev() {
+                t.val.put(enc, top9(*v), out);
+            }
+        }
+        Message::SparseF32 { idx, vals, .. } => {
+            for v in vals.iter().rev() {
+                t.val.put(enc, top9(*v), out);
+            }
+            feed_gaps_rev(idx, &t.gap, enc, out);
+        }
+        Message::SparseSign { idx, neg, .. } => {
+            for &n in neg.iter().rev() {
+                t.bit.put(enc, n as usize, out);
+            }
+            feed_gaps_rev(idx, &t.gap, enc, out);
+        }
+        Message::DenseSign { neg, .. } => {
+            for &n in neg.iter().rev() {
+                t.bit.put(enc, n as usize, out);
+            }
+        }
+        Message::Qsgd { idx, levels, neg, .. } => {
+            for i in (0..levels.len()).rev() {
+                let l = levels[i];
+                if l != 0 {
+                    t.bit.put(enc, neg[i] as usize, out);
+                }
+                t.lvl.put(enc, l as usize, out);
+            }
+            if let Some(idx) = idx {
+                feed_gaps_rev(idx, &t.gap, enc, out);
+            }
+        }
+    }
+}
+
+/// Exact blob length in bytes: the same state machine as the writer,
+/// against a counter.
+fn blob_len(msg: &Message, t: &Tables) -> u64 {
+    let mut count = ByteCount(0);
+    let mut enc = RansEnc::new();
+    feed(msg, t, &mut enc, &mut count);
+    enc.flush(&mut count);
+    count.0
+}
+
+/// Write the index-gap low bits (tail), in decode order.
+fn tail_gap_lows<S: BitSink>(idx: &[u32], s: &mut S) {
+    for j in 0..idx.len() {
+        let gap = gap_at(idx, j);
+        let c = gap_class(gap);
+        s.bits(gap - (1u64 << c), c);
+    }
+}
+
+/// The complete container, generically over the sink: the cost walk passes
+/// `BitCost` (with `blob = None`), the encoder passes the real writer.
+fn container<S: BitSink>(msg: &Message, t: &Tables, blob: Option<&[u8]>, blen: u64, s: &mut S) {
+    s.bits(TAG_RANS, 3);
+    s.bits(encode::raw_tag(msg), 3);
+    s.elias(msg.dim() as u64 + 1);
+    match msg {
+        Message::Dense { values } => {
+            t.val.write(s);
+            s.elias(blen + 1);
+            s.raw_blob(blob, blen);
+            for &v in values {
+                s.bits((v.to_bits() & 0x7f_ffff) as u64, 23);
+            }
+        }
+        Message::SparseF32 { idx, vals, .. } => {
+            s.elias(idx.len() as u64 + 1);
+            t.gap.write(s);
+            t.val.write(s);
+            s.elias(blen + 1);
+            s.raw_blob(blob, blen);
+            tail_gap_lows(idx, s);
+            for &v in vals {
+                s.bits((v.to_bits() & 0x7f_ffff) as u64, 23);
+            }
+        }
+        Message::SparseSign { scale, idx, .. } => {
+            s.elias(idx.len() as u64 + 1);
+            s.f32v(*scale);
+            t.gap.write(s);
+            t.bit.write(s);
+            s.elias(blen + 1);
+            s.raw_blob(blob, blen);
+            tail_gap_lows(idx, s);
+        }
+        Message::DenseSign { scale, .. } => {
+            s.f32v(*scale);
+            t.bit.write(s);
+            s.elias(blen + 1);
+            s.raw_blob(blob, blen);
+        }
+        Message::Qsgd { s: levels_s, bucket, norms, post_scale, idx, .. } => {
+            s.elias(*levels_s as u64);
+            s.elias(*bucket as u64);
+            s.f32v(*post_scale);
+            match idx {
+                Some(idx) => {
+                    s.bit(true);
+                    s.elias(idx.len() as u64 + 1);
+                }
+                None => s.bit(false),
+            }
+            s.elias(norms.len() as u64 + 1);
+            for &nm in norms {
+                s.f32v(nm);
+            }
+            if idx.is_some() {
+                t.gap.write(s);
+            }
+            t.lvl.write(s);
+            t.bit.write(s);
+            s.elias(blen + 1);
+            s.raw_blob(blob, blen);
+            if let Some(idx) = idx {
+                tail_gap_lows(idx, s);
+            }
+        }
+    }
+}
+
+/// rANS container size in bits, or `None` when the message cannot take the
+/// container (oversized QSGD alphabet).
+fn rans_bits(msg: &Message) -> Option<u64> {
+    let t = build_tables(msg)?;
+    let blen = blob_len(msg, &t);
+    let mut cost = BitCost(0);
+    container(msg, &t, None, blen, &mut cost);
+    Some(cost.0)
+}
+
+/// Exact wire size in bits under `codec` — a pure O(nnz) cost walk, equal
+/// to the corresponding encoder's `encode().1` by shared construction.
+/// Under `Rans` this is `min(rans container, raw)`: the encoder falls back
+/// to the raw format whenever entropy coding would not strictly win.
+pub fn wire_bits(msg: &Message, codec: Codec) -> u64 {
+    let raw = encode::wire_bits(msg);
+    match codec {
+        Codec::Raw => raw,
+        Codec::Rans => match rans_bits(msg) {
+            Some(r) if r < raw => r,
+            _ => raw,
+        },
+    }
+}
+
+/// Reusable codec-aware encoder: owns the bit writer and the rANS blob
+/// scratch, so steady-state encoding performs no heap allocation once the
+/// buffers have grown to the message size (bench-asserted).
+pub struct WireEncoder {
+    codec: Codec,
+    w: BitWriter,
+    blob: Vec<u8>,
+}
+
+impl WireEncoder {
+    pub fn new(codec: Codec) -> Self {
+        WireEncoder { codec, w: BitWriter::new(), blob: Vec::new() }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Encode `msg` under the codec; returns the borrowed wire bytes and
+    /// the exact bit length (equal to [`wire_bits`] for the same codec).
+    pub fn encode(&mut self, msg: &Message) -> (&[u8], u64) {
+        let mut used_rans = false;
+        if self.codec == Codec::Rans {
+            if let Some(t) = build_tables(msg) {
+                let blen = blob_len(msg, &t);
+                let mut cost = BitCost(0);
+                container(msg, &t, None, blen, &mut cost);
+                if cost.0 < encode::wire_bits(msg) {
+                    self.blob.clear();
+                    let mut enc = RansEnc::new();
+                    feed(msg, &t, &mut enc, &mut self.blob);
+                    enc.flush(&mut self.blob);
+                    self.blob.reverse();
+                    self.w.clear();
+                    container(msg, &t, Some(&self.blob), blen, &mut self.w);
+                    debug_assert_eq!(
+                        self.w.bit_len(),
+                        cost.0,
+                        "rANS cost walk drifted from the writer"
+                    );
+                    used_rans = true;
+                }
+            }
+        }
+        if !used_rans {
+            encode::encode_into(msg, &mut self.w);
+        }
+        self.w.finish()
+    }
+}
+
+/// Allocating convenience wrapper over [`WireEncoder`] (figures, tests).
+pub fn encode_with(msg: &Message, codec: Codec) -> (Vec<u8>, u64) {
+    let mut e = WireEncoder::new(codec);
+    let (bytes, bits) = e.encode(msg);
+    (bytes.to_vec(), bits)
+}
+
+// ---------------------------------------------------------------------------
+// Decode (the tag-5 arm of `encode::decode_into`).
+
+/// Decode the container body (the 3-bit wire tag is already consumed).
+/// Two cursors: the bounded blob reader feeds the rANS renormalization,
+/// while the main reader skips past the blob and serves the raw-bits tail.
+pub(crate) fn decode_body(r: &mut BitReader, buf: &mut MessageBuf) -> Option<()> {
+    let inner = r.read_bits(3)?;
+    let d = (r.read_elias_gamma()? - 1) as usize;
+    match inner {
+        encode::TAG_DENSE => {
+            let mut val_t = DecTable::<VAL_SYMS>::zeroed();
+            val_t.read(r)?;
+            let (mut blob, mut dec) = open_blob(r)?;
+            let mut values = buf.take_dense();
+            values.reserve(d);
+            for _ in 0..d {
+                let top = dec.get(&val_t, &mut blob)? as u32;
+                let mant = r.read_bits(23)? as u32;
+                values.push(f32::from_bits((top << 23) | mant));
+            }
+            buf.msg = Message::Dense { values };
+        }
+        encode::TAG_SPARSE_F32 => {
+            let k = (r.read_elias_gamma()? - 1) as usize;
+            let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
+            gap_t.read(r)?;
+            let mut val_t = DecTable::<VAL_SYMS>::zeroed();
+            val_t.read(r)?;
+            let (mut blob, mut dec) = open_blob(r)?;
+            let (mut idx, mut vals) = buf.take_sparse_f32();
+            read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+            vals.reserve(k);
+            for _ in 0..k {
+                let top = dec.get(&val_t, &mut blob)? as u32;
+                let mant = r.read_bits(23)? as u32;
+                vals.push(f32::from_bits((top << 23) | mant));
+            }
+            buf.msg = Message::SparseF32 { d, idx, vals };
+        }
+        encode::TAG_SPARSE_SIGN => {
+            let k = (r.read_elias_gamma()? - 1) as usize;
+            let scale = r.read_f32()?;
+            let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
+            gap_t.read(r)?;
+            let mut bit_t = DecTable::<BIT_SYMS>::zeroed();
+            bit_t.read(r)?;
+            let (mut blob, mut dec) = open_blob(r)?;
+            let (mut idx, mut neg) = buf.take_sparse_sign();
+            read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+            neg.reserve(k);
+            for _ in 0..k {
+                neg.push(dec.get(&bit_t, &mut blob)? != 0);
+            }
+            buf.msg = Message::SparseSign { d, scale, idx, neg };
+        }
+        encode::TAG_DENSE_SIGN => {
+            let scale = r.read_f32()?;
+            let mut bit_t = DecTable::<BIT_SYMS>::zeroed();
+            bit_t.read(r)?;
+            let (mut blob, mut dec) = open_blob(r)?;
+            let mut neg = buf.take_dense_sign();
+            neg.reserve(d);
+            for _ in 0..d {
+                neg.push(dec.get(&bit_t, &mut blob)? != 0);
+            }
+            buf.msg = Message::DenseSign { scale, neg };
+        }
+        encode::TAG_QSGD => {
+            let s = r.read_elias_gamma()? as u32;
+            let bucket = r.read_elias_gamma()? as u32;
+            let post_scale = r.read_f32()?;
+            let has_idx = r.read_bit()?;
+            let k = if has_idx { (r.read_elias_gamma()? - 1) as usize } else { 0 };
+            let count = if has_idx { k } else { d };
+            let (mut norms, mut idx, mut levels, mut neg) = buf.take_qsgd();
+            let n_norms = (r.read_elias_gamma()? - 1) as usize;
+            norms.reserve(n_norms);
+            for _ in 0..n_norms {
+                norms.push(r.read_f32()?);
+            }
+            let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
+            if has_idx {
+                gap_t.read(r)?;
+            }
+            let mut lvl_t = DecTable::<LVL_SYMS>::zeroed();
+            lvl_t.read(r)?;
+            let mut bit_t = DecTable::<BIT_SYMS>::zeroed();
+            bit_t.read(r)?;
+            let (mut blob, mut dec) = open_blob(r)?;
+            if has_idx {
+                read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+            }
+            levels.reserve(count);
+            neg.reserve(count);
+            for _ in 0..count {
+                let l = dec.get(&lvl_t, &mut blob)? as u32;
+                if l != 0 {
+                    levels.push(l);
+                    neg.push(dec.get(&bit_t, &mut blob)? != 0);
+                } else {
+                    levels.push(0);
+                    neg.push(false);
+                }
+            }
+            buf.msg = Message::Qsgd {
+                d,
+                s,
+                bucket,
+                norms,
+                post_scale,
+                idx: has_idx.then_some(idx),
+                levels,
+                neg,
+            };
+        }
+        _ => {
+            buf.msg = Message::default();
+            return None;
+        }
+    }
+    Some(())
+}
+
+/// Read the blob header, split off the bounded blob reader, advance the
+/// main reader past the blob (to the raw-bits tail) and prime the decoder.
+fn open_blob<'a>(r: &mut BitReader<'a>) -> Option<(BitReader<'a>, RansDec)> {
+    let blen = r.read_elias_gamma()? - 1;
+    let nbits = blen.checked_mul(8)?;
+    let end = r.bit_pos().checked_add(nbits)?;
+    let mut blob = r.sub(end)?;
+    r.skip(nbits)?;
+    let dec = RansDec::init(&mut blob)?;
+    Some((blob, dec))
+}
+
+/// Decode `k` gap classes (rANS) + low bits (tail) into ascending indices —
+/// the inverse of `feed_gaps_rev` + `tail_gap_lows`.
+fn read_gaps(
+    dec: &mut RansDec,
+    t: &DecTable<GAP_SYMS>,
+    blob: &mut BitReader,
+    r: &mut BitReader,
+    k: usize,
+    idx: &mut Vec<u32>,
+) -> Option<()> {
+    debug_assert!(idx.is_empty());
+    idx.reserve(k);
+    let mut prev = 0u64;
+    for j in 0..k {
+        let class = dec.get(t, blob)? as u32;
+        if class >= GAP_SYMS as u32 {
+            return None;
+        }
+        let low = r.read_bits(class)?;
+        let gap = (1u64 << class) | low;
+        let i = prev + gap - u64::from(j == 0);
+        idx.push(i as u32);
+        prev = i;
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, Identity, QTopK, Qsgd, RandK, SignDense, SignTopK, TopK};
+    use crate::util::rng::Pcg64;
+
+    /// Force the rANS container (bypassing the strict-min raw fallback) so
+    /// degenerate histograms exercise the entropy path even when raw wins.
+    fn force_rans(msg: &Message) -> Option<(Vec<u8>, u64)> {
+        let t = build_tables(msg)?;
+        let blen = blob_len(msg, &t);
+        let mut blob = Vec::new();
+        let mut enc = RansEnc::new();
+        feed(msg, &t, &mut enc, &mut blob);
+        enc.flush(&mut blob);
+        blob.reverse();
+        assert_eq!(blob.len() as u64, blen, "blob cost walk drifted");
+        let mut cost = BitCost(0);
+        container(msg, &t, None, blen, &mut cost);
+        let mut w = BitWriter::new();
+        container(msg, &t, Some(&blob), blen, &mut w);
+        let (bytes, bits) = w.into_bytes();
+        assert_eq!(bits, cost.0, "container cost walk drifted");
+        Some((bytes, bits))
+    }
+
+    fn assert_bits_identical(a: &Message, b: &Message) {
+        // PartialEq would reject NaN == NaN; the wire contract is *bit*
+        // identity, so compare the raw serializations.
+        assert_eq!(encode::encode(a), encode::encode(b));
+    }
+
+    #[test]
+    fn codec_parse_and_display() {
+        assert_eq!(Codec::parse("raw"), Some(Codec::Raw));
+        assert_eq!(Codec::parse("rans"), Some(Codec::Rans));
+        assert_eq!(Codec::parse("zstd"), None);
+        assert_eq!(Codec::default(), Codec::Raw);
+        assert_eq!(Codec::Rans.as_str(), "rans");
+    }
+
+    #[test]
+    fn forced_container_roundtrips_all_operators() {
+        let mut rng = Pcg64::seeded(411);
+        let d = 300;
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::new(13)),
+            Box::new(RandK::new(13)),
+            Box::new(Qsgd::from_bits(4)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(13, Qsgd::from_bits(4), true)),
+            Box::new(QTopK::new(13, Qsgd::from_bits(2), false)),
+            Box::new(SignTopK::new(13, 1)),
+        ];
+        for op in ops {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let msg = op.compress(&x, &mut rng);
+            let (bytes, bits) = force_rans(&msg).expect("container applies");
+            let back = encode::decode(&bytes, bits)
+                .unwrap_or_else(|| panic!("{}: rans decode failed", op.name()));
+            assert_eq!(back, msg, "{}: rans roundtrip", op.name());
+        }
+    }
+
+    #[test]
+    fn degenerate_histograms_roundtrip() {
+        let cases: Vec<Message> = vec![
+            // nnz = 0
+            Message::SparseF32 { d: 100, idx: vec![], vals: vec![] },
+            // nnz = 1 (single gap symbol, single value symbol)
+            Message::SparseF32 { d: 100, idx: vec![7], vals: vec![2.5] },
+            // single value symbol with frequency 4096 (constant dense)
+            Message::Dense { values: vec![1.0; 50] },
+            // all-same-sign sparse signs
+            Message::SparseSign {
+                d: 64,
+                scale: 0.5,
+                idx: (0..20).collect(),
+                neg: vec![false; 20],
+            },
+            Message::DenseSign { scale: 1.5, neg: vec![true; 32] },
+            // QSGD with every level zero: empty sign histogram
+            Message::Qsgd {
+                d: 10,
+                s: 4,
+                bucket: 10,
+                norms: vec![0.0],
+                post_scale: 1.0,
+                idx: None,
+                levels: vec![0; 10],
+                neg: vec![false; 10],
+            },
+            // exotic f32 bit patterns must survive exactly
+            Message::SparseF32 {
+                d: 16,
+                idx: vec![1, 5, 9, 12],
+                vals: vec![f32::NAN, f32::INFINITY, -0.0, 1.1e-42],
+            },
+        ];
+        for (i, msg) in cases.iter().enumerate() {
+            let (bytes, bits) = force_rans(msg).expect("container applies");
+            let back = encode::decode(&bytes, bits)
+                .unwrap_or_else(|| panic!("case {i}: rans decode failed"));
+            assert_bits_identical(&back, msg);
+            // The public encoder (min rule) must also round-trip, whichever
+            // format it picks.
+            let (pbytes, pbits) = encode_with(msg, Codec::Rans);
+            assert_eq!(pbits, wire_bits(msg, Codec::Rans), "case {i}");
+            let back = encode::decode(&pbytes, pbits).expect("decode");
+            assert_bits_identical(&back, msg);
+        }
+    }
+
+    #[test]
+    fn oversized_qsgd_alphabet_falls_back_to_raw() {
+        let msg = Message::Qsgd {
+            d: 8,
+            s: 300, // > 255 levels: no rANS container
+            bucket: 8,
+            norms: vec![2.0],
+            post_scale: 1.0,
+            idx: None,
+            levels: vec![0, 1, 300, 7, 0, 299, 3, 2],
+            neg: vec![false, true, false, true, false, false, true, false],
+        };
+        assert!(build_tables(&msg).is_none());
+        assert_eq!(wire_bits(&msg, Codec::Rans), encode::wire_bits(&msg));
+        let mut enc = WireEncoder::new(Codec::Rans);
+        let (bytes, bits) = enc.encode(&msg);
+        let (raw_bytes, raw_bits) = encode::encode(&msg);
+        assert_eq!(bytes, &raw_bytes[..]);
+        assert_eq!(bits, raw_bits);
+    }
+
+    #[test]
+    fn wire_bits_matches_encoder_for_both_codecs() {
+        let mut rng = Pcg64::seeded(417);
+        let d = 500;
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::new(40)),
+            Box::new(RandK::new(40)),
+            Box::new(Qsgd::from_bits(4)),
+            Box::new(SignDense::new()),
+            Box::new(QTopK::new(40, Qsgd::from_bits(4), false)),
+            Box::new(SignTopK::new(40, 2)),
+        ];
+        let mut raw_enc = WireEncoder::new(Codec::Raw);
+        let mut rans_enc = WireEncoder::new(Codec::Rans);
+        for op in &ops {
+            for _ in 0..4 {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let msg = op.compress(&x, &mut rng);
+                let (_, raw_bits) = raw_enc.encode(&msg);
+                assert_eq!(raw_bits, msg.wire_bits_with(Codec::Raw), "{}", op.name());
+                assert_eq!(raw_bits, encode::wire_bits(&msg), "{}", op.name());
+                let (bytes, bits) = rans_enc.encode(&msg);
+                assert_eq!(bits, msg.wire_bits_with(Codec::Rans), "{}", op.name());
+                assert!(bits <= raw_bits, "{}: rans exceeded raw", op.name());
+                let back = encode::decode(bytes, bits)
+                    .unwrap_or_else(|| panic!("{}: decode", op.name()));
+                assert_eq!(back, msg, "{}: roundtrip through rans encoder", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn rans_beats_raw_on_skewed_supports() {
+        let mut rng = Pcg64::seeded(423);
+        let d = 7850;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for (name, msg) in [
+            ("topk:k=400", TopK::new(400).compress(&x, &mut rng)),
+            (
+                "qtopk:k=400,bits=4",
+                QTopK::new(400, Qsgd::from_bits(4), false).compress(&x, &mut rng),
+            ),
+        ] {
+            let raw = wire_bits(&msg, Codec::Raw);
+            let rans = wire_bits(&msg, Codec::Rans);
+            assert!(
+                (rans as f64) < 0.9 * raw as f64,
+                "{name}: rans {rans} not well below raw {raw}"
+            );
+        }
+        // Clustered support: heavily skewed gap histogram.
+        let idx: Vec<u32> = (1000..1400).collect();
+        let vals: Vec<f32> = (0..400).map(|_| rng.normal_f32()).collect();
+        let msg = Message::SparseF32 { d: 1 << 20, idx, vals };
+        let raw = wire_bits(&msg, Codec::Raw);
+        let rans = wire_bits(&msg, Codec::Rans);
+        assert!(rans < raw, "clustered: rans {rans} vs raw {raw}");
+    }
+}

@@ -32,8 +32,9 @@
 //! channel transport itself.
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::{encode, MessageBuf};
+use crate::compress::{encode, Message, MessageBuf, WireEncoder};
 use crate::data::Dataset;
+use crate::engine::parallel::{ChunkView, MsgsView};
 use crate::engine::{History, MetricPoint};
 use crate::grad::GradModel;
 use crate::protocol::MasterCore;
@@ -42,6 +43,10 @@ use crate::util::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
+
+/// Minimum model dimension for the sharded round fold — below this the
+/// per-round rendezvous with the fold shards costs more than the fold.
+const SHARD_FOLD_MIN_D: usize = 1024;
 
 /// Run a full threaded training job.
 ///
@@ -156,7 +161,19 @@ where
     let mut spare_bytes: Vec<Vec<u8>> = Vec::new();
     // Reused downlink compression buffer and wire encoder.
     let mut down_buf = MessageBuf::new();
-    let mut wire = encode::BitWriter::new();
+    let mut wire = WireEncoder::new(cfg.codec);
+    // Sharded round fold (barrier mode, large models only): a persistent
+    // mini-pool of fold threads, each folding every round message over its
+    // own disjoint chunk of the fold target in worker-index order — per
+    // coordinate the addition sequence equals the sequential
+    // `apply_update` loop's, so `History` stays bit-identical (tested).
+    let nshards = std::thread::available_parallelism().map_or(1, |n| n.get()).min(8);
+    let fold_pool = (barrier && cfg.workers >= 2 && d >= SHARD_FOLD_MIN_D && nshards >= 2)
+        .then(|| FoldPool::spawn(nshards));
+    // The round's messages in worker-index order, taken out of (and after
+    // the fold returned to) their owners' decode buffers — reused each
+    // round.
+    let mut round_msgs: Vec<Message> = Vec::with_capacity(cfg.workers);
 
     let measure = |step: usize, global: &[f32], bits_up: u64, bits_down: u64, mem: f64| {
         let train_loss = eval_model.loss(global, &train_eval);
@@ -217,10 +234,37 @@ where
                         // sync run bit-identical to the engine (tested).
                         batch.sort_by_key(|u| u.worker);
                         core.begin_round(expect);
-                        for u in batch {
+                        for u in &batch {
                             bits_up += u.bit_len;
                             mem_norms[u.worker] = u.mem_norm_sq;
-                            core.apply_update(upd_bufs[u.worker].message())?;
+                        }
+                        match &fold_pool {
+                            Some(pool) => {
+                                // Sharded fold: move the round's decoded
+                                // messages into one worker-ordered list,
+                                // fan the disjoint chunks out, then hand
+                                // each message back to its owner's buffer
+                                // so decode storage keeps recycling.
+                                round_msgs.clear();
+                                for u in &batch {
+                                    let msg = std::mem::take(&mut upd_bufs[u.worker].msg);
+                                    anyhow::ensure!(
+                                        msg.dim() == d,
+                                        "update dimension mismatch: message d={} vs model d={d}",
+                                        msg.dim(),
+                                    );
+                                    round_msgs.push(msg);
+                                }
+                                pool.fold(&round_msgs, &mut core);
+                                for (u, msg) in batch.iter().zip(round_msgs.drain(..)) {
+                                    upd_bufs[u.worker].msg = msg;
+                                }
+                            }
+                            None => {
+                                for u in &batch {
+                                    core.apply_update(upd_bufs[u.worker].message())?;
+                                }
+                            }
                         }
                         // Server optimizer step on the round aggregate
                         // (no-op for Avg) — before any broadcast encoding.
@@ -327,6 +371,9 @@ where
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
     }
+    if let Some(pool) = fold_pool {
+        pool.join();
+    }
     history.final_params = core.into_params();
     Ok(history)
 }
@@ -390,17 +437,96 @@ fn encode_delta(
     core: &mut MasterCore,
     down: &dyn crate::compress::Compressor,
     buf: &mut MessageBuf,
-    wire: &mut encode::BitWriter,
+    wire: &mut WireEncoder,
     r: usize,
     spare: Vec<u8>,
 ) -> (Vec<u8>, u64) {
     core.delta_broadcast_into(r, down, buf);
-    encode::encode_into(buf.message(), wire);
-    let (bytes, bit_len) = wire.finish();
+    let (bytes, bit_len) = wire.encode(buf.message());
     let mut out = spare;
     out.clear();
     out.extend_from_slice(bytes);
     (out, bit_len)
+}
+
+/// A persistent mini-pool of fold threads for the barrier path's sharded
+/// round fold. Reuses the engine pool's `MsgsView`/`ChunkView` machinery
+/// and contract: the master carves disjoint chunks of
+/// `MasterCore::fold_target`, sends one command per shard, and touches
+/// neither the message list nor the fold target again until every ack is
+/// back.
+struct FoldPool {
+    txs: Vec<mpsc::Sender<FoldCmd>>,
+    acks: Vec<mpsc::Receiver<()>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// One shard's fold command (see `engine::parallel::ChunkView::fold`).
+struct FoldCmd {
+    msgs: MsgsView,
+    chunk: ChunkView,
+    scale: f32,
+}
+
+impl FoldPool {
+    fn spawn(nshards: usize) -> Self {
+        let mut txs = Vec::with_capacity(nshards);
+        let mut acks = Vec::with_capacity(nshards);
+        let mut handles = Vec::with_capacity(nshards);
+        for i in 0..nshards {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<FoldCmd>();
+            let (ack_tx, ack_rx) = mpsc::channel::<()>();
+            txs.push(cmd_tx);
+            acks.push(ack_rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("qsparse-fold-{i}"))
+                    .spawn(move || {
+                        for cmd in cmd_rx {
+                            // SAFETY: per the view contracts, the master
+                            // keeps the message list and fold target
+                            // untouched until this shard's ack, and no
+                            // other shard's chunk overlaps.
+                            unsafe { cmd.chunk.fold(cmd.msgs, cmd.scale) };
+                            if ack_tx.send(()).is_err() {
+                                return; // master gone
+                            }
+                        }
+                    })
+                    .expect("failed to spawn fold shard thread"),
+            );
+        }
+        FoldPool { txs, acks, handles }
+    }
+
+    /// Fold the round's worker-ordered messages into the master's fold
+    /// target, sharded by coordinate range. Blocks until every shard acks,
+    /// so the borrow handed out by `fold_target` is quiescent again on
+    /// return.
+    fn fold(&self, msgs: &[Message], core: &mut MasterCore) {
+        let view = MsgsView::new(msgs);
+        let (target, scale) = core.fold_target();
+        let d = target.len();
+        let n = self.txs.len();
+        for (ti, tx) in self.txs.iter().enumerate() {
+            let (lo, hi) = (ti * d / n, (ti + 1) * d / n);
+            // The [lo, hi) ranges partition 0..d, so the chunks are
+            // disjoint.
+            let chunk = ChunkView::new(target, lo, hi);
+            tx.send(FoldCmd { msgs: view, chunk, scale }).expect("fold shard thread died");
+        }
+        for ack in &self.acks {
+            ack.recv().expect("fold shard thread died");
+        }
+    }
+
+    fn join(self) {
+        drop(self.txs);
+        drop(self.acks);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Decode an update into the sender's recycled buffer (`decode_into`

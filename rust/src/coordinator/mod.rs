@@ -33,7 +33,7 @@ mod worker;
 
 pub use master::run_threaded;
 
-use crate::compress::{Compressor, Identity};
+use crate::compress::{Codec, Compressor, Identity};
 use crate::data::Sharding;
 use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::AggScale;
@@ -64,6 +64,11 @@ pub struct CoordinatorConfig {
     /// Non-`Avg` optimizers require a synchronous schedule here: the
     /// aggregate-on-arrival path has no round boundary to step at.
     pub server_opt: ServerOptSpec,
+    /// Wire codec for encoded messages in both directions (uplink updates
+    /// and compressed downlink deltas). Decoded payloads are bit-identical
+    /// either way — `rans` only shrinks the wire length. Dense `identity`
+    /// model broadcasts always stay raw.
+    pub codec: Codec,
     pub sharding: Sharding,
     pub seed: u64,
     pub eval_every: usize,
@@ -86,6 +91,7 @@ impl CoordinatorConfig {
             participation: Participation::full(),
             agg_scale: AggScale::Workers,
             server_opt: ServerOptSpec::Avg,
+            codec: Codec::Raw,
             sharding: Sharding::Iid,
             seed: 0,
             eval_every: 10,

@@ -3,7 +3,7 @@
 //! refresh on sync (Algorithm 1/2 worker side).
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
-use crate::compress::encode::{self, BitWriter};
+use crate::compress::{encode, WireEncoder};
 use crate::data::Dataset;
 use crate::grad::GradModel;
 use crate::protocol::WorkerCore;
@@ -28,7 +28,7 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     // comes back with every master reply, the downlink delta's buffer goes
     // back with the next update — so the steady-state sync loop assembles,
     // copies and decodes wire bytes without fresh allocation.
-    let mut wire = BitWriter::new();
+    let mut wire = WireEncoder::new(cfg.codec);
     let mut up_bytes: Vec<u8> = Vec::new();
     let mut spent_down: Vec<u8> = Vec::new();
     // Reused downlink delta decode storage (`encode::decode_into`).
@@ -43,8 +43,7 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
         if cfg.schedule.syncs_at(id, t) && cfg.participation.participates(id, t) {
             let bit_len = {
                 let msg = core.make_update(cfg.compressor.as_ref());
-                encode::encode_into(msg, &mut wire);
-                let (bytes, bit_len) = wire.finish();
+                let (bytes, bit_len) = wire.encode(msg);
                 up_bytes.clear();
                 up_bytes.extend_from_slice(bytes);
                 bit_len

@@ -43,7 +43,7 @@ pub(crate) mod parallel;
 
 pub use metrics::{History, MetricPoint};
 
-use crate::compress::{encode, Compressor, MessageBuf};
+use crate::compress::{encode, Codec, Compressor, MessageBuf};
 use crate::data::{shard_indices, Batch, Dataset, Sharding};
 use crate::grad::GradModel;
 use crate::optim::{LrSchedule, ServerOptSpec};
@@ -79,6 +79,13 @@ pub struct TrainSpec<'a> {
     /// `Workers` folds every update as `−(1/R)·g` (the paper); `Participants`
     /// uses the unbiased `−(1/|S_t|)·g` under sampled participation.
     pub agg_scale: AggScale,
+    /// Wire codec for encoded messages (uplink and compressed downlink).
+    /// The engine never serializes — it accounts bits through the exact
+    /// `wire_bits_with` cost walk, which equals what a `WireEncoder` with
+    /// the same codec emits (the threaded runtime serializes for real and
+    /// the parity tests assert equal totals). Trajectories are codec-
+    /// independent by construction; dense `identity` broadcasts stay raw.
+    pub codec: Codec,
     /// FedOpt-style server optimizer applied to each round's aggregate
     /// before broadcast. `Avg` (the default) is the paper's plain
     /// averaging, bit-identical to the historical aggregation path.
@@ -124,6 +131,7 @@ impl<'a> TrainSpec<'a> {
             schedule,
             participation: &crate::topology::FULL_PARTICIPATION,
             agg_scale: AggScale::Workers,
+            codec: Codec::Raw,
             server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: 0,
@@ -221,7 +229,7 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
             master.begin_round(round.len());
             for &r in &round {
                 let msg = workers[r].make_update(spec.compressor);
-                bits_up += msg.wire_bits();
+                bits_up += msg.wire_bits_with(spec.codec);
                 master.apply_update(msg).expect("engine-internal update dim mismatch");
             }
             // Server optimizer step on the round's aggregate (no-op for Avg).
@@ -233,7 +241,7 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
                     bits_down += encode::dense_model_bits(d);
                 } else {
                     master.delta_broadcast_into(r, spec.down_compressor, &mut down_buf);
-                    bits_down += down_buf.message().wire_bits();
+                    bits_down += down_buf.message().wire_bits_with(spec.codec);
                     workers[r].apply_delta_broadcast(down_buf.message());
                 }
             }

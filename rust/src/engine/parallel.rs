@@ -57,7 +57,7 @@
 //! dereference between receiving the command and sending the ack.
 
 use super::{avg_mem_values, EvalSets, TrainSpec};
-use crate::compress::{encode, Compressor, Message, MessageBuf};
+use crate::compress::{encode, Codec, Compressor, Message, MessageBuf};
 use crate::data::{shard_indices, Dataset};
 use crate::engine::History;
 use crate::grad::GradModel;
@@ -72,33 +72,79 @@ use std::sync::Arc;
 const MAX_RUNAHEAD: usize = 64;
 
 /// Raw view of the coordinator's round-message list (worker-index order),
-/// shared read-only with every pool thread for the sharded fold.
+/// shared read-only with every pool thread for the sharded fold. Also used
+/// by the threaded coordinator's sharded fold (`coordinator::master`),
+/// which obeys the same contract with its own barrier.
 ///
-/// Safety contract: the coordinator keeps the backing `Vec<Message>` alive
+/// Safety contract: the holder keeps the backing `Vec<Message>` alive
 /// and unmodified from the moment the view is sent until it has received
-/// `Reply::FoldDone` from every thread; threads only dereference between
-/// receiving `Cmd::Fold` and sending that ack. `Message` is `Sync`, so
-/// shared `&` access from several threads is sound.
+/// the fold ack from every thread; threads only dereference between
+/// receiving the fold command and sending that ack. `Message` is `Sync`,
+/// so shared `&` access from several threads is sound.
 #[derive(Clone, Copy)]
-struct MsgsView {
+pub(crate) struct MsgsView {
     ptr: *const Message,
     len: usize,
 }
 
 unsafe impl Send for MsgsView {}
 
+impl MsgsView {
+    /// Capture a view of `msgs`. Caller upholds the lifetime/immutability
+    /// contract documented on the type.
+    pub(crate) fn new(msgs: &[Message]) -> Self {
+        MsgsView { ptr: msgs.as_ptr(), len: msgs.len() }
+    }
+
+    /// Re-materialize the slice.
+    ///
+    /// # Safety
+    /// The backing `Vec<Message>` must still be alive and unmodified (see
+    /// the type-level contract).
+    pub(crate) unsafe fn as_slice<'a>(self) -> &'a [Message] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
 /// Raw view of one thread's chunk `[lo, hi)` of the round's fold target.
 /// The coordinator derives one per thread from the *same* exclusive borrow
 /// (`MasterCore::fold_target`) over non-overlapping ranges, and re-borrows
-/// the target only after every `Reply::FoldDone` ack — so at any moment
-/// each coordinate is reachable from exactly one live view.
-struct ChunkView {
+/// the target only after every fold ack — so at any moment each coordinate
+/// is reachable from exactly one live view.
+pub(crate) struct ChunkView {
     ptr: *mut f32,
     lo: usize,
     hi: usize,
 }
 
 unsafe impl Send for ChunkView {}
+
+impl ChunkView {
+    /// Carve chunk `[lo, hi)` out of the exclusive borrow `target`.
+    /// Caller guarantees the per-call ranges are disjoint and within
+    /// `target.len()`, and does not touch `target` until every chunk's
+    /// fold ack arrives.
+    pub(crate) fn new(target: &mut [f32], lo: usize, hi: usize) -> Self {
+        debug_assert!(lo <= hi && hi <= target.len());
+        // SAFETY: `lo <= target.len()`, so the offset stays within (or one
+        // past) the allocation.
+        ChunkView { ptr: unsafe { target.as_mut_ptr().add(lo) }, lo, hi }
+    }
+
+    /// Fold every message of `msgs` over this chunk, in list order — the
+    /// per-coordinate addition sequence of the sequential fold.
+    ///
+    /// # Safety
+    /// Per the view contracts: the message list and fold target are alive
+    /// and untouched by others, and no other live chunk overlaps [lo, hi).
+    pub(crate) unsafe fn fold(&self, msgs: MsgsView, scale: f32) {
+        let msgs = msgs.as_slice();
+        let out = std::slice::from_raw_parts_mut(self.ptr, self.hi - self.lo);
+        for m in msgs {
+            m.add_into_range(out, scale, self.lo..self.hi);
+        }
+    }
+}
 
 /// Raw read-only view of the post-round global model for the parallel
 /// downlink. The coordinator blocks for every `Reply::DownDone` ack before
@@ -164,6 +210,9 @@ struct PoolThread<'a> {
     train: &'a Dataset,
     compressor: &'a dyn Compressor,
     down_compressor: &'a dyn Compressor,
+    /// Wire codec for downlink bit accounting (`wire_bits_with` — the pure
+    /// cost walk; the engine never serializes).
+    codec: Codec,
     schedule: &'a dyn SyncSchedule,
     participation: &'a Participation,
     /// d-float delta scratch + message buffer for the parallel downlink.
@@ -221,6 +270,7 @@ pub(super) fn run_from_parallel(
                 train: spec.train,
                 compressor: spec.compressor,
                 down_compressor: spec.down_compressor,
+                codec: spec.codec,
                 schedule: spec.schedule,
                 participation: spec.participation,
                 delta_scratch: if dense_down { Vec::new() } else { vec![0.0f32; d] },
@@ -316,7 +366,7 @@ pub(super) fn run_from_parallel(
                 for &r in &round {
                     let msg = slots[r].take().expect("participant sent no update");
                     assert_eq!(msg.dim(), d, "engine-internal update dim mismatch");
-                    bits_up += msg.wire_bits();
+                    bits_up += msg.wire_bits_with(spec.codec);
                     round_msgs.push(msg);
                 }
                 // Sharded fold: each thread folds every message over its
@@ -324,15 +374,13 @@ pub(super) fn run_from_parallel(
                 // coordinate the addition sequence is identical to the
                 // sequential fold, so the result is bit-identical.
                 {
-                    let msgs = MsgsView { ptr: round_msgs.as_ptr(), len: round_msgs.len() };
+                    let msgs = MsgsView::new(&round_msgs);
                     let (target, scale) = master.fold_target();
-                    let base = target.as_mut_ptr();
                     for (ti, tx) in cmd_txs.iter().enumerate() {
                         let (lo, hi) = (ti * d / nthreads, (ti + 1) * d / nthreads);
-                        // SAFETY: `base.add(lo)` stays within (or one past)
-                        // the `d`-element fold target; the [lo, hi) ranges
-                        // partition 0..d, so the views are disjoint.
-                        let chunk = ChunkView { ptr: unsafe { base.add(lo) }, lo, hi };
+                        // The [lo, hi) ranges partition 0..d, so the views
+                        // are disjoint.
+                        let chunk = ChunkView::new(target, lo, hi);
                         tx.send(Cmd::Fold { msgs, chunk, scale })
                             .expect("engine pool thread died");
                     }
@@ -464,12 +512,7 @@ fn pool_main(mut st: PoolThread, cmd_rx: mpsc::Receiver<Cmd>, reply_tx: mpsc::Se
                 // message list and the fold target untouched until this
                 // FoldDone ack, and no other thread's chunk overlaps
                 // [lo, hi).
-                let msgs = unsafe { std::slice::from_raw_parts(msgs.ptr, msgs.len) };
-                let out =
-                    unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.hi - chunk.lo) };
-                for m in msgs {
-                    m.add_into_range(out, scale, chunk.lo..chunk.hi);
-                }
+                unsafe { chunk.fold(msgs, scale) };
                 if reply_tx.send(Reply::FoldDone).is_err() {
                     return;
                 }
@@ -494,7 +537,7 @@ fn pool_main(mut st: PoolThread, cmd_rx: mpsc::Receiver<Cmd>, reply_tx: mpsc::Se
                                 st.down_compressor,
                                 &mut st.down_buf,
                             );
-                            bits += st.down_buf.message().wire_bits();
+                            bits += st.down_buf.message().wire_bits_with(st.codec);
                             st.cores[i].apply_delta_broadcast(st.down_buf.message());
                         }
                     }

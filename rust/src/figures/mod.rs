@@ -171,6 +171,7 @@ fn run_series_on(
         participation: &ops.participation,
         agg_scale: s.agg_scale,
         server_opt: s.server_opt,
+        codec: s.codec,
         sharding: s.sharding,
         seed: s.seed,
         eval_every: s.eval_every,

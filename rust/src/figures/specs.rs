@@ -9,15 +9,17 @@
 //! per-tensor min(d_t, 1000) amounts to 0.4% of ResNet-50).
 
 use super::{FigureSpec, Workload};
+use crate::compress::Codec;
 use crate::protocol::AggScale;
 use crate::spec::ExperimentSpec;
 
 /// All figure ids in paper order (fig9 — bidirectional compression, fig10 —
-/// sampled partial participation, fig11 — server optimizers — are this
-/// repo's extensions, not paper figures).
+/// sampled partial participation, fig11 — server optimizers, fig12 — the
+/// rANS wire codec — are this repo's extensions, not paper figures).
 pub fn all_figure_ids() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+        "fig12",
     ]
 }
 
@@ -268,6 +270,28 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
                     .with_server_opt("momentum:beta=0.9,lr=0.1"),
             ],
         ),
+        // ---- entropy-coded wire format (not in the paper) --------------------
+        // rANS gap/level coding as the wire codec on the bidirectional paths.
+        // Decoded payloads are bit-identical to raw — each raw/rans pair
+        // produces the *same* trajectory, so the bits-to-target table isolates
+        // the pure wire saving (uplink index gaps + values, downlink levels).
+        "fig12" => cv.build(
+            "fig12",
+            "convex: rANS entropy-coded wire format vs raw (same trajectories, fewer bits)",
+            0.10,
+            0.15,
+            vec![
+                cv.s("TopK-bidir-raw", &format!("topk:k={KC}"), 1).with_down("topk:k=400"),
+                cv.s("TopK-bidir-rans", &format!("topk:k={KC}"), 1)
+                    .with_down("topk:k=400")
+                    .with_codec(Codec::Rans),
+                cv.s("QTopK-bidir-raw", &format!("qtopk:k={KC},bits=4,scaled"), 1)
+                    .with_down("qtopk:k=400,bits=4"),
+                cv.s("QTopK-bidir-rans", &format!("qtopk:k={KC},bits=4,scaled"), 1)
+                    .with_down("qtopk:k=400,bits=4")
+                    .with_codec(Codec::Rans),
+            ],
+        ),
         _ => return None,
     })
 }
@@ -300,6 +324,24 @@ mod tests {
             labels.sort_unstable();
             labels.dedup();
             assert_eq!(labels.len(), spec.series.len(), "{id} duplicate labels");
+        }
+    }
+
+    #[test]
+    fn fig12_pairs_differ_only_in_the_codec() {
+        // Each raw/rans pair must describe the same run up to the wire
+        // codec — that is what makes the figure's trajectories identical
+        // and its bits comparison a pure wire measurement.
+        let spec = figure_spec("fig12").unwrap();
+        assert_eq!(spec.series.len() % 2, 0);
+        for pair in spec.series.chunks(2) {
+            let (raw, rans) = (&pair[0], &pair[1]);
+            assert_eq!(raw.codec, Codec::Raw, "{}", raw.label);
+            assert_eq!(rans.codec, Codec::Rans, "{}", rans.label);
+            let mut normalized = rans.clone();
+            normalized.codec = Codec::Raw;
+            normalized.label = raw.label.clone();
+            assert_eq!(&normalized, raw);
         }
     }
 

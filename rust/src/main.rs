@@ -25,6 +25,8 @@
 //!   --compressor SPEC             e.g. topk:k=40 | qtopk:k=40,bits=4,scaled
 //!   --down-compressor SPEC        downlink (master→worker) compressor;
 //!                                 default identity = dense model broadcast
+//!   --codec raw|rans              wire codec for encoded messages (rans =
+//!                                 entropy-coded, same decoded payloads)
 //!   --participation SPEC          full | bernoulli:P | fixed:M
 //!   --agg-scale MODE              workers (1/R) | participants (1/|S_t|)
 //!   --server-opt SPEC             avg | momentum:beta=B[,lr=L] |
@@ -82,7 +84,8 @@ USAGE: qsparse <figure|gamma-table|train|specs|inspect|help> [options]
   gamma-table [--d 7850] [--k 40]
   train [--spec FILE] [--dump-spec] [--workload convex|nonconvex]
         [--pjrt NAME] [--label NAME] [--compressor SPEC]
-        [--down-compressor SPEC] [--participation SPEC] [--agg-scale MODE]
+        [--down-compressor SPEC] [--codec raw|rans]
+        [--participation SPEC] [--agg-scale MODE]
         [--server-opt SPEC] [--h N] [--schedule SPEC] [--async] [--threaded]
         [--threads N]
         [--steps N] [--workers N] [--batch N] [--eta F] [--momentum F]
@@ -102,6 +105,12 @@ Compressor SPECs: identity | topk:k=K | randk:k=K | qsgd:bits=B | sign |
 --compressor is the uplink (worker→master). --down-compressor compresses the
 downlink broadcast as an error-compensated model delta (server-side error
 feedback); the default `identity` broadcasts the dense model.
+
+--codec selects the wire codec for encoded messages in both directions:
+`raw` (default, fixed-width fields) | `rans` (range-ANS entropy coding of
+index gaps, values and quantization levels — decoded payloads are
+bit-identical, only the wire length shrinks; dense identity broadcasts
+always stay raw).
 
 --participation samples which scheduled workers sync each round: `full`
 (default) | `bernoulli:P` | `fixed:M`; --agg-scale picks `workers` (the
@@ -255,6 +264,10 @@ fn spec_from_flags(f: &Flags) -> anyhow::Result<ExperimentSpec> {
         spec.down =
             CompressorSpec::parse(c).map_err(|e| anyhow::anyhow!("--down-compressor: {e}"))?;
     }
+    if let Some(c) = f.get("codec") {
+        spec.codec = qsparse::compress::Codec::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("--codec: unknown codec `{c}` (raw | rans)"))?;
+    }
     // `--schedule sync:H|async:H` replaces the whole schedule; `--h N`
     // changes only the period (preserving a loaded spec's sync/async kind);
     // `--async` switches the kind.
@@ -397,6 +410,9 @@ fn cmd_train_pjrt(f: &Flags) -> anyhow::Result<()> {
     let compressor = qsparse::compress::parse_spec(&comp_spec)?;
     let down_spec = f.get_or("down-compressor", "identity");
     let down_compressor = qsparse::compress::parse_spec(&down_spec)?;
+    let codec_spec = f.get_or("codec", "raw");
+    let codec = qsparse::compress::Codec::parse(&codec_spec)
+        .ok_or_else(|| anyhow::anyhow!("--codec: unknown codec `{codec_spec}` (raw | rans)"))?;
     let sw = Stopwatch::start();
 
     anyhow::ensure!(
@@ -443,6 +459,7 @@ fn cmd_train_pjrt(f: &Flags) -> anyhow::Result<()> {
         momentum,
         compressor: compressor.as_ref(),
         down_compressor: down_compressor.as_ref(),
+        codec,
         schedule: schedule.as_ref(),
         participation: &participation,
         agg_scale,

@@ -28,7 +28,7 @@ mod workload;
 
 pub use workload::{Workload, WorkloadDefaults, WorkloadInstance, SEED};
 
-use crate::compress::{parse_spec, Compressor};
+use crate::compress::{parse_spec, Codec, Compressor};
 use crate::coordinator::{run_threaded, CoordinatorConfig};
 use crate::data::Sharding;
 use crate::engine::{self, History, TrainSpec};
@@ -150,6 +150,11 @@ pub struct ExperimentSpec {
     pub schedule: ScheduleSpec,
     pub participation: ParticipationSpec,
     pub agg_scale: AggScale,
+    /// Wire codec for encoded messages on both directions (`raw` | `rans`).
+    /// Decoded payloads are bit-identical either way — `rans` only changes
+    /// the wire length (and hence `bits_up`/`bits_down`), never the
+    /// trajectory. Dense `identity` model broadcasts always stay raw.
+    pub codec: Codec,
     /// FedOpt-style server optimizer (`avg` = the paper's plain averaging).
     pub server_opt: ServerOptSpec,
     pub sharding: Sharding,
@@ -178,6 +183,7 @@ const FIELDS: &[&str] = &[
     "schedule",
     "participation",
     "agg_scale",
+    "codec",
     "server_opt",
     "sharding",
     "seed",
@@ -205,6 +211,7 @@ impl ExperimentSpec {
             schedule: ScheduleSpec::Sync { h: 1 },
             participation: ParticipationSpec::Full,
             agg_scale: AggScale::Workers,
+            codec: Codec::Raw,
             server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: SEED,
@@ -254,6 +261,11 @@ impl ExperimentSpec {
         self
     }
 
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
     pub fn with_steps(mut self, steps: usize) -> Self {
         self.steps = steps;
         self
@@ -298,9 +310,11 @@ impl ExperimentSpec {
     // -- JSON ---------------------------------------------------------------
 
     /// Serialize to a JSON object (all fields, canonical spellings).
-    /// `from_json(to_json(s)) == s` — property-tested.
+    /// `from_json(to_json(s)) == s` — property-tested. The `codec` field is
+    /// emitted only when it differs from the default `raw`, so every spec
+    /// written before the codec existed serializes byte-identically.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("label", Json::str(self.label.as_str())),
             ("workload", Json::str(self.workload.spec_str())),
             ("steps", Json::from(self.steps)),
@@ -313,13 +327,19 @@ impl ExperimentSpec {
             ("schedule", Json::str(self.schedule.spec_str())),
             ("participation", Json::str(self.participation.spec_str())),
             ("agg_scale", Json::str(self.agg_scale.spec_str())),
+        ];
+        if self.codec != Codec::Raw {
+            fields.push(("codec", Json::str(self.codec.as_str())));
+        }
+        fields.extend([
             ("server_opt", Json::str(self.server_opt.spec_str())),
             ("sharding", Json::str(self.sharding.spec_str())),
             ("seed", Json::from(self.seed)),
             ("threads", Json::from(self.threads)),
             ("eval_every", Json::from(self.eval_every)),
             ("eval_rows", Json::from(self.eval_rows)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     /// Deserialize. Missing fields take the workload defaults (so sparse
@@ -375,6 +395,11 @@ impl ExperimentSpec {
         }
         if let Some(v) = opt(j, "agg_scale") {
             s.agg_scale = AggScale::parse(str_field(v, "agg_scale")?)?;
+        }
+        if let Some(v) = opt(j, "codec") {
+            let text = str_field(v, "codec")?;
+            s.codec = Codec::parse(text)
+                .ok_or_else(|| anyhow::anyhow!("`codec`: unknown codec `{text}` (raw | rans)"))?;
         }
         if let Some(v) = opt(j, "server_opt") {
             s.server_opt = ServerOptSpec::parse(str_field(v, "server_opt")?)?;
@@ -466,6 +491,7 @@ impl ResolvedExperiment {
             schedule: self.ops.schedule.as_ref(),
             participation: &self.ops.participation,
             agg_scale: self.spec.agg_scale,
+            codec: self.spec.codec,
             server_opt: self.spec.server_opt,
             sharding: self.spec.sharding,
             seed: self.spec.seed,
@@ -494,6 +520,7 @@ impl ResolvedExperiment {
         cfg.down_compressor = Arc::from(ops.down);
         cfg.participation = ops.participation;
         cfg.agg_scale = spec.agg_scale;
+        cfg.codec = spec.codec;
         cfg.server_opt = spec.server_opt;
         cfg.workers = spec.workers;
         cfg.batch = spec.batch;
@@ -621,10 +648,29 @@ mod tests {
             .with_h(4)
             .with_participation("bernoulli:0.5", AggScale::Participants)
             .with_server_opt("momentum:beta=0.9,lr=0.1")
+            .with_codec(Codec::Rans)
             .with_steps(321);
         assert_eq!(ExperimentSpec::from_json(&s.to_json()).unwrap(), s);
         assert_eq!(s.schedule, ScheduleSpec::Sync { h: 4 });
         assert_eq!(s.server_opt, ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 });
+        assert_eq!(s.codec, Codec::Rans);
+    }
+
+    #[test]
+    fn codec_json_roundtrip_and_default_omission() {
+        let s = ExperimentSpec::for_workload(Workload::ConvexSoftmax);
+        // Default raw codec is not serialized, keeping pre-codec specs
+        // byte-stable; absent field deserializes to raw.
+        assert!(!s.to_json().to_string().contains("codec"));
+        assert_eq!(ExperimentSpec::from_json(&s.to_json()).unwrap().codec, Codec::Raw);
+        let s = s.with_codec(Codec::Rans);
+        let j = s.to_json();
+        assert!(j.to_string().contains("\"codec\""));
+        assert_eq!(ExperimentSpec::from_json(&j).unwrap(), s);
+        let err = ExperimentSpec::from_json_str(r#"{"codec": "zstd"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("codec"), "{err}");
     }
 
     #[test]
@@ -709,6 +755,7 @@ mod tests {
             schedule: &sched,
             participation: &part,
             agg_scale: AggScale::Workers,
+            codec: Codec::Raw,
             server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: SEED,

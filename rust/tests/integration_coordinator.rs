@@ -1,10 +1,10 @@
 //! Threaded coordinator vs engine: the same algorithm under real threads +
 //! encoded wire messages must reproduce the deterministic engine.
 
-use qsparse::compress::parse_spec;
+use qsparse::compress::{parse_spec, Codec};
 use qsparse::coordinator::{run_threaded, CoordinatorConfig};
 use qsparse::data::{gaussian_clusters_split, Sharding};
-use qsparse::engine::{run, TrainSpec};
+use qsparse::engine::{run, History, TrainSpec};
 use qsparse::grad::{GradModel, SoftmaxRegression};
 use qsparse::optim::LrSchedule;
 use qsparse::topology::{FixedPeriod, RandomGaps};
@@ -18,6 +18,16 @@ fn data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
 
 fn model() -> SoftmaxRegression {
     SoftmaxRegression::new(16, 4, 1.0 / N as f64)
+}
+
+/// Large-d workload (d = 64·16 + 16 = 1040 ≥ the coordinator's sharded-fold
+/// threshold) for the fold-pool and codec tests.
+fn big_data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
+    gaussian_clusters_split(400, 100, 64, 16, 0.5, 1.0, 77)
+}
+
+fn big_model() -> SoftmaxRegression {
+    SoftmaxRegression::new(64, 16, 1.0 / 400.0)
 }
 
 /// Synchronous schedules barrier in the master, so the threaded run must be
@@ -125,6 +135,155 @@ fn threaded_async_converges_and_bits_match() {
     let egrid: Vec<usize> = engine_hist.points.iter().map(|p| p.step).collect();
     let tgrid: Vec<usize> = threaded_hist.points.iter().map(|p| p.step).collect();
     assert_eq!(egrid, tgrid, "async metric step grids differ");
+}
+
+/// With `codec: rans` on both directions (compressed uplink AND downlink),
+/// the threaded runtime must still be bit-identical to the engine: the
+/// workers serialize through `WireEncoder` while the engine only walks
+/// `wire_bits_with`, so any drift between the cost walk and the real
+/// serializer shows up here as a bits mismatch, and any decode corruption
+/// as diverging parameters.
+#[test]
+fn threaded_rans_bitexact_vs_engine_bidirectional() {
+    let (train, test) = data();
+    let m = model();
+    let comp = parse_spec("qtopk:k=10,bits=4").unwrap();
+    let down = parse_spec("topk:k=40").unwrap();
+    let sched = FixedPeriod::new(4);
+    let mut spec = TrainSpec::new(&m, &train, comp.as_ref(), &sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = 80;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.test = Some(&test);
+    spec.down_compressor = down.as_ref();
+    spec.codec = Codec::Rans;
+    let engine_hist = run(&spec);
+
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("qtopk:k=10,bits=4").unwrap()),
+        Arc::new(FixedPeriod::new(4)),
+    );
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = 80;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    cfg.seed = spec.seed;
+    cfg.down_compressor = Arc::from(parse_spec("topk:k=40").unwrap());
+    cfg.codec = Codec::Rans;
+    let threaded_hist = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train.clone()),
+        Some(Arc::new(test.clone())),
+    )
+    .unwrap();
+
+    assert_eq!(
+        engine_hist.final_params, threaded_hist.final_params,
+        "rans threaded run diverged from the engine"
+    );
+    assert_eq!(engine_hist.points.len(), threaded_hist.points.len());
+    for (a, b) in engine_hist.points.iter().zip(&threaded_hist.points) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            (a.bits_up, a.bits_down),
+            (b.bits_up, b.bits_down),
+            "rans wire accounting diverged at step {}",
+            a.step
+        );
+    }
+}
+
+/// Assert two histories describe the same trajectory bit for bit (steps,
+/// losses, parameters) — bits are compared separately by the callers.
+fn assert_same_trajectory(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.step, pb.step, "{ctx}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {}",
+            pa.step
+        );
+    }
+}
+
+/// The d = 1040 workload drives the coordinator's sharded fold pool
+/// (d ≥ 1024, multi-worker barrier) and the codec end to end: engine ≡
+/// threaded bit-identity under both codecs, raw ≡ rans trajectory identity
+/// by construction, and a strict wire saving for rans on both directions.
+#[test]
+fn sharded_fold_and_rans_bit_identity_at_large_d() {
+    let (train, test) = big_data();
+    let m = big_model();
+    let run_engine = |codec: Codec| {
+        let comp = parse_spec("topk:k=100").unwrap();
+        let down = parse_spec("qtopk:k=400,bits=4").unwrap();
+        let sched = FixedPeriod::new(4);
+        let mut spec = TrainSpec::new(&m, &train, comp.as_ref(), &sched);
+        spec.workers = 4;
+        spec.batch = 4;
+        spec.steps = 48;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.test = Some(&test);
+        spec.down_compressor = down.as_ref();
+        spec.codec = codec;
+        run(&spec)
+    };
+    let run_coord = |codec: Codec| {
+        let mut cfg = CoordinatorConfig::new(
+            Arc::from(parse_spec("topk:k=100").unwrap()),
+            Arc::new(FixedPeriod::new(4)),
+        );
+        cfg.workers = 4;
+        cfg.batch = 4;
+        cfg.steps = 48;
+        cfg.lr = LrSchedule::Const { eta: 0.3 };
+        cfg.down_compressor = Arc::from(parse_spec("qtopk:k=400,bits=4").unwrap());
+        cfg.codec = codec;
+        run_threaded(
+            &cfg,
+            || Box::new(big_model()) as Box<dyn GradModel>,
+            Arc::new(train.clone()),
+            Some(Arc::new(test.clone())),
+        )
+        .unwrap()
+    };
+    for codec in [Codec::Raw, Codec::Rans] {
+        let engine_hist = run_engine(codec);
+        let threaded_hist = run_coord(codec);
+        let ctx = format!("codec {codec:?}");
+        assert_same_trajectory(&engine_hist, &threaded_hist, &ctx);
+        for (a, b) in engine_hist.points.iter().zip(&threaded_hist.points) {
+            assert_eq!(
+                (a.bits_up, a.bits_down),
+                (b.bits_up, b.bits_down),
+                "{ctx}: bits diverged at step {}",
+                a.step
+            );
+        }
+    }
+    // raw vs rans: identical trajectories (the codec only re-encodes the
+    // wire), strictly fewer bits in both directions for rans.
+    let raw = run_engine(Codec::Raw);
+    let rans = run_engine(Codec::Rans);
+    assert_same_trajectory(&raw, &rans, "raw vs rans");
+    let (raw_last, rans_last) = (raw.points.last().unwrap(), rans.points.last().unwrap());
+    assert!(
+        rans_last.bits_up < raw_last.bits_up,
+        "rans uplink must beat raw: {} vs {}",
+        rans_last.bits_up,
+        raw_last.bits_up
+    );
+    assert!(
+        rans_last.bits_down < raw_last.bits_down,
+        "rans downlink must beat raw: {} vs {}",
+        rans_last.bits_down,
+        raw_last.bits_down
+    );
 }
 
 /// One worker (R = 1) degenerates to sequential SGD with compression.

@@ -4,7 +4,7 @@
 //! the spec-resolved figure path vs the pre-redesign hand-built
 //! `TrainSpec` construction (fig9 + fig10, quick-mode workload).
 
-use qsparse::compress::parse_spec;
+use qsparse::compress::{parse_spec, Codec};
 use qsparse::data::Sharding;
 use qsparse::engine::{self, History, TrainSpec};
 use qsparse::figures::{self, FigureSpec};
@@ -73,6 +73,7 @@ fn random_spec(rng: &mut Pcg64) -> ExperimentSpec {
             lr: 0.001 + rng.f64(),
         },
     };
+    s.codec = if rng.f64() < 0.5 { Codec::Raw } else { Codec::Rans };
     s.sharding = if rng.f64() < 0.5 { Sharding::Iid } else { Sharding::LabelSkew };
     s.seed = rng.below(1 << 48);
     s.threads = rng.below_usize(9);
@@ -174,6 +175,7 @@ fn legacy_run_series(
         participation: &participation,
         agg_scale: agg,
         server_opt: ServerOptSpec::Avg,
+        codec: Codec::Raw,
         sharding: Sharding::Iid,
         seed,
         eval_every: w.eval_every,
@@ -287,6 +289,7 @@ fn fig7_async_series_bit_identical_to_legacy_schedule() {
         participation: &participation,
         agg_scale: AggScale::Workers,
         server_opt: ServerOptSpec::Avg,
+        codec: Codec::Raw,
         sharding: Sharding::Iid,
         seed: SEED,
         eval_every: w.eval_every,

@@ -9,7 +9,11 @@ This script fails the job when
   1. any expected probe key is missing (exact names for the
      hardware-independent probes, prefixes for the ones whose names embed
      the runner's core count), or
-  2. any steady-state allocation probe reports a nonzero count.
+  2. any steady-state allocation probe reports a nonzero count, or
+  3. any `codec/rans-vs-raw-bits/...` ratio exceeds its cap: 1.0 for every
+     probe (the per-message fallback must make the entropy-coded container
+     free to decline), and a tighter savings floor on the deterministic
+     TopK/QTopK gradient probes.
 
 Zero-allocation rule: every `alloc/...` probe is a steady-state allocation
 count and must be exactly 0, *except* the parallel-engine probe
@@ -48,14 +52,36 @@ REQUIRED_EXACT = [
     for t in (1, 2, 8)
 ] + [
     f"{kind}/{spec}(d=7850)"
-    for spec in ("signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400")
+    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
+                 "randk:k=400")
     for kind in ("compress", "compress_into", "encode", "encode_into",
-                 "wire_bits", "decode", "decode_into")
+                 "wire_bits", "decode", "decode_into",
+                 "encode-rans", "decode-rans", "wire_bits-rans")
 ] + [
     f"alloc/{kind}-per-call/{spec}"
-    for spec in ("signtopk:k=170,m=1", "qtopk:k=400,bits=4", "randk:k=400")
-    for kind in ("compress_into", "decode_into")
+    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
+                 "randk:k=400")
+    for kind in ("compress_into", "decode_into", "encode-rans", "decode-rans")
+] + [
+    f"codec/rans-vs-raw-bits/{spec}(d=7850)"
+    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
+                 "randk:k=400")
+] + [
+    "codec/rans-vs-raw-bits/skewed-gaps(d=1M)",
 ]
+
+# rANS wire-bit ratio caps. Every codec probe must be ≤ 1.0 — the encoder
+# falls back to the raw container per message whenever entropy coding would
+# not strictly win, so a ratio above 1.0 means that fallback broke. The
+# sparse-gradient probes are deterministic (fixed data seed, fixed
+# operator), so their savings are hard numbers, not flaky measurements:
+# gap/level coding must deliver ≥ 20% on TopK and QTopK uplinks, and the
+# clustered-support probe is the regime the coder targets.
+RANS_RATIO_CAP = {
+    "codec/rans-vs-raw-bits/topk:k=400(d=7850)": 0.80,
+    "codec/rans-vs-raw-bits/qtopk:k=400,bits=4(d=7850)": 0.80,
+    "codec/rans-vs-raw-bits/skewed-gaps(d=1M)": 0.80,
+}
 
 # Probes whose names embed the runner's core count (threads={pool}), and
 # which the bench only emits at all when the machine has >1 core: at least
@@ -109,6 +135,12 @@ def main() -> int:
         mean = entry.get("mean") if isinstance(entry, dict) else None
         if alloc_must_be_zero(key) and mean != 0:
             failures.append(f"nonzero steady-state alloc count: {key} = {mean}")
+        if key.startswith("codec/rans-vs-raw-bits/"):
+            cap = RANS_RATIO_CAP.get(key, 1.0)
+            if mean is None or mean > cap:
+                failures.append(
+                    f"rANS wire-bit ratio above cap: {key} = {mean} (cap {cap})"
+                )
 
     if failures:
         print(f"FAIL: {path} ({len(entries)} entries)")
