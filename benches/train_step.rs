@@ -15,6 +15,10 @@
 //! allocations cancel exactly). The sequential engine's compress → encode →
 //! fold path is allocation-free: expect 0 for `threads=1`.
 
+// Benches are separate crates, so the library's crate-level deny does not
+// reach them; re-assert it here for the counting allocator below.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use qsparse::compress::{encode, parse_spec, Codec, Compressor, MessageBuf, WireEncoder};
 use qsparse::data::{gaussian_clusters, Dataset, Sharding};
 use qsparse::engine::{run, TrainSpec};
@@ -34,24 +38,39 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pass-through wrapper over `System`. Each method forwards its
+// arguments unchanged, so `System`'s own `GlobalAlloc` contract (layout
+// validity, pointer provenance) is exactly preserved; the counter bump is a
+// relaxed atomic with no effect on allocation behavior.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards the caller's contract to `System` (impl-level SAFETY)
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract for
+        // `layout`; we forward it verbatim.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: forwards the caller's contract to `System` (impl-level SAFETY)
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc_zeroed`'s contract.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: forwards the caller's contract to `System` (impl-level SAFETY)
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller guarantees `ptr` came from this allocator (which
+        // forwards to `System`) with `layout`, and `new_size` is nonzero.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: forwards the caller's contract to `System` (impl-level SAFETY)
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller guarantees `ptr`/`layout` came from this allocator,
+        // i.e. from `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 
@@ -360,7 +379,7 @@ fn bench_compress_paths(
         // path), whose steady state must not touch the heap.
         let (bytes, bit_len) = encode::encode(&msg);
         let samples = time_iters(warm * 5, iters * 20, || {
-            std::hint::black_box(encode::decode(&bytes, bit_len).is_some());
+            std::hint::black_box(encode::decode(&bytes, bit_len).is_ok());
         });
         rec.report(&format!("decode/{spec}(d=7850)"), &samples, None);
         let mut dbuf = MessageBuf::new();

@@ -88,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         compressor.name()
     );
     println!("{:>6} {:>12} {:>14} {:>12}", "step", "train_loss", "uplink_Mbit", "mem‖m‖²");
+    #[allow(clippy::disallowed_methods)] // progress display only
     let t0 = std::time::Instant::now();
     let hist = run_from(&spec, init);
     for p in &hist.points {

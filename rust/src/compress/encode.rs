@@ -178,13 +178,23 @@ impl<'a> BitReader<'a> {
         let mut zeros = 0u32;
         while !self.read_bit()? {
             zeros += 1;
-            if zeros > 64 {
+            if zeros >= 64 {
+                // 64 leading zeros would need a 65-bit value: `1u64 << 64`
+                // is a shift overflow, so reject here (no valid writer emits
+                // more than 63 zeros).
                 return None;
             }
         }
         // Already consumed the leading 1 of binary(v).
         let rest = self.read_bits(zeros)?;
         Some((1u64 << zeros) | rest)
+    }
+
+    /// Bits left before the stream ends — the decode guards' budget for
+    /// rejecting corrupt element counts before any allocation happens.
+    #[inline]
+    pub(crate) fn remaining(&self) -> u64 {
+        self.len - self.pos
     }
 
     /// Current cursor position in bits (rANS container framing).
@@ -213,6 +223,85 @@ impl<'a> BitReader<'a> {
         self.pos = np;
         Some(())
     }
+}
+
+/// Why a wire decode failed. Every variant is a *graceful* rejection: the
+/// decode paths never panic, index out of bounds, shift-overflow, or
+/// allocate unbounded memory on corrupt input — they return one of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The stream ended (or the claimed `bit_len` exceeds the byte buffer)
+    /// before the message did.
+    Truncated,
+    /// Unknown wire tag or unknown inner variant tag.
+    BadTag,
+    /// A decoded count or dimension is impossibly large for the stream (or
+    /// exceeds the wire-format ceiling of 2^27 elements per message).
+    CountOverflow,
+    /// A decoded sparse index is out of range `0..d`, exceeds `u32`, or
+    /// breaks the strictly-ascending support order the fold relies on.
+    BadIndex,
+    /// An rANS frequency table is inconsistent (symbol outside its
+    /// alphabet, frequencies not summing to the 2^12 scale).
+    BadTable,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msg = match self {
+            DecodeError::Truncated => "truncated wire stream",
+            DecodeError::BadTag => "unknown wire tag",
+            DecodeError::CountOverflow => "element count exceeds stream or format bounds",
+            DecodeError::BadIndex => "sparse index out of range or out of order",
+            DecodeError::BadTable => "inconsistent rANS frequency table",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// `Option` → `DecodeError::Truncated` adapter: the bit-level readers speak
+/// `Option` (a `None` always means the stream ran dry), the decode stack
+/// speaks `Result`. Shared with `rans.rs` so both paths convert identically.
+pub(crate) trait OrTruncated<T> {
+    fn or_truncated(self) -> Result<T, DecodeError>;
+}
+
+impl<T> OrTruncated<T> for Option<T> {
+    fn or_truncated(self) -> Result<T, DecodeError> {
+        self.ok_or(DecodeError::Truncated)
+    }
+}
+
+/// Wire-format ceiling on any decoded element count (dimension, support
+/// size, bucket-norm count). Entropy-coded streams can emit symbols at
+/// asymptotically zero wire cost (a single-symbol rANS table renormalizes
+/// never), so stream-length-proportional bounds alone cannot stop a
+/// decompression bomb; this absolute cap bounds every `reserve` the decode
+/// paths perform. 2^27 (~134M) is ≥ 250× the largest model this system
+/// trains — encoding a larger message is unsupported (its decode reports
+/// `CountOverflow`).
+pub(crate) const MAX_WIRE_ELEMS: u64 = 1 << 27;
+
+/// Validate a decoded element count before reserving storage for it:
+/// `count` elements at a floor cost of `min_bits` each must fit in the
+/// reader's remaining bits, and `count` must respect [`MAX_WIRE_ELEMS`].
+/// A floor of 0 (blob-coded streams with no per-element tail bits) still
+/// gets the absolute cap.
+pub(crate) fn checked_count(
+    count: u64,
+    min_bits: u64,
+    r: &BitReader,
+) -> Result<usize, DecodeError> {
+    if count > MAX_WIRE_ELEMS {
+        return Err(DecodeError::CountOverflow);
+    }
+    // No overflow: count ≤ 2^27 and min_bits ≤ 32.
+    if count * min_bits > r.remaining() {
+        return Err(DecodeError::CountOverflow);
+    }
+    Ok(count as usize)
 }
 
 /// Cost in bits of the Elias-γ code of v ≥ 1.
@@ -281,31 +370,46 @@ fn write_indices(w: &mut BitWriter, idx: &[u32], d: usize) {
 }
 
 /// Read `count` indices into caller-provided (cleared) storage — the
-/// decode path's allocation-free core.
+/// decode path's allocation-free core. Every index is validated on the way
+/// in: strictly ascending and `< d` (the fold's binary searches and range
+/// folds rely on both), rejecting corrupt streams as [`DecodeError::BadIndex`]
+/// instead of letting a bad index panic deep inside `add_into`.
 fn read_indices_into(
     r: &mut BitReader,
     count: usize,
     d: usize,
     idx: &mut Vec<u32>,
-) -> Option<()> {
+) -> Result<(), DecodeError> {
     debug_assert!(idx.is_empty());
-    let use_gaps = r.read_bit()?;
+    let use_gaps = r.read_bit().or_truncated()?;
     idx.reserve(count);
+    let mut prev = 0u64;
     if use_gaps {
-        let mut prev = 0u64;
         for j in 0..count {
-            let gap = r.read_elias_gamma()?;
-            let i = prev + gap - u64::from(j == 0);
+            let gap = r.read_elias_gamma().or_truncated()?;
+            // gap ≥ 1, so indices after the first ascend strictly by
+            // construction; only the range check can fail. saturating: a
+            // corrupt gap near u64::MAX must land in the range rejection,
+            // not wrap (debug overflow panic).
+            let i = prev.saturating_add(gap) - u64::from(j == 0);
+            if i >= d as u64 || i > u32::MAX as u64 {
+                return Err(DecodeError::BadIndex);
+            }
             idx.push(i as u32);
             prev = i;
         }
     } else {
         let n = ceil_log2(d as u64);
-        for _ in 0..count {
-            idx.push(r.read_bits(n)? as u32);
+        for j in 0..count {
+            let i = r.read_bits(n).or_truncated()?;
+            if i >= d as u64 || (j > 0 && i <= prev) {
+                return Err(DecodeError::BadIndex);
+            }
+            idx.push(i as u32);
+            prev = i;
         }
     }
-    Some(())
+    Ok(())
 }
 
 /// Serialize a message to (bytes, bit length).
@@ -439,10 +543,10 @@ pub fn dense_model_bits(d: usize) -> u64 {
 
 /// Decode a message produced by `encode` — allocating wrapper over
 /// [`decode_into`] through a fresh buffer, so the two cannot drift.
-pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
+pub fn decode(bytes: &[u8], bit_len: u64) -> Result<Message, DecodeError> {
     let mut buf = MessageBuf::new();
     decode_into(bytes, bit_len, &mut buf)?;
-    Some(buf.take())
+    Ok(buf.take())
 }
 
 /// Decode a message produced by `encode` into reusable storage: the message
@@ -453,81 +557,106 @@ pub fn decode(bytes: &[u8], bit_len: u64) -> Option<Message> {
 /// allocation once capacities have grown to the message size, which is what
 /// lets the threaded master's receive loop stay off the allocator.
 ///
-/// Returns `None` on a malformed stream; the buffer's previous message is
-/// consumed either way (its storage is dropped on the error path).
-pub fn decode_into(bytes: &[u8], bit_len: u64, buf: &mut MessageBuf) -> Option<()> {
+/// Returns `Err` on a malformed stream — truncated, corrupt, or lying about
+/// its own length — without panicking or allocating unbounded memory; the
+/// buffer's previous message is consumed either way (its storage is dropped
+/// on the error path, so no caller can mistake a stale decode for a
+/// malformed sender's payload).
+pub fn decode_into(bytes: &[u8], bit_len: u64, buf: &mut MessageBuf) -> Result<(), DecodeError> {
+    let res = decode_into_inner(bytes, bit_len, buf);
+    if res.is_err() {
+        buf.msg = Message::default();
+    }
+    res
+}
+
+fn decode_into_inner(
+    bytes: &[u8],
+    bit_len: u64,
+    buf: &mut MessageBuf,
+) -> Result<(), DecodeError> {
+    if bit_len > 8 * bytes.len() as u64 {
+        // A transport header lying about the length would otherwise send
+        // the readers indexing past the byte buffer.
+        return Err(DecodeError::Truncated);
+    }
     let mut r = BitReader::new(bytes, bit_len);
-    let tag = r.read_bits(3)?;
+    let tag = r.read_bits(3).or_truncated()?;
     if tag == super::rans::TAG_RANS {
         // Entropy-coded container: self-describing (it repeats the variant
         // tag inside), so decoding needs no codec parameter and raw/rANS
         // messages interleave freely on one stream.
         return super::rans::decode_body(&mut r, buf);
     }
-    let d = (r.read_elias_gamma()? - 1) as usize;
+    let d = checked_count(r.read_elias_gamma().or_truncated()? - 1, 0, &r)?;
     match tag {
         TAG_DENSE => {
+            checked_count(d as u64, 32, &r)?;
             let mut values = buf.take_dense();
             values.reserve(d);
             for _ in 0..d {
-                values.push(r.read_f32()?);
+                values.push(r.read_f32().or_truncated()?);
             }
             buf.msg = Message::Dense { values };
         }
         TAG_SPARSE_F32 => {
-            let k = (r.read_elias_gamma()? - 1) as usize;
+            // Floor cost per element: ≥ 1 index bit + 32 value bits.
+            let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 33, &r)?;
             let (mut idx, mut vals) = buf.take_sparse_f32();
             read_indices_into(&mut r, k, d, &mut idx)?;
             vals.reserve(k);
             for _ in 0..k {
-                vals.push(r.read_f32()?);
+                vals.push(r.read_f32().or_truncated()?);
             }
             buf.msg = Message::SparseF32 { d, idx, vals };
         }
         TAG_SPARSE_SIGN => {
-            let k = (r.read_elias_gamma()? - 1) as usize;
-            let scale = r.read_f32()?;
+            // Floor cost per element: ≥ 1 index bit + 1 sign bit.
+            let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 2, &r)?;
+            let scale = r.read_f32().or_truncated()?;
             let (mut idx, mut neg) = buf.take_sparse_sign();
             read_indices_into(&mut r, k, d, &mut idx)?;
             neg.reserve(k);
             for _ in 0..k {
-                neg.push(r.read_bit()?);
+                neg.push(r.read_bit().or_truncated()?);
             }
             buf.msg = Message::SparseSign { d, scale, idx, neg };
         }
         TAG_DENSE_SIGN => {
-            let scale = r.read_f32()?;
+            checked_count(d as u64, 1, &r)?;
+            let scale = r.read_f32().or_truncated()?;
             let mut neg = buf.take_dense_sign();
             neg.reserve(d);
             for _ in 0..d {
-                neg.push(r.read_bit()?);
+                neg.push(r.read_bit().or_truncated()?);
             }
             buf.msg = Message::DenseSign { scale, neg };
         }
         TAG_QSGD => {
-            let s = r.read_elias_gamma()? as u32;
-            let bucket = r.read_elias_gamma()? as u32;
-            let post_scale = r.read_f32()?;
-            let has_idx = r.read_bit()?;
+            let s = r.read_elias_gamma().or_truncated()? as u32;
+            let bucket = r.read_elias_gamma().or_truncated()? as u32;
+            let post_scale = r.read_f32().or_truncated()?;
+            let has_idx = r.read_bit().or_truncated()?;
             let (mut norms, mut idx, mut levels, mut neg) = buf.take_qsgd();
             let count = if has_idx {
-                let k = (r.read_elias_gamma()? - 1) as usize;
+                let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 1, &r)?;
                 read_indices_into(&mut r, k, d, &mut idx)?;
                 k
             } else {
-                d
+                // Every level costs ≥ 1 flag bit.
+                checked_count(d as u64, 1, &r)?
             };
-            let n_norms = (r.read_elias_gamma()? - 1) as usize;
+            let n_norms = checked_count(r.read_elias_gamma().or_truncated()? - 1, 32, &r)?;
             norms.reserve(n_norms);
             for _ in 0..n_norms {
-                norms.push(r.read_f32()?);
+                norms.push(r.read_f32().or_truncated()?);
             }
             levels.reserve(count);
             neg.reserve(count);
             for _ in 0..count {
-                if r.read_bit()? {
-                    levels.push(r.read_elias_gamma()? as u32);
-                    neg.push(r.read_bit()?);
+                if r.read_bit().or_truncated()? {
+                    levels.push(r.read_elias_gamma().or_truncated()? as u32);
+                    neg.push(r.read_bit().or_truncated()?);
                 } else {
                     levels.push(0);
                     neg.push(false);
@@ -544,15 +673,9 @@ pub fn decode_into(bytes: &[u8], bit_len: u64, buf: &mut MessageBuf) -> Option<(
                 neg,
             };
         }
-        _ => {
-            // Unknown tag: consume the previous message too (the documented
-            // contract), so no caller can mistake a stale decode for this
-            // malformed sender's payload.
-            buf.msg = Message::default();
-            return None;
-        }
+        _ => return Err(DecodeError::BadTag),
     }
-    Some(())
+    Ok(())
 }
 
 #[cfg(test)]
@@ -613,7 +736,7 @@ mod tests {
             let msg = op.compress(&x, &mut rng);
             let (bytes, len) = encode(&msg);
             assert_eq!(len, wire_bits(&msg));
-            let back = decode(&bytes, len).unwrap_or_else(|| panic!("{} decode", op.name()));
+            let back = decode(&bytes, len).unwrap_or_else(|e| panic!("{} decode: {e}", op.name()));
             assert_eq!(msg, back, "{} roundtrip", op.name());
         }
     }
@@ -686,20 +809,20 @@ mod tests {
                 let (bytes, len) = encode(&msg);
                 assert_eq!(
                     decode_into(&bytes, len, &mut buf),
-                    Some(()),
+                    Ok(()),
                     "{} round {round}",
                     op.name()
                 );
                 assert_eq!(buf.message(), &msg, "{} round {round}", op.name());
-                assert_eq!(decode(&bytes, len).as_ref(), Some(&msg), "{}", op.name());
+                assert_eq!(decode(&bytes, len).as_ref(), Ok(&msg), "{}", op.name());
             }
         }
         // Malformed stream: truncated bits fail cleanly and leave the
         // buffer reusable.
         let msg = TopK::new(13).compress(&vec![1.0f32; d], &mut rng);
         let (bytes, len) = encode(&msg);
-        assert_eq!(decode_into(&bytes, len / 2, &mut buf), None);
-        assert_eq!(decode_into(&bytes, len, &mut buf), Some(()));
+        assert!(decode_into(&bytes, len / 2, &mut buf).is_err());
+        assert_eq!(decode_into(&bytes, len, &mut buf), Ok(()));
         assert_eq!(buf.message(), &msg);
         // Unknown tag: fails AND consumes the previous message (documented
         // contract) — no stale decode is observable afterwards.
@@ -707,8 +830,91 @@ mod tests {
         w.push_bits(7, 3); // unused tag
         w.push_elias_gamma(5);
         let (bad, bad_len) = w.into_bytes();
-        assert_eq!(decode_into(&bad, bad_len, &mut buf), None);
+        assert_eq!(decode_into(&bad, bad_len, &mut buf), Err(DecodeError::BadTag));
         assert_eq!(buf.message(), &Message::default());
+    }
+
+    #[test]
+    fn decode_rejects_lying_bit_len() {
+        // A transport header claiming more bits than the byte buffer holds
+        // must be rejected up front, not discovered by a slice-index panic.
+        let msg = Message::Dense { values: vec![1.0, 2.0, 3.0] };
+        let (bytes, len) = encode(&msg);
+        assert_eq!(
+            decode(&bytes, 8 * bytes.len() as u64 + 1),
+            Err(DecodeError::Truncated)
+        );
+        assert_eq!(decode(&bytes, u64::MAX), Err(DecodeError::Truncated));
+        assert_eq!(decode(&bytes, len).as_ref(), Ok(&msg));
+    }
+
+    #[test]
+    fn decode_rejects_overlong_elias_gamma() {
+        // 64+ leading zeros would shift-overflow a u64; the reader must
+        // reject, not panic (this is reachable from an all-zeros stream).
+        let zeros = vec![0u8; 40];
+        let mut r = BitReader::new(&zeros, 320);
+        assert_eq!(r.read_elias_gamma(), None);
+        assert!(decode(&zeros, 320).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_huge_counts_without_allocating() {
+        // Dimension/count fields claiming ~2^40 elements from a 5-byte
+        // stream must fail as CountOverflow before any reserve() happens.
+        for tag in [TAG_DENSE, TAG_SPARSE_F32, TAG_SPARSE_SIGN, TAG_DENSE_SIGN] {
+            let mut w = BitWriter::new();
+            w.push_bits(tag, 3);
+            w.push_elias_gamma((1u64 << 40) + 1); // d = 2^40
+            let (bytes, len) = w.into_bytes();
+            assert_eq!(
+                decode(&bytes, len),
+                Err(DecodeError::CountOverflow),
+                "tag {tag}"
+            );
+        }
+        // In-cap dimension but an element count the stream cannot hold.
+        let mut w = BitWriter::new();
+        w.push_bits(TAG_SPARSE_F32, 3);
+        w.push_elias_gamma(10_001); // d = 10k
+        w.push_elias_gamma(5_001); // k = 5k ⇒ needs ≥ 165k bits
+        let (bytes, len) = w.into_bytes();
+        assert_eq!(decode(&bytes, len), Err(DecodeError::CountOverflow));
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_and_unordered_indices() {
+        // Raw (fixed-width) index coding: out-of-range index.
+        let mut w = BitWriter::new();
+        w.push_bits(TAG_SPARSE_F32, 3);
+        w.push_elias_gamma(5); // d = 4
+        w.push_elias_gamma(2); // k = 1
+        w.push_bit(false); // raw index coding
+        w.push_bits(3, 2); // index 3: fine
+        w.push_f32(1.0);
+        let (bytes, len) = w.into_bytes();
+        assert!(decode(&bytes, len).is_ok());
+        let mut w = BitWriter::new();
+        w.push_bits(TAG_SPARSE_SIGN, 3);
+        w.push_elias_gamma(6); // d = 5
+        w.push_elias_gamma(3); // k = 2
+        w.push_f32(1.0); // scale
+        w.push_bit(false); // raw index coding
+        w.push_bits(4, 3); // index 4
+        w.push_bits(2, 3); // index 2: breaks ascending order
+        w.push_bits(0, 2); // signs
+        let (bytes, len) = w.into_bytes();
+        assert_eq!(decode(&bytes, len), Err(DecodeError::BadIndex));
+        // Gap coding walking past d.
+        let mut w = BitWriter::new();
+        w.push_bits(TAG_SPARSE_F32, 3);
+        w.push_elias_gamma(5); // d = 4
+        w.push_elias_gamma(2); // k = 1
+        w.push_bit(true); // gap coding
+        w.push_elias_gamma(9); // first index = 8 ≥ d
+        w.push_f32(1.0);
+        let (bytes, len) = w.into_bytes();
+        assert_eq!(decode(&bytes, len), Err(DecodeError::BadIndex));
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!     E ‖x − C(x)‖² ≤ (1 − γ) ‖x‖².
 //! `Compressor::gamma(d)` returns the worst-case γ from Lemmas 1–3 so the
 //! theory-facing code (learning-rate pre-conditions, tests) can use it.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 pub mod composed;
 pub mod encode;
@@ -24,6 +27,7 @@ pub mod rans;
 pub mod sparsify;
 
 pub use composed::{QTopK, SignTopK};
+pub use encode::DecodeError;
 pub use memory::ErrorMemory;
 pub use piecewise::Piecewise;
 pub use quantize::{Qsgd, SignDense};
@@ -457,8 +461,11 @@ pub fn parse_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
         Some((h, r)) => (h, r),
         None => (spec, ""),
     };
-    let mut kv = std::collections::HashMap::new();
-    let mut flags = std::collections::HashSet::new();
+    // BTreeMap/Set: `compress` is a deterministic-path module (repo-lint
+    // bans RandomState-seeded collections here), and spec parsing feeds
+    // error messages that must not depend on hash order.
+    let mut kv = std::collections::BTreeMap::new();
+    let mut flags = std::collections::BTreeSet::new();
     for part in rest.split(',').filter(|p| !p.is_empty()) {
         match part.split_once('=') {
             Some((k, v)) => {

@@ -47,7 +47,9 @@
 //! encoder feeds symbols in reverse decode order and the reversed byte
 //! stream starts with the big-endian final state.
 
-use super::encode::{elias_gamma_bits, BitReader, BitWriter};
+use super::encode::{
+    checked_count, elias_gamma_bits, BitReader, BitWriter, DecodeError, OrTruncated,
+};
 use super::{encode, Message, MessageBuf};
 
 /// Frequency scale: all tables are normalized to sum to `1 << SCALE_BITS`.
@@ -121,7 +123,12 @@ impl BitSink for BitWriter {
         self.push_elias_gamma(v);
     }
     fn raw_blob(&mut self, blob: Option<&[u8]>, len_bytes: u64) {
-        let blob = blob.expect("writer emit requires the materialized blob");
+        // Only the cost walk (`BitCost`) passes `None`; the writer back end
+        // is always driven with the materialized blob. Degrade to an empty
+        // blob rather than panicking (repo rule: no panics in this module) —
+        // the length debug_assert still catches a drifted caller in tests.
+        debug_assert!(blob.is_some(), "writer emit requires the materialized blob");
+        let blob = blob.unwrap_or(&[]);
         debug_assert_eq!(blob.len() as u64, len_bytes);
         for &b in blob {
             self.push_bits(b as u64, 8);
@@ -270,43 +277,45 @@ impl<const N: usize> DecTable<N> {
         DecTable { slot: [0; TOTAL as usize], freq: [0; N], cum: [0; N], m: 0 }
     }
 
-    /// Read the serialized table; `None` on any inconsistency (symbol out
-    /// of alphabet, frequencies not summing to the 2^12 total).
-    fn read(&mut self, r: &mut BitReader) -> Option<()> {
+    /// Read the serialized table; `Err` on truncation or any inconsistency
+    /// (symbol out of alphabet, frequencies not summing to the 2^12 total).
+    fn read(&mut self, r: &mut BitReader) -> Result<(), DecodeError> {
         self.freq = [0; N];
-        let m = (r.read_elias_gamma()? - 1) as u32;
+        let m = (r.read_elias_gamma().or_truncated()? - 1) as u32;
         if m as usize > N {
-            return None;
+            return Err(DecodeError::BadTable);
         }
         self.m = m;
         if m == 0 {
-            return Some(());
+            return Ok(());
         }
         let mut prev = 0u64;
         let mut sum: u64 = 0;
         for j in 0..m {
-            let delta = r.read_elias_gamma()?;
-            let sym = if j == 0 { delta - 1 } else { prev + delta };
+            let delta = r.read_elias_gamma().or_truncated()?;
+            // saturating: a corrupt delta near u64::MAX must land in the
+            // `>= N` rejection below, not wrap (debug overflow panic).
+            let sym = if j == 0 { delta - 1 } else { prev.saturating_add(delta) };
             if sym as usize >= N {
-                return None;
+                return Err(DecodeError::BadTable);
             }
             prev = sym;
             let f = if j + 1 < m {
-                let f = r.read_elias_gamma()?;
+                let f = r.read_elias_gamma().or_truncated()?;
                 if f > TOTAL as u64 {
-                    return None;
+                    return Err(DecodeError::BadTable);
                 }
                 f
             } else {
                 if sum >= TOTAL as u64 {
-                    return None;
+                    return Err(DecodeError::BadTable);
                 }
                 TOTAL as u64 - sum
             };
             self.freq[sym as usize] = f as u16;
             sum += f;
             if sum > TOTAL as u64 {
-                return None;
+                return Err(DecodeError::BadTable);
             }
         }
         let mut c = 0u32;
@@ -319,9 +328,9 @@ impl<const N: usize> DecTable<N> {
             c += f;
         }
         if c != TOTAL {
-            return None;
+            return Err(DecodeError::BadTable);
         }
-        Some(())
+        Ok(())
     }
 }
 
@@ -700,80 +709,101 @@ pub fn encode_with(msg: &Message, codec: Codec) -> (Vec<u8>, u64) {
 /// Decode the container body (the 3-bit wire tag is already consumed).
 /// Two cursors: the bounded blob reader feeds the rANS renormalization,
 /// while the main reader skips past the blob and serves the raw-bits tail.
-pub(crate) fn decode_body(r: &mut BitReader, buf: &mut MessageBuf) -> Option<()> {
-    let inner = r.read_bits(3)?;
-    let d = (r.read_elias_gamma()? - 1) as usize;
+///
+/// Element counts are validated against the stream (and the absolute
+/// `MAX_WIRE_ELEMS` ceiling — an rANS stream can code symbols at ~zero wire
+/// cost, so the count alone must bound every allocation) before any
+/// `reserve`; sparse indices are range-checked as they are rebuilt.
+pub(crate) fn decode_body(r: &mut BitReader, buf: &mut MessageBuf) -> Result<(), DecodeError> {
+    let inner = r.read_bits(3).or_truncated()?;
+    let d = checked_count(r.read_elias_gamma().or_truncated()? - 1, 0, r)?;
     match inner {
         encode::TAG_DENSE => {
+            // Each value spends 23 raw mantissa bits in the tail.
+            checked_count(d as u64, 23, r)?;
             let mut val_t = DecTable::<VAL_SYMS>::zeroed();
             val_t.read(r)?;
             let (mut blob, mut dec) = open_blob(r)?;
             let mut values = buf.take_dense();
             values.reserve(d);
             for _ in 0..d {
-                let top = dec.get(&val_t, &mut blob)? as u32;
-                let mant = r.read_bits(23)? as u32;
+                let top = dec.get(&val_t, &mut blob).or_truncated()? as u32;
+                let mant = r.read_bits(23).or_truncated()? as u32;
                 values.push(f32::from_bits((top << 23) | mant));
             }
             buf.msg = Message::Dense { values };
         }
         encode::TAG_SPARSE_F32 => {
-            let k = (r.read_elias_gamma()? - 1) as usize;
+            let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 23, r)?;
             let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
             gap_t.read(r)?;
             let mut val_t = DecTable::<VAL_SYMS>::zeroed();
             val_t.read(r)?;
             let (mut blob, mut dec) = open_blob(r)?;
             let (mut idx, mut vals) = buf.take_sparse_f32();
-            read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+            read_gaps(&mut dec, &gap_t, &mut blob, r, k, d, &mut idx)?;
             vals.reserve(k);
             for _ in 0..k {
-                let top = dec.get(&val_t, &mut blob)? as u32;
-                let mant = r.read_bits(23)? as u32;
+                let top = dec.get(&val_t, &mut blob).or_truncated()? as u32;
+                let mant = r.read_bits(23).or_truncated()? as u32;
                 vals.push(f32::from_bits((top << 23) | mant));
             }
             buf.msg = Message::SparseF32 { d, idx, vals };
         }
         encode::TAG_SPARSE_SIGN => {
-            let k = (r.read_elias_gamma()? - 1) as usize;
-            let scale = r.read_f32()?;
+            // Signs and gap classes ride in the blob at ~zero marginal wire
+            // cost, so only the ceiling bounds k — but ascending indices
+            // < d cap the loop at d pushes regardless.
+            let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 0, r)?;
+            if k > d {
+                return Err(DecodeError::CountOverflow);
+            }
+            let scale = r.read_f32().or_truncated()?;
             let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
             gap_t.read(r)?;
             let mut bit_t = DecTable::<BIT_SYMS>::zeroed();
             bit_t.read(r)?;
             let (mut blob, mut dec) = open_blob(r)?;
             let (mut idx, mut neg) = buf.take_sparse_sign();
-            read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+            read_gaps(&mut dec, &gap_t, &mut blob, r, k, d, &mut idx)?;
             neg.reserve(k);
             for _ in 0..k {
-                neg.push(dec.get(&bit_t, &mut blob)? != 0);
+                neg.push(dec.get(&bit_t, &mut blob).or_truncated()? != 0);
             }
             buf.msg = Message::SparseSign { d, scale, idx, neg };
         }
         encode::TAG_DENSE_SIGN => {
-            let scale = r.read_f32()?;
+            let scale = r.read_f32().or_truncated()?;
             let mut bit_t = DecTable::<BIT_SYMS>::zeroed();
             bit_t.read(r)?;
             let (mut blob, mut dec) = open_blob(r)?;
             let mut neg = buf.take_dense_sign();
             neg.reserve(d);
             for _ in 0..d {
-                neg.push(dec.get(&bit_t, &mut blob)? != 0);
+                neg.push(dec.get(&bit_t, &mut blob).or_truncated()? != 0);
             }
             buf.msg = Message::DenseSign { scale, neg };
         }
         encode::TAG_QSGD => {
-            let s = r.read_elias_gamma()? as u32;
-            let bucket = r.read_elias_gamma()? as u32;
-            let post_scale = r.read_f32()?;
-            let has_idx = r.read_bit()?;
-            let k = if has_idx { (r.read_elias_gamma()? - 1) as usize } else { 0 };
+            let s = r.read_elias_gamma().or_truncated()? as u32;
+            let bucket = r.read_elias_gamma().or_truncated()? as u32;
+            let post_scale = r.read_f32().or_truncated()?;
+            let has_idx = r.read_bit().or_truncated()?;
+            let k = if has_idx {
+                let k = checked_count(r.read_elias_gamma().or_truncated()? - 1, 0, r)?;
+                if k > d {
+                    return Err(DecodeError::CountOverflow);
+                }
+                k
+            } else {
+                0
+            };
             let count = if has_idx { k } else { d };
             let (mut norms, mut idx, mut levels, mut neg) = buf.take_qsgd();
-            let n_norms = (r.read_elias_gamma()? - 1) as usize;
+            let n_norms = checked_count(r.read_elias_gamma().or_truncated()? - 1, 32, r)?;
             norms.reserve(n_norms);
             for _ in 0..n_norms {
-                norms.push(r.read_f32()?);
+                norms.push(r.read_f32().or_truncated()?);
             }
             let mut gap_t = DecTable::<GAP_SYMS>::zeroed();
             if has_idx {
@@ -785,15 +815,15 @@ pub(crate) fn decode_body(r: &mut BitReader, buf: &mut MessageBuf) -> Option<()>
             bit_t.read(r)?;
             let (mut blob, mut dec) = open_blob(r)?;
             if has_idx {
-                read_gaps(&mut dec, &gap_t, &mut blob, r, k, &mut idx)?;
+                read_gaps(&mut dec, &gap_t, &mut blob, r, k, d, &mut idx)?;
             }
             levels.reserve(count);
             neg.reserve(count);
             for _ in 0..count {
-                let l = dec.get(&lvl_t, &mut blob)? as u32;
+                let l = dec.get(&lvl_t, &mut blob).or_truncated()? as u32;
                 if l != 0 {
                     levels.push(l);
-                    neg.push(dec.get(&bit_t, &mut blob)? != 0);
+                    neg.push(dec.get(&bit_t, &mut blob).or_truncated()? != 0);
                 } else {
                     levels.push(0);
                     neg.push(false);
@@ -810,51 +840,54 @@ pub(crate) fn decode_body(r: &mut BitReader, buf: &mut MessageBuf) -> Option<()>
                 neg,
             };
         }
-        _ => {
-            buf.msg = Message::default();
-            return None;
-        }
+        _ => return Err(DecodeError::BadTag),
     }
-    Some(())
+    Ok(())
 }
 
 /// Read the blob header, split off the bounded blob reader, advance the
 /// main reader past the blob (to the raw-bits tail) and prime the decoder.
-fn open_blob<'a>(r: &mut BitReader<'a>) -> Option<(BitReader<'a>, RansDec)> {
-    let blen = r.read_elias_gamma()? - 1;
-    let nbits = blen.checked_mul(8)?;
-    let end = r.bit_pos().checked_add(nbits)?;
-    let mut blob = r.sub(end)?;
-    r.skip(nbits)?;
-    let dec = RansDec::init(&mut blob)?;
-    Some((blob, dec))
+fn open_blob<'a>(r: &mut BitReader<'a>) -> Result<(BitReader<'a>, RansDec), DecodeError> {
+    let blen = r.read_elias_gamma().or_truncated()? - 1;
+    let nbits = blen.checked_mul(8).ok_or(DecodeError::CountOverflow)?;
+    let end = r.bit_pos().checked_add(nbits).ok_or(DecodeError::CountOverflow)?;
+    let mut blob = r.sub(end).or_truncated()?;
+    r.skip(nbits).or_truncated()?;
+    let dec = RansDec::init(&mut blob).or_truncated()?;
+    Ok((blob, dec))
 }
 
 /// Decode `k` gap classes (rANS) + low bits (tail) into ascending indices —
-/// the inverse of `feed_gaps_rev` + `tail_gap_lows`.
+/// the inverse of `feed_gaps_rev` + `tail_gap_lows`. Indices ascend
+/// strictly by construction (every gap ≥ 1); each must land in `0..d`.
 fn read_gaps(
     dec: &mut RansDec,
     t: &DecTable<GAP_SYMS>,
     blob: &mut BitReader,
     r: &mut BitReader,
     k: usize,
+    d: usize,
     idx: &mut Vec<u32>,
-) -> Option<()> {
+) -> Result<(), DecodeError> {
     debug_assert!(idx.is_empty());
     idx.reserve(k);
     let mut prev = 0u64;
     for j in 0..k {
-        let class = dec.get(t, blob)? as u32;
+        let class = dec.get(t, blob).or_truncated()? as u32;
         if class >= GAP_SYMS as u32 {
-            return None;
+            return Err(DecodeError::BadIndex);
         }
-        let low = r.read_bits(class)?;
+        let low = r.read_bits(class).or_truncated()?;
         let gap = (1u64 << class) | low;
+        // class ≤ 32 ⇒ gap ≤ 2^33 and prev < d ≤ 2^27: no overflow.
         let i = prev + gap - u64::from(j == 0);
+        if i >= d as u64 {
+            return Err(DecodeError::BadIndex);
+        }
         idx.push(i as u32);
         prev = i;
     }
-    Some(())
+    Ok(())
 }
 
 #[cfg(test)]
@@ -917,7 +950,7 @@ mod tests {
             let msg = op.compress(&x, &mut rng);
             let (bytes, bits) = force_rans(&msg).expect("container applies");
             let back = encode::decode(&bytes, bits)
-                .unwrap_or_else(|| panic!("{}: rans decode failed", op.name()));
+                .unwrap_or_else(|e| panic!("{}: rans decode failed: {e}", op.name()));
             assert_eq!(back, msg, "{}: rans roundtrip", op.name());
         }
     }
@@ -960,7 +993,7 @@ mod tests {
         for (i, msg) in cases.iter().enumerate() {
             let (bytes, bits) = force_rans(msg).expect("container applies");
             let back = encode::decode(&bytes, bits)
-                .unwrap_or_else(|| panic!("case {i}: rans decode failed"));
+                .unwrap_or_else(|e| panic!("case {i}: rans decode failed: {e}"));
             assert_bits_identical(&back, msg);
             // The public encoder (min rule) must also round-trip, whichever
             // format it picks.
@@ -1018,7 +1051,7 @@ mod tests {
                 assert_eq!(bits, msg.wire_bits_with(Codec::Rans), "{}", op.name());
                 assert!(bits <= raw_bits, "{}: rans exceeded raw", op.name());
                 let back = encode::decode(bytes, bits)
-                    .unwrap_or_else(|| panic!("{}: decode", op.name()));
+                    .unwrap_or_else(|e| panic!("{}: decode: {e}", op.name()));
                 assert_eq!(back, msg, "{}: roundtrip through rans encoder", op.name());
             }
         }

@@ -261,6 +261,7 @@ fn ordered(v: f32) -> u32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_types)] // hash containers as assertion scratch only
 mod tests {
     use super::*;
     use crate::util::stats::norm2_sq;

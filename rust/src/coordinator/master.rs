@@ -40,13 +40,15 @@ use crate::grad::GradModel;
 use crate::protocol::MasterCore;
 use crate::topology::sync_participants_into;
 use crate::util::rng::Pcg64;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 /// Minimum model dimension for the sharded round fold — below this the
 /// per-round rendezvous with the fold shards costs more than the fold.
-const SHARD_FOLD_MIN_D: usize = 1024;
+/// Under Miri the threshold drops so the d-small concurrency tests drive
+/// real `FoldPool` interleavings through the race detector.
+const SHARD_FOLD_MIN_D: usize = if cfg!(miri) { 16 } else { 1024 };
 
 /// Run a full threaded training job.
 ///
@@ -154,8 +156,9 @@ where
     // Arrived-but-unapplied update *metadata*, keyed by sync step — the
     // decoded messages themselves sit in their senders' `upd_bufs` slots
     // (at most one in-flight update per worker, so a slot is never
-    // overwritten before its round applies).
-    let mut buckets: HashMap<usize, Vec<UpdateMeta>> = HashMap::new();
+    // overwritten before its round applies). BTreeMap: deterministic-path
+    // module (repo-lint bans RandomState-backed maps here).
+    let mut buckets: BTreeMap<usize, Vec<UpdateMeta>> = BTreeMap::new();
     // Per-worker recycled decode buffers and the spent wire-byte pool.
     let mut upd_bufs: Vec<MessageBuf> = (0..cfg.workers).map(|_| MessageBuf::new()).collect();
     let mut spare_bytes: Vec<Vec<u8>> = Vec::new();
@@ -534,7 +537,7 @@ impl FoldPool {
 /// operator the steady state allocates nothing here).
 fn decode_update_into(upd: &UpdateMsg, buf: &mut MessageBuf) -> anyhow::Result<()> {
     encode::decode_into(&upd.bytes, upd.bit_len, buf)
-        .ok_or_else(|| anyhow::anyhow!("undecodable update from worker {}", upd.worker))
+        .map_err(|e| anyhow::anyhow!("undecodable update from worker {}: {e}", upd.worker))
 }
 
 fn avg(xs: &[f64]) -> f64 {

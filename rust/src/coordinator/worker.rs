@@ -1,6 +1,9 @@
 //! Worker actor: a `protocol::WorkerCore` behind mpsc channels — local SGD
 //! steps, error-compensated compression, encoded uplink, blocking model
 //! refresh on sync (Algorithm 1/2 worker side).
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
 use crate::compress::{encode, WireEncoder};
@@ -67,7 +70,7 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
                 Ok(ModelMsg::Delta { bytes, bit_len, recycled }) => {
                     up_bytes = recycled;
                     encode::decode_into(&bytes, bit_len, &mut down_buf)
-                        .unwrap_or_else(|| panic!("worker {id}: undecodable downlink delta"));
+                        .unwrap_or_else(|e| panic!("worker {id}: undecodable downlink delta: {e}"));
                     core.apply_delta_broadcast(down_buf.message());
                     spent_down = bytes;
                 }

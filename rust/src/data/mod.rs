@@ -6,6 +6,9 @@
 //! sphere and samples isotropic Gaussians around them — a 10-class problem
 //! with 784 features reproduces the d = (784+1)·10 = 7850 softmax geometry
 //! of the paper's convex experiments.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 use crate::util::rng::Pcg64;
 
@@ -253,6 +256,7 @@ impl ShardSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_types)] // hash containers as assertion scratch only
 mod tests {
     use super::*;
 

@@ -1,4 +1,7 @@
 //! Run metrics: the series the paper's figures plot.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 use crate::util::json::Json;
 

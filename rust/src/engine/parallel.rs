@@ -49,12 +49,46 @@
 //! compress → fold → broadcast arithmetic itself reuses the same buffers
 //! as the sequential engine.
 //!
+//! # The fork-join ownership protocol (the crate's only `unsafe`)
+//!
 //! The raw views (`MsgsView`, `ChunkView`, `GlobalView`) are the only
-//! unsafe code in the crate. Their contract is the classic fork-join one
-//! (what `rayon`'s scoped splits do): the coordinator carves disjoint
-//! `&mut` chunks, sends the pointers, and does not touch the borrowed data
-//! again until every ack for that phase has been received; threads only
-//! dereference between receiving the command and sending the ack.
+//! unsafe code in the library. Their contract is the classic fork-join one
+//! (what `rayon`'s scoped splits do), stated once here and referenced by
+//! every `// SAFETY:` comment below:
+//!
+//! 1. **Fork** — the coordinator holds the exclusive (or shared) borrow of
+//!    the data, carves *disjoint* raw views from it, and sends one view per
+//!    pool thread over its command channel. The `mpsc` send is the
+//!    happens-before edge that publishes the pointed-to data to the thread.
+//! 2. **Work** — a pool thread dereferences its view only between receiving
+//!    the command and sending the phase's ack. Mutable views (`ChunkView`)
+//!    cover non-overlapping index ranges, so no two threads ever touch the
+//!    same coordinate; shared views (`MsgsView`, `GlobalView`) are
+//!    read-only on every thread.
+//! 3. **Join** — the coordinator receives the ack from *every* thread
+//!    before it re-borrows (or lets anything else mutate) the viewed data.
+//!    The ack's `mpsc` receive is the happens-before edge back. Dense
+//!    broadcasts are the one fire-and-forget payload, and they ride an
+//!    `Arc` — no raw pointer, no barrier needed.
+//!
+//! The same protocol (and the same two view types) is reused by the
+//! threaded coordinator's sharded fold in `coordinator::master`, with its
+//! `FoldPool` ack channel as the join edge.
+//!
+//! What machine-checks this:
+//!
+//! * `cargo run -p repo-lint` — confines `unsafe` to this file, the
+//!   coordinator's fold pool and the bench allocator; requires a
+//!   `// SAFETY:` comment on every unsafe block/impl (and `# Safety` docs
+//!   on unsafe fns); bans wall-clock and hash-order nondeterminism from
+//!   the deterministic-path modules. The crate additionally denies
+//!   `unsafe_op_in_unsafe_fn`, so every dereference is an explicit block.
+//! * `cargo +nightly miri test miri_` — runs the `miri_`-prefixed
+//!   concurrency tests (tiny d/R, real thread interleavings) under Miri's
+//!   data-race detector. Heavy tests are `#[cfg_attr(miri, ignore)]`d.
+//! * `RUSTFLAGS=-Zsanitizer=thread cargo +nightly test -Zbuild-std ...` —
+//!   ThreadSanitizer over the threaded-coordinator integration tests (see
+//!   the `tsan` CI job for the exact invocation).
 
 use super::{avg_mem_values, EvalSets, TrainSpec};
 use crate::compress::{encode, Codec, Compressor, Message, MessageBuf};
@@ -87,6 +121,10 @@ pub(crate) struct MsgsView {
     len: usize,
 }
 
+// SAFETY: the view is a read-only snapshot of `&[Message]`; `Message` is
+// `Sync` (all-owned data, no interior mutability), so shared access from the
+// receiving thread is sound, and the fork-join contract (module docs) keeps
+// the backing list alive and unmodified while any view is live.
 unsafe impl Send for MsgsView {}
 
 impl MsgsView {
@@ -102,7 +140,10 @@ impl MsgsView {
     /// The backing `Vec<Message>` must still be alive and unmodified (see
     /// the type-level contract).
     pub(crate) unsafe fn as_slice<'a>(self) -> &'a [Message] {
-        std::slice::from_raw_parts(self.ptr, self.len)
+        // SAFETY: `ptr`/`len` came from a live `&[Message]` (`new`), and the
+        // caller's contract (above) guarantees the backing Vec has neither
+        // moved nor been dropped since.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
 }
 
@@ -117,6 +158,11 @@ pub(crate) struct ChunkView {
     hi: usize,
 }
 
+// SAFETY: a `ChunkView` is the unique owner of coordinates `[lo, hi)` of
+// the fold target until its fold ack (the coordinator carves disjoint
+// ranges from one `&mut` and blocks on every ack before re-borrowing —
+// module docs), so moving it to one pool thread transfers exclusive access,
+// exactly like sending a `&mut [f32]` sub-slice.
 unsafe impl Send for ChunkView {}
 
 impl ChunkView {
@@ -138,8 +184,14 @@ impl ChunkView {
     /// Per the view contracts: the message list and fold target are alive
     /// and untouched by others, and no other live chunk overlaps [lo, hi).
     pub(crate) unsafe fn fold(&self, msgs: MsgsView, scale: f32) {
-        let msgs = msgs.as_slice();
-        let out = std::slice::from_raw_parts_mut(self.ptr, self.hi - self.lo);
+        // SAFETY: caller's contract — the coordinator holds the message
+        // list unmodified until this chunk's fold ack.
+        let msgs = unsafe { msgs.as_slice() };
+        // SAFETY: `ptr` points at coordinate `lo` of a live fold target of
+        // length ≥ `hi` (checked in `new`), and this view is the only one
+        // covering `[lo, hi)` (caller's disjointness contract), so a unique
+        // mutable sub-slice of `hi - lo` elements is sound.
+        let out = unsafe { std::slice::from_raw_parts_mut(self.ptr, self.hi - self.lo) };
         for m in msgs {
             m.add_into_range(out, scale, self.lo..self.hi);
         }
@@ -156,6 +208,9 @@ struct GlobalView {
     len: usize,
 }
 
+// SAFETY: the view is read-only on every receiving thread and the
+// coordinator keeps the model immutable until all `DownDone` acks arrive
+// (fork-join contract, module docs) — shared `&[f32]` access is sound.
 unsafe impl Send for GlobalView {}
 
 /// Coordinator → pool thread.

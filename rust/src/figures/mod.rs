@@ -14,6 +14,9 @@
 //! when the model is `Sync`; per-series seeds are unchanged, so the CSVs
 //! are bit-identical to the sequential harness — and writes
 //! `results/<fig>/<series>.csv` plus the paper-style summary.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 pub mod report;
 pub mod specs;
@@ -187,6 +190,9 @@ fn run_series_on(
 /// the model exposes a `Sync` view — native workloads always do. Results
 /// are collected in series order and each series draws only from its own
 /// seeded streams, so the output is bit-identical to the sequential loop.
+// Wall-clock here only annotates per-series runtime in the emitted JSON; it
+// never feeds back into the trajectory (allowed exception to `clippy.toml`).
+#[allow(clippy::disallowed_methods)]
 pub fn run_figure(spec: &FigureSpec, quick: bool) -> anyhow::Result<FigureResult> {
     let w = spec.workload.instantiate(quick);
     let steps = if quick { spec.steps / 4 } else { spec.steps };

@@ -4,6 +4,9 @@
 //! harness can run large sweeps cheaply and so PJRT numerics can be
 //! cross-checked. The PJRT-backed equivalents live in `runtime::`; both
 //! implement `GradModel` and are interchangeable in the engine.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 pub mod mlp;
 pub mod softmax;

@@ -21,6 +21,11 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record. Start with `examples/quickstart.rs`.
 
+// Every pointer dereference inside the fork-join views' unsafe fns must be
+// an explicit `unsafe {}` block with its own `// SAFETY:` justification
+// (`engine::parallel` module docs; machine-checked by `tools/repo-lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod compress;
 pub mod coordinator;
 pub mod data;

@@ -40,6 +40,9 @@
 //!   --steps N --workers N --batch N --eta F --momentum F --seed N
 //!   --csv FILE                    write the metric history as CSV
 //!   --json                        print a JSON summary
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 use qsparse::data::{gaussian_clusters_split, Sharding};
 use qsparse::engine::{self, TrainSpec};
@@ -50,7 +53,7 @@ use qsparse::runtime::PjrtRuntime;
 use qsparse::spec::{CompressorSpec, ExperimentSpec, ScheduleSpec, Workload};
 use qsparse::topology::ParticipationSpec;
 use qsparse::util::stats::Stopwatch;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -129,7 +132,7 @@ Histories are bit-identical across thread counts; it is purely a speed knob.
 /// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
 struct Flags {
     positional: Vec<String>,
-    kv: HashMap<String, String>,
+    kv: BTreeMap<String, String>,
     bools: Vec<String>,
 }
 
@@ -137,7 +140,7 @@ const BOOL_FLAGS: &[&str] = &["quick", "async", "threaded", "json", "dump-spec"]
 
 impl Flags {
     fn parse(args: &[String]) -> anyhow::Result<Flags> {
-        let mut f = Flags { positional: Vec::new(), kv: HashMap::new(), bools: Vec::new() };
+        let mut f = Flags { positional: Vec::new(), kv: BTreeMap::new(), bools: Vec::new() };
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];

@@ -11,6 +11,9 @@
 //! momentum or Adam step to the global model instead of subtracting Δ_t
 //! directly. [`ServerOptSpec::Avg`] short-circuits to the paper's exact
 //! incremental fold, so existing trajectories stay bit-identical.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 /// Learning-rate schedule η_t.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,7 +118,10 @@ impl ServerOptSpec {
     /// Parse the CLI/JSON grammar documented on the type.
     pub fn parse(spec: &str) -> anyhow::Result<Self> {
         let (head, rest) = spec.split_once(':').map_or((spec, ""), |(h, r)| (h, r));
-        let mut kv = std::collections::HashMap::new();
+        // BTreeMap: `optim` is a deterministic-path module (repo-lint bans
+        // RandomState-backed maps), and `kv.keys().find(..)` below reports
+        // the *same* unknown key on every run only under a sorted map.
+        let mut kv = std::collections::BTreeMap::new();
         let mut bare: Option<&str> = None;
         for part in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             match part.split_once('=') {

@@ -52,6 +52,9 @@
 //! PCG streams salted with [`DOWNLINK_RNG_SALT`], so the engine and the
 //! threaded runtime consume identical randomness per (worker, sync) pair
 //! regardless of thread interleaving.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 mod master;
 mod worker;

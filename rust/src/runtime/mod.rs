@@ -16,6 +16,9 @@
 //! returns an error, so every CLI path, example and test that merely
 //! *mentions* the runtime still compiles and runs (PJRT-dependent tests
 //! skip themselves when artifacts are absent).
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 pub mod manifest;
 

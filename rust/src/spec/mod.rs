@@ -23,6 +23,9 @@
 //! bit-identical datasets, operators and RNG streams, hence bit-identical
 //! `History` — the figure tables are `ExperimentSpec` values now (bundled
 //! as JSON under `specs/`), asserted equal to the legacy hand-built runs.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 mod workload;
 
@@ -770,6 +773,24 @@ mod tests {
             assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
             assert_eq!(a.bits_up, b.bits_up);
             assert_eq!(a.bits_down, b.bits_down);
+        }
+    }
+
+    #[test]
+    fn malformed_spec_json_is_an_error_not_a_panic() {
+        // Regression: a malformed numeric literal in a spec file used to be
+        // able to reach a `from_utf8(..).unwrap()` inside the JSON number
+        // parser. Every corrupt spec must surface as `Err` from the public
+        // entry point.
+        for bad in [
+            r#"{"workload": "convex-softmax", "steps": -}"#,
+            r#"{"workload": "convex-softmax", "lr": 1e}"#,
+            r#"{"workload": "convex-softmax", "lr": 0.1.2}"#,
+            r#"{"workload": "convex-softmax", "steps": +5}"#,
+            r#"{"workload""#,
+        ] {
+            let r = ExperimentSpec::from_json_str(bad);
+            assert!(r.is_err(), "accepted malformed spec {bad:?}");
         }
     }
 

@@ -13,6 +13,9 @@
 //! materialized deterministically from the seed up front, so the engine and
 //! the threaded coordinator see identical S_t regardless of thread
 //! interleaving or the order workers are served in.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 use crate::util::rng::Pcg64;
 

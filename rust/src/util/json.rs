@@ -233,7 +233,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), JsonError> {
         if self.bump() == Some(b) {
             Ok(())
         } else {
@@ -266,7 +266,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -277,7 +277,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();
@@ -290,7 +290,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -309,7 +309,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump() {
@@ -399,7 +399,11 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // The scanned range is ASCII by construction, but a parser must never
+        // trust its own scanner with a panic: malformed input surfaces as
+        // `JsonError`, the same named error every other path returns.
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -551,5 +555,31 @@ mod tests {
         let v = Json::parse(r#"{"a": 1}"#).unwrap();
         assert_eq!(v.get("b"), &Json::Null);
         assert_eq!(v.get("b").as_f64(), None);
+    }
+
+    #[test]
+    fn malformed_numbers_error_never_panic() {
+        // Regression for the `from_utf8(..).unwrap()` that used to sit in
+        // `number()`: every malformed numeric token must come back as a
+        // `JsonError`, no matter how the scanner was led astray.
+        for bad in [
+            "-",
+            "-.",
+            ".5",
+            "1e",
+            "1e+",
+            "-e5",
+            "--3",
+            "1.2.3",
+            "0x10",
+            "+1",
+            r#"{"lr": -}"#,
+            r#"{"lr": 1e}"#,
+            r#"[1, 2, -]"#,
+            r#"{"a": 1eé}"#,
+        ] {
+            let r = Json::parse(bad);
+            assert!(r.is_err(), "accepted malformed input {bad:?}: {r:?}");
+        }
     }
 }

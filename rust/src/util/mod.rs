@@ -1,5 +1,8 @@
 //! Support substrates (offline sandbox: these replace the usual crates —
 //! see DESIGN.md §6 Substitutions).
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
 
 pub mod json;
 pub mod rng;

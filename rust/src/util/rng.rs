@@ -157,6 +157,10 @@ impl Pcg64 {
 
     /// Sample k distinct indices from [0, n) uniformly (Floyd's algorithm for
     /// small k, partial shuffle otherwise). Result order is unspecified.
+    // The HashSet is membership-only scratch: its (RandomState) iteration
+    // order is never observed, so determinism is unaffected (allowed
+    // exception to the `clippy.toml` hash-container ban).
+    #[allow(clippy::disallowed_types)]
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample_indices: k={k} > n={n}");
         if k == 0 {
@@ -210,6 +214,7 @@ impl SplitMix64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_types)] // hash containers as assertion scratch only
 mod tests {
     use super::*;
 

@@ -1,6 +1,11 @@
 //! Small statistics + timing helpers used by tests and the bench harness
 //! (criterion is not available offline; `benches/*.rs` use these).
 
+// The one sanctioned wall-clock module: everything here exists to *measure*
+// time for benches/CLI reporting, never to influence a training trajectory.
+// `clippy.toml` bans `Instant::now`/`SystemTime::now` everywhere else.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 /// Summary statistics over a sample of f64s.

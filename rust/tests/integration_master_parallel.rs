@@ -115,16 +115,19 @@ fn sweep_uplink(up: &str) {
 }
 
 #[test]
+#[cfg_attr(miri, ignore)] // minutes of work — the miri_ twins below cover the unsafe core
 fn master_parallel_matrix_topk_uplink() {
     sweep_uplink(UPLINKS[0]);
 }
 
 #[test]
+#[cfg_attr(miri, ignore)]
 fn master_parallel_matrix_qtopk_uplink() {
     sweep_uplink(UPLINKS[1]);
 }
 
 #[test]
+#[cfg_attr(miri, ignore)]
 fn master_parallel_matrix_signtopk_uplink() {
     sweep_uplink(UPLINKS[2]);
 }
@@ -133,6 +136,7 @@ fn master_parallel_matrix_signtopk_uplink() {
 /// the fold-heaviest schedule) with the momentum server optimizer, whose
 /// fold target is the round accumulator rather than the model.
 #[test]
+#[cfg_attr(miri, ignore)]
 fn master_parallel_h1_momentum_accum_fold() {
     let ds = data();
     let m = model();
@@ -158,4 +162,125 @@ fn master_parallel_h1_momentum_accum_fold() {
     for threads in [2usize, 3, 8] {
         assert_bit_identical(&seq, &mk(threads), &format!("H=1 momentum threads={threads}"));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Miri-scale twins.
+//
+// The matrix tests above are minutes of work — far past Miri's ~100×
+// interpreter slowdown budget — so under Miri they are ignored and these
+// small twins drive the same unsafe machinery through interleavings Miri
+// can model-check: the engine's fork-join raw-pointer views
+// (`engine::parallel`) and the coordinator's FoldPool sharded fold +
+// on-arrival decode (`coordinator::master`). Under Miri the sharded fold's
+// dimension threshold drops to 16 (see `SHARD_FOLD_MIN_D`), so the d = 52
+// softmax model below engages it — provided the interpreter reports more
+// than one CPU, which CI arranges with `MIRIFLAGS=-Zmiri-num-cpus=4`.
+
+const MIRI_N: usize = 32;
+const MIRI_WORKERS: usize = 4;
+const MIRI_STEPS: usize = 6;
+
+fn miri_data() -> qsparse::data::Dataset {
+    qsparse::data::gaussian_clusters(MIRI_N, 12, 4, 1.5, 0.5, 77)
+}
+
+fn miri_model() -> SoftmaxRegression {
+    SoftmaxRegression::new(12, 4, 1.0 / MIRI_N as f64)
+}
+
+/// Engine fork-join under Miri: sampled participation + momentum server
+/// optimizer across thread counts, bit-identical to the sequential loop.
+#[test]
+fn miri_engine_fork_join_bit_identity() {
+    let ds = miri_data();
+    let m = miri_model();
+    let upc = parse_spec("qtopk:k=6,bits=4").unwrap();
+    let downc = parse_spec("topk:k=8").unwrap();
+    let sched = FixedPeriod::new(2);
+    let participation = ParticipationSpec::parse("fixed:2")
+        .unwrap()
+        .materialize(MIRI_WORKERS, MIRI_STEPS, 5);
+    let mk = |threads: usize| {
+        let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+        spec.down_compressor = downc.as_ref();
+        spec.workers = MIRI_WORKERS;
+        spec.batch = 4;
+        spec.steps = MIRI_STEPS;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.participation = &participation;
+        spec.agg_scale = AggScale::Participants;
+        spec.server_opt = ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 };
+        spec.eval_every = 3;
+        spec.seed = 5;
+        spec.threads = threads;
+        run(&spec)
+    };
+    let seq = mk(1);
+    for threads in [2usize, 3] {
+        assert_bit_identical(&seq, &mk(threads), &format!("miri engine threads={threads}"));
+    }
+}
+
+/// Threaded master under Miri: real OS threads, encoded rans wire both
+/// directions, sampled participation and momentum through the FoldPool's
+/// sharded fold — bit-identical to the sequential engine.
+#[test]
+fn miri_threaded_master_sharded_fold_vs_engine() {
+    use qsparse::compress::Codec;
+    use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+    use qsparse::grad::GradModel;
+    use std::sync::Arc;
+
+    let ds = miri_data();
+    let m = miri_model();
+    let upc = parse_spec("qtopk:k=6,bits=4").unwrap();
+    let downc = parse_spec("topk:k=8").unwrap();
+    let sched = FixedPeriod::new(2);
+    let participation = ParticipationSpec::parse("fixed:2")
+        .unwrap()
+        .materialize(MIRI_WORKERS, MIRI_STEPS, 5);
+
+    let engine_hist = {
+        let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+        spec.down_compressor = downc.as_ref();
+        spec.workers = MIRI_WORKERS;
+        spec.batch = 4;
+        spec.steps = MIRI_STEPS;
+        spec.lr = LrSchedule::Const { eta: 0.3 };
+        spec.participation = &participation;
+        spec.agg_scale = AggScale::Participants;
+        spec.server_opt = ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 };
+        spec.codec = Codec::Rans;
+        spec.eval_every = 3;
+        spec.eval_rows = 256;
+        spec.seed = 5;
+        run(&spec)
+    };
+
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("qtopk:k=6,bits=4").unwrap()),
+        Arc::new(FixedPeriod::new(2)),
+    );
+    cfg.workers = MIRI_WORKERS;
+    cfg.batch = 4;
+    cfg.steps = MIRI_STEPS;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    cfg.down_compressor = Arc::from(parse_spec("topk:k=8").unwrap());
+    cfg.participation = participation.clone();
+    cfg.agg_scale = AggScale::Participants;
+    cfg.server_opt = ServerOptSpec::Momentum { beta: 0.9, lr: 0.1 };
+    cfg.codec = Codec::Rans;
+    cfg.eval_every = 3;
+    cfg.eval_rows = 256;
+    cfg.seed = 5;
+    let threaded_hist = run_threaded(
+        &cfg,
+        || Box::new(miri_model()) as Box<dyn GradModel>,
+        Arc::new(ds.clone()),
+        None,
+    )
+    .unwrap();
+
+    assert_bit_identical(&engine_hist, &threaded_hist, "miri threaded vs engine");
 }

@@ -85,6 +85,7 @@ fn run_cfg(
 /// Operator × sync-period grid, full participation, dense downlink (the
 /// paper's setting): thread counts 1/2/8 must agree bit for bit.
 #[test]
+#[cfg_attr(miri, ignore)] // heavy sweeps — integration_master_parallel has miri_ twins
 fn parallel_bit_identical_across_operators_and_h() {
     for up in ["topk:k=10", "qtopk:k=10,bits=4", "signtopk:k=10,m=1", "qsgd:bits=4"] {
         for h in [1usize, 4] {
@@ -105,6 +106,7 @@ fn parallel_bit_identical_across_operators_and_h() {
 /// a compressed downlink: the hardest case — per-worker downlink state and
 /// RNG streams advance only for participants, in worker order.
 #[test]
+#[cfg_attr(miri, ignore)]
 fn parallel_bit_identical_sampled_participation_compressed_downlink() {
     for (part, scale) in [
         ("fixed:5", AggScale::Participants),
@@ -129,6 +131,7 @@ fn parallel_bit_identical_sampled_participation_compressed_downlink() {
 /// Thread-count sweep incl. auto (`threads = 0`) and oversubscription
 /// (more threads than cores): same bits, same losses.
 #[test]
+#[cfg_attr(miri, ignore)]
 fn parallel_thread_count_sweep_including_auto() {
     let seq = run_cfg("signtopk:k=10,m=1", "topk:k=8", 1, "fixed:5", AggScale::Participants, 1);
     for threads in [0usize, 2, 3, 8] {
@@ -148,6 +151,7 @@ fn parallel_thread_count_sweep_including_auto() {
 /// pool thread at most) and an H > 1 schedule lets threads run ahead
 /// between barriers without reordering anything observable.
 #[test]
+#[cfg_attr(miri, ignore)]
 fn parallel_clamps_threads_to_workers() {
     let seq = run_cfg("topk:k=10", "identity", 4, "full", AggScale::Workers, 1);
     let par = run_cfg("topk:k=10", "identity", 4, "full", AggScale::Workers, 64);

@@ -58,7 +58,7 @@ fn prop_encode_decode_roundtrip() {
             let msg = op.compress(&x, &mut rng);
             let (bytes, len) = encode::encode(&msg);
             let back = encode::decode(&bytes, len)
-                .unwrap_or_else(|| panic!("trial {trial} {} failed to decode", op.name()));
+                .unwrap_or_else(|e| panic!("trial {trial} {} failed to decode: {e}", op.name()));
             assert_eq!(msg, back, "trial {trial} {}", op.name());
             assert_eq!(len, msg.wire_bits());
             // byte buffer is minimal
@@ -131,7 +131,7 @@ fn prop_rans_roundtrip_wire_bits_and_fallback() {
             );
             assert!(bytes.len() as u64 * 8 < len + 8);
             let back = encode::decode(&bytes, len)
-                .unwrap_or_else(|| panic!("trial {trial} {} failed to decode", op.name()));
+                .unwrap_or_else(|e| panic!("trial {trial} {} failed to decode: {e}", op.name()));
             assert_eq!(msg, back, "trial {trial} {}", op.name());
         }
     }
@@ -146,7 +146,7 @@ fn prop_rans_roundtrip_wire_bits_and_fallback() {
         (b.to_vec(), l)
     };
     assert_eq!(len, rans);
-    assert_eq!(encode::decode(&bytes, len), Some(msg));
+    assert_eq!(encode::decode(&bytes, len), Ok(msg));
 }
 
 /// `compress_into` is bit-identical to `compress` — same message, same RNG

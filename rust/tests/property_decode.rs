@@ -1,0 +1,195 @@
+//! Adversarial wire-decode property tests: no input — corrupted, truncated,
+//! or outright random — may panic, abort, or oversize-allocate in the
+//! decoder. Corruption that breaks framing must surface as `Err(DecodeError)`
+//! while leaving the reused `MessageBuf` in a state that decodes the next
+//! valid message correctly (the threaded master reuses one buf per worker).
+//!
+//! The sandbox has no fuzzer, so this is a seeded-PCG mutation sweep: fully
+//! reproducible, hundreds of mutations per run. Under Miri the sweep shrinks
+//! (~100× interpreter slowdown) but still exercises every mutation kind.
+
+use qsparse::compress::{encode, parse_spec, Codec, Compressor, MessageBuf, WireEncoder};
+use qsparse::util::rng::Pcg64;
+
+/// Wire-format ceiling on any decoded element count (mirrors the decoder's
+/// internal `MAX_WIRE_ELEMS`): a successful decode of corrupt input is
+/// acceptable, a successful decode of a decompression bomb is not.
+const MAX_WIRE_ELEMS: usize = 1 << 27;
+
+fn operators(d: usize) -> Vec<Box<dyn Compressor>> {
+    let k = (d / 4).max(1);
+    [
+        "identity".to_string(),
+        format!("topk:k={k}"),
+        "qsgd:bits=4".to_string(),
+        "sign".to_string(),
+        format!("qtopk:k={k},bits=4"),
+        format!("signtopk:k={k},m=1"),
+    ]
+    .iter()
+    .map(|s| parse_spec(s).unwrap())
+    .collect()
+}
+
+fn gen_vector(rng: &mut Pcg64, d: usize, family: usize) -> Vec<f32> {
+    match family % 3 {
+        0 => (0..d).map(|_| rng.normal_f32()).collect(),
+        1 => (0..d)
+            .map(|i| if i % 5 == 0 { rng.normal_f32() * 10.0 } else { 0.0 })
+            .collect(),
+        _ => (0..d).map(|i| (i % 3) as f32 - 1.0).collect(),
+    }
+}
+
+/// Decode through both entry points; they must agree on Ok/Err, and the
+/// recycled buf must still decode a pristine stream afterwards.
+fn decode_both(
+    bytes: &[u8],
+    bit_len: u64,
+    buf: &mut MessageBuf,
+    pristine: (&[u8], u64),
+    ctx: &str,
+) -> bool {
+    let by_value = encode::decode(bytes, bit_len);
+    let into = encode::decode_into(bytes, bit_len, buf);
+    assert_eq!(
+        by_value.is_ok(),
+        into.is_ok(),
+        "{ctx}: decode and decode_into disagree: {by_value:?} vs {into:?}"
+    );
+    if let Ok(msg) = &by_value {
+        assert_eq!(msg, buf.message(), "{ctx}: decode_into produced a different message");
+        assert!(msg.dim() <= MAX_WIRE_ELEMS, "{ctx}: decompression bomb: d={}", msg.dim());
+        assert!(msg.nnz() <= MAX_WIRE_ELEMS, "{ctx}: decompression bomb: nnz={}", msg.nnz());
+    }
+    // Buf poisoning check: a pristine decode through the same buf must work
+    // no matter what the corrupt stream did to it.
+    encode::decode_into(pristine.0, pristine.1, buf)
+        .unwrap_or_else(|e| panic!("{ctx}: buf poisoned, pristine stream now fails: {e}"));
+    by_value.is_ok()
+}
+
+#[test]
+fn corrupt_streams_error_never_panic() {
+    let (trials, flips_per_msg) = if cfg!(miri) { (2, 2) } else { (12, 8) };
+    let mut rng = Pcg64::seeded(0xBADC0DE);
+    let mut wire = WireEncoder::new(Codec::Rans);
+    let mut buf = MessageBuf::new();
+    // Guaranteed-Err mutations (truncations and length lies) are counted to
+    // prove the sweep actually exercised the error paths.
+    let mut guaranteed_err = 0u64;
+    for trial in 0..trials {
+        let d = 16 + rng.below_usize(400);
+        let x = gen_vector(&mut rng, d, trial);
+        for op in operators(d) {
+            let msg = op.compress(&x, &mut rng);
+            for codec in [Codec::Raw, Codec::Rans] {
+                let (bytes, bit_len) = match codec {
+                    Codec::Raw => encode::encode(&msg),
+                    Codec::Rans => {
+                        let (b, l) = wire.encode(&msg);
+                        (b.to_vec(), l)
+                    }
+                };
+                let ctx = format!("trial {trial} {} {codec:?}", op.name());
+                let pristine = (&bytes[..], bit_len);
+
+                // 1. Single-bit flips anywhere in the stream: may decode to a
+                //    different valid message, must never panic or bomb.
+                for _ in 0..flips_per_msg {
+                    if bytes.is_empty() {
+                        continue;
+                    }
+                    let mut m = bytes.clone();
+                    let bit = rng.below_usize(m.len() * 8);
+                    m[bit / 8] ^= 1 << (bit % 8);
+                    decode_both(&m, bit_len, &mut buf, pristine, &format!("{ctx} flip@{bit}"));
+                }
+
+                // 2. Truncations with the original bit_len: framing now lies
+                //    about the buffer, so every one must be an Err.
+                for frac in [0, 1, 2, 3] {
+                    let keep = bytes.len() * frac / 4;
+                    if keep == bytes.len() || bit_len == 0 {
+                        continue;
+                    }
+                    let ok = decode_both(
+                        &bytes[..keep],
+                        bit_len,
+                        &mut buf,
+                        pristine,
+                        &format!("{ctx} trunc@{keep}"),
+                    );
+                    assert!(!ok, "{ctx}: truncated to {keep}B but decode succeeded");
+                    guaranteed_err += 1;
+                }
+
+                // 3. bit_len inflation past the byte buffer: guaranteed Err.
+                for lie in [8 * bytes.len() as u64 + 1, 8 * bytes.len() as u64 + 63, u64::MAX] {
+                    let ok = decode_both(
+                        &bytes,
+                        lie,
+                        &mut buf,
+                        pristine,
+                        &format!("{ctx} bit_len={lie}"),
+                    );
+                    assert!(!ok, "{ctx}: lying bit_len {lie} but decode succeeded");
+                    guaranteed_err += 1;
+                }
+
+                // 4. bit_len deflation: the reader runs dry mid-message (or
+                //    the message happens to fit — then it must round-trip
+                //    sanely); either way, no panic.
+                if bit_len > 1 {
+                    let short = rng.next_u64() % bit_len;
+                    decode_both(&bytes, short, &mut buf, pristine, &format!("{ctx} short={short}"));
+                }
+            }
+        }
+    }
+    let floor = if cfg!(miri) { 50 } else { 200 };
+    assert!(
+        guaranteed_err >= floor,
+        "only {guaranteed_err} guaranteed-error mutations ran (floor {floor})"
+    );
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let streams = if cfg!(miri) { 12 } else { 150 };
+    let mut rng = Pcg64::seeded(0x6A5BA6E);
+    let mut buf = MessageBuf::new();
+    // A pristine stream to verify the buf stays usable throughout.
+    let op = parse_spec("topk:k=8").unwrap();
+    let msg = op.compress(&gen_vector(&mut rng, 64, 0), &mut rng);
+    let (pb, pl) = encode::encode(&msg);
+    for i in 0..streams {
+        let len = rng.below_usize(96);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let bit_len = match i % 3 {
+            0 => 8 * len as u64,
+            1 => rng.next_u64() % (8 * len as u64 + 1),
+            _ => rng.next_u64(), // usually absurd — must hit the framing guard
+        };
+        decode_both(&bytes, bit_len, &mut buf, (&pb[..], pl), &format!("garbage {i} len={len}"));
+    }
+}
+
+/// All-zero and all-one streams of many sizes: degenerate patterns that
+/// historically tickle length-field parsers (zeros make Elias-γ read forever,
+/// ones make every count enormous).
+#[test]
+fn degenerate_bit_patterns_never_panic() {
+    let max = if cfg!(miri) { 16 } else { 128 };
+    let mut buf = MessageBuf::new();
+    let op = parse_spec("sign").unwrap();
+    let mut rng = Pcg64::seeded(7);
+    let msg = op.compress(&gen_vector(&mut rng, 32, 0), &mut rng);
+    let (pb, pl) = encode::encode(&msg);
+    for n in 0..max {
+        for fill in [0x00u8, 0xFF, 0xAA] {
+            let bytes = vec![fill; n];
+            decode_both(&bytes, 8 * n as u64, &mut buf, (&pb[..], pl), &format!("fill={fill:#x} n={n}"));
+        }
+    }
+}

@@ -4,11 +4,16 @@
 The bench binary (`cargo bench --bench train_step -- --quick --json`) writes
 one entry per probe. A probe that silently disappears — a renamed case, a
 skipped section — used to pass CI while the trajectory quietly went blind.
-This script fails the job when
 
-  1. any expected probe key is missing (exact names for the
-     hardware-independent probes, prefixes for the ones whose names embed
-     the runner's core count), or
+The required probe set is NOT hardcoded here: it is read from
+`scripts/bench_probes.txt`, the shared manifest that `tools/repo-lint`
+cross-checks against the bench source in both directions. This script owns
+the runtime half of the contract and fails the job when
+
+  1. any required manifest probe is missing from the JSON (exact keys, plus
+     `*`-prefix keys for names that embed the runner's core count — the
+     prefixes are only enforced on multi-core runners, since the bench only
+     emits them there; `?`-optional manifest lines are never required), or
   2. any steady-state allocation probe reports a nonzero count, or
   3. any `codec/rans-vs-raw-bits/...` ratio exceeds its cap: 1.0 for every
      probe (the per-message fallback must make the entropy-coded container
@@ -31,44 +36,8 @@ import json
 import os
 import sys
 
-# Probes whose names are hardware-independent: exact match required.
-REQUIRED_EXACT = [
-    "grad/native-softmax(b=8,d=7850)",
-    "grad/native-mlp(b=16,d=17k)",
-    "engine/step(R=8,signtopk,H=1)",
-    "alloc/engine-steady-per-step(R=8,signtopk,H=1,threads=1)",
-    "alloc/engine-steady-per-step(R=8,randk,H=1,threads=1)",
-    "broadcast/dense(R=8,d=7850)",
-    "broadcast/topk:k=400(R=8,d=7850)",
-    "broadcast/qtopk:k=400,bits=4(R=8,d=7850)",
-    "aggregate/full(R=8,1/R)(d=7850)",
-    "aggregate/fixed(m=2,1/|S|)(d=7850)",
-    "master/round-speedup(R=32,threads=8)",
-    "alloc/threaded-decode-fold-per-update(R=8,qtopk)",
-    "threaded/steady-allocs-per-step(R=4,topk,H=2)",
-] + [
-    f"master/round(R={r},d=7850,down=topk400,threads={t})"
-    for r in (8, 32, 128)
-    for t in (1, 2, 8)
-] + [
-    f"{kind}/{spec}(d=7850)"
-    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
-                 "randk:k=400")
-    for kind in ("compress", "compress_into", "encode", "encode_into",
-                 "wire_bits", "decode", "decode_into",
-                 "encode-rans", "decode-rans", "wire_bits-rans")
-] + [
-    f"alloc/{kind}-per-call/{spec}"
-    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
-                 "randk:k=400")
-    for kind in ("compress_into", "decode_into", "encode-rans", "decode-rans")
-] + [
-    f"codec/rans-vs-raw-bits/{spec}(d=7850)"
-    for spec in ("signtopk:k=170,m=1", "topk:k=400", "qtopk:k=400,bits=4",
-                 "randk:k=400")
-] + [
-    "codec/rans-vs-raw-bits/skewed-gaps(d=1M)",
-]
+MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "bench_probes.txt")
 
 # rANS wire-bit ratio caps. Every codec probe must be ≤ 1.0 — the encoder
 # falls back to the raw container per message whenever entropy coding would
@@ -83,18 +52,27 @@ RANS_RATIO_CAP = {
     "codec/rans-vs-raw-bits/skewed-gaps(d=1M)": 0.80,
 }
 
-# Probes whose names embed the runner's core count (threads={pool}), and
-# which the bench only emits at all when the machine has >1 core: at least
-# one key with each prefix must exist — unless this runner is single-core
-# (the checker runs on the same machine that ran the bench in CI).
-REQUIRED_PREFIX = (
-    [
-        "engine/step-par(R=8,signtopk,H=1,threads=",
-        "engine/speedup(R=8,threads=",
-    ]
-    if (os.cpu_count() or 1) > 1
-    else []
-)
+
+def load_manifest(path):
+    """Parse bench_probes.txt into (required_exact, required_prefix) lists.
+
+    Grammar (mirrored by tools/repo-lint): plain line = required exact key;
+    trailing `*` = required prefix; leading `?` = documented-but-optional
+    (skipped here entirely).
+    """
+    exact, prefixes = [], []
+    with open(path) as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line.startswith("?"):
+                continue  # optional: documented, never required
+            if line.endswith("*"):
+                prefixes.append(line[:-1])
+            else:
+                exact.append(line)
+    return exact, prefixes
 
 
 def alloc_must_be_zero(key: str) -> bool:
@@ -105,6 +83,15 @@ def alloc_must_be_zero(key: str) -> bool:
 
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_train_step.json"
+    try:
+        required_exact, required_prefix = load_manifest(MANIFEST)
+    except OSError as e:
+        print(f"FAIL: cannot read probe manifest {MANIFEST}: {e}")
+        return 1
+    # Core-count-embedding probes only exist on multi-core machines; the
+    # checker runs on the same runner that ran the bench in CI.
+    if (os.cpu_count() or 1) <= 1:
+        required_prefix = []
     try:
         with open(path) as f:
             entries = json.load(f)
@@ -123,10 +110,10 @@ def main() -> int:
             "estimate, not this run's bench output; regenerate with "
             "`cargo bench --bench train_step -- --quick --json`"
         )
-    for key in REQUIRED_EXACT:
+    for key in required_exact:
         if key not in entries:
             failures.append(f"missing probe: {key}")
-    for prefix in REQUIRED_PREFIX:
+    for prefix in required_prefix:
         if not any(k.startswith(prefix) for k in entries):
             failures.append(f"missing probe with prefix: {prefix}")
     for key, entry in sorted(entries.items()):
@@ -149,8 +136,9 @@ def main() -> int:
         return 1
     zeros = sum(1 for k in entries if alloc_must_be_zero(k))
     print(
-        f"OK: {path} has all {len(REQUIRED_EXACT)} exact + "
-        f"{len(REQUIRED_PREFIX)} prefixed probes; {zeros} alloc probes at 0"
+        f"OK: {path} has all {len(required_exact)} exact + "
+        f"{len(required_prefix)} prefixed probes from "
+        f"{os.path.basename(MANIFEST)}; {zeros} alloc probes at 0"
     )
     return 0
 

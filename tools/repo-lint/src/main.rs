@@ -1,0 +1,814 @@
+//! repo-lint — machine-checks the invariants the library's correctness
+//! argument rests on (README "Safety & determinism contracts"):
+//!
+//! 1. **SAFETY comments** — every `unsafe` keyword in non-test code is
+//!    immediately preceded (through a contiguous comment/attribute block) by
+//!    a `// SAFETY:` justification or a `/// # Safety` doc section.
+//! 2. **Unsafe confinement** — `unsafe` may appear only in the fork-join
+//!    core (`engine/parallel.rs`, its reuse in `coordinator/master.rs`) and
+//!    the bench counting allocator; every other module is covered by an
+//!    explicit `#![forbid(unsafe_code)]`.
+//! 3. **Determinism** — deterministic-path modules (`protocol`, `compress`,
+//!    `engine`, `coordinator`, `topology`, `optim`) must not touch wall
+//!    clocks (`Instant`, `SystemTime`) or RandomState-backed containers
+//!    (`HashMap`, `HashSet`) outside `#[cfg(test)]` code.
+//! 4. **Panic-free decode** — the wire-facing parsers (`compress/encode.rs`,
+//!    `compress/rans.rs`, `util/json.rs`) must not contain `.unwrap()`,
+//!    `.expect(`, `panic!`, `unreachable!`, `todo!` or `unimplemented!`
+//!    outside tests: corrupt input must surface as a named error.
+//! 5. **Bench-probe drift** — `scripts/bench_probes.txt` (the manifest
+//!    `scripts/check_bench.py` enforces in CI) and the probe-name literals
+//!    in `benches/train_step.rs` must agree in both directions, so a probe
+//!    cannot be renamed or dropped on one side only.
+//!
+//! The scanner is a line-preserving state machine that blanks comments and
+//! string contents (so tokens in comments or literals never count as code)
+//! while collecting string literals (for rule 5). It is deliberately
+//! lexical, not a full parser: simple, fast, and conservative — if it ever
+//! misfires on new code, prefer restructuring the code over weakening the
+//! rule.
+//!
+//! Usage: `cargo run -p repo-lint` from anywhere in the workspace.
+//! Exit code 1 and one `path:line: [rule] message` per finding.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Files allowed to contain the `unsafe` keyword (rule 2).
+const ALLOW_UNSAFE: &[&str] = &[
+    "rust/src/engine/parallel.rs",
+    "rust/src/coordinator/master.rs",
+    "benches/train_step.rs",
+];
+
+/// Module roots that cannot carry `#![forbid(unsafe_code)]` because a child
+/// module is on the allow-list (the attribute would propagate into it).
+/// Rule 2 still bans `unsafe` in these files themselves.
+const FORBID_EXEMPT: &[&str] = &[
+    "rust/src/lib.rs",
+    "rust/src/engine/mod.rs",
+    "rust/src/coordinator/mod.rs",
+];
+
+/// Deterministic-path directory prefixes (rule 3).
+const DET_DIRS: &[&str] = &[
+    "rust/src/protocol",
+    "rust/src/compress",
+    "rust/src/engine",
+    "rust/src/coordinator",
+    "rust/src/topology",
+    "rust/src/optim",
+];
+
+/// Identifiers banned in deterministic paths (matched as whole words in
+/// code, so comments and `BTreeMap` don't trip it).
+const DET_TOKENS: &[&str] = &["HashMap", "HashSet", "Instant", "SystemTime"];
+
+/// Wire-facing parser files where panicking constructs are banned (rule 4).
+const NO_PANIC_FILES: &[&str] = &[
+    "rust/src/compress/encode.rs",
+    "rust/src/compress/rans.rs",
+    "rust/src/util/json.rs",
+];
+
+/// Panicking constructs (substring match on blanked code, so `unwrap_or`
+/// and a `fn expect_byte` helper don't count).
+const PANIC_PATS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+// ---------------------------------------------------------------------------
+// Lexical scanner
+// ---------------------------------------------------------------------------
+
+/// Source with comments and string contents blanked to spaces (newlines
+/// kept, so line numbers survive), plus the collected string literals.
+struct Stripped {
+    code: String,
+    literals: Vec<String>,
+}
+
+fn strip_code(src: &str) -> Stripped {
+    #[derive(Clone, Copy)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b = src.as_bytes();
+    let mut out = String::with_capacity(src.len());
+    let mut literals = Vec::new();
+    let mut cur = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match mode {
+            Mode::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    mode = Mode::LineComment;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    mode = Mode::BlockComment(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Str;
+                    cur.clear();
+                    out.push(' ');
+                    i += 1;
+                } else if c == b'r' && matches!(b.get(i + 1), Some(&b'#') | Some(&b'"')) {
+                    // Possible raw string r"..." / r#"..."#.
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while b.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&b'"') {
+                        mode = Mode::RawStr(hashes);
+                        cur.clear();
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        out.push(c as char);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`): a
+                    // lifetime is `'` + ident char not followed by `'`.
+                    let next_ident = b
+                        .get(i + 1)
+                        .is_some_and(|&n| n.is_ascii_alphanumeric() || n == b'_');
+                    if next_ident && b.get(i + 2) != Some(&b'\'') {
+                        out.push('\'');
+                        i += 1;
+                    } else {
+                        mode = Mode::Char;
+                        out.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    out.push(c as char);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                if c == b'\n' {
+                    mode = Mode::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' {
+                    // Keep the newline of a `\`-continuation so line numbers
+                    // stay aligned with the original source.
+                    out.push(' ');
+                    if let Some(&n) = b.get(i + 1) {
+                        cur.push('\\');
+                        cur.push(n as char);
+                        out.push(if n == b'\n' { '\n' } else { ' ' });
+                    }
+                    i += 2;
+                } else if c == b'"' {
+                    literals.push(std::mem::take(&mut cur));
+                    mode = Mode::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    cur.push(c as char);
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let closes = c == b'"'
+                    && (0..hashes).all(|h| b.get(i + 1 + h) == Some(&b'#'));
+                if closes {
+                    literals.push(std::mem::take(&mut cur));
+                    mode = Mode::Code;
+                    for _ in 0..=hashes {
+                        out.push(' ');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    cur.push(c as char);
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == b'\\' {
+                    out.push(' ');
+                    if b.get(i + 1) == Some(&b'\n') {
+                        out.push('\n');
+                    } else if i + 1 < b.len() {
+                        out.push(' ');
+                    }
+                    i += 2;
+                } else if c == b'\'' {
+                    mode = Mode::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(if c == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    Stripped { code: out, literals }
+}
+
+/// Whole-word occurrence check on a blanked-code line.
+fn has_word(line: &str, word: &str) -> bool {
+    let lb = line.as_bytes();
+    let mut start = 0;
+    while let Some(off) = line[start..].find(word) {
+        let at = start + off;
+        let before_ok = at == 0 || {
+            let p = lb[at - 1];
+            !(p.is_ascii_alphanumeric() || p == b'_')
+        };
+        let end = at + word.len();
+        let after_ok = end >= lb.len() || {
+            let n = lb[end];
+            !(n.is_ascii_alphanumeric() || n == b'_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Per-line flags: `true` for lines inside a `#[cfg(test)]`-gated item
+/// (brace-matched on the blanked code, so strings can't confuse it).
+fn test_region_flags(code_lines: &[&str]) -> Vec<bool> {
+    let mut flags = vec![false; code_lines.len()];
+    let mut i = 0;
+    while i < code_lines.len() {
+        if code_lines[i].contains("#[cfg(test)]") {
+            let mut depth: i64 = 0;
+            let mut started = false;
+            let mut k = i;
+            while k < code_lines.len() {
+                for ch in code_lines[k].chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if started && depth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+            let end = k.min(code_lines.len() - 1);
+            for f in flags.iter_mut().take(end + 1).skip(i) {
+                *f = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+// ---------------------------------------------------------------------------
+// Per-file rules (1, 3, 4) and the cross-file forbid rule (2)
+// ---------------------------------------------------------------------------
+
+/// Walk upward from `line` (0-based) through the contiguous block of
+/// comment/attribute lines and report whether any mentions SAFETY.
+fn safety_comment_above(orig_lines: &[&str], line: usize) -> bool {
+    let mut l = line;
+    while l > 0 {
+        l -= 1;
+        let t = orig_lines[l].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") {
+            if t.contains("SAFETY") || t.contains("# Safety") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+fn check_file(rel: &str, src: &str) -> Vec<String> {
+    let stripped = strip_code(src);
+    let code_lines: Vec<&str> = stripped.code.split('\n').collect();
+    let orig_lines: Vec<&str> = src.split('\n').collect();
+    let in_test = test_region_flags(&code_lines);
+    let allow_unsafe = ALLOW_UNSAFE.contains(&rel);
+    let det_path = DET_DIRS.iter().any(|d| rel.starts_with(d));
+    let no_panic = NO_PANIC_FILES.contains(&rel);
+    let mut out = Vec::new();
+
+    for (idx, cl) in code_lines.iter().enumerate() {
+        if in_test[idx] {
+            continue;
+        }
+        let ln = idx + 1;
+        if has_word(cl, "unsafe") {
+            if !allow_unsafe {
+                out.push(format!(
+                    "{rel}:{ln}: [unsafe-confinement] `unsafe` outside the allow-list \
+                     (engine/parallel.rs, coordinator/master.rs, benches/train_step.rs)"
+                ));
+            }
+            if !safety_comment_above(&orig_lines, idx) {
+                out.push(format!(
+                    "{rel}:{ln}: [safety-comment] `unsafe` without an immediately \
+                     preceding `// SAFETY:` (or `/// # Safety`) justification"
+                ));
+            }
+        }
+        if det_path {
+            for tok in DET_TOKENS {
+                if has_word(cl, tok) {
+                    out.push(format!(
+                        "{rel}:{ln}: [determinism] `{tok}` in a deterministic-path \
+                         module (use BTreeMap/BTreeSet; timing belongs in util::stats)"
+                    ));
+                }
+            }
+        }
+        if no_panic {
+            for pat in PANIC_PATS {
+                if cl.contains(pat) {
+                    out.push(format!(
+                        "{rel}:{ln}: [no-panic] `{pat}` in a wire-facing parser — \
+                         corrupt input must return a named error, never panic"
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 2b: every library file outside the unsafe allow-list must be covered
+/// by `#![forbid(unsafe_code)]` — its own, or an ancestor `mod.rs`'s (the
+/// attribute propagates to child modules). `files` maps repo-relative path
+/// to blanked code.
+fn check_forbid_coverage(files: &BTreeMap<String, String>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (rel, code) in files {
+        if !rel.starts_with("rust/src") {
+            continue;
+        }
+        if ALLOW_UNSAFE.contains(&rel.as_str()) || FORBID_EXEMPT.contains(&rel.as_str()) {
+            continue;
+        }
+        let mut guarded = code.contains("forbid(unsafe_code)");
+        let mut dir = Path::new(rel).parent();
+        while let (false, Some(d)) = (guarded, dir) {
+            if d == Path::new("rust") || d.as_os_str().is_empty() {
+                break;
+            }
+            let mod_rs = d.join("mod.rs");
+            let key = mod_rs.to_string_lossy().replace('\\', "/");
+            if key != *rel {
+                if let Some(parent_code) = files.get(&key) {
+                    guarded = parent_code.contains("forbid(unsafe_code)");
+                }
+            }
+            dir = d.parent();
+        }
+        if !guarded {
+            out.push(format!(
+                "{rel}: [forbid-unsafe] not covered by `#![forbid(unsafe_code)]` \
+                 (add it to the file or its module root)"
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: bench-probe manifest drift
+// ---------------------------------------------------------------------------
+
+struct ManifestEntry {
+    /// Glob form: the key, with a trailing `*` for prefix entries.
+    glob: String,
+    /// Original line (for messages).
+    raw: String,
+}
+
+fn parse_manifest(text: &str) -> Vec<ManifestEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let raw = line.to_string();
+        let body = line.strip_prefix('?').unwrap_or(line);
+        out.push(ManifestEntry { glob: body.to_string(), raw });
+    }
+    out
+}
+
+/// Do two glob patterns (where `*` matches any substring) share at least one
+/// concrete string? Memoized two-pattern match.
+fn glob_overlap(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut memo = vec![0u8; (a.len() + 1) * (b.len() + 1)]; // 0=unset 1=false 2=true
+    fn go(a: &[u8], b: &[u8], i: usize, j: usize, memo: &mut [u8]) -> bool {
+        let k = i * (b.len() + 1) + j;
+        if memo[k] != 0 {
+            return memo[k] == 2;
+        }
+        let r = if i == a.len() && j == b.len() {
+            true
+        } else if i < a.len() && a[i] == b'*' {
+            go(a, b, i + 1, j, memo) || (j < b.len() && go(a, b, i, j + 1, memo))
+        } else if j < b.len() && b[j] == b'*' {
+            go(a, b, i, j + 1, memo) || (i < a.len() && go(a, b, i + 1, j, memo))
+        } else if i < a.len() && j < b.len() && a[i] == b[j] {
+            go(a, b, i + 1, j + 1, memo)
+        } else {
+            false
+        };
+        memo[k] = if r { 2 } else { 1 };
+        r
+    }
+    go(a, b, 0, 0, &mut memo)
+}
+
+/// `format!` template → glob: each `{...}` hole becomes `*`; `{{`/`}}`
+/// escapes become literal braces.
+fn template_to_glob(lit: &str) -> String {
+    let b = lit.as_bytes();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'{' if b.get(i + 1) == Some(&b'{') => {
+                out.push('{');
+                i += 2;
+            }
+            b'}' if b.get(i + 1) == Some(&b'}') => {
+                out.push('}');
+                i += 2;
+            }
+            b'{' => {
+                while i < b.len() && b[i] != b'}' {
+                    i += 1;
+                }
+                i += 1; // consume '}'
+                out.push('*');
+            }
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn check_bench_drift(manifest_text: &str, bench_literals: &[String]) -> Vec<String> {
+    let manifest = parse_manifest(manifest_text);
+    let mut out = Vec::new();
+    if manifest.is_empty() {
+        return vec!["scripts/bench_probes.txt: [bench-drift] manifest is empty".into()];
+    }
+    // Probe families come from the manifest itself, so the extractor below
+    // stays in sync with the key namespace by construction.
+    let families: std::collections::BTreeSet<&str> = manifest
+        .iter()
+        .filter_map(|e| e.glob.split('/').next())
+        .collect();
+    // Candidate probe templates: bench string literals that contain a '/',
+    // no whitespace, and whose first segment is a known probe family.
+    let templates: Vec<(String, String)> = bench_literals
+        .iter()
+        .filter(|l| l.contains('/') && !l.chars().any(char::is_whitespace))
+        .map(|l| (l.clone(), template_to_glob(l)))
+        .filter(|(_, g)| g.split('/').next().is_some_and(|f| families.contains(f)))
+        .collect();
+    for e in &manifest {
+        if !templates.iter().any(|(_, tg)| glob_overlap(&e.glob, tg)) {
+            out.push(format!(
+                "scripts/bench_probes.txt: [bench-drift] `{}` is not producible by any \
+                 probe literal in benches/train_step.rs",
+                e.raw
+            ));
+        }
+    }
+    for (lit, tg) in &templates {
+        if !manifest.iter().any(|e| glob_overlap(&e.glob, tg)) {
+            out.push(format!(
+                "benches/train_step.rs: [bench-drift] probe `{lit}` has no entry in \
+                 scripts/bench_probes.txt (check_bench.py would never require it)"
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Pure core over in-memory sources, so the unit tests can feed fixtures.
+/// `files`: repo-relative path → raw source, for all linted .rs files.
+fn lint_sources(files: &BTreeMap<String, String>, manifest_text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut blanked = BTreeMap::new();
+    let mut bench_literals = Vec::new();
+    for (rel, src) in files {
+        out.extend(check_file(rel, src));
+        let s = strip_code(src);
+        if rel == "benches/train_step.rs" {
+            bench_literals = s.literals;
+        }
+        blanked.insert(rel.clone(), s.code);
+    }
+    out.extend(check_forbid_coverage(&blanked));
+    out.extend(check_bench_drift(manifest_text, &bench_literals));
+    out.sort();
+    out
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    // tools/repo-lint/ → repo root is two levels up.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let root = root.canonicalize().unwrap_or(root);
+    let mut paths = Vec::new();
+    for sub in ["rust/src", "benches"] {
+        if let Err(e) = walk_rs(&root.join(sub), &mut paths) {
+            eprintln!("repo-lint: cannot walk {sub}: {e}");
+            std::process::exit(2);
+        }
+    }
+    let mut files = BTreeMap::new();
+    for p in &paths {
+        let rel = p
+            .strip_prefix(&root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match std::fs::read_to_string(p) {
+            Ok(src) => {
+                files.insert(rel, src);
+            }
+            Err(e) => {
+                eprintln!("repo-lint: cannot read {rel}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let manifest = match std::fs::read_to_string(root.join("scripts/bench_probes.txt")) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("repo-lint: cannot read scripts/bench_probes.txt: {e}");
+            std::process::exit(2);
+        }
+    };
+    let violations = lint_sources(&files, &manifest);
+    if violations.is_empty() {
+        println!(
+            "repo-lint OK: {} files, {} manifest probes, all invariants hold",
+            files.len(),
+            parse_manifest(&manifest).len()
+        );
+    } else {
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("repo-lint FAIL: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests — each rule must fire on a seeded violation and stay quiet on the
+// compliant twin.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_file(rel: &str, src: &str) -> Vec<String> {
+        check_file(rel, src)
+    }
+
+    #[test]
+    fn stripper_blanks_comments_and_strings_but_keeps_lines() {
+        let src = "let a = 1; // unsafe HashMap\nlet b = \"unsafe {}\"; /* panic! */\n";
+        let s = strip_code(src);
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+        assert!(!s.code.contains("unsafe"));
+        assert!(!s.code.contains("panic!"));
+        assert_eq!(s.literals, vec!["unsafe {}".to_string()]);
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_nested_comments_and_chars() {
+        let src = "let r = r#\"a \"quoted\" HashMap\"#;\n/* outer /* inner */ HashMap */\nlet c = '\"'; let lt: &'static str = \"x\";\n";
+        let s = strip_code(src);
+        assert!(!s.code.contains("HashMap"));
+        assert_eq!(s.literals, vec!["a \"quoted\" HashMap".to_string(), "x".to_string()]);
+        // The `'static` lifetime must not open a char literal and swallow code.
+        assert!(s.code.contains("let lt"));
+    }
+
+    #[test]
+    fn safety_rule_fires_without_comment_and_passes_with_one() {
+        let bad = "fn f() {\n    unsafe { g() };\n}\n";
+        let v = one_file("rust/src/engine/parallel.rs", bad);
+        assert!(v.iter().any(|m| m.contains("[safety-comment]")), "{v:?}");
+
+        let good = "fn f() {\n    // SAFETY: g is fine here.\n    unsafe { g() };\n}\n";
+        assert!(one_file("rust/src/engine/parallel.rs", good).is_empty());
+
+        let doc = "/// # Safety\n/// Caller must...\npub unsafe fn g() {}\n";
+        assert!(one_file("rust/src/engine/parallel.rs", doc).is_empty());
+
+        // The comment block may be interleaved with attributes.
+        let attr = "// SAFETY: fine.\n#[inline]\nunsafe fn g() {}\n";
+        assert!(one_file("rust/src/engine/parallel.rs", attr).is_empty());
+    }
+
+    #[test]
+    fn unsafe_confinement_fires_outside_allow_list() {
+        let src = "// SAFETY: ok.\nunsafe fn g() {}\n";
+        let v = one_file("rust/src/compress/encode.rs", src);
+        assert!(v.iter().any(|m| m.contains("[unsafe-confinement]")), "{v:?}");
+        assert!(one_file("rust/src/engine/parallel.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_word_or_comment_does_not_count() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n// unsafe is banned here\nlet s = \"unsafe\";\n";
+        assert!(one_file("rust/src/compress/encode.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "fn lib() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let m = std::collections::HashMap::new();\n        x.unwrap();\n        unsafe { y() };\n    }\n}\n";
+        assert!(one_file("rust/src/compress/encode.rs", src).is_empty());
+    }
+
+    #[test]
+    fn determinism_rule_fires_in_banned_modules_only() {
+        let src = "use std::collections::HashMap;\n";
+        for rel in [
+            "rust/src/compress/mod.rs",
+            "rust/src/protocol/worker.rs",
+            "rust/src/engine/mod.rs",
+            "rust/src/coordinator/master.rs",
+            "rust/src/topology/mod.rs",
+            "rust/src/optim/mod.rs",
+        ] {
+            let v = one_file(rel, src);
+            assert!(v.iter().any(|m| m.contains("[determinism]")), "{rel}: {v:?}");
+        }
+        assert!(one_file("rust/src/util/rng.rs", src).is_empty());
+        let v = one_file("rust/src/engine/mod.rs", "let t = Instant::now();\n");
+        assert!(v.iter().any(|m| m.contains("[determinism]")));
+    }
+
+    #[test]
+    fn no_panic_rule_fires_in_parsers_and_allows_non_panicking_kin() {
+        for pat in ["x.unwrap();", "x.expect(\"m\");", "panic!(\"m\");", "unreachable!();"] {
+            let src = format!("fn f() {{ {pat} }}\n");
+            let v = one_file("rust/src/compress/rans.rs", &src);
+            assert!(v.iter().any(|m| m.contains("[no-panic]")), "{pat}: {v:?}");
+        }
+        // unwrap_or / expect_byte / debug_assert are fine.
+        let ok = "fn f() { x.unwrap_or(0); p.expect_byte(b'{'); debug_assert!(c); }\n";
+        assert!(one_file("rust/src/compress/rans.rs", ok).is_empty());
+        // Same constructs outside the parser files are fine (for this rule).
+        assert!(one_file("rust/src/grad/mlp.rs", "fn f() { x.unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn forbid_coverage_accepts_own_or_ancestor_attr_and_flags_bare_files() {
+        let mut files = BTreeMap::new();
+        files.insert("rust/src/grad/mod.rs".into(), "#![forbid(unsafe_code)]\nmod mlp;\n".into());
+        files.insert("rust/src/grad/mlp.rs".into(), "fn f() {}\n".into());
+        files.insert("rust/src/data/mod.rs".into(), "fn f() {}\n".into());
+        let v = check_forbid_coverage(&files);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("rust/src/data/mod.rs"));
+    }
+
+    #[test]
+    fn glob_overlap_basics() {
+        assert!(glob_overlap("a/b(c=1)", "a/b(c=1)"));
+        assert!(glob_overlap("a/*(c=1)", "a/b(c=*)"));
+        assert!(glob_overlap("master/round(R=8,threads=1)", "master/round(R=*,threads=*)"));
+        assert!(glob_overlap("engine/step-par(threads=*", "engine/step-par(threads=*)"));
+        assert!(!glob_overlap("a/b", "a/c"));
+        assert!(!glob_overlap("alloc/x-per-call/k", "alloc/y-per-call/*"));
+    }
+
+    #[test]
+    fn template_to_glob_handles_holes_and_escapes() {
+        assert_eq!(template_to_glob("m/r(R={w},t={t:.1})"), "m/r(R=*,t=*)");
+        assert_eq!(template_to_glob("lit{{x}}"), "lit{x}");
+        assert_eq!(template_to_glob("plain/key"), "plain/key");
+    }
+
+    #[test]
+    fn bench_drift_fires_in_both_directions() {
+        let manifest = "alpha/key(d=1)\nbeta/thing(threads=*\n";
+        // Happy path: both entries producible, both literals covered.
+        let lits = vec!["alpha/key(d=1)".to_string(), "beta/thing(threads={t})".to_string()];
+        assert!(check_bench_drift(manifest, &lits).is_empty());
+        // Manifest entry the bench cannot produce.
+        let v = check_bench_drift(manifest, &lits[1..].to_vec());
+        assert!(v.iter().any(|m| m.contains("not producible")), "{v:?}");
+        // Bench literal the manifest does not know (same family namespace).
+        let extra = vec![
+            lits[0].clone(),
+            lits[1].clone(),
+            "alpha/renamed(d=1)".to_string(),
+        ];
+        let v = check_bench_drift(manifest, &extra);
+        assert!(v.iter().any(|m| m.contains("no entry")), "{v:?}");
+        // Non-probe literals (paths, messages) are ignored.
+        let noise = vec![
+            lits[0].clone(),
+            lits[1].clone(),
+            "artifacts/manifest.json".to_string(),
+            "some message / with spaces".to_string(),
+        ];
+        assert!(check_bench_drift(manifest, &noise).is_empty());
+    }
+
+    #[test]
+    fn optional_and_prefix_manifest_lines_parse() {
+        let m = parse_manifest("# comment\n\n?grad/pjrt-x(b=8)\nengine/speedup(R=8,threads=*\nplain/key\n");
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0].glob, "grad/pjrt-x(b=8)");
+        assert_eq!(m[1].glob, "engine/speedup(R=8,threads=*");
+        assert_eq!(m[2].glob, "plain/key");
+    }
+
+    #[test]
+    fn lint_sources_reports_across_rules_and_sorts() {
+        let mut files = BTreeMap::new();
+        files.insert(
+            "rust/src/compress/mod.rs".into(),
+            "#![forbid(unsafe_code)]\nuse std::collections::HashMap;\n".into(),
+        );
+        files.insert(
+            "benches/train_step.rs".into(),
+            "fn main() { let k = \"alpha/key(d=1)\"; }\n".into(),
+        );
+        let v = lint_sources(&files, "alpha/key(d=1)\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("[determinism]"));
+    }
+}
