@@ -280,6 +280,11 @@ fn main() {
     // pure wire_bits cost walk.
     bench_compress_paths(&mut rec, warm, iters, &ds, &softmax);
 
+    // The dispatched SIMD kernels in isolation, plus auto-vs-forced-scalar
+    // speed ratios `scripts/check_bench.py` gates (≤ 1.0 on multi-core
+    // runners: the vectorized path must never lose to its scalar twin).
+    bench_simd_kernels(&mut rec, warm, iters);
+
     // Broadcast path (master side, R=8, d=7850): dense model snapshot vs
     // error-compensated compressed delta per worker. Shows both the wall
     // cost of the downlink aggregation work and the wire-bit savings.
@@ -473,6 +478,116 @@ fn bench_compress_paths(
     let ratio = rans_bits as f64 / raw_bits as f64;
     rec.value("codec/rans-vs-raw-bits/skewed-gaps(d=1M)", ratio);
     println!("  rans wire bits for skewed gaps: {rans_bits} vs raw {raw_bits} ({ratio:.3}x)");
+}
+
+/// Noise-robust comparator for the A/B ratios: best observed sample.
+fn min_sample(samples: &[f64]) -> f64 {
+    samples.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// The four dispatched SIMD kernels in isolation (auto backend), then the
+/// same kernels pinned to the scalar twin via `force_backend` for the
+/// `simd/speedup-vs-scalar/*` ratios (auto_min / scalar_min). When
+/// detection already lands on scalar (no AVX2/Neon, or
+/// `QSPARSE_FORCE_SCALAR=1`) the A/B would race identical code against
+/// itself, so the ratios are emitted as exactly 1.0 — flake-free.
+fn bench_simd_kernels(rec: &mut Recorder, warm: usize, iters: usize) {
+    use qsparse::simd::{self, Backend};
+
+    let d = 1usize << 18;
+    let mut rng = Pcg64::seeded(47);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+    // Threshold with a ~1% pass rate, taken from the real packed-key
+    // distribution (what `top_k_sampled_into` estimates from its sample).
+    let mut packed = Vec::new();
+    simd::pack_ordered_into(&x, &mut packed);
+    let mut keys: Vec<u32> = packed.iter().map(|&p| (p >> 32) as u32).collect();
+    keys.sort_unstable();
+    let thresh = keys[d - d / 100];
+
+    // A raw fixed-width index stream: 4096 fields of 24 bits, the coding a
+    // k=4096 support in a d=16M model lands on (γ(4096) = 25 bits > 24).
+    let mut irng = Pcg64::seeded(53);
+    let idx_bytes: Vec<u8> = (0..4096 * 3).map(|_| irng.next_u32() as u8).collect();
+
+    let mut cand: Vec<u64> = Vec::new();
+    let mut levels: Vec<u32> = Vec::new();
+    let mut neg: Vec<bool> = Vec::new();
+    let mut acc = vec![0.0f32; d];
+    let mut out_idx: Vec<u32> = Vec::new();
+    let mut qrng = Pcg64::seeded(59);
+
+    let auto = simd::force_backend(None);
+    println!("simd backend: {}", auto.name());
+
+    let scan = time_iters(warm * 2, iters * 10, || {
+        cand.clear();
+        std::hint::black_box(simd::scan_threshold_into(&x, thresh, d, &mut cand));
+    });
+    rec.report("simd/topk-scan(d=256k)", &scan, None);
+    let qsgd = time_iters(warm * 2, iters * 10, || {
+        levels.clear();
+        neg.clear();
+        let norm = simd::norm2_sq_chunked(&x).sqrt() as f32;
+        let inv = if norm > 0.0 { 15.0 / norm } else { 0.0 };
+        simd::quantize_bucket_into(&x, inv, 15, &mut qrng, &mut levels, &mut neg);
+        std::hint::black_box(levels.len());
+    });
+    rec.report("simd/qsgd-quantize(d=256k)", &qsgd, None);
+    let fold = time_iters(warm * 2, iters * 10, || {
+        simd::add_scaled(&mut acc, &x, 0.125);
+        std::hint::black_box(acc[0]);
+    });
+    rec.report("simd/fold-dense(d=256k)", &fold, None);
+    let unpack = time_iters(warm * 2, iters * 10, || {
+        out_idx.clear();
+        simd::unpack_fixed_into(&idx_bytes, 0, 24, 4096, &mut out_idx);
+        std::hint::black_box(out_idx.len());
+    });
+    rec.report("simd/unpack-indices(w=24,n=4096)", &unpack, None);
+
+    if auto == Backend::Scalar {
+        for k in ["topk-scan", "qsgd-quantize", "fold-dense", "unpack-indices"] {
+            rec.value(&format!("simd/speedup-vs-scalar/{k}"), 1.0);
+        }
+        return;
+    }
+
+    simd::force_backend(Some(Backend::Scalar));
+    let s_scan = time_iters(warm * 2, iters * 10, || {
+        cand.clear();
+        std::hint::black_box(simd::scan_threshold_into(&x, thresh, d, &mut cand));
+    });
+    let s_qsgd = time_iters(warm * 2, iters * 10, || {
+        levels.clear();
+        neg.clear();
+        let norm = simd::norm2_sq_chunked(&x).sqrt() as f32;
+        let inv = if norm > 0.0 { 15.0 / norm } else { 0.0 };
+        simd::quantize_bucket_into(&x, inv, 15, &mut qrng, &mut levels, &mut neg);
+        std::hint::black_box(levels.len());
+    });
+    let s_fold = time_iters(warm * 2, iters * 10, || {
+        simd::add_scaled(&mut acc, &x, 0.125);
+        std::hint::black_box(acc[0]);
+    });
+    let s_unpack = time_iters(warm * 2, iters * 10, || {
+        out_idx.clear();
+        simd::unpack_fixed_into(&idx_bytes, 0, 24, 4096, &mut out_idx);
+        std::hint::black_box(out_idx.len());
+    });
+    simd::force_backend(None);
+
+    for (k, a, s) in [
+        ("topk-scan", &scan, &s_scan),
+        ("qsgd-quantize", &qsgd, &s_qsgd),
+        ("fold-dense", &fold, &s_fold),
+        ("unpack-indices", &unpack, &s_unpack),
+    ] {
+        let ratio = min_sample(a) / min_sample(s);
+        println!("  simd vs scalar ({k}): {:.2}x", 1.0 / ratio);
+        rec.value(&format!("simd/speedup-vs-scalar/{k}"), ratio);
+    }
 }
 
 fn bench_broadcast(rec: &mut Recorder, quick: bool, warm: usize, iters: usize) {

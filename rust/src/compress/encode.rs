@@ -26,6 +26,10 @@ use super::{Message, MessageBuf};
 /// Perf note (§Perf iteration 1): bits accumulate in a 64-bit register and
 /// spill to the byte buffer in whole bytes — 15–20× faster than the original
 /// bit-at-a-time writer on f32-heavy messages (see EXPERIMENTS.md §Perf).
+/// §Perf iteration 8: f32 runs and sign-bit runs go through the bulk paths
+/// ([`BitWriter::push_f32s`], [`BitWriter::push_bools`]), which byte-swap
+/// via the `crate::simd` kernels and merge whole 64-bit words at the
+/// current bit offset — byte-identical to the per-element calls.
 #[derive(Default)]
 pub struct BitWriter {
     buf: Vec<u8>,
@@ -34,6 +38,9 @@ pub struct BitWriter {
     nacc: u32,
     /// Total bits written.
     len: u64,
+    /// Reusable byte-image scratch for the bulk f32 path (steady-state
+    /// zero-alloc, like `buf`).
+    scratch: Vec<u8>,
 }
 
 impl BitWriter {
@@ -82,6 +89,73 @@ impl BitWriter {
 
     pub fn push_f32(&mut self, v: f32) {
         self.push_bits(v.to_bits() as u64, 32);
+    }
+
+    /// Bulk [`BitWriter::push_f32`] over a slice: the values' big-endian
+    /// byte images are materialized through the `crate::simd` byte-swap
+    /// kernel into reusable scratch, then merged at the current bit offset
+    /// in whole 64-bit words. Byte-identical to pushing each value
+    /// individually (asserted by `bulk_writer_paths_match_per_element`).
+    pub fn push_f32s(&mut self, vals: &[f32]) {
+        if vals.len() < 8 {
+            for &v in vals {
+                self.push_f32(v);
+            }
+            return;
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        crate::simd::be_bytes_into(vals, &mut scratch);
+        self.push_byte_stream(&scratch);
+        self.scratch = scratch;
+    }
+
+    /// Bulk [`BitWriter::push_bit`]: packs sign bits 32 per accumulator
+    /// word instead of one register round-trip per bit. Bit-identical to
+    /// the per-bit loop.
+    pub fn push_bools(&mut self, bits: &[bool]) {
+        let mut it = bits.chunks_exact(32);
+        for c in it.by_ref() {
+            let mut v = 0u64;
+            for &b in c {
+                v = (v << 1) | u64::from(b);
+            }
+            self.push_bits(v, 32);
+        }
+        for &b in it.remainder() {
+            self.push_bit(b);
+        }
+    }
+
+    /// Merge a whole byte stream at the current (arbitrary) bit offset —
+    /// the bulk twin of pushing each byte via `push_bits(b, 8)`. With
+    /// `k = nacc` pending bits, each emitted chunk carries the k carried
+    /// bits followed by the stream shifted right by k; the final k bits
+    /// stay in the accumulator. `nacc` is unchanged (`k < 8` throughout).
+    fn push_byte_stream(&mut self, bytes: &[u8]) {
+        let k = self.nacc;
+        self.len += 8 * bytes.len() as u64;
+        if k == 0 {
+            self.buf.extend_from_slice(bytes);
+            return;
+        }
+        let mut carry = self.acc;
+        let mut it = bytes.chunks_exact(8);
+        for c in it.by_ref() {
+            let mut w = 0u64;
+            for &b in c {
+                w = (w << 8) | b as u64;
+            }
+            let out = carry | (w >> k);
+            self.buf.extend_from_slice(&out.to_be_bytes());
+            carry = w << (64 - k);
+        }
+        for &b in it.remainder() {
+            let bb = (b as u64) << 56;
+            self.buf.push(((carry | (bb >> k)) >> 56) as u8);
+            carry = (b as u64) << (64 - k);
+        }
+        self.acc = carry;
     }
 
     /// Elias-γ code of v ≥ 1: (⌊log2 v⌋ zeros) ++ binary(v). Length
@@ -172,6 +246,30 @@ impl<'a> BitReader<'a> {
 
     pub fn read_f32(&mut self) -> Option<f32> {
         self.read_bits(32).map(|b| f32::from_bits(b as u32))
+    }
+
+    /// Bulk twin of `count` successive `read_bits(width)` calls
+    /// (`1 ≤ width ≤ 32`), appending each field to `out` through the
+    /// `crate::simd` fixed-width unpack kernel. The whole run is checked
+    /// against the stream bound up front (poisoning the cursor exactly like
+    /// `read_bits` on overrun); the decode entry's `bit_len ≤ 8·bytes.len()`
+    /// guard then makes every byte window the kernel touches in bounds.
+    pub(crate) fn read_fixed_u32s_into(
+        &mut self,
+        count: usize,
+        width: u32,
+        out: &mut Vec<u32>,
+    ) -> Option<()> {
+        debug_assert!((1..=32).contains(&width));
+        debug_assert!(self.len <= 8 * self.buf.len() as u64);
+        let total = count as u64 * width as u64;
+        if self.pos + total > self.len {
+            self.pos = self.len; // poison
+            return None;
+        }
+        crate::simd::unpack_fixed_into(self.buf, self.pos, width, count, out);
+        self.pos += total;
+        Some(())
     }
 
     pub fn read_elias_gamma(&mut self) -> Option<u64> {
@@ -383,8 +481,8 @@ fn read_indices_into(
     debug_assert!(idx.is_empty());
     let use_gaps = r.read_bit().or_truncated()?;
     idx.reserve(count);
-    let mut prev = 0u64;
     if use_gaps {
+        let mut prev = 0u64;
         for j in 0..count {
             let gap = r.read_elias_gamma().or_truncated()?;
             // gap ≥ 1, so indices after the first ascend strictly by
@@ -399,14 +497,20 @@ fn read_indices_into(
             prev = i;
         }
     } else {
+        // Bulk fixed-width unpack (§Perf iteration 8) followed by one
+        // validation sweep: every index < d and strictly ascending. The
+        // whole run is bounds-checked up front, so a stream that is both
+        // truncated AND carries a bad index now reports `Truncated` where
+        // the old interleaved loop could report `BadIndex` first — both
+        // are graceful rejections of the same corrupt stream.
         let n = ceil_log2(d as u64);
-        for j in 0..count {
-            let i = r.read_bits(n).or_truncated()?;
-            if i >= d as u64 || (j > 0 && i <= prev) {
+        r.read_fixed_u32s_into(count, n, idx).or_truncated()?;
+        let mut prev = 0u64;
+        for (j, &i) in idx.iter().enumerate() {
+            if i as u64 >= d as u64 || (j > 0 && i as u64 <= prev) {
                 return Err(DecodeError::BadIndex);
             }
-            idx.push(i as u32);
-            prev = i;
+            prev = i as u64;
         }
     }
     Ok(())
@@ -428,30 +532,22 @@ pub fn encode_into(msg: &Message, w: &mut BitWriter) {
     w.push_elias_gamma(msg.dim() as u64 + 1);
     match msg {
         Message::Dense { values } => {
-            for &v in values {
-                w.push_f32(v);
-            }
+            w.push_f32s(values);
         }
         Message::SparseF32 { d, idx, vals } => {
             w.push_elias_gamma(idx.len() as u64 + 1);
             write_indices(w, idx, *d);
-            for &v in vals {
-                w.push_f32(v);
-            }
+            w.push_f32s(vals);
         }
         Message::SparseSign { d, scale, idx, neg } => {
             w.push_elias_gamma(idx.len() as u64 + 1);
             w.push_f32(*scale);
             write_indices(w, idx, *d);
-            for &n in neg {
-                w.push_bit(n);
-            }
+            w.push_bools(neg);
         }
         Message::DenseSign { scale, neg } => {
             w.push_f32(*scale);
-            for &n in neg {
-                w.push_bit(n);
-            }
+            w.push_bools(neg);
         }
         Message::Qsgd { s, bucket, norms, post_scale, idx, levels, neg, .. } => {
             w.push_elias_gamma(*s as u64);
@@ -468,9 +564,7 @@ pub fn encode_into(msg: &Message, w: &mut BitWriter) {
             // One ℓ2-norm scale per bucket (the bucketing overhead is
             // counted honestly: 32 bits each).
             w.push_elias_gamma(norms.len() as u64 + 1);
-            for &nm in norms {
-                w.push_f32(nm);
-            }
+            w.push_f32s(norms);
             for (&l, &n) in levels.iter().zip(neg) {
                 if l == 0 {
                     // zero level: 1 bit
@@ -700,6 +794,72 @@ mod tests {
         assert_eq!(r.read_elias_gamma(), Some(77));
         assert_eq!(r.read_bit(), Some(true));
         assert_eq!(r.read_bit(), None);
+    }
+
+    #[test]
+    fn bulk_writer_paths_match_per_element() {
+        // push_f32s / push_bools must be byte-identical to the per-element
+        // calls at every starting bit misalignment and across the
+        // small-input fallback, 8-byte-word, and tail-byte merge paths.
+        let mut rng = Pcg64::seeded(91);
+        for misalign in 0..8u32 {
+            for n in [0usize, 1, 7, 8, 9, 31, 32, 33, 100] {
+                let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let bits: Vec<bool> = (0..n).map(|_| rng.f32() < 0.5).collect();
+                let mut a = BitWriter::new();
+                let mut b = BitWriter::new();
+                a.push_bits(0x2a, misalign);
+                b.push_bits(0x2a, misalign);
+                for &v in &vals {
+                    a.push_f32(v);
+                }
+                b.push_f32s(&vals);
+                for &s in &bits {
+                    a.push_bit(s);
+                }
+                b.push_bools(&bits);
+                let (ab, al) = a.into_bytes();
+                let (bb, bl) = b.into_bytes();
+                assert_eq!(al, bl, "misalign={misalign} n={n}");
+                assert_eq!(ab, bb, "misalign={misalign} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_fixed_reads_match_read_bits() {
+        let mut rng = Pcg64::seeded(93);
+        for width in [1u32, 5, 11, 17, 24, 32] {
+            for start in [0u32, 3, 7] {
+                let count = 50usize;
+                let vals: Vec<u32> =
+                    (0..count).map(|_| rng.next_u32() >> (32 - width)).collect();
+                let mut w = BitWriter::new();
+                w.push_bits(0, start);
+                for &v in &vals {
+                    w.push_bits(v as u64, width);
+                }
+                let (bytes, len) = w.into_bytes();
+                let mut r1 = BitReader::new(&bytes, len);
+                assert_eq!(r1.read_bits(start), Some(0));
+                let mut got = Vec::new();
+                assert_eq!(r1.read_fixed_u32s_into(count, width, &mut got), Some(()));
+                assert_eq!(got, vals, "width={width} start={start}");
+                // Scalar reference on the same stream.
+                let mut r2 = BitReader::new(&bytes, len);
+                assert_eq!(r2.read_bits(start), Some(0));
+                for (j, &v) in vals.iter().enumerate() {
+                    assert_eq!(r2.read_bits(width), Some(v as u64), "j={j}");
+                }
+                // Overrun: rejected up front, cursor poisoned like read_bits.
+                let mut r3 = BitReader::new(&bytes, len);
+                assert_eq!(r3.read_bits(start), Some(0));
+                let mut g3 = Vec::new();
+                assert_eq!(r3.read_fixed_u32s_into(count + 1, width, &mut g3), None);
+                assert!(g3.is_empty());
+                assert_eq!(r3.read_bit(), None);
+            }
+        }
     }
 
     #[test]

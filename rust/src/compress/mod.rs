@@ -15,7 +15,9 @@
 //! `Compressor::gamma(d)` returns the worst-case γ from Lemmas 1–3 so the
 //! theory-facing code (learning-rate pre-conditions, tests) can use it.
 // `unsafe` lives only in the fork-join core (`engine::parallel`,
-// `coordinator::master`) — everywhere else it is a compile error.
+// `coordinator::master`) and the vector backends (`simd::{avx2, neon}`) —
+// everywhere else, including all of `compress`, it is a compile error; the
+// kernels this module calls are `crate::simd`'s safe dispatch entry points.
 #![forbid(unsafe_code)]
 
 pub mod composed;
@@ -34,6 +36,7 @@ pub use quantize::{Qsgd, SignDense};
 pub use rans::{Codec, WireEncoder};
 pub use sparsify::{RandK, TopK};
 
+use crate::simd;
 use crate::util::rng::Pcg64;
 
 /// A compressed model update, as produced by a `Compressor`.
@@ -104,29 +107,39 @@ impl Message {
 
     /// `out += scale * C(x)`. This is the hot path on the master (aggregation)
     /// and on workers (memory update), so it avoids materializing the dense
-    /// vector for sparse messages.
+    /// vector for sparse messages. Dense-destination inner loops route
+    /// through the `crate::simd` fold kernels (scalar/AVX2/Neon,
+    /// bit-identical by construction — each coordinate still receives
+    /// exactly one unfused `scale * v` add); scattered sparse supports stay
+    /// scalar, except a fully contiguous index run, which folds as one
+    /// dense slice.
     pub fn add_into(&self, out: &mut [f32], scale: f32) {
         match self {
             Message::Dense { values } => {
                 debug_assert_eq!(out.len(), values.len());
-                for (o, v) in out.iter_mut().zip(values) {
-                    *o += scale * v;
-                }
+                simd::add_scaled(out, values, scale);
             }
             Message::SparseF32 { idx, vals, .. } => {
-                for (&i, &v) in idx.iter().zip(vals) {
-                    out[i as usize] += scale * v;
+                if let Some(base) = contiguous_run(idx) {
+                    simd::add_scaled(&mut out[base..base + vals.len()], vals, scale);
+                } else {
+                    for (&i, &v) in idx.iter().zip(vals) {
+                        out[i as usize] += scale * v;
+                    }
                 }
             }
             Message::SparseSign { scale: s, idx, neg, .. } => {
-                for (&i, &n) in idx.iter().zip(neg) {
-                    out[i as usize] += scale * if n { -s } else { *s };
+                if let Some(base) = contiguous_run(idx) {
+                    simd::add_signed(&mut out[base..base + neg.len()], neg, *s, scale);
+                } else {
+                    for (&i, &n) in idx.iter().zip(neg) {
+                        out[i as usize] += scale * if n { -s } else { *s };
+                    }
                 }
             }
             Message::DenseSign { scale: s, neg } => {
-                for (o, &n) in out.iter_mut().zip(neg) {
-                    *o += scale * if n { -s } else { *s };
-                }
+                debug_assert_eq!(out.len(), neg.len());
+                simd::add_signed(out, neg, *s, scale);
             }
             Message::Qsgd { s, bucket, norms, post_scale, idx, levels, neg, .. } => {
                 let unit0 = *post_scale / *s as f32;
@@ -252,10 +265,45 @@ impl Message {
     /// addition), so folding a partition of `0..d` chunk by chunk — each
     /// chunk processing messages in the same order — is bit-identical to
     /// one full `add_into` sequence.
+    ///
+    /// Like [`Message::add_into`], dense destinations and contiguous
+    /// in-range index runs use the `crate::simd` fold kernels; everything
+    /// else goes through the generic [`Message::for_each_nonzero_in`] walk.
     pub fn add_into_range(&self, out: &mut [f32], scale: f32, range: std::ops::Range<usize>) {
         debug_assert_eq!(out.len(), range.len());
         let lo = range.start;
-        self.for_each_nonzero_in(range, |i, v| out[i - lo] += scale * v);
+        match self {
+            Message::Dense { values } => {
+                simd::add_scaled(out, &values[range], scale);
+            }
+            Message::DenseSign { scale: s, neg } => {
+                simd::add_signed(out, &neg[range], *s, scale);
+            }
+            Message::SparseF32 { idx, vals, .. } => {
+                let (a, b) = idx_span(idx, &range);
+                if let Some(base) = contiguous_run(&idx[a..b]) {
+                    simd::add_scaled(&mut out[base - lo..base - lo + (b - a)], &vals[a..b], scale);
+                } else {
+                    for (&i, &v) in idx[a..b].iter().zip(&vals[a..b]) {
+                        out[i as usize - lo] += scale * v;
+                    }
+                }
+            }
+            Message::SparseSign { scale: s, idx, neg, .. } => {
+                let (a, b) = idx_span(idx, &range);
+                if let Some(base) = contiguous_run(&idx[a..b]) {
+                    let run = &mut out[base - lo..base - lo + (b - a)];
+                    simd::add_signed(run, &neg[a..b], *s, scale);
+                } else {
+                    for (&i, &n) in idx[a..b].iter().zip(&neg[a..b]) {
+                        out[i as usize - lo] += scale * if n { -s } else { *s };
+                    }
+                }
+            }
+            Message::Qsgd { .. } => {
+                self.for_each_nonzero_in(range, |i, v| out[i - lo] += scale * v);
+            }
+        }
     }
 }
 
@@ -265,6 +313,16 @@ fn idx_span(idx: &[u32], range: &std::ops::Range<usize>) -> (usize, usize) {
     let a = idx.partition_point(|&i| (i as usize) < range.start);
     let b = a + idx[a..].partition_point(|&i| (i as usize) < range.end);
     (a, b)
+}
+
+/// `Some(first)` iff the (strictly ascending) support is one contiguous run
+/// `first..first + len` — the case where a sparse fold is really a dense
+/// fold over a sub-slice and can take the vector kernel. O(1).
+fn contiguous_run(idx: &[u32]) -> Option<usize> {
+    match (idx.first(), idx.last()) {
+        (Some(&f), Some(&l)) if (l - f) as usize == idx.len() - 1 => Some(f as usize),
+        _ => None,
+    }
 }
 
 /// Reusable storage for [`Compressor::compress_into`].

@@ -9,7 +9,7 @@
 
 use super::{Compressor, Message, MessageBuf};
 use crate::util::rng::Pcg64;
-use crate::util::stats::{norm1, norm2};
+use crate::util::stats::norm1;
 
 /// QSGD stochastic quantizer with `s` positive levels (s = 2^bits − 1) and
 /// bucketing (AGL+17 §3.3): the input is quantized in contiguous buckets of
@@ -101,6 +101,15 @@ impl Qsgd {
     /// As `quantize_values`, appending into caller-provided (cleared)
     /// buffers — the allocation-free hot-path variant. RNG consumption and
     /// outputs are bit-identical to the wrapper.
+    ///
+    /// Both the bucket-norm pass and the per-element level/sign pass are
+    /// `crate::simd` kernels (§Perf iteration 8). The norm uses the fixed
+    /// stride-4 chunked f64 reduction (`simd::norm2_sq_chunked`) so every
+    /// backend performs the identical addition sequence — deterministic,
+    /// but intentionally *not* equal to the old sequential `norm2` sum, so
+    /// seeded QSGD trajectories differ from pre-SIMD releases. The level
+    /// kernel consumes one `rng.f32()` per element in element order on
+    /// every backend, keeping the stochastic-rounding stream in lockstep.
     pub fn quantize_values_into(
         &self,
         vals: &[f32],
@@ -117,7 +126,7 @@ impl Qsgd {
         neg.reserve(vals.len());
         let s = self.s as f32;
         for chunk in vals.chunks(self.bucket.max(1)) {
-            let norm = norm2(chunk) as f32;
+            let norm = crate::simd::norm2_sq_chunked(chunk).sqrt() as f32;
             norms.push(norm);
             if norm == 0.0 {
                 levels.extend(std::iter::repeat(0).take(chunk.len()));
@@ -125,18 +134,9 @@ impl Qsgd {
                 continue;
             }
             // §Perf iteration 3: one division per bucket instead of one per
-            // coordinate (the inner loop is then mul/floor/cmp only).
+            // coordinate (the inner kernel is then mul/floor/cmp only).
             let inv = s / norm;
-            for &v in chunk {
-                let a = v.abs() * inv; // in [0, s]
-                let lo = a.floor();
-                let p = a - lo; // probability of rounding up
-                let l = (lo as u32 + u32::from(rng.f32() < p)).min(self.s);
-                levels.push(l);
-                // Canonical form: a zero level carries no sign (the wire
-                // format spends no sign bit on zeros).
-                neg.push(l != 0 && v < 0.0);
-            }
+            crate::simd::quantize_bucket_into(chunk, inv, self.s, rng, levels, neg);
         }
     }
 }
@@ -210,7 +210,7 @@ impl Compressor for SignDense {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::stats::norm2_sq;
+    use crate::util::stats::{norm2, norm2_sq};
 
     #[test]
     fn qsgd_is_unbiased() {

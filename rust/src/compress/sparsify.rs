@@ -6,6 +6,10 @@
 //! is O(d) expected — no full sort of 25M-element gradients.
 
 use super::{Compressor, Message, MessageBuf};
+// The magnitude→u32 key mapping and the pack/scan passes are SIMD kernels
+// (scalar reference + AVX2/Neon twins in `crate::simd`); selection and
+// tie-breaking stay here so the chosen support is backend-independent.
+use crate::simd::ordered;
 use crate::util::rng::Pcg64;
 
 /// Reusable buffers for the sparsifier selection paths: Top_k's packed
@@ -196,11 +200,7 @@ fn top_k_packed_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut TopK
     let d = x.len();
     let packed = &mut scratch.packed;
     packed.clear();
-    packed.extend(
-        x.iter()
-            .enumerate()
-            .map(|(i, &v)| ((ordered(v.abs()) as u64) << 32) | i as u64),
-    );
+    crate::simd::pack_ordered_into(x, packed);
     // Ascending select: the k largest live in packed[d-k..].
     packed.select_nth_unstable(d - k);
     out.clear();
@@ -230,14 +230,8 @@ fn top_k_sampled_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut Top
     let cap = 8 * k;
     let cand = &mut scratch.cand;
     cand.clear();
-    for (i, &v) in x.iter().enumerate() {
-        let o = ordered(v.abs());
-        if o >= thresh {
-            if cand.len() == cap {
-                return false; // threshold too permissive — exact fallback
-            }
-            cand.push(((o as u64) << 32) | i as u64);
-        }
+    if !crate::simd::scan_threshold_into(x, thresh, cap, cand) {
+        return false; // threshold too permissive — exact fallback
     }
     if cand.len() < k {
         return false; // threshold too strict — exact fallback
@@ -248,16 +242,6 @@ fn top_k_sampled_into(x: &[f32], k: usize, out: &mut Vec<u32>, scratch: &mut Top
     out.extend(cand[n - k..].iter().map(|&p| p as u32));
     out.sort_unstable();
     true
-}
-
-/// Map f32 magnitude to a totally ordered u32 (for non-negative inputs).
-#[inline]
-fn ordered(v: f32) -> u32 {
-    if v.is_nan() {
-        0
-    } else {
-        v.to_bits()
-    }
 }
 
 #[cfg(test)]

@@ -35,6 +35,7 @@ pub mod grad;
 pub mod optim;
 pub mod protocol;
 pub mod runtime;
+pub mod simd;
 pub mod spec;
 pub mod topology;
 pub mod util;

@@ -1,0 +1,442 @@
+//! AVX2 kernels (x86_64). Compiled into every x86_64 build and selected at
+//! runtime by `simd::active_backend()`; nothing here executes unless
+//! `is_x86_feature_detected!("avx2")` returned true.
+//!
+//! Layout mirrors `scalar.rs` one function for one function. Every public
+//! wrapper re-proves the CPU feature with a hard `assert!` before entering
+//! its `#[target_feature]` inner fn — the check is a cached atomic load in
+//! std, and it makes each wrapper sound on its own (a direct call on a
+//! non-AVX2 machine panics instead of executing illegal instructions).
+//!
+//! Bit-identity: per-lane f32 ops (mul/add/floor/compare/abs) are the same
+//! IEEE operations the scalar loop performs, explicitly unfused (mul then
+//! add — never FMA); the one cross-lane reduction (`norm2_sq_chunked`)
+//! reproduces the scalar twin's fixed 4-accumulator chunking exactly.
+
+use crate::util::rng::Pcg64;
+use core::arch::x86_64::*;
+
+/// Cached CPU check shared by every wrapper's soundness assert.
+#[inline]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// `_mm256_shuffle_epi8` control for a byte swap within each 32-bit lane
+/// (controls are relative to each 128-bit half).
+static BSWAP32: [u8; 32] = bswap32_control();
+
+const fn bswap32_control() -> [u8; 32] {
+    let mut c = [0u8; 32];
+    let mut i = 0;
+    while i < 32 {
+        let r = (i & 15) as u8;
+        c[i] = (r & !3) | (3 - (r & 3));
+        i += 1;
+    }
+    c
+}
+
+/// `_mm256_shuffle_epi8` control for a byte swap within each 64-bit lane.
+static BSWAP64: [u8; 32] = bswap64_control();
+
+const fn bswap64_control() -> [u8; 32] {
+    let mut c = [0u8; 32];
+    let mut i = 0;
+    while i < 32 {
+        let r = (i & 15) as u8;
+        c[i] = (r & 8) | (7 - (r & 7));
+        i += 1;
+    }
+    c
+}
+
+pub(crate) fn pack_ordered_into(x: &[f32], out: &mut Vec<u64>) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { pack_ordered_avx2(x, out) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn pack_ordered_avx2(x: &[f32], out: &mut Vec<u64>) {
+    out.reserve(x.len());
+    let n8 = x.len() / 8 * 8;
+    let mut buf = [0u64; 8];
+    // SAFETY: all loads read 8 f32 at `base ≤ n8 − 8` inside `x`; stores
+    // target the stack buffer; AVX2 is guaranteed by the caller.
+    unsafe {
+        let abs_mask = _mm256_set1_epi32(0x7fff_ffff);
+        let nan_min = _mm256_set1_epi32(0x7f80_0000);
+        let step = _mm256_set1_epi64x(8);
+        let mut idx_lo = _mm256_set_epi64x(3, 2, 1, 0);
+        let mut idx_hi = _mm256_set_epi64x(7, 6, 5, 4);
+        for base in (0..n8).step_by(8) {
+            let bits = _mm256_loadu_si256(x.as_ptr().add(base) as *const __m256i);
+            let m = _mm256_and_si256(bits, abs_mask);
+            // ordered(): NaN (magnitude bits > inf's) collapses to key 0.
+            let nan = _mm256_cmpgt_epi32(m, nan_min);
+            let o = _mm256_andnot_si256(nan, m);
+            let lo4 = _mm256_castsi256_si128(o);
+            let hi4 = _mm256_extracti128_si256::<1>(o);
+            let w0 = _mm256_cvtepu32_epi64(lo4);
+            let w1 = _mm256_cvtepu32_epi64(hi4);
+            let k0 = _mm256_or_si256(_mm256_slli_epi64::<32>(w0), idx_lo);
+            let k1 = _mm256_or_si256(_mm256_slli_epi64::<32>(w1), idx_hi);
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, k0);
+            _mm256_storeu_si256(buf.as_mut_ptr().add(4) as *mut __m256i, k1);
+            out.extend_from_slice(&buf);
+            idx_lo = _mm256_add_epi64(idx_lo, step);
+            idx_hi = _mm256_add_epi64(idx_hi, step);
+        }
+    }
+    for (i, &v) in x.iter().enumerate().skip(n8) {
+        out.push(((super::scalar::ordered(v.abs()) as u64) << 32) | i as u64);
+    }
+}
+
+pub(crate) fn scan_threshold_into(x: &[f32], thresh: u32, cap: usize, cand: &mut Vec<u64>) -> bool {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { scan_threshold_avx2(x, thresh, cap, cand) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn scan_threshold_avx2(x: &[f32], thresh: u32, cap: usize, cand: &mut Vec<u64>) -> bool {
+    let n8 = x.len() / 8 * 8;
+    let mut obuf = [0u32; 8];
+    // SAFETY: loads read 8 f32 at `base ≤ n8 − 8` inside `x`; stores target
+    // the stack buffer; AVX2 is guaranteed by the caller.
+    unsafe {
+        let abs_mask = _mm256_set1_epi32(0x7fff_ffff);
+        let nan_min = _mm256_set1_epi32(0x7f80_0000);
+        // Keys are ≤ 0x7f80_0000 (and `thresh` is itself a key), so the
+        // signed epi32 compare below agrees with unsigned key order.
+        let tv = _mm256_set1_epi32(thresh as i32);
+        for base in (0..n8).step_by(8) {
+            let bits = _mm256_loadu_si256(x.as_ptr().add(base) as *const __m256i);
+            let m = _mm256_and_si256(bits, abs_mask);
+            let nan = _mm256_cmpgt_epi32(m, nan_min);
+            let o = _mm256_andnot_si256(nan, m);
+            let lt = _mm256_cmpgt_epi32(tv, o);
+            let fail = _mm256_movemask_ps(_mm256_castsi256_ps(lt)) as u32 & 0xff;
+            let mut pass = !fail & 0xff;
+            if pass == 0 {
+                continue;
+            }
+            _mm256_storeu_si256(obuf.as_mut_ptr() as *mut __m256i, o);
+            // Extract passing lanes in ascending index order, with the
+            // scalar path's exact cap-abort point.
+            while pass != 0 {
+                let j = pass.trailing_zeros() as usize;
+                pass &= pass - 1;
+                if cand.len() == cap {
+                    return false;
+                }
+                cand.push(((obuf[j] as u64) << 32) | (base + j) as u64);
+            }
+        }
+    }
+    for (i, &v) in x.iter().enumerate().skip(n8) {
+        let o = super::scalar::ordered(v.abs());
+        if o >= thresh {
+            if cand.len() == cap {
+                return false;
+            }
+            cand.push(((o as u64) << 32) | i as u64);
+        }
+    }
+    true
+}
+
+pub(crate) fn norm2_sq_chunked(x: &[f32]) -> f64 {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice argument.
+    unsafe { norm2_sq_avx2(x) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn norm2_sq_avx2(x: &[f32]) -> f64 {
+    let n4 = x.len() / 4 * 4;
+    // SAFETY: loads read 4 f32 at `base ≤ n4 − 4` inside `x`; AVX2 is
+    // guaranteed by the caller.
+    let mut total = unsafe {
+        let mut acc = _mm256_setzero_pd();
+        for base in (0..n4).step_by(4) {
+            let v4 = _mm_loadu_ps(x.as_ptr().add(base));
+            let d4 = _mm256_cvtps_pd(v4);
+            // mul then add — the scalar twin's unfused `a += v * v`.
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d4, d4));
+        }
+        // Fixed combine order (acc0 + acc2) + (acc1 + acc3), matching the
+        // scalar twin lane for lane.
+        let lo = _mm256_castpd256_pd128(acc);
+        let hi = _mm256_extractf128_pd::<1>(acc);
+        let pair = _mm_add_pd(lo, hi);
+        _mm_cvtsd_f64(pair) + _mm_cvtsd_f64(_mm_unpackhi_pd(pair, pair))
+    };
+    for &v in &x[n4..] {
+        let v = v as f64;
+        total += v * v;
+    }
+    total
+}
+
+pub(crate) fn quantize_bucket_into(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its (safe) arguments.
+    unsafe { quantize_bucket_avx2(chunk, inv, s, rng, levels, neg) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn quantize_bucket_avx2(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    let n8 = chunk.len() / 8 * 8;
+    let mut draws = [0f32; 8];
+    let mut lbuf = [0u32; 8];
+    // SAFETY: loads read 8 f32 at `base ≤ n8 − 8` inside `chunk` (or the
+    // stack arrays); stores target the stack buffer; AVX2 is guaranteed by
+    // the caller.
+    unsafe {
+        let abs_ps = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let inv_v = _mm256_set1_ps(inv);
+        let s_f = _mm256_set1_ps(s as f32);
+        let s_i = _mm256_set1_epi32(s as i32);
+        for base in (0..n8).step_by(8) {
+            // Pre-draw the lane block so the RNG stream is consumed in
+            // element order, exactly like the scalar loop.
+            for d in &mut draws {
+                *d = rng.f32();
+            }
+            let v = _mm256_loadu_ps(chunk.as_ptr().add(base));
+            let a = _mm256_mul_ps(_mm256_and_ps(v, abs_ps), inv_v);
+            let lo = _mm256_floor_ps(a);
+            let p = _mm256_sub_ps(a, lo);
+            let r = _mm256_loadu_ps(draws.as_ptr());
+            let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(a, a);
+            // Replicate the scalar saturating f32→u32 cast: clamp into
+            // [0, s] before the i32 conversion (minps returns its second
+            // operand on NaN, so NaN lanes read s here...), then zero NaN
+            // lanes (...and are corrected to the cast's NaN → 0).
+            let lo_c = _mm256_min_ps(lo, s_f);
+            let mut li = _mm256_cvttps_epi32(lo_c);
+            li = _mm256_andnot_si256(_mm256_castps_si256(nan), li);
+            // r < p, ordered (false on NaN) — the stochastic round-up.
+            let up = _mm256_cmp_ps::<_CMP_LT_OQ>(r, p);
+            li = _mm256_sub_epi32(li, _mm256_castps_si256(up));
+            li = _mm256_min_epu32(li, s_i);
+            _mm256_storeu_si256(lbuf.as_mut_ptr() as *mut __m256i, li);
+            for (j, &l) in lbuf.iter().enumerate() {
+                levels.push(l);
+                neg.push(l != 0 && chunk[base + j] < 0.0);
+            }
+        }
+    }
+    // Tail in element order — the scalar twin's exact expression.
+    for &v in &chunk[n8..] {
+        let a = v.abs() * inv;
+        let lo = a.floor();
+        let p = a - lo;
+        let l = (lo as u32 + u32::from(rng.f32() < p)).min(s);
+        levels.push(l);
+        neg.push(l != 0 && v < 0.0);
+    }
+}
+
+pub(crate) fn add_scaled(out: &mut [f32], vals: &[f32], scale: f32) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { add_scaled_avx2(out, vals, scale) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn add_scaled_avx2(out: &mut [f32], vals: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), vals.len());
+    let n = out.len().min(vals.len());
+    let n8 = n / 8 * 8;
+    // SAFETY: loads/stores touch 8 f32 at `base ≤ n8 − 8`, in bounds for
+    // both slices; AVX2 is guaranteed by the caller.
+    unsafe {
+        let sv = _mm256_set1_ps(scale);
+        for base in (0..n8).step_by(8) {
+            let o = _mm256_loadu_ps(out.as_ptr().add(base));
+            let v = _mm256_loadu_ps(vals.as_ptr().add(base));
+            // mul then add — the scalar `*o += scale * v`, unfused.
+            let r = _mm256_add_ps(o, _mm256_mul_ps(sv, v));
+            _mm256_storeu_ps(out.as_mut_ptr().add(base), r);
+        }
+    }
+    for (o, &v) in out[n8..n].iter_mut().zip(&vals[n8..n]) {
+        *o += scale * v;
+    }
+}
+
+pub(crate) fn add_signed(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { add_signed_avx2(out, neg, mag, scale) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn add_signed_avx2(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    debug_assert_eq!(out.len(), neg.len());
+    let n = out.len().min(neg.len());
+    let n8 = n / 8 * 8;
+    // `scale * (-mag)` is exactly `-(scale * mag)` (IEEE multiplication is
+    // sign-magnitude), so one product + a per-lane sign flip reproduces the
+    // scalar expression bit for bit.
+    let t = scale * mag;
+    // SAFETY: f32 loads/stores touch 8 elements at `base ≤ n8 − 8`; the
+    // `_mm_loadl_epi64` reads 8 `bool`s (guaranteed 0x00/0x01 bytes) at the
+    // same in-bounds offset; AVX2 is guaranteed by the caller.
+    unsafe {
+        let tv = _mm256_set1_ps(t);
+        for base in (0..n8).step_by(8) {
+            let b = _mm_loadl_epi64(neg.as_ptr().add(base) as *const __m128i);
+            let w = _mm256_cvtepu8_epi32(b);
+            let sign = _mm256_slli_epi32::<31>(w);
+            let val = _mm256_xor_ps(tv, _mm256_castsi256_ps(sign));
+            let o = _mm256_loadu_ps(out.as_ptr().add(base));
+            _mm256_storeu_ps(out.as_mut_ptr().add(base), _mm256_add_ps(o, val));
+        }
+    }
+    for (o, &nb) in out[n8..n].iter_mut().zip(&neg[n8..n]) {
+        *o += scale * if nb { -mag } else { mag };
+    }
+}
+
+pub(crate) fn be_bytes_into(vals: &[f32], out: &mut Vec<u8>) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    // SAFETY: the assert above establishes the `avx2` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { be_bytes_avx2(vals, out) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard).
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn be_bytes_avx2(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(4 * vals.len());
+    let n8 = vals.len() / 8 * 8;
+    let mut buf = [0u8; 32];
+    // SAFETY: loads read 8 f32 at `base ≤ n8 − 8` inside `vals` (and the
+    // static shuffle control); stores target the stack buffer; AVX2 is
+    // guaranteed by the caller.
+    unsafe {
+        let shuf = _mm256_loadu_si256(BSWAP32.as_ptr() as *const __m256i);
+        for base in (0..n8).step_by(8) {
+            let v = _mm256_loadu_si256(vals.as_ptr().add(base) as *const __m256i);
+            let b = _mm256_shuffle_epi8(v, shuf);
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, b);
+            out.extend_from_slice(&buf);
+        }
+    }
+    for &v in &vals[n8..] {
+        out.extend_from_slice(&v.to_bits().to_be_bytes());
+    }
+}
+
+pub(crate) fn unpack_fixed_into(
+    bytes: &[u8],
+    start_bit: u64,
+    width: u32,
+    count: usize,
+    out: &mut Vec<u32>,
+) {
+    assert!(have_avx2(), "simd::avx2 entered without AVX2 (dispatcher bug)");
+    if bytes.len() > i32::MAX as usize {
+        // Gather offsets are i32; wire buffers never get close, but stay
+        // sound rather than clever.
+        super::scalar::unpack_fixed_into(bytes, start_bit, width, count, out);
+        return;
+    }
+    // SAFETY: the assert above establishes the `avx2` target feature; the
+    // inner fn inherits the caller's in-bounds contract
+    // (`start_bit + count·width ≤ 8·bytes.len()`).
+    unsafe { unpack_fixed_avx2(bytes, start_bit, width, count, out) }
+}
+
+/// # Safety
+/// CPU must support AVX2 (the wrapper asserts the detection guard), and the
+/// whole run must lie inside `bytes` (`start_bit + count·width ≤
+/// 8·bytes.len()`), as for the scalar twin.
+#[target_feature(enable = "avx2")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn unpack_fixed_avx2(
+    bytes: &[u8],
+    start_bit: u64,
+    width: u32,
+    count: usize,
+    out: &mut Vec<u32>,
+) {
+    debug_assert!((1..=32).contains(&width));
+    out.reserve(count);
+    let mut j = 0usize;
+    let mut wbuf = [0u64; 4];
+    // SAFETY: each gather lane reads an 8-byte window at byte offset
+    // `off/8`; the loop condition admits a group only when the *last*
+    // lane's window ends inside `bytes` (offsets ascend with j), so every
+    // lane is in bounds. Stores target the stack buffer; AVX2 is
+    // guaranteed by the caller.
+    unsafe {
+        let shuf = _mm256_loadu_si256(BSWAP64.as_ptr() as *const __m256i);
+        let rcnt = _mm_cvtsi32_si128((64 - width) as i32);
+        while j + 4 <= count {
+            let off = |q: usize| start_bit + (j + q) as u64 * width as u64;
+            if (off(3) / 8) as usize + 8 > bytes.len() {
+                break;
+            }
+            let b = |q: usize| (off(q) / 8) as i32;
+            let sh = |q: usize| (off(q) % 8) as i64;
+            let vindex = _mm_set_epi32(b(3), b(2), b(1), b(0));
+            let g = _mm256_i32gather_epi64::<1>(bytes.as_ptr() as *const i64, vindex);
+            let be = _mm256_shuffle_epi8(g, shuf);
+            let shl = _mm256_sllv_epi64(be, _mm256_set_epi64x(sh(3), sh(2), sh(1), sh(0)));
+            let res = _mm256_srl_epi64(shl, rcnt);
+            _mm256_storeu_si256(wbuf.as_mut_ptr() as *mut __m256i, res);
+            out.extend(wbuf.iter().map(|&w| w as u32));
+            j += 4;
+        }
+    }
+    if j < count {
+        let done = j as u64 * width as u64;
+        super::scalar::unpack_fixed_into(bytes, start_bit + done, width, count - j, out);
+    }
+}

@@ -1,0 +1,463 @@
+//! Runtime-dispatched SIMD kernels for the compression hot path.
+//!
+//! The four hot stream kernels — top-k magnitude keying/threshold scan,
+//! QSGD level quantization, the sparse-fold inner loops, and wire bit
+//! pack/unpack — route through this module. `scalar.rs` is the reference
+//! semantics (portable, `#![forbid(unsafe_code)]`); `avx2.rs` (x86_64) and
+//! `neon.rs` (aarch64) are drop-in twins that must match it bit for bit,
+//! property-tested here and proven end-to-end by `tests/integration_simd.rs`
+//! (forced-scalar vs auto `History` parity).
+//!
+//! Dispatch idiom (after squirrel-json, SNIPPETS.md §2): one safe public
+//! entry point per kernel, detection done once and cached in a `OnceLock`,
+//! `#[target_feature]` inner fns behind wrappers that re-assert the guard.
+//!
+//! Controls:
+//! - `QSPARSE_FORCE_SCALAR=1` (any value but `0`) pins detection to the
+//!   portable path — the CI forced-fallback job runs the whole suite this
+//!   way.
+//! - [`force_backend`] is the in-process override benches and parity tests
+//!   use for A/B runs; requests for an unavailable backend clamp to scalar.
+//!
+//! Because every backend is bit-identical, flipping the override mid-run
+//! never changes any result — only which instructions compute it.
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub(crate) use scalar::ordered;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which kernel implementation the dispatcher selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference implementation (always available).
+    Scalar,
+    /// 8-lane f32 path on x86_64 with runtime-detected AVX2.
+    Avx2,
+    /// 4-lane f32 path on aarch64 with runtime-detected Neon.
+    Neon,
+}
+
+impl Backend {
+    /// Stable lowercase name (bench/report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// Detection result, computed once per process.
+static DETECTED: OnceLock<Backend> = OnceLock::new();
+
+/// In-process override: 0 = none, 1 = scalar, 2 = avx2, 3 = neon.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> Backend {
+    if std::env::var_os("QSPARSE_FORCE_SCALAR").is_some_and(|v| v != "0") {
+        return Backend::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return Backend::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return Backend::Neon;
+    }
+    Backend::Scalar
+}
+
+fn detected() -> Backend {
+    *DETECTED.get_or_init(detect)
+}
+
+/// The backend the next kernel call will use.
+pub fn active_backend() -> Backend {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Avx2,
+        3 => Backend::Neon,
+        _ => detected(),
+    }
+}
+
+/// Override dispatch for this process: `Some(backend)` pins every kernel to
+/// that implementation (clamped to [`Backend::Scalar`] if the request is
+/// not the detected backend — you can never force an ISA the CPU lacks, nor
+/// escape `QSPARSE_FORCE_SCALAR`); `None` restores auto detection. Returns
+/// the backend now in effect. Safe to flip at any time: all backends are
+/// bit-identical, so concurrent kernel calls see at most a different speed.
+pub fn force_backend(req: Option<Backend>) -> Backend {
+    let det = detected();
+    match req {
+        None => {
+            OVERRIDE.store(0, Ordering::Relaxed);
+            det
+        }
+        Some(b) => {
+            let eff = if b == det { b } else { Backend::Scalar };
+            let code = match eff {
+                Backend::Scalar => 1,
+                Backend::Avx2 => 2,
+                Backend::Neon => 3,
+            };
+            OVERRIDE.store(code, Ordering::Relaxed);
+            eff
+        }
+    }
+}
+
+/// Append `(ordered(|x_i|) << 32) | i` for every element — the packed
+/// introselect array of top-k selection. See [`scalar::pack_ordered_into`].
+pub fn pack_ordered_into(x: &[f32], out: &mut Vec<u64>) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::pack_ordered_into(x, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::pack_ordered_into(x, out),
+        _ => scalar::pack_ordered_into(x, out),
+    }
+}
+
+/// Append packed candidates with magnitude key `≥ thresh` in index order;
+/// `false` aborts the moment the cap would be exceeded. See
+/// [`scalar::scan_threshold_into`].
+pub fn scan_threshold_into(x: &[f32], thresh: u32, cap: usize, cand: &mut Vec<u64>) -> bool {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::scan_threshold_into(x, thresh, cap, cand),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::scan_threshold_into(x, thresh, cap, cand),
+        _ => scalar::scan_threshold_into(x, thresh, cap, cand),
+    }
+}
+
+/// Σ xᵢ² in f64 with the fixed stride-4 chunked reduction (identical
+/// addition sequence on every backend). See [`scalar::norm2_sq_chunked`].
+pub fn norm2_sq_chunked(x: &[f32]) -> f64 {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::norm2_sq_chunked(x),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::norm2_sq_chunked(x),
+        _ => scalar::norm2_sq_chunked(x),
+    }
+}
+
+/// One QSGD bucket's stochastic levels + signs; consumes exactly one
+/// `rng.f32()` per element in element order on every backend. See
+/// [`scalar::quantize_bucket_into`].
+pub fn quantize_bucket_into(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut crate::util::rng::Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::quantize_bucket_into(chunk, inv, s, rng, levels, neg),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::quantize_bucket_into(chunk, inv, s, rng, levels, neg),
+        _ => scalar::quantize_bucket_into(chunk, inv, s, rng, levels, neg),
+    }
+}
+
+/// `out[i] += scale * vals[i]` — dense fold inner loop. See
+/// [`scalar::add_scaled`].
+pub fn add_scaled(out: &mut [f32], vals: &[f32], scale: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::add_scaled(out, vals, scale),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::add_scaled(out, vals, scale),
+        _ => scalar::add_scaled(out, vals, scale),
+    }
+}
+
+/// `out[i] += scale * (neg[i] ? -mag : mag)` — sign-message fold inner
+/// loop. See [`scalar::add_signed`].
+pub fn add_signed(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::add_signed(out, neg, mag, scale),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::add_signed(out, neg, mag, scale),
+        _ => scalar::add_signed(out, neg, mag, scale),
+    }
+}
+
+/// Append each f32's big-endian byte image (`BitWriter` bulk-write helper).
+/// See [`scalar::be_bytes_into`].
+pub fn be_bytes_into(vals: &[f32], out: &mut Vec<u8>) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::be_bytes_into(vals, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::be_bytes_into(vals, out),
+        _ => scalar::be_bytes_into(vals, out),
+    }
+}
+
+/// Append `count` fixed-`width`-bit big-endian fields starting at absolute
+/// bit `start_bit`. Caller guarantees the run lies inside `bytes`. See
+/// [`scalar::unpack_fixed_into`].
+pub fn unpack_fixed_into(
+    bytes: &[u8],
+    start_bit: u64,
+    width: u32,
+    count: usize,
+    out: &mut Vec<u32>,
+) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::unpack_fixed_into(bytes, start_bit, width, count, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon::unpack_fixed_into(bytes, start_bit, width, count, out),
+        _ => scalar::unpack_fixed_into(bytes, start_bit, width, count, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Adversarial f32 soup: NaNs (both signs, odd payloads), ±0,
+    /// denormals, ±inf, extremes, exact ties, then deterministic noise.
+    /// Lengths are chosen by callers to straddle every lane boundary.
+    fn adversarial(len: usize, seed: u64) -> Vec<f32> {
+        let specials = [
+            f32::NAN,
+            -f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN, nonstandard payload
+            f32::from_bits(0xffc0_0001), // -NaN, nonstandard payload
+            0.0,
+            -0.0,
+            f32::from_bits(1), // smallest denormal
+            -f32::from_bits(1),
+            f32::MIN_POSITIVE, // smallest normal
+            f32::MIN_POSITIVE / 2.0, // denormal
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+            1.0, // exact tie with the previous 1.0 pair
+            0.5,
+            -0.5,
+            0.5,
+        ];
+        let mut rng = Pcg64::seeded(seed);
+        (0..len)
+            .map(|i| {
+                if i % 3 == 0 && i / 3 < specials.len() {
+                    specials[i / 3]
+                } else {
+                    rng.f32_range(-4.0, 4.0)
+                }
+            })
+            .collect()
+    }
+
+    /// Lengths straddling the 4-lane and 8-lane boundaries, plus empties.
+    const LENS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 40, 100];
+
+    #[test]
+    fn backend_forcing_round_trips() {
+        let det = detected();
+        assert_eq!(force_backend(Some(Backend::Scalar)), Backend::Scalar);
+        assert_eq!(active_backend(), Backend::Scalar);
+        // Requesting an unavailable ISA clamps to scalar; requesting the
+        // detected one is honored.
+        assert_eq!(force_backend(Some(det)), det);
+        assert_eq!(force_backend(None), det);
+        assert_eq!(active_backend(), det);
+    }
+
+    #[test]
+    fn ordered_key_is_monotone_and_nan_lowest() {
+        assert_eq!(ordered(f32::NAN), 0);
+        assert_eq!(ordered(f32::from_bits(0x7fc0_dead)), 0);
+        assert_eq!(ordered(0.0), 0);
+        let seq = [
+            0.0,
+            f32::from_bits(1),
+            f32::MIN_POSITIVE,
+            0.5,
+            1.0,
+            2.0,
+            f32::MAX,
+            f32::INFINITY,
+        ];
+        for w in seq.windows(2) {
+            assert!(ordered(w[0]) <= ordered(w[1]), "{:?}", w);
+        }
+    }
+
+    #[test]
+    fn pack_ordered_matches_scalar() {
+        for &len in LENS {
+            let x = adversarial(len, 11 + len as u64);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            scalar::pack_ordered_into(&x, &mut a);
+            pack_ordered_into(&x, &mut b);
+            assert_eq!(a, b, "len={len} backend={:?}", active_backend());
+        }
+    }
+
+    #[test]
+    fn scan_threshold_matches_scalar() {
+        for &len in LENS {
+            let x = adversarial(len, 23 + len as u64);
+            // Thresholds are magnitude keys, including 0 (everything
+            // passes) and u32 keys of mid/huge magnitudes.
+            for thresh in [0, ordered(0.25), ordered(1.0), ordered(f32::MAX)] {
+                for cap in [0, 1, len / 2, len, len + 8] {
+                    let mut a = Vec::new();
+                    let mut b = Vec::new();
+                    let ra = scalar::scan_threshold_into(&x, thresh, cap, &mut a);
+                    let rb = scan_threshold_into(&x, thresh, cap, &mut b);
+                    // Abort point and partial contents must agree exactly.
+                    assert_eq!(ra, rb, "len={len} thresh={thresh} cap={cap}");
+                    assert_eq!(a, b, "len={len} thresh={thresh} cap={cap}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn norm2_matches_scalar_bitwise() {
+        for &len in LENS {
+            // Finite-only soup: the norm consumer (QSGD) never feeds
+            // non-finite buckets, but denormals and ties stay in.
+            let mut x = adversarial(len, 37 + len as u64);
+            for v in &mut x {
+                if !v.is_finite() {
+                    *v = 3.25;
+                }
+            }
+            let a = scalar::norm2_sq_chunked(&x);
+            let b = norm2_sq_chunked(&x);
+            assert_eq!(a.to_bits(), b.to_bits(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn quantize_matches_scalar_with_rng_lockstep() {
+        for &len in LENS {
+            let mut x = adversarial(len, 41 + len as u64);
+            for v in &mut x {
+                if !v.is_finite() {
+                    *v = -0.75;
+                }
+            }
+            for s in [1u32, 3, 15, 255] {
+                let norm = scalar::norm2_sq_chunked(&x).sqrt() as f32;
+                let inv = if norm > 0.0 { s as f32 / norm } else { 0.0 };
+                let mut rng_a = Pcg64::new(9 + len as u64, s as u64);
+                let mut rng_b = rng_a.clone();
+                let (mut la, mut na) = (Vec::new(), Vec::new());
+                let (mut lb, mut nb) = (Vec::new(), Vec::new());
+                scalar::quantize_bucket_into(&x, inv, s, &mut rng_a, &mut la, &mut na);
+                quantize_bucket_into(&x, inv, s, &mut rng_b, &mut lb, &mut nb);
+                assert_eq!(la, lb, "levels len={len} s={s}");
+                assert_eq!(na, nb, "signs len={len} s={s}");
+                // The RNG streams must stay in lockstep (same number of
+                // draws in the same order).
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "rng len={len} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_scaled_matches_scalar_bitwise() {
+        for &len in LENS {
+            let base = adversarial(len, 53 + len as u64);
+            let vals = adversarial(len, 59 + len as u64);
+            for scale in [1.0f32, -1.0, 0.5, -0.03125, 1.0 / 3.0] {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                scalar::add_scaled(&mut a, &vals, scale);
+                add_scaled(&mut b, &vals, scale);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "len={len} scale={scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_signed_matches_scalar_bitwise() {
+        for &len in LENS {
+            let base = adversarial(len, 61 + len as u64);
+            let mut rng = Pcg64::seeded(67 + len as u64);
+            let neg: Vec<bool> = (0..len).map(|_| rng.f32() < 0.5).collect();
+            for (mag, scale) in [
+                (0.75f32, 1.0f32),
+                (0.75, -0.5),
+                (0.0, 1.0),
+                (-0.0, 1.0),
+                (f32::NAN, 0.5),
+                (f32::MIN_POSITIVE / 4.0, 3.0),
+            ] {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                scalar::add_signed(&mut a, &neg, mag, scale);
+                add_signed(&mut b, &neg, mag, scale);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "len={len} mag={mag} scale={scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn be_bytes_matches_scalar() {
+        for &len in LENS {
+            let x = adversarial(len, 71 + len as u64);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            scalar::be_bytes_into(&x, &mut a);
+            be_bytes_into(&x, &mut b);
+            assert_eq!(a, b, "len={len}");
+        }
+    }
+
+    #[test]
+    fn unpack_fixed_matches_scalar() {
+        let mut rng = Pcg64::seeded(79);
+        // Random byte streams; every width, several misaligned starts,
+        // counts that force both the windowed and the zero-padded tail
+        // paths (the stream's final bytes).
+        for trial in 0..40u64 {
+            let nbytes = 9 + (trial as usize % 57);
+            let bytes: Vec<u8> = (0..nbytes).map(|_| rng.next_u32() as u8).collect();
+            for width in [1u32, 2, 3, 5, 7, 8, 13, 16, 19, 24, 27, 31, 32] {
+                for start_bit in [0u64, 1, 5, 7, 8, 13] {
+                    let avail = 8 * nbytes as u64 - start_bit;
+                    let count = (avail / width as u64) as usize;
+                    let mut a = Vec::new();
+                    let mut b = Vec::new();
+                    scalar::unpack_fixed_into(&bytes, start_bit, width, count, &mut a);
+                    unpack_fixed_into(&bytes, start_bit, width, count, &mut b);
+                    assert_eq!(a, b, "nbytes={nbytes} width={width} start={start_bit}");
+                }
+            }
+        }
+    }
+}

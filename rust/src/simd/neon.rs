@@ -1,0 +1,347 @@
+//! Neon kernels (aarch64). Compiled into every aarch64 build and selected at
+//! runtime by `simd::active_backend()`; nothing here executes unless
+//! `is_aarch64_feature_detected!("neon")` returned true (Neon is baseline on
+//! aarch64, but the dispatcher still proves it).
+//!
+//! Layout mirrors `scalar.rs` one function for one function; see `avx2.rs`
+//! for the wrapper/inner-fn soundness idiom. Bit-identity notes:
+//!
+//! - f32 lane math is mul-then-add (`vmulq`/`vaddq`) — never `vfmaq`.
+//! - `vcvtq_u32_f32` is FCVTZU, which already has Rust's saturating
+//!   `as u32` cast semantics (NaN → 0, negative → 0, overflow → MAX), so
+//!   the quantizer needs no NaN/clamp fix-up here.
+//! - `norm2_sq_chunked` keeps the fixed stride-4 chunking as two f64×2
+//!   accumulators: lanes [acc0, acc1] and [acc2, acc3], combined
+//!   `(acc0 + acc2) + (acc1 + acc3)` exactly like the scalar twin.
+//! - `unpack_fixed_into` delegates to scalar: aarch64 has no gather, and
+//!   the per-field work is a handful of scalar shifts already.
+
+use crate::util::rng::Pcg64;
+use core::arch::aarch64::*;
+
+/// Cached CPU check shared by every wrapper's soundness assert.
+#[inline]
+fn have_neon() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+pub(crate) fn pack_ordered_into(x: &[f32], out: &mut Vec<u64>) {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { pack_ordered_neon(x, out) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn pack_ordered_neon(x: &[f32], out: &mut Vec<u64>) {
+    out.reserve(x.len());
+    let n4 = x.len() / 4 * 4;
+    let mut obuf = [0u32; 4];
+    // SAFETY: loads read 4 f32 at `base ≤ n4 − 4` inside `x`; stores target
+    // the stack buffer; Neon is guaranteed by the caller.
+    unsafe {
+        let abs_mask = vdupq_n_u32(0x7fff_ffff);
+        let nan_min = vdupq_n_u32(0x7f80_0000);
+        for base in (0..n4).step_by(4) {
+            let bits = vld1q_u32(x.as_ptr().add(base) as *const u32);
+            let m = vandq_u32(bits, abs_mask);
+            // ordered(): NaN (magnitude bits > inf's) collapses to key 0.
+            let nan = vcgtq_u32(m, nan_min);
+            let o = vbicq_u32(m, nan);
+            vst1q_u32(obuf.as_mut_ptr(), o);
+            for (j, &k) in obuf.iter().enumerate() {
+                out.push(((k as u64) << 32) | (base + j) as u64);
+            }
+        }
+    }
+    for (i, &v) in x.iter().enumerate().skip(n4) {
+        out.push(((super::scalar::ordered(v.abs()) as u64) << 32) | i as u64);
+    }
+}
+
+pub(crate) fn scan_threshold_into(x: &[f32], thresh: u32, cap: usize, cand: &mut Vec<u64>) -> bool {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { scan_threshold_neon(x, thresh, cap, cand) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn scan_threshold_neon(x: &[f32], thresh: u32, cap: usize, cand: &mut Vec<u64>) -> bool {
+    let n4 = x.len() / 4 * 4;
+    let mut obuf = [0u32; 4];
+    let mut pbuf = [0u32; 4];
+    // SAFETY: loads read 4 f32 at `base ≤ n4 − 4` inside `x`; stores target
+    // the stack buffers; Neon is guaranteed by the caller.
+    unsafe {
+        let abs_mask = vdupq_n_u32(0x7fff_ffff);
+        let nan_min = vdupq_n_u32(0x7f80_0000);
+        let tv = vdupq_n_u32(thresh);
+        for base in (0..n4).step_by(4) {
+            let bits = vld1q_u32(x.as_ptr().add(base) as *const u32);
+            let m = vandq_u32(bits, abs_mask);
+            let nan = vcgtq_u32(m, nan_min);
+            let o = vbicq_u32(m, nan);
+            let pass = vcgeq_u32(o, tv);
+            if vmaxvq_u32(pass) == 0 {
+                continue;
+            }
+            vst1q_u32(obuf.as_mut_ptr(), o);
+            vst1q_u32(pbuf.as_mut_ptr(), pass);
+            // Extract passing lanes in ascending index order, with the
+            // scalar path's exact cap-abort point.
+            for (j, (&pb, &ob)) in pbuf.iter().zip(obuf.iter()).enumerate() {
+                if pb != 0 {
+                    if cand.len() == cap {
+                        return false;
+                    }
+                    cand.push(((ob as u64) << 32) | (base + j) as u64);
+                }
+            }
+        }
+    }
+    for (i, &v) in x.iter().enumerate().skip(n4) {
+        let o = super::scalar::ordered(v.abs());
+        if o >= thresh {
+            if cand.len() == cap {
+                return false;
+            }
+            cand.push(((o as u64) << 32) | i as u64);
+        }
+    }
+    true
+}
+
+pub(crate) fn norm2_sq_chunked(x: &[f32]) -> f64 {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice argument.
+    unsafe { norm2_sq_neon(x) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn norm2_sq_neon(x: &[f32]) -> f64 {
+    let n4 = x.len() / 4 * 4;
+    // SAFETY: loads read 4 f32 at `base ≤ n4 − 4` inside `x`; Neon is
+    // guaranteed by the caller.
+    let mut total = unsafe {
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for base in (0..n4).step_by(4) {
+            let v4 = vld1q_f32(x.as_ptr().add(base));
+            let d01 = vcvt_f64_f32(vget_low_f32(v4));
+            let d23 = vcvt_high_f64_f32(v4);
+            // mul then add — the scalar twin's unfused `a += v * v`.
+            acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+        }
+        // Fixed combine order (acc0 + acc2) + (acc1 + acc3), matching the
+        // scalar twin lane for lane.
+        let pair = vaddq_f64(acc01, acc23);
+        vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair)
+    };
+    for &v in &x[n4..] {
+        let v = v as f64;
+        total += v * v;
+    }
+    total
+}
+
+pub(crate) fn quantize_bucket_into(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its (safe) arguments.
+    unsafe { quantize_bucket_neon(chunk, inv, s, rng, levels, neg) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn quantize_bucket_neon(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    let n4 = chunk.len() / 4 * 4;
+    let mut draws = [0f32; 4];
+    let mut lbuf = [0u32; 4];
+    // SAFETY: loads read 4 f32 at `base ≤ n4 − 4` inside `chunk` (or the
+    // stack arrays); stores target the stack buffer; Neon is guaranteed by
+    // the caller.
+    unsafe {
+        let inv_v = vdupq_n_f32(inv);
+        let s_v = vdupq_n_u32(s);
+        for base in (0..n4).step_by(4) {
+            // Pre-draw the lane block so the RNG stream is consumed in
+            // element order, exactly like the scalar loop.
+            for d in &mut draws {
+                *d = rng.f32();
+            }
+            let v = vld1q_f32(chunk.as_ptr().add(base));
+            let a = vmulq_f32(vabsq_f32(v), inv_v);
+            let lo = vrndmq_f32(a); // FRINTM = floor, NaN-propagating
+            let p = vsubq_f32(a, lo);
+            let r = vld1q_f32(draws.as_ptr());
+            // FCVTZU: NaN → 0, overflow → MAX — exactly Rust's `as u32`.
+            let mut li = vcvtq_u32_f32(lo);
+            // r < p, false on NaN p — the stochastic round-up; all-ones
+            // mask acts as −1, so subtracting adds the increment. (`li`
+            // can't be MAX when the mask fires: a ≥ 2²³ means p = 0.)
+            let up = vcltq_f32(r, p);
+            li = vsubq_u32(li, up);
+            li = vminq_u32(li, s_v);
+            vst1q_u32(lbuf.as_mut_ptr(), li);
+            for (j, &l) in lbuf.iter().enumerate() {
+                levels.push(l);
+                neg.push(l != 0 && chunk[base + j] < 0.0);
+            }
+        }
+    }
+    // Tail in element order — the scalar twin's exact expression.
+    for &v in &chunk[n4..] {
+        let a = v.abs() * inv;
+        let lo = a.floor();
+        let p = a - lo;
+        let l = (lo as u32 + u32::from(rng.f32() < p)).min(s);
+        levels.push(l);
+        neg.push(l != 0 && v < 0.0);
+    }
+}
+
+pub(crate) fn add_scaled(out: &mut [f32], vals: &[f32], scale: f32) {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { add_scaled_neon(out, vals, scale) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn add_scaled_neon(out: &mut [f32], vals: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), vals.len());
+    let n = out.len().min(vals.len());
+    let n4 = n / 4 * 4;
+    // SAFETY: loads/stores touch 4 f32 at `base ≤ n4 − 4`, in bounds for
+    // both slices; Neon is guaranteed by the caller.
+    unsafe {
+        let sv = vdupq_n_f32(scale);
+        for base in (0..n4).step_by(4) {
+            let o = vld1q_f32(out.as_ptr().add(base));
+            let v = vld1q_f32(vals.as_ptr().add(base));
+            // mul then add — the scalar `*o += scale * v`, unfused.
+            let r = vaddq_f32(o, vmulq_f32(sv, v));
+            vst1q_f32(out.as_mut_ptr().add(base), r);
+        }
+    }
+    for (o, &v) in out[n4..n].iter_mut().zip(&vals[n4..n]) {
+        *o += scale * v;
+    }
+}
+
+pub(crate) fn add_signed(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { add_signed_neon(out, neg, mag, scale) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn add_signed_neon(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    debug_assert_eq!(out.len(), neg.len());
+    let n = out.len().min(neg.len());
+    let n4 = n / 4 * 4;
+    // `scale * (-mag)` is exactly `-(scale * mag)` (IEEE multiplication is
+    // sign-magnitude), so one product + a per-lane sign flip reproduces the
+    // scalar expression bit for bit.
+    let t = scale * mag;
+    // SAFETY: loads/stores touch 4 f32 at `base ≤ n4 − 4` inside `out`; the
+    // sign array is built from in-bounds `neg` reads; Neon is guaranteed by
+    // the caller.
+    unsafe {
+        let tv = vreinterpretq_u32_f32(vdupq_n_f32(t));
+        for base in (0..n4).step_by(4) {
+            let sbits = [
+                (neg[base] as u32) << 31,
+                (neg[base + 1] as u32) << 31,
+                (neg[base + 2] as u32) << 31,
+                (neg[base + 3] as u32) << 31,
+            ];
+            let sign = vld1q_u32(sbits.as_ptr());
+            let val = vreinterpretq_f32_u32(veorq_u32(tv, sign));
+            let o = vld1q_f32(out.as_ptr().add(base));
+            vst1q_f32(out.as_mut_ptr().add(base), vaddq_f32(o, val));
+        }
+    }
+    for (o, &nb) in out[n4..n].iter_mut().zip(&neg[n4..n]) {
+        *o += scale * if nb { -mag } else { mag };
+    }
+}
+
+pub(crate) fn be_bytes_into(vals: &[f32], out: &mut Vec<u8>) {
+    assert!(have_neon(), "simd::neon entered without Neon (dispatcher bug)");
+    // SAFETY: the assert above establishes the `neon` target feature, the
+    // only contract the inner fn has beyond its slice arguments.
+    unsafe { be_bytes_neon(vals, out) }
+}
+
+/// # Safety
+/// CPU must support Neon (the wrapper asserts the detection guard).
+#[target_feature(enable = "neon")]
+#[allow(unused_unsafe)] // value intrinsics are safe here on newer toolchains
+unsafe fn be_bytes_neon(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(4 * vals.len());
+    let n4 = vals.len() / 4 * 4;
+    let mut buf = [0u8; 16];
+    // SAFETY: loads read 16 bytes (4 f32) at `base ≤ n4 − 4` inside `vals`;
+    // stores target the stack buffer; Neon is guaranteed by the caller.
+    unsafe {
+        for base in (0..n4).step_by(4) {
+            let v = vld1q_u8(vals.as_ptr().add(base) as *const u8);
+            // Byte swap within each 32-bit element → big-endian images.
+            let b = vrev32q_u8(v);
+            vst1q_u8(buf.as_mut_ptr(), b);
+            out.extend_from_slice(&buf);
+        }
+    }
+    for &v in &vals[n4..] {
+        out.extend_from_slice(&v.to_bits().to_be_bytes());
+    }
+}
+
+pub(crate) fn unpack_fixed_into(
+    bytes: &[u8],
+    start_bit: u64,
+    width: u32,
+    count: usize,
+    out: &mut Vec<u32>,
+) {
+    // No gather on aarch64, and each field is already a couple of scalar
+    // shifts through one 8-byte window — the portable kernel is the fast
+    // path here. (The wrapper keeps the backend surface uniform.)
+    super::scalar::unpack_fixed_into(bytes, start_bit, width, count, out);
+}

@@ -1,0 +1,183 @@
+//! Portable reference implementations of the SIMD kernels.
+//!
+//! These are the *semantics* of every kernel in this module: the AVX2 and
+//! Neon paths must reproduce each function here bit for bit (property-tested
+//! in `simd::tests` and end-to-end via forced-scalar `History` parity).
+//! They are also the fallback the dispatcher selects when no vector ISA is
+//! detected or `QSPARSE_FORCE_SCALAR` is set, so they stay optimized scalar
+//! code, not naive sketches.
+//!
+//! Bit-identity rules encoded here (ROADMAP "SIMD the scalar kernels"):
+//! per-element f32 work (quantization decisions, magnitude keys, packing)
+//! vectorizes freely because lanes are independent; the one cross-element
+//! f32 reduction (`norm2_sq_chunked`) uses a *fixed* 4-accumulator stride-4
+//! chunking with a fixed combine order, so every backend — scalar, 4-lane
+//! Neon, 8-lane AVX2 — performs the identical sequence of f64 additions.
+
+#![forbid(unsafe_code)]
+
+use crate::util::rng::Pcg64;
+
+/// Map an f32 magnitude (non-negative input) to a totally ordered u32 key:
+/// the raw IEEE bits, with every NaN collapsed to 0 (smallest key, so NaNs
+/// lose all top-k comparisons). For non-NaN `v ≥ 0` the bit pattern is
+/// monotone in the value, so u32 order = magnitude order.
+#[inline]
+pub(crate) fn ordered(v: f32) -> u32 {
+    if v.is_nan() {
+        0
+    } else {
+        v.to_bits()
+    }
+}
+
+/// Append `(ordered(|x_i|) << 32) | i` for every element — the flat
+/// introselect array of `top_k_packed_into` (magnitude key in the high
+/// half so u64 order = magnitude order, index in the low half).
+pub(crate) fn pack_ordered_into(x: &[f32], out: &mut Vec<u64>) {
+    out.reserve(x.len());
+    out.extend(
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| ((ordered(v.abs()) as u64) << 32) | i as u64),
+    );
+}
+
+/// Append the packed `(key << 32) | i` of every element whose magnitude key
+/// is `≥ thresh`, in ascending index order, aborting with `false` the
+/// moment a `cap + 1`-th candidate appears (the sampled top-k's blow-up
+/// fallback). Returns `true` when the scan completed under the cap.
+pub(crate) fn scan_threshold_into(
+    x: &[f32],
+    thresh: u32,
+    cap: usize,
+    cand: &mut Vec<u64>,
+) -> bool {
+    for (i, &v) in x.iter().enumerate() {
+        let o = ordered(v.abs());
+        if o >= thresh {
+            if cand.len() == cap {
+                return false;
+            }
+            cand.push(((o as u64) << 32) | i as u64);
+        }
+    }
+    true
+}
+
+/// Σ xᵢ² in f64, with a FIXED stride-4 chunked reduction: four f64
+/// accumulators (lane j sums elements 4·i + j), combined as
+/// `(acc0 + acc2) + (acc1 + acc3)`, then the `len % 4` tail added in
+/// element order. Every backend performs this exact addition sequence —
+/// the chunking is part of the kernel's definition, like the sharded
+/// fold's worker-index order — so QSGD bucket norms are identical across
+/// scalar/AVX2/Neon (and deterministic, but NOT equal to a naive
+/// sequential sum; `Qsgd` documents the switch).
+pub(crate) fn norm2_sq_chunked(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut it = x.chunks_exact(4);
+    for c in it.by_ref() {
+        for (a, &v) in acc.iter_mut().zip(c) {
+            let v = v as f64;
+            *a += v * v;
+        }
+    }
+    let mut total = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for &v in it.remainder() {
+        let v = v as f64;
+        total += v * v;
+    }
+    total
+}
+
+/// One QSGD bucket, after the norm pass: per element, stochastic level
+/// `min(⌊|v|·inv⌋ + 1[r < frac], s)` and canonical sign (zero levels carry
+/// no sign). Draws exactly one `rng.f32()` per element, in element order —
+/// the SIMD paths pre-draw lane blocks in the same order, so the RNG
+/// stream stays in lockstep with this loop.
+pub(crate) fn quantize_bucket_into(
+    chunk: &[f32],
+    inv: f32,
+    s: u32,
+    rng: &mut Pcg64,
+    levels: &mut Vec<u32>,
+    neg: &mut Vec<bool>,
+) {
+    for &v in chunk {
+        let a = v.abs() * inv; // in [0, s] for finite inputs
+        let lo = a.floor();
+        let p = a - lo; // probability of rounding up
+        let l = (lo as u32 + u32::from(rng.f32() < p)).min(s);
+        levels.push(l);
+        neg.push(l != 0 && v < 0.0);
+    }
+}
+
+/// `out[i] += scale * vals[i]` — the dense fold inner loop. The expression
+/// is multiply-then-add per element (never fused: Rust does not contract
+/// to FMA, and the vector paths use explicit mul/add), so each lane's
+/// rounding matches this loop exactly.
+pub(crate) fn add_scaled(out: &mut [f32], vals: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), vals.len());
+    for (o, &v) in out.iter_mut().zip(vals) {
+        *o += scale * v;
+    }
+}
+
+/// `out[i] += scale * (neg[i] ? -mag : mag)` — the sign-message fold inner
+/// loop. IEEE multiplication is sign-magnitude, so `scale * (-mag)` is
+/// exactly `-(scale * mag)`: the vector paths compute `scale * mag` once
+/// and flip the sign bit per lane, which is bit-identical to this loop.
+pub(crate) fn add_signed(out: &mut [f32], neg: &[bool], mag: f32, scale: f32) {
+    debug_assert_eq!(out.len(), neg.len());
+    for (o, &n) in out.iter_mut().zip(neg) {
+        *o += scale * if n { -mag } else { mag };
+    }
+}
+
+/// Append the big-endian byte image of each f32 — what `BitWriter` emits
+/// for a run of `push_f32` calls at a byte-aligned position. The writer's
+/// bulk path byte-swaps here, then merges the byte stream at its current
+/// bit offset.
+pub(crate) fn be_bytes_into(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(4 * vals.len());
+    for &v in vals {
+        out.extend_from_slice(&v.to_bits().to_be_bytes());
+    }
+}
+
+/// Append `count` fixed-`width`-bit big-endian fields starting at absolute
+/// bit `start_bit` — the bulk twin of `count` successive
+/// `BitReader::read_bits(width)` calls. Caller guarantees the whole run
+/// lies inside `bytes` (`start_bit + count·width ≤ 8·bytes.len()`); each
+/// field spans at most 5 bytes (`width ≤ 32`), extracted through one
+/// 8-byte big-endian window.
+pub(crate) fn unpack_fixed_into(
+    bytes: &[u8],
+    start_bit: u64,
+    width: u32,
+    count: usize,
+    out: &mut Vec<u32>,
+) {
+    debug_assert!((1..=32).contains(&width));
+    debug_assert!(start_bit + count as u64 * width as u64 <= 8 * bytes.len() as u64);
+    out.reserve(count);
+    for j in 0..count as u64 {
+        let off = start_bit + j * width as u64;
+        let byte = (off / 8) as usize;
+        let sh = (off % 8) as u32;
+        let w = if bytes.len() - byte >= 8 {
+            u64::from_be_bytes(bytes[byte..byte + 8].try_into().unwrap())
+        } else {
+            // Stream tail: widen the last < 8 bytes, zero-padded on the
+            // right (the in-bounds guarantee means the field itself ends
+            // inside the real bytes).
+            let mut w = 0u64;
+            for (b, &x) in bytes[byte..].iter().enumerate() {
+                w |= (x as u64) << (56 - 8 * b as u32);
+            }
+            w
+        };
+        out.push(((w << sh) >> (64 - width)) as u32);
+    }
+}

@@ -1,0 +1,228 @@
+//! Forced-scalar vs auto SIMD dispatch: end-to-end bit identity.
+//!
+//! The SIMD backends (`simd::avx2` / `simd::neon`) are drop-in twins of the
+//! portable scalar kernels — same bits, different instructions. The unit
+//! property tests in `rust/src/simd/mod.rs` prove each kernel matches on
+//! adversarial inputs; this suite proves the contract survives composition:
+//! whole training `History`s (losses, bit accounting, memory norms, final
+//! parameters), wire bytes, and top-k supports must be identical whether
+//! dispatch lands on the vector path or is pinned to scalar via
+//! `force_backend`.
+//!
+//! The backend override is process-global and the test harness is
+//! multi-threaded, so every flip happens under one static mutex.
+
+use qsparse::compress::sparsify::{top_k_indices, top_k_indices_into, TopKScratch};
+use qsparse::compress::{encode, parse_spec, Codec};
+use qsparse::engine::{run, History, TrainSpec};
+use qsparse::grad::SoftmaxRegression;
+use qsparse::optim::LrSchedule;
+use qsparse::simd::{force_backend, Backend};
+use qsparse::topology::FixedPeriod;
+use qsparse::util::rng::Pcg64;
+use std::sync::Mutex;
+
+/// Serializes `force_backend` flips across this binary's test threads.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` twice under the lock — pinned to scalar, then on auto detection
+/// — and return both results. Restores auto dispatch before releasing. On
+/// a machine whose detection already lands on scalar (or under
+/// `QSPARSE_FORCE_SCALAR=1`) both runs take the same path and the
+/// comparison is trivially true — the CI default job is the one with AVX2.
+fn scalar_vs_auto<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    force_backend(Some(Backend::Scalar));
+    let s = f();
+    force_backend(None);
+    let a = f();
+    (s, a)
+}
+
+const N: usize = 240;
+
+/// Bitwise history equality — not tolerance-based: f64 metrics compared by
+/// bit pattern, parameters and bit counters by Eq.
+fn assert_bit_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    let asteps: Vec<usize> = a.points.iter().map(|p| p.step).collect();
+    let bsteps: Vec<usize> = b.points.iter().map(|p| p.step).collect();
+    assert_eq!(asteps, bsteps, "{ctx}: metric grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        let s = pa.step;
+        assert_eq!(pa.bits_up, pb.bits_up, "{ctx}: bits_up at step {s}");
+        assert_eq!(pa.bits_down, pb.bits_down, "{ctx}: bits_down at step {s}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {s} ({} vs {})",
+            pa.train_loss,
+            pb.train_loss
+        );
+        assert_eq!(
+            pa.mem_norm_sq.to_bits(),
+            pb.mem_norm_sq.to_bits(),
+            "{ctx}: mem_norm_sq at step {s}"
+        );
+    }
+}
+
+fn run_cfg(up: &str, codec: Codec) -> History {
+    let ds = qsparse::data::gaussian_clusters(N, 12, 4, 1.5, 0.5, 77);
+    let m = SoftmaxRegression::new(12, 4, 1.0 / N as f64);
+    let upc = parse_spec(up).unwrap();
+    let sched = FixedPeriod::new(2);
+    let mut spec = TrainSpec::new(&m, &ds, upc.as_ref(), &sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = 40;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.eval_every = 7; // off-grid vs H — exercises between-round metrics
+    spec.seed = 5;
+    spec.codec = codec;
+    run(&spec)
+}
+
+/// Whole-training parity: every operator family whose hot path routes
+/// through the SIMD kernels (top-k keying/scan, QSGD quantization, the
+/// fold, wire bit accounting), under both wire codecs.
+#[test]
+#[cfg_attr(miri, ignore)] // heavy sweep; the simd unit tests cover Miri
+fn history_bit_identical_forced_scalar_vs_auto() {
+    for up in ["topk:k=8", "qtopk:k=8,bits=4", "qsgd:bits=4", "signtopk:k=8,m=1"] {
+        for codec in [Codec::Raw, Codec::Rans] {
+            let (s, a) = scalar_vs_auto(|| run_cfg(up, codec));
+            assert!(
+                s.final_loss().is_finite() && s.total_bits_up() > 0,
+                "{up} {}: degenerate baseline",
+                codec.as_str()
+            );
+            assert_bit_identical(&s, &a, &format!("{up} codec={}", codec.as_str()));
+        }
+    }
+}
+
+/// A deterministic gradient-like vector with exact ties, denormals and
+/// signed zeros sprinkled at lane/chunk boundaries.
+fn adversarial_grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    for base in (0..d).step_by(97) {
+        x[base] = 2.0; // exact tie class
+        if base + 7 < d {
+            x[base + 7] = f32::from_bits(1); // smallest denormal
+        }
+        if base + 8 < d {
+            x[base + 8] = -f32::from_bits(1);
+        }
+        if base + 15 < d {
+            x[base + 15] = 0.0;
+        }
+        if base + 16 < d {
+            x[base + 16] = -0.0;
+        }
+        if base + 31 < d {
+            x[base + 31] = -2.0; // tie in magnitude, opposite sign
+        }
+        if base + 32 < d {
+            x[base + 32] = f32::MIN_POSITIVE / 2.0;
+        }
+    }
+    x
+}
+
+/// Wire parity: compress + encode under each backend must produce the same
+/// message and the same bytes, and decoding those bytes must round-trip —
+/// covering the bulk `BitWriter` writes and the fixed-width index unpack.
+#[test]
+fn encoded_bytes_identical_forced_scalar_vs_auto() {
+    let x = adversarial_grad(1000, 97);
+    for up in ["topk:k=50", "qtopk:k=50,bits=4", "qsgd:bits=4", "signtopk:k=50,m=1"] {
+        let (s, a) = scalar_vs_auto(|| {
+            let op = parse_spec(up).unwrap();
+            let mut rng = Pcg64::seeded(131);
+            let msg = op.compress(&x, &mut rng);
+            let (bytes, bit_len) = encode::encode(&msg);
+            let decoded = encode::decode(&bytes, bit_len).expect("self-encoded bytes decode");
+            (msg, bytes, bit_len, decoded)
+        });
+        assert_eq!(s.0, a.0, "{up}: compressed messages differ");
+        assert_eq!(s.1, a.1, "{up}: wire bytes differ");
+        assert_eq!(s.2, a.2, "{up}: wire bit lengths differ");
+        assert_eq!(s.3, a.3, "{up}: decoded messages differ");
+        assert_eq!(s.0, s.3, "{up}: round-trip changed the message");
+    }
+}
+
+/// Magnitude key used by top-k ordering (NaN lowest, |v| bit order).
+fn mag_key(v: f32) -> u32 {
+    if v.is_nan() {
+        0
+    } else {
+        v.abs().to_bits()
+    }
+}
+
+/// The selected support is a valid top-k set: every selected magnitude is
+/// ≥ every unselected one.
+fn assert_valid_topk(x: &[f32], idx: &[u32], k: usize, ctx: &str) {
+    assert_eq!(idx.len(), k, "{ctx}: wrong support size");
+    let sel: std::collections::BTreeSet<u32> = idx.iter().copied().collect();
+    assert_eq!(sel.len(), k, "{ctx}: duplicate indices");
+    let min_sel = idx.iter().map(|&i| mag_key(x[i as usize])).min().unwrap_or(0);
+    let max_unsel = (0..x.len() as u32)
+        .filter(|i| !sel.contains(i))
+        .map(|i| mag_key(x[i as usize]))
+        .max()
+        .unwrap_or(0);
+    assert!(
+        min_sel >= max_unsel,
+        "{ctx}: selected magnitude below an unselected one ({min_sel} < {max_unsel})"
+    );
+}
+
+/// All-equal input: every index set is a valid top-k, so this pins the
+/// tie-break itself — the support must not depend on the backend, at a
+/// length (37) that straddles both the 4-lane and 8-lane boundaries.
+#[test]
+fn top_k_tie_break_is_backend_independent() {
+    let x = vec![1.0f32; 37];
+    for k in [7usize, 8] {
+        let (s, a) = scalar_vs_auto(|| top_k_indices(&x, k));
+        assert_valid_topk(&x, &s, k, &format!("all-equal k={k}"));
+        assert_eq!(s, a, "all-equal d=37 k={k}: backends disagree");
+    }
+}
+
+/// Denormals, signed zeros and magnitude ties placed at lane boundaries:
+/// the packed-key path must rank them identically on every backend.
+#[test]
+fn top_k_denormals_and_zeros_at_lane_boundaries() {
+    let x = adversarial_grad(40, 7);
+    for k in [1usize, 7, 8, 9, 16, 33, 39, 40] {
+        let (s, a) = scalar_vs_auto(|| top_k_indices(&x, k));
+        assert_valid_topk(&x, &s, k, &format!("d=40 k={k}"));
+        assert_eq!(s, a, "d=40 k={k}: backends disagree");
+    }
+}
+
+/// Large-d sampled-threshold path (d ≥ 2^16, k·8 < d): the strided sample,
+/// the threshold scan with its cap-abort, and the candidate select must all
+/// agree across backends — including with tie classes big enough that the
+/// threshold lands inside one.
+#[test]
+#[cfg_attr(miri, ignore)] // 2^17 elements is interpreter-hostile
+fn top_k_sampled_path_is_backend_independent() {
+    let d = 1usize << 17;
+    let x = adversarial_grad(d, 23);
+    for k in [64usize, 500] {
+        let (s, a) = scalar_vs_auto(|| {
+            let mut out = Vec::new();
+            let mut scratch = TopKScratch::default();
+            top_k_indices_into(&x, k, &mut out, &mut scratch);
+            out
+        });
+        assert_valid_topk(&x, &s, k, &format!("sampled d=2^17 k={k}"));
+        assert_eq!(s, a, "sampled d=2^17 k={k}: backends disagree");
+    }
+}

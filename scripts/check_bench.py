@@ -18,7 +18,13 @@ the runtime half of the contract and fails the job when
   3. any `codec/rans-vs-raw-bits/...` ratio exceeds its cap: 1.0 for every
      probe (the per-message fallback must make the entropy-coded container
      free to decline), and a tighter savings floor on the deterministic
-     TopK/QTopK gradient probes.
+     TopK/QTopK gradient probes, or
+  4. any `simd/speedup-vs-scalar/...` ratio exceeds 1.0 on a multi-core
+     runner: the dispatched SIMD kernel must never lose to its scalar twin
+     (the bench compares best-of-N samples, and emits exactly 1.0 when
+     detection already lands on scalar, so this is not a flaky gate; on
+     single-core runners timing is preemption-noisy, so it is
+     trajectory-only there).
 
 Zero-allocation rule: every `alloc/...` probe is a steady-state allocation
 count and must be exactly 0, *except* the parallel-engine probe
@@ -51,6 +57,11 @@ RANS_RATIO_CAP = {
     "codec/rans-vs-raw-bits/qtopk:k=400,bits=4(d=7850)": 0.80,
     "codec/rans-vs-raw-bits/skewed-gaps(d=1M)": 0.80,
 }
+
+# SIMD auto-vs-scalar time ratio (auto_min / scalar_min): the vectorized
+# kernels must be no slower than the portable reference. Enforced only on
+# multi-core runners, where the bench's best-of-N comparison is stable.
+SIMD_RATIO_CAP = 1.0
 
 
 def load_manifest(path):
@@ -90,7 +101,8 @@ def main() -> int:
         return 1
     # Core-count-embedding probes only exist on multi-core machines; the
     # checker runs on the same runner that ran the bench in CI.
-    if (os.cpu_count() or 1) <= 1:
+    multicore = (os.cpu_count() or 1) > 1
+    if not multicore:
         required_prefix = []
     try:
         with open(path) as f:
@@ -127,6 +139,12 @@ def main() -> int:
             if mean is None or mean > cap:
                 failures.append(
                     f"rANS wire-bit ratio above cap: {key} = {mean} (cap {cap})"
+                )
+        if key.startswith("simd/speedup-vs-scalar/") and multicore:
+            if mean is None or mean > SIMD_RATIO_CAP:
+                failures.append(
+                    f"SIMD kernel slower than scalar twin: {key} = {mean} "
+                    f"(cap {SIMD_RATIO_CAP})"
                 )
 
     if failures:

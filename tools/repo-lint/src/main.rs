@@ -5,12 +5,13 @@
 //!    immediately preceded (through a contiguous comment/attribute block) by
 //!    a `// SAFETY:` justification or a `/// # Safety` doc section.
 //! 2. **Unsafe confinement** — `unsafe` may appear only in the fork-join
-//!    core (`engine/parallel.rs`, its reuse in `coordinator/master.rs`) and
-//!    the bench counting allocator; every other module is covered by an
-//!    explicit `#![forbid(unsafe_code)]`.
+//!    core (`engine/parallel.rs`, its reuse in `coordinator/master.rs`),
+//!    the SIMD backends (`simd/avx2.rs`, `simd/neon.rs`) and the bench
+//!    counting allocator; every other module is covered by an explicit
+//!    `#![forbid(unsafe_code)]`.
 //! 3. **Determinism** — deterministic-path modules (`protocol`, `compress`,
-//!    `engine`, `coordinator`, `topology`, `optim`) must not touch wall
-//!    clocks (`Instant`, `SystemTime`) or RandomState-backed containers
+//!    `engine`, `coordinator`, `topology`, `optim`, `simd`) must not touch
+//!    wall clocks (`Instant`, `SystemTime`) or RandomState-backed containers
 //!    (`HashMap`, `HashSet`) outside `#[cfg(test)]` code.
 //! 4. **Panic-free decode** — the wire-facing parsers (`compress/encode.rs`,
 //!    `compress/rans.rs`, `util/json.rs`) must not contain `.unwrap()`,
@@ -20,6 +21,10 @@
 //!    `scripts/check_bench.py` enforces in CI) and the probe-name literals
 //!    in `benches/train_step.rs` must agree in both directions, so a probe
 //!    cannot be renamed or dropped on one side only.
+//! 6. **SIMD confinement** — `#[target_feature]` and arch-intrinsic imports
+//!    (`core::arch`, `std::arch`) may appear only inside `rust/src/simd/`;
+//!    everything else goes through the safe dispatcher entry points, so the
+//!    forced-scalar CI job provably covers all non-SIMD code.
 //!
 //! The scanner is a line-preserving state machine that blanks comments and
 //! string contents (so tokens in comments or literals never count as code)
@@ -40,6 +45,8 @@ use std::path::{Path, PathBuf};
 const ALLOW_UNSAFE: &[&str] = &[
     "rust/src/engine/parallel.rs",
     "rust/src/coordinator/master.rs",
+    "rust/src/simd/avx2.rs",
+    "rust/src/simd/neon.rs",
     "benches/train_step.rs",
 ];
 
@@ -50,6 +57,7 @@ const FORBID_EXEMPT: &[&str] = &[
     "rust/src/lib.rs",
     "rust/src/engine/mod.rs",
     "rust/src/coordinator/mod.rs",
+    "rust/src/simd/mod.rs",
 ];
 
 /// Deterministic-path directory prefixes (rule 3).
@@ -60,6 +68,7 @@ const DET_DIRS: &[&str] = &[
     "rust/src/coordinator",
     "rust/src/topology",
     "rust/src/optim",
+    "rust/src/simd",
 ];
 
 /// Identifiers banned in deterministic paths (matched as whole words in
@@ -77,6 +86,18 @@ const NO_PANIC_FILES: &[&str] = &[
 /// and a `fn expect_byte` helper don't count).
 const PANIC_PATS: &[&str] =
     &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Files allowed to use `#[target_feature]` / arch intrinsics (rule 6).
+const SIMD_ALLOW: &[&str] = &[
+    "rust/src/simd/mod.rs",
+    "rust/src/simd/avx2.rs",
+    "rust/src/simd/neon.rs",
+];
+
+/// Tokens confined to the SIMD module (substring match on blanked code:
+/// `#[target_feature(...)]`, `use core::arch::...`, and the
+/// `std::arch::is_*_feature_detected!` macros all contain one).
+const SIMD_TOKENS: &[&str] = &["target_feature", "core::arch", "std::arch"];
 
 // ---------------------------------------------------------------------------
 // Lexical scanner
@@ -335,6 +356,7 @@ fn check_file(rel: &str, src: &str) -> Vec<String> {
     let allow_unsafe = ALLOW_UNSAFE.contains(&rel);
     let det_path = DET_DIRS.iter().any(|d| rel.starts_with(d));
     let no_panic = NO_PANIC_FILES.contains(&rel);
+    let simd_allow = SIMD_ALLOW.contains(&rel);
     let mut out = Vec::new();
 
     for (idx, cl) in code_lines.iter().enumerate() {
@@ -346,7 +368,8 @@ fn check_file(rel: &str, src: &str) -> Vec<String> {
             if !allow_unsafe {
                 out.push(format!(
                     "{rel}:{ln}: [unsafe-confinement] `unsafe` outside the allow-list \
-                     (engine/parallel.rs, coordinator/master.rs, benches/train_step.rs)"
+                     (engine/parallel.rs, coordinator/master.rs, simd/avx2.rs, \
+                     simd/neon.rs, benches/train_step.rs)"
                 ));
             }
             if !safety_comment_above(&orig_lines, idx) {
@@ -372,6 +395,17 @@ fn check_file(rel: &str, src: &str) -> Vec<String> {
                     out.push(format!(
                         "{rel}:{ln}: [no-panic] `{pat}` in a wire-facing parser — \
                          corrupt input must return a named error, never panic"
+                    ));
+                }
+            }
+        }
+        if !simd_allow {
+            for tok in SIMD_TOKENS {
+                if cl.contains(tok) {
+                    out.push(format!(
+                        "{rel}:{ln}: [simd-confinement] `{tok}` outside rust/src/simd/ — \
+                         intrinsics and feature gating live behind the simd dispatcher \
+                         so the forced-scalar job covers everything else"
                     ));
                 }
             }
@@ -709,6 +743,7 @@ mod tests {
             "rust/src/coordinator/master.rs",
             "rust/src/topology/mod.rs",
             "rust/src/optim/mod.rs",
+            "rust/src/simd/scalar.rs",
         ] {
             let v = one_file(rel, src);
             assert!(v.iter().any(|m| m.contains("[determinism]")), "{rel}: {v:?}");
@@ -730,6 +765,34 @@ mod tests {
         assert!(one_file("rust/src/compress/rans.rs", ok).is_empty());
         // Same constructs outside the parser files are fine (for this rule).
         assert!(one_file("rust/src/grad/mlp.rs", "fn f() { x.unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn simd_confinement_fires_outside_simd_module() {
+        // An unguarded intrinsic call in ordinary library code trips both
+        // the SIMD and unsafe confinement rules.
+        let bad = "use core::arch::x86_64::*;\nfn f(x: __m256) -> __m256 { unsafe { _mm256_add_ps(x, x) } }\n";
+        let v = one_file("rust/src/compress/sparsify.rs", bad);
+        assert!(v.iter().any(|m| m.contains("[simd-confinement]")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("[unsafe-confinement]")), "{v:?}");
+
+        // Even an unsafe-allow-listed file cannot host `#[target_feature]`.
+        let tf = "// SAFETY: caller checked avx2.\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}\n";
+        let v = one_file("rust/src/engine/parallel.rs", tf);
+        assert!(v.iter().any(|m| m.contains("[simd-confinement]")), "{v:?}");
+
+        // A feature-detection macro outside the dispatcher also counts.
+        let det = "fn d() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+        let v = one_file("rust/src/engine/mod.rs", det);
+        assert!(v.iter().any(|m| m.contains("[simd-confinement]")), "{v:?}");
+
+        // The simd backends themselves are exempt from both rules when the
+        // guard idiom (SAFETY comment / # Safety doc) is followed.
+        let ok = "use core::arch::x86_64::*;\n/// # Safety\n/// Caller must verify AVX2 first.\n#[target_feature(enable = \"avx2\")]\npub(crate) unsafe fn h() {}\n";
+        assert!(one_file("rust/src/simd/avx2.rs", ok).is_empty());
+        // Tokens in comments or test regions never count.
+        let comment = "// dispatches to core::arch intrinsics\nfn f() {}\n";
+        assert!(one_file("rust/src/compress/mod.rs", comment).is_empty());
     }
 
     #[test]
