@@ -25,6 +25,7 @@ use qsparse::engine::{run, TrainSpec};
 use qsparse::grad::{GradModel, Mlp, SoftmaxRegression};
 use qsparse::optim::LrSchedule;
 use qsparse::runtime::PjrtRuntime;
+use qsparse::sim::{self, EventQueue, SimSpec};
 use qsparse::topology::FixedPeriod;
 use qsparse::util::json::Json;
 use qsparse::util::rng::Pcg64;
@@ -303,6 +304,11 @@ fn main() {
     // allocation-free per update; the whole-run residual is channel
     // transport, recorded for the trajectory.
     bench_threaded_coordinator(&mut rec, quick);
+
+    // The event-driven network simulator: per-step cost of the virtual-clock
+    // overlay on the shared arithmetic, the scheduler micro cost, and the
+    // sim loop's steady-state allocation count (zero, like the engine).
+    bench_sim(&mut rec, quick, warm, iters, &ds, &softmax);
 
     if json {
         rec.write_json("BENCH_train_step.json");
@@ -920,4 +926,77 @@ fn bench_participation_aggregation(rec: &mut Recorder, warm: usize, iters: usize
             samples.iter().map(|s| s / rounds_per_iter as f64).collect();
         rec.report(&format!("aggregate/{label}(d=7850)"), &per_round, None);
     }
+}
+
+/// The network simulator in the loop. `sim/step` runs a fully skewed
+/// scenario (speed skew, slow links, stragglers) so the probe covers queue
+/// churn and transfer bookkeeping, not just the shared arithmetic; the
+/// event-queue micro probe isolates the scheduler; the alloc probe diffs a
+/// 2N-step sim run against an N-step run under a *compressed* downlink (a
+/// dense downlink legitimately allocates one shared model snapshot per
+/// round) and, like the sequential engine, must read exactly zero.
+fn bench_sim(
+    rec: &mut Recorder,
+    quick: bool,
+    warm: usize,
+    iters: usize,
+    ds: &Dataset,
+    softmax: &SoftmaxRegression,
+) {
+    let comp = parse_spec("signtopk:k=170,m=1").unwrap();
+    let down = parse_spec("topk:k=400").unwrap();
+    let sched = FixedPeriod::new(4);
+    let run_sim = |steps: usize, scen: &SimSpec| {
+        let mut spec = TrainSpec::new(softmax, ds, comp.as_ref(), &sched);
+        spec.workers = 8;
+        spec.batch = 8;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.1 };
+        spec.sharding = Sharding::Iid;
+        spec.down_compressor = down.as_ref();
+        spec.eval_every = steps + 1; // exclude eval cost
+        std::hint::black_box(sim::run(&spec, scen));
+    };
+
+    let skew = SimSpec {
+        compute_sigma: 0.8,
+        bw_sigma: 0.5,
+        latency: 1_000,
+        straggler_prob: 0.05,
+        straggler_mult: 8.0,
+        ..SimSpec::default()
+    };
+    let steps = if quick { 20 } else { 60 };
+    let samples = time_iters(0, if quick { 2 } else { 4 }, || run_sim(steps, &skew));
+    let per_step: Vec<f64> = samples.iter().map(|s| s / steps as f64).collect();
+    rec.report("sim/step(R=8,signtopk,H=4,skew)", &per_step, None);
+
+    // Scheduler micro: push 64 mixed-tick events and drain; reported per
+    // push+pop pair. Capacity is pre-sized and retained across iterations.
+    let mut q: EventQueue<u32> = EventQueue::with_capacity(64);
+    let samples = time_iters(warm * 20, iters * 50, || {
+        for i in 0..64u64 {
+            q.push((i * 7919) % 97, i as u32);
+        }
+        while let Some(ev) = q.pop() {
+            std::hint::black_box(ev);
+        }
+    });
+    let per_op: Vec<f64> = samples.iter().map(|s| s / 64.0).collect();
+    rec.report("sim/event-queue-push-pop(n=64)", &per_op, None);
+
+    // Steady-state allocations per simulated step. Homogeneous timing (the
+    // default scenario) so the count cannot depend on sampled durations;
+    // same 2N-vs-N cancellation as the engine probe.
+    let alloc_steps = if quick { 20 } else { 40 };
+    let a1 = count_allocs(|| run_sim(alloc_steps, &SimSpec::default()));
+    let a2 = count_allocs(|| run_sim(2 * alloc_steps, &SimSpec::default()));
+    let per_step = a2.saturating_sub(a1) as f64 / alloc_steps as f64;
+    rec.value("alloc/sim-steady-per-step(R=8,signtopk,H=4,down=topk)", per_step);
+    assert!(
+        per_step == 0.0,
+        "sim event loop steady state allocates {per_step:.2} times per step — \
+         the zero-allocation hot path has regressed"
+    );
+    println!("sim event loop steady state: {per_step:.1} allocations/step (target 0)");
 }

@@ -74,7 +74,8 @@ where
         barrier || cfg.server_opt.is_avg(),
         "a non-averaging server optimizer requires a synchronous schedule on the threaded \
          runtime: the aggregate-on-arrival path applies updates one at a time, so there is no \
-         round aggregate to step on (use the engine for asynchronous schedules)"
+         round aggregate to step on (use the engine, or `qsparse sim` — whose event-driven \
+         rounds give async schedules a round clock — instead)"
     );
     let mut core = MasterCore::new(init.clone(), cfg.workers, cfg.seed, !dense_down);
     core.set_agg_scale(cfg.agg_scale);

@@ -276,14 +276,17 @@ fn avg_mem_values(mem_norms: &[f64]) -> f64 {
 }
 
 /// Fixed evaluation subsets (deterministic, shared by every series in a
-/// figure so curves are comparable).
-struct EvalSets {
+/// figure so curves are comparable). `pub(crate)` so the event-driven
+/// simulator (`crate::sim`) evaluates with byte-identical batches and
+/// arithmetic — its degenerate-parity guarantee depends on sharing this
+/// exact RNG stream and measurement code, not reimplementing them.
+pub(crate) struct EvalSets {
     train_batch: Batch,
     test_batch: Option<Batch>,
 }
 
 impl EvalSets {
-    fn new(spec: &TrainSpec) -> Self {
+    pub(crate) fn new(spec: &TrainSpec) -> Self {
         let mut rng = Pcg64::new(spec.seed ^ 0xe7a1, 5);
         let take = spec.eval_rows.min(spec.train.n);
         let idx = rng.sample_indices(spec.train.n, take);
@@ -296,7 +299,7 @@ impl EvalSets {
         EvalSets { train_batch, test_batch }
     }
 
-    fn measure(
+    pub(crate) fn measure(
         &self,
         spec: &TrainSpec,
         step: usize,

@@ -21,7 +21,7 @@
 pub mod report;
 pub mod specs;
 
-pub use report::FigureResult;
+pub use report::{FigureResult, SimTrace};
 pub use specs::{all_figure_ids, figure_spec};
 
 // Workload types live in `spec::` now; re-exported here so historical
@@ -144,12 +144,14 @@ pub fn run_series(
     s: &ExperimentSpec,
     steps: usize,
 ) -> anyhow::Result<History> {
-    run_series_on(w.model.as_ref(), &w.train, &w.test, &w.init, s, steps)
+    Ok(run_series_on(w.model.as_ref(), &w.train, &w.test, &w.init, s, steps)?.0)
 }
 
 /// As [`run_series`], over the workload's individual (all `Sync`) pieces —
 /// the parallel harness hands each scoped thread the model's `Sync` view
-/// plus shared references to the datasets and init.
+/// plus shared references to the datasets and init. A series whose spec
+/// embeds a `sim` scenario runs through the event-driven network simulator
+/// (same arithmetic, virtual clock) and also returns its [`SimTrace`].
 fn run_series_on(
     model: &dyn GradModel,
     train: &Dataset,
@@ -157,7 +159,7 @@ fn run_series_on(
     init: &[f32],
     s: &ExperimentSpec,
     steps: usize,
-) -> anyhow::Result<History> {
+) -> anyhow::Result<(History, Option<SimTrace>)> {
     let ops = s.resolve_ops(steps)?;
     let spec = TrainSpec {
         model,
@@ -181,7 +183,15 @@ fn run_series_on(
         eval_rows: s.eval_rows,
         threads: s.threads,
     };
-    Ok(engine::run_from(&spec, init.to_vec()))
+    Ok(match s.sim {
+        Some(sim) => {
+            let r = crate::sim::run_from(&spec, &sim, init.to_vec());
+            let final_secs = r.final_secs();
+            let trace = SimTrace { points: r.points, events: r.events, final_secs };
+            (r.history, Some(trace))
+        }
+        None => (engine::run_from(&spec, init.to_vec()), None),
+    })
 }
 
 /// Run a whole figure; returns per-series histories with labels.
@@ -197,15 +207,15 @@ pub fn run_figure(spec: &FigureSpec, quick: bool) -> anyhow::Result<FigureResult
     let w = spec.workload.instantiate(quick);
     let steps = if quick { spec.steps / 4 } else { spec.steps };
     let mut result = FigureResult::new(spec, steps);
-    let runs: Vec<anyhow::Result<(History, f64)>> = match w.model.as_sync() {
+    let runs: Vec<anyhow::Result<(History, Option<SimTrace>, f64)>> = match w.model.as_sync() {
         Some(model) => {
             // Capture only `Sync` pieces (the instance itself holds the
             // non-`Sync`-bounded `Box<dyn GradModel>`).
             let (train, test, init) = (&w.train, &w.test, &w.init[..]);
             crate::engine::parallel::map_parallel(&spec.series, move |_i, s| {
                 let t0 = std::time::Instant::now();
-                let hist = run_series_on(model, train, test, init, s, steps)?;
-                Ok((hist, t0.elapsed().as_secs_f64()))
+                let (hist, trace) = run_series_on(model, train, test, init, s, steps)?;
+                Ok((hist, trace, t0.elapsed().as_secs_f64()))
             })
         }
         None => spec
@@ -213,14 +223,16 @@ pub fn run_figure(spec: &FigureSpec, quick: bool) -> anyhow::Result<FigureResult
             .iter()
             .map(|s| {
                 let t0 = std::time::Instant::now();
-                let hist = run_series(&w, s, steps)?;
-                Ok((hist, t0.elapsed().as_secs_f64()))
+                let (hist, trace) =
+                    run_series_on(w.model.as_ref(), &w.train, &w.test, &w.init, s, steps)?;
+                Ok((hist, trace, t0.elapsed().as_secs_f64()))
             })
             .collect(),
     };
     for (s, run) in spec.series.iter().zip(runs) {
-        let (hist, secs) = run.map_err(|e| anyhow::anyhow!("series `{}`: {e}", s.label))?;
-        result.add(&s.label, hist, secs);
+        let (hist, trace, secs) =
+            run.map_err(|e| anyhow::anyhow!("series `{}`: {e}", s.label))?;
+        result.add_with_sim(&s.label, hist, trace, secs);
     }
     Ok(result)
 }

@@ -2,7 +2,39 @@
 
 use super::FigureSpec;
 use crate::engine::History;
+use crate::sim::SimPoint;
 use std::path::Path;
+
+/// Virtual-time sidecar for one series that ran under the event-driven
+/// network simulator (`sim::`, figure 13): the per-eval-point virtual-time
+/// track plus the run fingerprint. `points` is parallel to the series'
+/// `History::points`.
+pub struct SimTrace {
+    pub points: Vec<SimPoint>,
+    pub events: u64,
+    pub final_secs: f64,
+}
+
+impl SimTrace {
+    /// Simulated seconds until the train loss first reaches `target`.
+    fn secs_to_loss(&self, hist: &History, target: f64) -> Option<f64> {
+        hist.points
+            .iter()
+            .zip(&self.points)
+            .find(|(m, _)| m.train_loss <= target)
+            .map(|(_, p)| p.secs)
+    }
+
+    /// The sidecar CSV (`step,ticks,secs,state_hash`): the simulated-time
+    /// curve plus the per-eval-point determinism-twin fingerprint.
+    fn to_csv(&self) -> String {
+        let mut out = String::from("step,ticks,secs,state_hash\n");
+        for p in &self.points {
+            out.push_str(&format!("{},{},{},{:016x}\n", p.step, p.ticks, p.secs, p.state_hash));
+        }
+        out
+    }
+}
 
 /// The result of running every series of one figure.
 pub struct FigureResult {
@@ -12,6 +44,8 @@ pub struct FigureResult {
     pub target_loss: f64,
     pub target_test_err: f64,
     pub series: Vec<(String, History, f64)>,
+    /// Parallel to `series`: `Some` for series that ran under `sim::`.
+    pub sim: Vec<Option<SimTrace>>,
 }
 
 impl FigureResult {
@@ -23,20 +57,36 @@ impl FigureResult {
             target_loss: spec.target_loss,
             target_test_err: spec.target_test_err,
             series: Vec::new(),
+            sim: Vec::new(),
         }
     }
 
     pub fn add(&mut self, label: &str, hist: History, wall_secs: f64) {
-        self.series.push((label.to_string(), hist, wall_secs));
+        self.add_with_sim(label, hist, None, wall_secs);
     }
 
-    /// Write `<out>/<fig>/<series>.csv` for every series.
+    pub fn add_with_sim(
+        &mut self,
+        label: &str,
+        hist: History,
+        sim: Option<SimTrace>,
+        wall_secs: f64,
+    ) {
+        self.series.push((label.to_string(), hist, wall_secs));
+        self.sim.push(sim);
+    }
+
+    /// Write `<out>/<fig>/<series>.csv` for every series, plus a
+    /// `<series>.sim.csv` virtual-time sidecar for simulated series.
     pub fn write_csvs(&self, out_dir: impl AsRef<Path>) -> anyhow::Result<()> {
         let dir = out_dir.as_ref().join(&self.id);
         std::fs::create_dir_all(&dir)?;
-        for (label, hist, _) in &self.series {
-            let fname = format!("{}.csv", sanitize(label));
-            std::fs::write(dir.join(fname), hist.to_csv())?;
+        for ((label, hist, _), trace) in self.series.iter().zip(&self.sim) {
+            std::fs::write(dir.join(format!("{}.csv", sanitize(label))), hist.to_csv())?;
+            if let Some(trace) = trace {
+                let fname = format!("{}.sim.csv", sanitize(label));
+                std::fs::write(dir.join(fname), trace.to_csv())?;
+            }
         }
         Ok(())
     }
@@ -80,6 +130,25 @@ impl FigureResult {
                 fmt_m(bt),
                 saving,
             ));
+        }
+        if self.sim.iter().any(Option::is_some) {
+            out.push_str(&format!(
+                "-- simulated network time (virtual clock; s→loss = first loss≤{} crossing)\n",
+                self.target_loss
+            ));
+            for ((label, hist, _), trace) in self.series.iter().zip(&self.sim) {
+                let Some(trace) = trace else { continue };
+                let to_target = trace
+                    .secs_to_loss(hist, self.target_loss)
+                    .map_or("-".to_string(), |s| format!("{s:.1}s"));
+                out.push_str(&format!(
+                    "{:<30} {:>10} {:>12} {:>12}\n",
+                    label,
+                    format!("{:.1}s", trace.final_secs),
+                    format!("s→loss={to_target}"),
+                    format!("events={}", trace.events),
+                ));
+            }
         }
         out
     }

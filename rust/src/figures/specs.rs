@@ -11,15 +11,17 @@
 use super::{FigureSpec, Workload};
 use crate::compress::Codec;
 use crate::protocol::AggScale;
+use crate::sim::SimSpec;
 use crate::spec::ExperimentSpec;
 
 /// All figure ids in paper order (fig9 — bidirectional compression, fig10 —
 /// sampled partial participation, fig11 — server optimizers, fig12 — the
-/// rANS wire codec — are this repo's extensions, not paper figures).
+/// rANS wire codec, fig13 — the event-driven network simulator — are this
+/// repo's extensions, not paper figures).
 pub fn all_figure_ids() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-        "fig12",
+        "fig12", "fig13",
     ]
 }
 
@@ -292,6 +294,50 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
                     .with_codec(Codec::Rans),
             ],
         ),
+        // ---- event-driven network simulator (not in the paper) ---------------
+        // Simulated seconds-to-target on a virtual clock (`sim::`): per-client
+        // compute/bandwidth drawn from skewed lognormal-ish distributions
+        // (p50-vs-p99 client-speed skew), occasional 8× stragglers, and a
+        // disconnect/reconnect churn scenario. The sync barrier pays the p99
+        // client every round; Algorithm 2's random gaps decouple it — the
+        // figure quantifies that wall-clock gap, which bits-to-target (fig
+        // 1–12) cannot see. The async+momentum series exercises the server
+        // optimizer under the simulator's round clock.
+        "fig13" => {
+            let skew = SimSpec {
+                compute_sigma: 0.8,
+                bw_sigma: 0.5,
+                latency: 2_000,
+                straggler_prob: 0.05,
+                straggler_mult: 8.0,
+                ..SimSpec::default()
+            };
+            let churn = SimSpec {
+                churn_online_mean: 400_000,
+                churn_offline_mean: 200_000,
+                ..skew
+            };
+            cv.build(
+                "fig13",
+                "convex: simulated seconds-to-target under stragglers, bandwidth skew and churn",
+                0.10,
+                0.15,
+                vec![
+                    cv.s("SGD-sync", "identity", 8).with_sim(skew),
+                    cv.s("TopK-sync", &format!("topk:k={KC}"), 8).with_sim(skew),
+                    cv.a("TopK-async", &format!("topk:k={KC}"), 8).with_sim(skew),
+                    cv.a("QTopK-async", &format!("qtopk:k={KC},bits=4,scaled"), 8).with_sim(skew),
+                    cv.a("QTopK-async_p0.5", &format!("qtopk:k={KC},bits=4,scaled"), 8)
+                        .with_participation("bernoulli:0.5", AggScale::Participants)
+                        .with_sim(skew),
+                    cv.a("QTopK-async_churn", &format!("qtopk:k={KC},bits=4,scaled"), 8)
+                        .with_sim(churn),
+                    cv.a("QTopK-async_mom0.9", &format!("qtopk:k={KC},bits=4,scaled"), 8)
+                        .with_server_opt("momentum:beta=0.9,lr=0.1")
+                        .with_sim(skew),
+                ],
+            )
+        }
         _ => return None,
     })
 }

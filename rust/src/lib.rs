@@ -11,8 +11,10 @@
 //!   (Algorithm 1) and asynchronous (Algorithm 2) schedules, sampled
 //!   partial participation with participation-aware aggregation scaling
 //!   (`topology::Participation` + `protocol::AggScale`), a shared protocol
-//!   core (`protocol::{WorkerCore, MasterCore}`) driven by both a
-//!   deterministic simulation engine and a threaded master/worker runtime.
+//!   core (`protocol::{WorkerCore, MasterCore}`) driven by a deterministic
+//!   simulation engine, a threaded master/worker runtime and a
+//!   discrete-event network simulator (`sim::`) that reports simulated
+//!   seconds-to-target under stragglers, skewed bandwidth and churn.
 //! * **L2** — JAX models (`python/compile/model.py`), AOT-lowered to HLO
 //!   text and executed from rust via PJRT (`runtime::`).
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) inside the L2
@@ -35,6 +37,7 @@ pub mod grad;
 pub mod optim;
 pub mod protocol;
 pub mod runtime;
+pub mod sim;
 pub mod simd;
 pub mod spec;
 pub mod topology;
@@ -45,5 +48,6 @@ pub use engine::{History, TrainSpec};
 pub use grad::GradModel;
 pub use optim::{ServerOpt, ServerOptSpec};
 pub use protocol::{AggScale, DownlinkWorker, MasterCore, WorkerCore};
+pub use sim::{SimResult, SimSpec};
 pub use spec::{CompressorSpec, ExperimentSpec, ResolvedExperiment, ScheduleSpec, Workload};
 pub use topology::{Participation, ParticipationSpec};

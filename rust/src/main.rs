@@ -4,6 +4,7 @@
 //!   figure <id|all> [--out results] [--quick]     regenerate paper figures
 //!   gamma-table [--d N] [--k N]                   Lemma 1–3 γ table
 //!   train [options]                               one training run
+//!   sim [options]                                 event-driven network sim
 //!   specs <dump|validate> [--dir specs]           bundled experiment specs
 //!   inspect [--artifacts DIR]                     list AOT artifacts
 //!
@@ -52,6 +53,7 @@ use qsparse::protocol::AggScale;
 use qsparse::runtime::PjrtRuntime;
 use qsparse::spec::{CompressorSpec, ExperimentSpec, ScheduleSpec, Workload};
 use qsparse::topology::ParticipationSpec;
+use qsparse::util::json::Json;
 use qsparse::util::stats::Stopwatch;
 use std::collections::BTreeMap;
 
@@ -68,6 +70,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         Some("figure") => cmd_figure(&args[1..]),
         Some("gamma-table") => cmd_gamma(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
+        Some("sim") => cmd_sim(&args[1..]),
         Some("specs") => cmd_specs(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
@@ -81,7 +84,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 const HELP: &str = "\
 qsparse — Qsparse-local-SGD (NeurIPS 2019) reproduction
 
-USAGE: qsparse <figure|gamma-table|train|specs|inspect|help> [options]
+USAGE: qsparse <figure|gamma-table|train|sim|specs|inspect|help> [options]
 
   figure <id|all> [--out results] [--quick]
   gamma-table [--d 7850] [--k 40]
@@ -93,6 +96,11 @@ USAGE: qsparse <figure|gamma-table|train|specs|inspect|help> [options]
         [--threads N]
         [--steps N] [--workers N] [--batch N] [--eta F] [--momentum F]
         [--seed N] [--csv FILE] [--json]
+  sim   [all `train` spec flags] [--ticks-per-sec N] [--compute-mean F]
+        [--compute-sigma F] [--bw-mean F] [--bw-sigma F] [--latency N]
+        [--straggler-prob F] [--straggler-mult F] [--churn-online N]
+        [--churn-offline N] [--churn-sigma F] [--target-loss F]
+        [--csv FILE] [--json]
   specs <dump|validate> [--dir specs]
   inspect [--artifacts DIR]
 
@@ -127,6 +135,17 @@ heavy-ball; lr defaults to 1−beta, an EMA of round deltas) |
 
 --threads runs the engine's worker steps on a thread pool (0 = all cores).
 Histories are bit-identical across thread counts; it is purely a speed knob.
+
+`sim` replays the same training arithmetic through a deterministic
+discrete-event network simulator (virtual u64 tick clock): per-client
+compute speed and link bandwidth are drawn from seeded lognormal-ish
+distributions (--compute-sigma / --bw-sigma set the skew), transfer times
+come from each message's actual wire bits under the configured codec, and
+--straggler-prob/--straggler-mult and --churn-online/--churn-offline model
+slowdowns and disconnect/reconnect churn. The learning history is
+bit-identical to the engine whenever no worker misses a sync; the digest
+adds simulated seconds, and the first crossing of --target-loss. The sim
+scenario is part of the spec: `--dump-spec` embeds it as a \"sim\" object.
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--flag`s.
@@ -322,6 +341,101 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         resolved.run()
     };
     report_history(&f, &spec, &history, sw.secs())
+}
+
+/// `qsparse sim`: run the experiment through the deterministic
+/// discrete-event network simulator (`sim::run_from`). The spec flags are
+/// shared with `train`; the scenario flags override the spec's embedded
+/// `"sim"` object (or `SimSpec::default()` when absent), so a scenario can
+/// live in the JSON artifact or be sketched ad hoc on the command line.
+fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    anyhow::ensure!(
+        f.get("pjrt").is_none() && !f.has("threaded"),
+        "`sim` drives the native workloads on a virtual clock; --pjrt and \
+         --threaded do not apply"
+    );
+    let mut spec = spec_from_flags(&f)?;
+    let mut sim = spec.sim.unwrap_or_default();
+    sim.ticks_per_sec = f.parse_num("ticks-per-sec", sim.ticks_per_sec)?;
+    sim.compute_mean = f.parse_num("compute-mean", sim.compute_mean)?;
+    sim.compute_sigma = f.parse_num("compute-sigma", sim.compute_sigma)?;
+    sim.bw_mean = f.parse_num("bw-mean", sim.bw_mean)?;
+    sim.bw_sigma = f.parse_num("bw-sigma", sim.bw_sigma)?;
+    sim.latency = f.parse_num("latency", sim.latency)?;
+    sim.straggler_prob = f.parse_num("straggler-prob", sim.straggler_prob)?;
+    sim.straggler_mult = f.parse_num("straggler-mult", sim.straggler_mult)?;
+    sim.churn_online_mean = f.parse_num("churn-online", sim.churn_online_mean)?;
+    sim.churn_offline_mean = f.parse_num("churn-offline", sim.churn_offline_mean)?;
+    sim.churn_sigma = f.parse_num("churn-sigma", sim.churn_sigma)?;
+    spec.sim = Some(sim);
+    spec.validate()?;
+    if f.has("dump-spec") {
+        print!("{}", spec.to_json().pretty());
+        return Ok(());
+    }
+    let target: Option<f64> = match f.get("target-loss") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|e| anyhow::anyhow!("--target-loss: {e}"))?),
+    };
+    let sw = Stopwatch::start();
+    let resolved = spec.resolve(false)?;
+    let result = resolved.run_sim();
+    if let Some(csv) = f.get("csv") {
+        std::fs::write(csv, result.history.to_csv())?;
+    }
+    let secs_to_target = target.map(|t| (t, result.secs_to_loss(t)));
+    if f.has("json") {
+        let part_spec = spec.participation.spec_str();
+        let part = (spec.participation != ParticipationSpec::Full)
+            .then(|| (part_spec.as_str(), spec.agg_scale.name()));
+        let name = run_name(
+            spec.up.as_str(),
+            spec.down.as_str(),
+            spec.down.is_identity(),
+            part,
+            &spec.server_opt,
+        );
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("summary", result.history.summary_json(&spec.label, sw.secs())),
+            ("sim_secs", Json::num(result.final_secs())),
+            ("sim_events", Json::num(result.events as f64)),
+        ];
+        if let Some((t, hit)) = secs_to_target {
+            fields.push(("target_loss", Json::num(t)));
+            fields.push((
+                "secs_to_target",
+                hit.map_or(Json::Null, Json::num),
+            ));
+        }
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+    let last = result.history.points.last().unwrap();
+    let target_str = match secs_to_target {
+        None => String::new(),
+        Some((t, Some(s))) => format!("  loss≤{t} at {s:.1} sim-s"),
+        Some((t, None)) => format!("  loss≤{t} not reached"),
+    };
+    println!(
+        "{}⇑ {}⇓ steps={} H={} workers={}  loss={:.4} test_err={:.4}  \
+         bits_up={:.2}M bits_down={:.2}M  sim={:.1}s events={}{}  ({:.1}s wall)",
+        spec.up.as_str(),
+        spec.down.as_str(),
+        last.step,
+        spec.schedule.h(),
+        spec.workers,
+        last.train_loss,
+        last.test_err,
+        last.bits_up as f64 / 1e6,
+        last.bits_down as f64 / 1e6,
+        result.final_secs(),
+        result.events,
+        target_str,
+        sw.secs()
+    );
+    Ok(())
 }
 
 /// Compose the run's summary name — `up[|down=..][|part=..|scale=..]

@@ -280,6 +280,12 @@ pub trait ServerOpt: Send {
     /// Apply one round's aggregate `delta` to the model `x`.
     fn apply(&mut self, x: &mut [f32], delta: &[f32]);
 
+    /// Override the step size used by subsequent [`ServerOpt::apply`] calls
+    /// — the server-side LR-schedule hook
+    /// (`MasterCore::set_server_lr_schedule` drives it once per round).
+    /// Default: ignore, for optimizers without a step size.
+    fn set_round_lr(&mut self, _lr: f64) {}
+
     fn name(&self) -> String;
 }
 
@@ -298,6 +304,10 @@ impl ServerOpt for ServerMomentum {
             *vi = self.beta * *vi + di;
             *xi -= self.lr * *vi;
         }
+    }
+
+    fn set_round_lr(&mut self, lr: f64) {
+        self.lr = lr as f32;
     }
 
     fn name(&self) -> String {
@@ -334,6 +344,10 @@ impl ServerOpt for ServerAdam {
             let vhat = *vi * c2;
             *xi -= lr * mhat / (vhat.sqrt() + eps);
         }
+    }
+
+    fn set_round_lr(&mut self, lr: f64) {
+        self.lr = lr;
     }
 
     fn name(&self) -> String {
@@ -469,6 +483,24 @@ mod tests {
         let mut x = vec![3.0f32, -1.0];
         opt.apply(&mut x, &[0.5, 0.25]);
         assert_eq!(x, vec![2.5, -1.25]);
+    }
+
+    #[test]
+    fn set_round_lr_rescales_subsequent_steps() {
+        // β=0: each apply is exactly −lr·Δ, so the hook is directly visible.
+        let mut opt = ServerOptSpec::Momentum { beta: 0.0, lr: 1.0 }.build(1).unwrap();
+        let mut x = vec![0.0f32];
+        opt.apply(&mut x, &[1.0]);
+        assert_eq!(x, vec![-1.0]);
+        opt.set_round_lr(0.5);
+        opt.apply(&mut x, &[1.0]);
+        assert_eq!(x, vec![-1.5]);
+        let mut adam =
+            ServerOptSpec::Adam { b1: 0.9, b2: 0.99, eps: 1e-8, lr: 0.05 }.build(1).unwrap();
+        adam.set_round_lr(0.5);
+        let mut y = vec![0.0f32];
+        adam.apply(&mut y, &[1.0]);
+        assert!((y[0] + 0.5).abs() < 1e-3, "first Adam step ≈ new lr: {}", y[0]);
     }
 
     #[test]

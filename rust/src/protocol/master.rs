@@ -13,7 +13,7 @@
 
 use super::{AggScale, DOWNLINK_RNG_SALT};
 use crate::compress::{Compressor, Message, MessageBuf};
-use crate::optim::{ServerOpt, ServerOptSpec};
+use crate::optim::{LrSchedule, ServerOpt, ServerOptSpec};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -113,6 +113,12 @@ struct ServerRound {
     accum: Vec<f32>,
     /// True when `accum` holds folded-but-unapplied updates.
     pending: bool,
+    /// Server-side LR schedule, indexed by *applied round* count (not the
+    /// global step — under Algorithm 2 or churn, rounds are the server's
+    /// only clock). `None` keeps the optimizer's built-in constant lr.
+    lr_schedule: Option<LrSchedule>,
+    /// Rounds applied so far — the schedule's round clock.
+    rounds_applied: usize,
 }
 
 impl MasterCore {
@@ -148,7 +154,20 @@ impl MasterCore {
             opt,
             accum: vec![0.0f32; d],
             pending: false,
+            lr_schedule: None,
+            rounds_applied: 0,
         });
+    }
+
+    /// Install a server-side learning-rate schedule: before each
+    /// [`MasterCore::end_round`] optimizer step, the round's lr is set to
+    /// `schedule.at(k)` where `k` counts previously *applied* rounds. A
+    /// no-op under `Avg` (there is no server step to scale); call after
+    /// [`MasterCore::set_server_opt`], which resets it.
+    pub fn set_server_lr_schedule(&mut self, schedule: LrSchedule) {
+        if let Some(sr) = &mut self.server {
+            sr.lr_schedule = Some(schedule);
+        }
     }
 
     /// Choose the aggregation scaling policy (default: the paper's `1/R`).
@@ -233,7 +252,11 @@ impl MasterCore {
     pub fn end_round(&mut self) {
         if let Some(sr) = &mut self.server {
             if sr.pending {
+                if let Some(sch) = &sr.lr_schedule {
+                    sr.opt.set_round_lr(sch.at(sr.rounds_applied));
+                }
                 sr.opt.apply(&mut self.global, &sr.accum);
+                sr.rounds_applied += 1;
                 sr.accum.fill(0.0);
                 sr.pending = false;
                 self.snapshot = None;

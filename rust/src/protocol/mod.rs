@@ -355,6 +355,38 @@ mod tests {
     }
 
     #[test]
+    fn server_lr_schedule_is_clocked_by_applied_rounds() {
+        use crate::optim::{LrSchedule, ServerOptSpec};
+        let d = 2;
+        let g = crate::compress::Message::Dense { values: vec![1.0f32; d] };
+        // β=0, R=1 ⇒ each round moves the model by exactly −lr_k·Δ with
+        // Δ = 1, so the trajectory reads the schedule back directly.
+        let mut m = MasterCore::new(vec![0.0; d], 1, 0, false);
+        m.set_server_opt(ServerOptSpec::Momentum { beta: 0.0, lr: 9.0 });
+        m.set_server_lr_schedule(LrSchedule::InvTime { xi: 1.0, a: 1.0 });
+        // Round 0 (lr = 1/1), an empty end_round (must NOT advance the
+        // round clock), then round 1 (lr = 1/2).
+        m.begin_round(1);
+        m.apply_update(&g).unwrap();
+        m.end_round();
+        assert!((m.params()[0] + 1.0).abs() < 1e-7, "{:?}", m.params());
+        m.end_round();
+        m.begin_round(1);
+        m.apply_update(&g).unwrap();
+        m.end_round();
+        assert!((m.params()[0] + 1.5).abs() < 1e-7, "{:?}", m.params());
+        // Without a schedule the configured constant lr is untouched, and
+        // under Avg the hook is inert (no server step exists to scale).
+        let mut plain = MasterCore::new(vec![0.0; d], 1, 0, false);
+        plain.set_server_opt(ServerOptSpec::Avg);
+        plain.set_server_lr_schedule(LrSchedule::Const { eta: 123.0 });
+        plain.begin_round(1);
+        plain.apply_update(&g).unwrap();
+        plain.end_round();
+        assert!((plain.params()[0] + 1.0).abs() < 1e-7, "{:?}", plain.params());
+    }
+
+    #[test]
     fn server_opt_invalidates_snapshot_at_end_round() {
         use crate::optim::ServerOptSpec;
         use std::sync::Arc;

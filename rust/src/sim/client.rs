@@ -1,0 +1,200 @@
+//! Seeded per-client network/compute profiles and failure processes.
+//!
+//! Every stochastic simulator input draws from its own salted `Pcg64`
+//! stream keyed by `(run seed, worker id)`, mirroring the uplink/downlink/
+//! participation salt discipline in `protocol::` and `topology::` — so the
+//! sampled profiles are a pure function of the spec and never depend on
+//! event-processing order:
+//!
+//! * **profile** (`SIM_PROFILE_RNG_SALT`): one-shot per-client compute
+//!   speed and link bandwidth, drawn lognormal-ish around the spec means.
+//! * **straggler** (`SIM_STRAGGLER_RNG_SALT`): a per-step Bernoulli draw;
+//!   a hit multiplies that step's compute time by `straggler_mult`
+//!   (transient slowdown — GC pause, co-tenant burst, thermal throttle).
+//! * **churn** (`SIM_CHURN_RNG_SALT`): alternating online/offline windows
+//!   on the virtual clock. A worker that reaches a sync point while
+//!   offline *skips* that round (no upload, no broadcast); its anchor and
+//!   error memory are untouched, so the error-feedback downlink recursion
+//!   stays valid across arbitrarily long outages — reconnection needs no
+//!   special arithmetic, the next participated round simply carries the
+//!   accumulated staleness.
+
+use super::SimSpec;
+use crate::util::rng::Pcg64;
+
+/// Stream salt for per-client profile draws (distinct from the uplink
+/// `0xc0ffee`, downlink `0xd05eed`, participation `0x5e7ec7`, async-schedule
+/// `0xa5ce9d`, schedule-materialize `0x5eed` and eval `0xe7a1` salts).
+pub const SIM_PROFILE_RNG_SALT: u64 = 0x513a11;
+/// Stream salt for the per-step straggler Bernoulli process.
+pub const SIM_STRAGGLER_RNG_SALT: u64 = 0x57a616;
+/// Stream salt for the churn (drop/reconnect) window process.
+pub const SIM_CHURN_RNG_SALT: u64 = 0xc6a12d;
+
+/// `mean · exp(sigma · z)`, z ~ N(0, 1) — the "lognormal-ish" family used
+/// for every duration/rate draw. `sigma = 0` gives exactly `mean` (the
+/// multiplier is `exp(0) = 1.0`, exact in IEEE arithmetic), which is what
+/// makes homogeneous degenerate configs reproducible without special cases.
+pub(crate) fn lognormalish(mean: f64, sigma: f64, rng: &mut Pcg64) -> f64 {
+    mean * (sigma * rng.normal()).exp()
+}
+
+/// One client's static capacity, drawn once at simulation start.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientProfile {
+    /// Base virtual ticks per local SGD step.
+    pub compute_ticks: u64,
+    /// Link bandwidth in wire bits per virtual tick (symmetric up/down).
+    pub bw: f64,
+}
+
+impl ClientProfile {
+    /// Draw worker `r`'s profile from the salted stream. Draw order (compute
+    /// first, then bandwidth) is part of the determinism contract.
+    pub fn draw(sim: &SimSpec, seed: u64, r: usize) -> Self {
+        let mut rng = Pcg64::new(seed ^ SIM_PROFILE_RNG_SALT, r as u64 + 1);
+        let compute = lognormalish(sim.compute_mean, sim.compute_sigma, &mut rng);
+        let bw = lognormalish(sim.bw_mean, sim.bw_sigma, &mut rng);
+        ClientProfile {
+            compute_ticks: (compute.round() as u64).max(1),
+            bw: bw.max(f64::MIN_POSITIVE),
+        }
+    }
+}
+
+/// Wire-transfer duration: `ceil(bits / bandwidth) + latency` virtual ticks.
+/// A zero-bit transfer costs only the propagation latency; any nonzero
+/// payload costs at least one tick (the ceiling of a positive quotient).
+/// `bits` is the message's *actual* `wire_bits` under the configured codec —
+/// the simulator charges exactly what the wire format would carry.
+pub fn transfer_ticks(bits: u64, bw_bits_per_tick: f64, latency: u64) -> u64 {
+    if bits == 0 {
+        return latency;
+    }
+    debug_assert!(bw_bits_per_tick > 0.0);
+    latency + (bits as f64 / bw_bits_per_tick).ceil() as u64
+}
+
+/// Per-worker online/offline window process, advanced lazily.
+///
+/// Window durations alternate between lognormal-ish draws around
+/// `churn_online_mean` and `churn_offline_mean`. Queries must come with
+/// non-decreasing clocks (each worker's sync attempts do), so the track
+/// walks forward through as many windows as the clock has passed. The whole
+/// timeline is a pure function of `(seed, r)` — independent of every other
+/// worker and of event order.
+#[derive(Clone, Debug)]
+pub struct ChurnTrack {
+    rng: Option<Pcg64>,
+    online_mean: f64,
+    offline_mean: f64,
+    sigma: f64,
+    online: bool,
+    window_end: u64,
+}
+
+impl ChurnTrack {
+    pub fn new(sim: &SimSpec, seed: u64, r: usize) -> Self {
+        if sim.churn_online_mean == 0 {
+            // Churn disabled: always online, no stream consumed.
+            return ChurnTrack {
+                rng: None,
+                online_mean: 0.0,
+                offline_mean: 0.0,
+                sigma: 0.0,
+                online: true,
+                window_end: u64::MAX,
+            };
+        }
+        let mut rng = Pcg64::new(seed ^ SIM_CHURN_RNG_SALT, r as u64 + 1);
+        let first = Self::window(sim.churn_online_mean as f64, sim.churn_sigma, &mut rng);
+        ChurnTrack {
+            rng: Some(rng),
+            online_mean: sim.churn_online_mean as f64,
+            offline_mean: sim.churn_offline_mean as f64,
+            sigma: sim.churn_sigma,
+            online: true,
+            window_end: first,
+        }
+    }
+
+    fn window(mean: f64, sigma: f64, rng: &mut Pcg64) -> u64 {
+        (lognormalish(mean, sigma, rng).round() as u64).max(1)
+    }
+
+    /// Is this worker online at virtual time `clock`? Clocks must be
+    /// non-decreasing across calls for one track.
+    pub fn online_at(&mut self, clock: u64) -> bool {
+        let Some(rng) = &mut self.rng else { return true };
+        while clock >= self.window_end {
+            self.online = !self.online;
+            let mean = if self.online { self.online_mean } else { self.offline_mean };
+            let dur = Self::window(mean, self.sigma, rng);
+            self.window_end = self.window_end.saturating_add(dur);
+        }
+        self.online
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SimSpec {
+        SimSpec::default()
+    }
+
+    #[test]
+    fn transfer_rounding_is_ceiling_plus_latency() {
+        // Exact division: 90 bits at 30 bits/tick = 3 ticks.
+        assert_eq!(transfer_ticks(90, 30.0, 0), 3);
+        // Fractional quotient rounds up: 100/30 = 3.33… → 4.
+        assert_eq!(transfer_ticks(100, 30.0, 0), 4);
+        // One bit on a fat pipe still costs one tick.
+        assert_eq!(transfer_ticks(1, 1e9, 0), 1);
+        // Latency is additive, and pure-latency for empty payloads.
+        assert_eq!(transfer_ticks(100, 30.0, 7), 11);
+        assert_eq!(transfer_ticks(0, 30.0, 7), 7);
+        assert_eq!(transfer_ticks(0, 30.0, 0), 0);
+    }
+
+    #[test]
+    fn profiles_deterministic_and_skewed_by_sigma() {
+        let mut s = spec();
+        let a = ClientProfile::draw(&s, 42, 3);
+        let b = ClientProfile::draw(&s, 42, 3);
+        assert_eq!(a.compute_ticks, b.compute_ticks);
+        assert_eq!(a.bw, b.bw);
+        // sigma = 0 ⇒ exactly the configured means for every client.
+        assert_eq!(a.compute_ticks, s.compute_mean.round() as u64);
+        assert_eq!(a.bw, s.bw_mean);
+        // sigma > 0 ⇒ clients spread (overwhelmingly likely over 16 draws).
+        s.compute_sigma = 0.8;
+        let ticks: Vec<u64> =
+            (0..16).map(|r| ClientProfile::draw(&s, 42, r).compute_ticks).collect();
+        assert!(ticks.iter().any(|&t| t != ticks[0]), "no skew: {ticks:?}");
+    }
+
+    #[test]
+    fn churn_disabled_is_always_online() {
+        let mut t = ChurnTrack::new(&spec(), 1, 0);
+        assert!(t.online_at(0));
+        assert!(t.online_at(u64::MAX - 1));
+    }
+
+    #[test]
+    fn churn_alternates_and_is_deterministic() {
+        let mut s = spec();
+        s.churn_online_mean = 1000;
+        s.churn_offline_mean = 500;
+        s.churn_sigma = 0.3;
+        let sample = |seed: u64| -> Vec<bool> {
+            let mut t = ChurnTrack::new(&s, seed, 2);
+            (0..200).map(|i| t.online_at(i * 50)).collect()
+        };
+        let a = sample(9);
+        assert_eq!(a, sample(9), "same seed, same timeline");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "never flips: {a:?}");
+        assert_ne!(a, sample(10), "seed changes the timeline");
+    }
+}

@@ -1,0 +1,95 @@
+//! FNV-1a state hashing for determinism twins.
+//!
+//! Every eval point of a simulation records one 64-bit digest of the
+//! observable simulator state — the global model bits, the virtual clock and
+//! the event-queue length — so two runs of the same spec + seed can be
+//! compared point-by-point ("determinism twins") without storing full model
+//! snapshots. FNV-1a is used for its tiny, dependency-free, byte-exact
+//! definition; this is a fingerprint for drift detection, not a
+//! cryptographic commitment.
+
+/// Incremental FNV-1a (64-bit).
+#[derive(Clone, Debug)]
+pub struct Fnv1a64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Fnv1a64 {
+    pub fn new() -> Self {
+        Fnv1a64 { state: FNV_OFFSET }
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Absorb a `u64` as 8 little-endian bytes.
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The simulator's per-eval-point digest: model parameter bits (exact f32
+/// bit patterns, little-endian), the virtual clock, and the number of
+/// pending events. Identical specs + seeds must produce identical digest
+/// sequences — the determinism-twin invariant asserted in
+/// `tests/integration_sim.rs`.
+pub fn state_hash(params: &[f32], clock: u64, queue_len: usize) -> u64 {
+    let mut h = Fnv1a64::new();
+    for &p in params {
+        h.write(&p.to_bits().to_le_bytes());
+    }
+    h.write_u64(clock);
+    h.write_u64(queue_len as u64);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // Classic FNV-1a test vectors.
+        let mut h = Fnv1a64::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h2 = Fnv1a64::new();
+        h2.write(b"foobar");
+        assert_eq!(h2.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn state_hash_sensitive_to_each_input() {
+        let p = [1.0f32, -2.5, 0.0];
+        let base = state_hash(&p, 100, 3);
+        assert_ne!(base, state_hash(&[1.0, -2.5, 1e-30], 100, 3), "params");
+        assert_ne!(base, state_hash(&p, 101, 3), "clock");
+        assert_ne!(base, state_hash(&p, 100, 4), "queue length");
+        assert_eq!(base, state_hash(&p, 100, 3), "deterministic");
+    }
+
+    #[test]
+    fn negative_zero_differs_from_positive_zero() {
+        // The digest covers exact f32 bit patterns, not numeric equality.
+        assert_ne!(state_hash(&[0.0], 0, 0), state_hash(&[-0.0], 0, 0));
+    }
+}

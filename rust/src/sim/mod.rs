@@ -1,0 +1,310 @@
+//! Deterministic event-driven network simulator: simulated seconds to
+//! target, not just bits to target.
+//!
+//! Every other execution substrate in this crate advances a lockstep round
+//! grid — useful for bit accounting, silent about *time*. This module gives
+//! the same protocol arithmetic a virtual wall clock: a discrete-event
+//! engine schedules each worker's compute steps and wire transfers on a
+//! `u64` tick clock, with per-client compute speed and link bandwidth drawn
+//! from seeded lognormal-ish distributions, transfer durations charged from
+//! each message's *actual* `wire_bits` under the configured codec, plus
+//! straggler and drop/reconnect-churn processes. That answers the question
+//! the paper's headline claim actually turns on: how much wall-clock time a
+//! compressor (or the async schedule of Algorithm 2, which exists precisely
+//! to dodge stragglers) buys under skewed client speeds.
+//!
+//! # Architecture
+//!
+//! * [`queue`] — binary-heap event queue with `(time, seq)` total-order
+//!   tie-breaking; the simulation loop is a pure fold over its pop order.
+//! * [`client`] — seeded per-client profiles and the straggler/churn
+//!   processes, each on its own salted `Pcg64` stream.
+//! * [`run`] — the driver: it moves the *existing*
+//!   `protocol::{WorkerCore, MasterCore}` state machines through the event
+//!   timeline, so the learning arithmetic is shared with the engine and the
+//!   threaded coordinator, not reimplemented.
+//! * [`hash`] — FNV-1a state digests (model bits + clock + queue length)
+//!   recorded per eval point for determinism twins.
+//!
+//! # Parity contract
+//!
+//! The master folds each round's updates in worker-index order and
+//! processes rounds in global-step order, and every worker draws only from
+//! its own salted streams — so without churn the produced [`History`] is
+//! **bit-identical to `engine::run`** for *any* timing parameters: timing
+//! moves the clock, never the arithmetic. The degenerate configuration
+//! (homogeneous speeds, zero latency, synchronous `H`) asserted in
+//! `tests/integration_sim.rs` is the acceptance instance of that contract.
+//! Divergence from the engine is possible only through churn (a worker
+//! offline at a sync point skips the round) — and there the error-feedback
+//! anchors are frozen on both sides while offline, so reconnection is
+//! arithmetically free (see [`client`]).
+//!
+//! Because every round here is explicit — `begin_round`/`end_round` fire at
+//! the round's completion tick — FedOpt server optimizers (`momentum`,
+//! `adam`) compose with *asynchronous* schedules on this substrate, unlike
+//! the threaded coordinator's aggregate-on-arrival path, which keeps its
+//! up-front rejection (`coordinator::master`).
+//!
+//! [`History`]: crate::engine::History
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
+
+pub mod client;
+pub mod hash;
+pub mod queue;
+pub mod run;
+
+pub use client::{transfer_ticks, ChurnTrack, ClientProfile};
+pub use hash::{state_hash, Fnv1a64};
+pub use queue::EventQueue;
+pub use run::{run, run_from, SimPoint, SimResult};
+
+use crate::util::json::Json;
+
+/// Network/compute scenario description — the `"sim"` object of an
+/// `ExperimentSpec` JSON. All fields have degenerate-friendly defaults;
+/// `Default` is a homogeneous, zero-latency, failure-free cluster.
+///
+/// Time is measured in virtual ticks; `ticks_per_sec` only converts ticks
+/// to reported seconds. With the default `1_000_000` a tick is 1 µs, the
+/// default compute mean (5000 ticks) is 5 ms/step, and the default
+/// bandwidth (100 bits/tick) is 100 Mbit/s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimSpec {
+    /// Virtual ticks per reported second (display conversion only).
+    pub ticks_per_sec: u64,
+    /// Mean compute ticks per local SGD step.
+    pub compute_mean: f64,
+    /// Lognormal-ish spread of per-client compute speed (0 = homogeneous).
+    /// `sigma ≈ 0.8` gives a p99/p50 client-speed ratio of ≈ 6×.
+    pub compute_sigma: f64,
+    /// Mean link bandwidth in wire bits per tick (symmetric up/down).
+    pub bw_mean: f64,
+    /// Lognormal-ish spread of per-client bandwidth (0 = homogeneous).
+    pub bw_sigma: f64,
+    /// Fixed propagation latency added to every transfer, in ticks.
+    pub latency: u64,
+    /// Per-step probability that a worker's step is straggler-slowed.
+    pub straggler_prob: f64,
+    /// Compute-time multiplier applied to straggler-hit steps.
+    pub straggler_mult: f64,
+    /// Mean online-window duration in ticks; 0 disables churn entirely.
+    pub churn_online_mean: u64,
+    /// Mean offline-window duration in ticks (must be ≥ 1 when churn is on).
+    pub churn_offline_mean: u64,
+    /// Lognormal-ish spread of churn window durations.
+    pub churn_sigma: f64,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            ticks_per_sec: 1_000_000,
+            compute_mean: 5_000.0,
+            compute_sigma: 0.0,
+            bw_mean: 100.0,
+            bw_sigma: 0.0,
+            latency: 0,
+            straggler_prob: 0.0,
+            straggler_mult: 10.0,
+            churn_online_mean: 0,
+            churn_offline_mean: 0,
+            churn_sigma: 0.5,
+        }
+    }
+}
+
+/// JSON field names, in emission order (BTreeMap sorts them anyway; this
+/// list is the single source for the strict unknown-key check).
+const SIM_FIELDS: &[&str] = &[
+    "ticks_per_sec",
+    "compute_mean",
+    "compute_sigma",
+    "bw_mean",
+    "bw_sigma",
+    "latency",
+    "straggler_prob",
+    "straggler_mult",
+    "churn_online_mean",
+    "churn_offline_mean",
+    "churn_sigma",
+];
+
+impl SimSpec {
+    /// Range-check the scenario (shared by spec validation and the CLI).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ticks_per_sec >= 1, "sim: ticks_per_sec must be >= 1");
+        anyhow::ensure!(
+            self.compute_mean >= 1.0 && self.compute_mean.is_finite(),
+            "sim: compute_mean must be >= 1 tick, got {}",
+            self.compute_mean
+        );
+        anyhow::ensure!(
+            self.bw_mean > 0.0 && self.bw_mean.is_finite(),
+            "sim: bw_mean must be > 0 bits/tick, got {}",
+            self.bw_mean
+        );
+        for (name, sigma) in [
+            ("compute_sigma", self.compute_sigma),
+            ("bw_sigma", self.bw_sigma),
+            ("churn_sigma", self.churn_sigma),
+        ] {
+            anyhow::ensure!(
+                sigma >= 0.0 && sigma.is_finite(),
+                "sim: {name} must be finite and >= 0, got {sigma}"
+            );
+        }
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.straggler_prob),
+            "sim: straggler_prob must be in [0, 1], got {}",
+            self.straggler_prob
+        );
+        anyhow::ensure!(
+            self.straggler_mult >= 1.0 && self.straggler_mult.is_finite(),
+            "sim: straggler_mult must be >= 1, got {}",
+            self.straggler_mult
+        );
+        if self.churn_online_mean > 0 {
+            anyhow::ensure!(
+                self.churn_offline_mean >= 1,
+                "sim: churn_offline_mean must be >= 1 tick when churn is enabled"
+            );
+        } else {
+            anyhow::ensure!(
+                self.churn_offline_mean == 0,
+                "sim: churn_offline_mean set but churn_online_mean is 0 (churn disabled)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Emit the full scenario (every field, explicit) as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ticks_per_sec", Json::num(self.ticks_per_sec as f64)),
+            ("compute_mean", Json::num(self.compute_mean)),
+            ("compute_sigma", Json::num(self.compute_sigma)),
+            ("bw_mean", Json::num(self.bw_mean)),
+            ("bw_sigma", Json::num(self.bw_sigma)),
+            ("latency", Json::num(self.latency as f64)),
+            ("straggler_prob", Json::num(self.straggler_prob)),
+            ("straggler_mult", Json::num(self.straggler_mult)),
+            ("churn_online_mean", Json::num(self.churn_online_mean as f64)),
+            ("churn_offline_mean", Json::num(self.churn_offline_mean as f64)),
+            ("churn_sigma", Json::num(self.churn_sigma)),
+        ])
+    }
+
+    /// Parse a `"sim"` JSON object. Missing fields take their defaults;
+    /// unknown fields are a hard error (same strictness as the enclosing
+    /// `ExperimentSpec`). Ends with [`SimSpec::validate`].
+    pub fn from_json(j: &Json) -> anyhow::Result<SimSpec> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sim: expected a JSON object"))?;
+        if let Some(unknown) = obj.keys().find(|k| !SIM_FIELDS.contains(&k.as_str())) {
+            anyhow::bail!("sim: unknown field `{unknown}`");
+        }
+        let f64_field = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("sim: field `{key}` must be a number")),
+            }
+        };
+        let u64_field = |key: &str, default: u64| -> anyhow::Result<u64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("sim: field `{key}` must be a non-negative integer")
+                    }),
+            }
+        };
+        let d = SimSpec::default();
+        let s = SimSpec {
+            ticks_per_sec: u64_field("ticks_per_sec", d.ticks_per_sec)?,
+            compute_mean: f64_field("compute_mean", d.compute_mean)?,
+            compute_sigma: f64_field("compute_sigma", d.compute_sigma)?,
+            bw_mean: f64_field("bw_mean", d.bw_mean)?,
+            bw_sigma: f64_field("bw_sigma", d.bw_sigma)?,
+            latency: u64_field("latency", d.latency)?,
+            straggler_prob: f64_field("straggler_prob", d.straggler_prob)?,
+            straggler_mult: f64_field("straggler_mult", d.straggler_mult)?,
+            churn_online_mean: u64_field("churn_online_mean", d.churn_online_mean)?,
+            churn_offline_mean: u64_field("churn_offline_mean", d.churn_offline_mean)?,
+            churn_sigma: f64_field("churn_sigma", d.churn_sigma)?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates_and_roundtrips() {
+        let s = SimSpec::default();
+        s.validate().unwrap();
+        let back = SimSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn nondefault_roundtrips_exactly() {
+        let s = SimSpec {
+            ticks_per_sec: 1000,
+            compute_mean: 123.5,
+            compute_sigma: 0.8,
+            bw_mean: 12.25,
+            bw_sigma: 0.4,
+            latency: 2_000,
+            straggler_prob: 0.05,
+            straggler_mult: 8.0,
+            churn_online_mean: 4_000_000,
+            churn_offline_mean: 900_000,
+            churn_sigma: 0.3,
+        };
+        s.validate().unwrap();
+        let text = s.to_json().pretty();
+        let back = SimSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn missing_fields_take_defaults() {
+        let j = Json::parse(r#"{"compute_sigma": 0.8, "latency": 10}"#).unwrap();
+        let s = SimSpec::from_json(&j).unwrap();
+        let d = SimSpec::default();
+        assert_eq!(s.compute_sigma, 0.8);
+        assert_eq!(s.latency, 10);
+        assert_eq!(s.bw_mean, d.bw_mean);
+        assert_eq!(s.ticks_per_sec, d.ticks_per_sec);
+    }
+
+    #[test]
+    fn rejects_unknown_fields_and_bad_ranges() {
+        assert!(SimSpec::from_json(&Json::parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(&Json::parse(r#"{"latency": 1.5}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(&Json::parse(r#"{"latency": -3}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(&Json::parse(r#"{"straggler_prob": 1.5}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(&Json::parse(r#"{"bw_mean": 0}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(&Json::parse(r#"{"straggler_mult": 0.5}"#).unwrap()).is_err());
+        // Churn consistency: offline mean without an online mean is a typo.
+        assert!(
+            SimSpec::from_json(&Json::parse(r#"{"churn_offline_mean": 100}"#).unwrap()).is_err()
+        );
+        assert!(SimSpec::from_json(&Json::parse(r#"{"churn_online_mean": 100}"#).unwrap()).is_err());
+        assert!(SimSpec::from_json(
+            &Json::parse(r#"{"churn_online_mean": 100, "churn_offline_mean": 50}"#).unwrap()
+        )
+        .is_ok());
+        assert!(SimSpec::from_json(&Json::parse("[1,2]").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Deterministic discrete-event queue.
+//!
+//! A min-heap over `(time, seq)` where `seq` is a monotonically increasing
+//! push counter: two events scheduled for the same virtual tick pop in the
+//! order they were pushed. The tie-break makes the pop order a *total*
+//! order — a pure function of the push sequence — which is what turns the
+//! binary heap (whose internal layout is famously order-unstable) into a
+//! deterministic scheduler. This is the tick/delta/event simulation-loop
+//! discipline: handlers never read a wall clock, they only schedule future
+//! events relative to the popped event's time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: u64,
+    seq: u64,
+    ev: T,
+}
+
+// Identity and order live entirely in `(time, seq)`; `seq` is unique per
+// queue, so the derived equivalence is consistent with `Ord`.
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Event queue with `(time, seq)` total-order tie-breaking.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Pre-size the heap spine so a bounded-occupancy steady state performs
+    /// no further heap allocation (bench-asserted via `alloc/sim-steady-*`).
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Schedule `ev` at absolute virtual time `time`.
+    pub fn push(&mut self, time: u64, ev: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, ev });
+    }
+
+    /// Pop the earliest event; same-tick events pop in push order.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|e| (e.time, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total number of events ever pushed.
+    pub fn pushed(&self) -> u64 {
+        self.seq
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_tick_breaks_ties_by_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..32usize {
+            q.push(7, i);
+        }
+        // Interleave an earlier and a later event to stress the heap layout.
+        q.push(3, 1000);
+        q.push(9, 2000);
+        assert_eq!(q.pop(), Some((3, 1000)));
+        for i in 0..32usize {
+            assert_eq!(q.pop(), Some((7, i)), "FIFO within tick 7");
+        }
+        assert_eq!(q.pop(), Some((9, 2000)));
+    }
+
+    #[test]
+    fn tie_break_survives_pop_push_interleaving() {
+        // Push/pop interleaving must not reorder same-tick events: seq is
+        // assigned at push, not at heap position.
+        let mut q = EventQueue::new();
+        q.push(5, "first");
+        q.push(1, "warm");
+        assert_eq!(q.pop(), Some((1, "warm")));
+        q.push(5, "second");
+        q.push(5, "third");
+        assert_eq!(q.pop(), Some((5, "first")));
+        assert_eq!(q.pop(), Some((5, "second")));
+        assert_eq!(q.pop(), Some((5, "third")));
+    }
+
+    #[test]
+    fn len_and_pushed_track_activity() {
+        let mut q: EventQueue<u8> = EventQueue::with_capacity(8);
+        assert!(q.is_empty());
+        q.push(1, 0);
+        q.push(2, 1);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pushed(), 2);
+    }
+}

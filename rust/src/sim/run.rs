@@ -1,0 +1,669 @@
+//! The event-driven driver: `protocol::{WorkerCore, MasterCore}` on a
+//! virtual clock.
+//!
+//! # Event model
+//!
+//! Each live worker owns **exactly one** in-flight event at any moment:
+//!
+//! * [`Ev::StepDone`] — the worker finishes local SGD step `t` after
+//!   `compute_ticks` (× the straggler multiplier when the per-step
+//!   Bernoulli hits). If `t` is one of its sync points and it is online, it
+//!   starts uploading; if offline, it reports a *skip* to the master
+//!   (bookkeeping, not wire traffic) and keeps computing; otherwise it just
+//!   schedules the next step.
+//! * [`Ev::UploadArrived`] — the worker's compressed update lands at the
+//!   master after `transfer_ticks(wire_bits, bw, latency)`. The worker now
+//!   blocks: its model for step `t + 1` depends on round `t`'s broadcast.
+//! * [`Ev::DownArrived`] — the round-`t` broadcast lands back at the
+//!   worker, which applies it and resumes computing.
+//!
+//! so the queue occupancy is bounded by the worker count and the steady
+//! state allocates nothing (round buffers are pooled, messages are
+//! recycled through their owning worker's `MessageBuf`).
+//!
+//! # Round ordering = engine parity
+//!
+//! The master buffers arrivals per round and processes rounds **strictly in
+//! global-step order**, each as soon as every *expected* participant
+//! (schedule ∩ sampled participation — a static table) has either arrived
+//! or skipped. Within a round, updates fold in worker-index order. Those
+//! two rules make the folded arithmetic — and hence the emitted `History`
+//! — bit-identical to `engine::run` for *any* timing parameters as long as
+//! no sync is skipped; timing only decides *when* (in virtual ticks) each
+//! round completes. Churn is the single source of arithmetic divergence,
+//! by design.
+//!
+//! # Eval semantics
+//!
+//! The eval grid is the engine's (`step % eval_every == 0 || step == steps`,
+//! plus the step-0 snapshot). Grid step `s` is emitted the moment the last
+//! round with step `≤ s − 1` has been processed — the global model, bit
+//! totals and per-worker error memories are then exactly the engine's at
+//! that step — and is stamped with the virtual tick at which that happened
+//! plus an FNV-1a state digest for determinism twins.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::client::{transfer_ticks, ChurnTrack, ClientProfile, SIM_STRAGGLER_RNG_SALT};
+use super::hash::state_hash;
+use super::queue::EventQueue;
+use super::SimSpec;
+use crate::compress::{encode, Compressor, Message, MessageBuf};
+use crate::data::shard_indices;
+use crate::engine::{EvalSets, History, TrainSpec};
+use crate::grad::GradModel;
+use crate::protocol::{MasterCore, WorkerCore};
+use crate::topology::SyncSchedule;
+use crate::util::rng::Pcg64;
+
+/// Simulator events. `Copy`-small on purpose: payloads (messages, broadcast
+/// snapshots) live in per-worker slots, not in the queue.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Worker `r` finished its current local step.
+    StepDone { r: usize },
+    /// Worker `r`'s uplink message reached the master.
+    UploadArrived { r: usize },
+    /// The round broadcast reached worker `r`.
+    DownArrived { r: usize },
+}
+
+/// One worker's simulation shell around its protocol core.
+struct SimWorker {
+    core: WorkerCore,
+    profile: ClientProfile,
+    /// Per-step straggler Bernoulli stream (`None` when `straggler_prob` is 0).
+    straggler: Option<Pcg64>,
+    churn: ChurnTrack,
+    /// Index of the local step currently computing (or, while the worker is
+    /// blocked on a sync round-trip, the step it synced at).
+    step: usize,
+    done: bool,
+    /// Two-slot ‖m‖² tracker: because a worker blocks until its sync's
+    /// broadcast returns, at most one of its syncs is ever unprocessed by
+    /// the master — so the memory value any eval cutoff needs is either the
+    /// latest (`mem_cur`, produced at sync step `mem_cur_t`) or the one
+    /// before it. No per-sync log required.
+    mem_prev: f64,
+    mem_cur: f64,
+    mem_cur_t: usize,
+}
+
+impl SimWorker {
+    /// ‖m‖² as of eval cutoff `cutoff` (= eval step − 1; −1 for step 0):
+    /// the engine's `mem_norm_sq` after all rounds `t ≤ cutoff`.
+    fn mem_at(&self, cutoff: i64) -> f64 {
+        if self.mem_cur_t as i64 <= cutoff {
+            self.mem_cur
+        } else {
+            self.mem_prev
+        }
+    }
+}
+
+/// Buffered state of one aggregation round while its participants trickle in.
+struct RoundBuf {
+    /// Global step of the round.
+    t: usize,
+    /// |schedule ∩ sampled participation| — static, churn-independent.
+    expected: usize,
+    /// Arrived uploads + skip notices received so far.
+    reports: usize,
+    /// Arrived messages, slot-per-worker (worker-order fold needs no sort).
+    msgs: Vec<Option<Message>>,
+    arrived: Vec<bool>,
+}
+
+impl RoundBuf {
+    fn empty() -> Self {
+        RoundBuf { t: 0, expected: 0, reports: 0, msgs: Vec::new(), arrived: Vec::new() }
+    }
+
+    fn reset(&mut self, t: usize, expected: usize, workers: usize) {
+        self.t = t;
+        self.expected = expected;
+        self.reports = 0;
+        self.msgs.clear();
+        self.msgs.resize_with(workers, || None);
+        self.arrived.clear();
+        self.arrived.resize(workers, false);
+    }
+}
+
+/// One eval point's virtual-time view (parallel to `History::points`).
+#[derive(Clone, Copy, Debug)]
+pub struct SimPoint {
+    /// Global eval step (same grid as the paired `MetricPoint`).
+    pub step: usize,
+    /// Virtual tick at which the model state of this eval became final.
+    pub ticks: u64,
+    /// `ticks` converted through `SimSpec::ticks_per_sec`.
+    pub secs: f64,
+    /// FNV-1a digest of (model bits, clock, queue length) — the
+    /// determinism-twin fingerprint.
+    pub state_hash: u64,
+}
+
+/// A finished simulation: the engine-compatible metric history plus the
+/// virtual-time track.
+pub struct SimResult {
+    /// Bit-identical to `engine::run` whenever churn skipped no sync.
+    pub history: History,
+    /// One entry per `history.points` entry, same order.
+    pub points: Vec<SimPoint>,
+    /// Total events processed (a cheap workload fingerprint).
+    pub events: u64,
+    /// Virtual tick of the last event (when the slowest worker finished).
+    pub final_ticks: u64,
+    /// Copied from the spec, so consumers can convert without re-plumbing it.
+    pub ticks_per_sec: u64,
+}
+
+impl SimResult {
+    /// Total simulated wall-clock seconds.
+    pub fn final_secs(&self) -> f64 {
+        self.final_ticks as f64 / self.ticks_per_sec as f64
+    }
+
+    /// Simulated seconds until train loss first reaches `target`
+    /// (`None` if it never does) — the fig13 headline measurement.
+    pub fn secs_to_loss(&self, target: f64) -> Option<f64> {
+        self.history
+            .points
+            .iter()
+            .zip(&self.points)
+            .find(|(m, _)| m.train_loss <= target)
+            .map(|(_, p)| p.secs)
+    }
+}
+
+/// Simulate a full training job from the zero init (the paper's convex
+/// setting). `spec.threads` is ignored: the simulator is single-threaded by
+/// construction — determinism comes from the event order, not thread count.
+pub fn run(spec: &TrainSpec, sim: &SimSpec) -> SimResult {
+    run_from(spec, sim, vec![0.0f32; spec.model.dim()])
+}
+
+/// As [`run`], from explicit initial parameters (non-convex figures).
+pub fn run_from(spec: &TrainSpec, sim: &SimSpec, global: Vec<f32>) -> SimResult {
+    sim.validate().expect("invalid SimSpec");
+    let d = spec.model.dim();
+    assert_eq!(global.len(), d);
+    assert!(spec.workers >= 1);
+    assert!(spec.eval_every >= 1, "eval_every must be >= 1");
+    let r_count = spec.workers;
+    let shards = shard_indices(spec.train, r_count, spec.sharding);
+    let dense_down = spec.down_compressor.is_identity();
+
+    let workers: Vec<SimWorker> = (0..r_count)
+        .map(|r| SimWorker {
+            core: WorkerCore::new(
+                r,
+                global.clone(),
+                shards[r].clone(),
+                spec.batch,
+                spec.momentum,
+                spec.seed,
+            ),
+            profile: ClientProfile::draw(sim, spec.seed, r),
+            straggler: (sim.straggler_prob > 0.0)
+                .then(|| Pcg64::new(spec.seed ^ SIM_STRAGGLER_RNG_SALT, r as u64 + 1)),
+            churn: ChurnTrack::new(sim, spec.seed, r),
+            step: 0,
+            done: false,
+            mem_prev: 0.0,
+            mem_cur: 0.0,
+            mem_cur_t: 0,
+        })
+        .collect();
+    let mut master = MasterCore::new(global, r_count, spec.seed, !dense_down);
+    master.set_agg_scale(spec.agg_scale);
+    master.set_server_opt(spec.server_opt);
+
+    // Static round table: rounds exist where the schedule ∩ sampled
+    // participation is non-empty, independent of timing and churn.
+    // Pre-sized so run setup costs a fixed number of allocations
+    // regardless of step count (the steady-state alloc probe diffs a
+    // 2N-step run against an N-step run and expects exact cancellation).
+    let mut round_steps: Vec<usize> = Vec::with_capacity(spec.steps);
+    let mut round_expected: Vec<usize> = Vec::with_capacity(spec.steps);
+    for t in 0..spec.steps {
+        let expected = (0..r_count)
+            .filter(|&r| spec.schedule.syncs_at(r, t) && spec.participation.participates(r, t))
+            .count();
+        if expected > 0 {
+            round_steps.push(t);
+            round_expected.push(expected);
+        }
+    }
+    // The engine's eval grid, verbatim (pre-sized, same reason as above).
+    let mut eval_steps = Vec::with_capacity(spec.steps / spec.eval_every + 2);
+    eval_steps.push(0usize);
+    eval_steps.extend((1..=spec.steps).filter(|&s| s % spec.eval_every == 0 || s == spec.steps));
+
+    let mut sim_state = Sim {
+        spec,
+        sim: *sim,
+        dim: d,
+        dense_down,
+        eval: EvalSets::new(spec),
+        workers,
+        master,
+        down_bufs: (0..r_count).map(|_| MessageBuf::new()).collect(),
+        down_snaps: vec![None; r_count],
+        // Each live worker owns exactly one queued event, so occupancy is
+        // bounded by the worker count: pre-size once, never regrow.
+        queue: EventQueue::with_capacity(r_count + 1),
+        round_steps,
+        round_expected,
+        next_round_idx: 0,
+        pending: VecDeque::new(),
+        pool: Vec::new(),
+        bits_up: 0,
+        bits_down: 0,
+        history: History::new(),
+        points: Vec::with_capacity(eval_steps.len()),
+        eval_steps,
+        next_eval: 0,
+    };
+    sim_state.run()
+}
+
+struct Sim<'s, 'a> {
+    spec: &'s TrainSpec<'a>,
+    sim: SimSpec,
+    dim: usize,
+    dense_down: bool,
+    eval: EvalSets,
+    workers: Vec<SimWorker>,
+    master: MasterCore,
+    /// Per-worker compressed-downlink payload awaiting its `DownArrived`.
+    down_bufs: Vec<MessageBuf>,
+    /// Per-worker dense-downlink payload (one model snapshot per round,
+    /// shared via `Arc` by all that round's recipients).
+    down_snaps: Vec<Option<Arc<[f32]>>>,
+    queue: EventQueue<Ev>,
+    round_steps: Vec<usize>,
+    round_expected: Vec<usize>,
+    /// Index into `round_steps` of the next unprocessed round.
+    next_round_idx: usize,
+    /// Open rounds, contiguous from `next_round_idx` (front = oldest).
+    pending: VecDeque<RoundBuf>,
+    /// Recycled round buffers — the steady state allocates none.
+    pool: Vec<RoundBuf>,
+    bits_up: u64,
+    bits_down: u64,
+    history: History,
+    points: Vec<SimPoint>,
+    eval_steps: Vec<usize>,
+    next_eval: usize,
+}
+
+impl Sim<'_, '_> {
+    fn run(mut self) -> SimResult {
+        if self.spec.steps > 0 {
+            for r in 0..self.workers.len() {
+                self.schedule_step(r, 0);
+            }
+        }
+        // Evals wholly before the first round (step-0 snapshot; everything,
+        // if there are no rounds) are final at tick 0.
+        self.flush_evals(0);
+        let mut clock = 0u64;
+        while let Some((time, ev)) = self.queue.pop() {
+            debug_assert!(time >= clock, "virtual time ran backwards");
+            clock = time;
+            self.handle(ev, clock);
+        }
+        debug_assert!(self.pending.is_empty(), "undrained round at exit");
+        self.flush_evals(clock);
+        debug_assert_eq!(self.next_eval, self.eval_steps.len(), "missed eval points");
+        let events = self.queue.pushed();
+        let mut history = self.history;
+        history.final_params = self.master.into_params();
+        SimResult {
+            history,
+            points: self.points,
+            events,
+            final_ticks: clock,
+            ticks_per_sec: self.sim.ticks_per_sec,
+        }
+    }
+
+    fn handle(&mut self, ev: Ev, clock: u64) {
+        match ev {
+            Ev::StepDone { r } => {
+                let t = {
+                    let w = &mut self.workers[r];
+                    let t = w.step;
+                    w.core.local_step(self.spec.model, self.spec.train, self.spec.lr.at(t));
+                    t
+                };
+                let syncs = self.spec.schedule.syncs_at(r, t)
+                    && self.spec.participation.participates(r, t);
+                if !syncs {
+                    self.advance(r, clock);
+                } else if self.workers[r].churn.online_at(clock) {
+                    self.begin_upload(r, t, clock);
+                } else {
+                    // Offline at the sync point: the device keeps training,
+                    // the link is down. Tell the master not to wait (a
+                    // control-plane notice, not wire traffic) and move on;
+                    // uplink memory and both anchors stay frozen, so the
+                    // error-feedback recursion is untouched.
+                    self.report_skip(t, r);
+                    self.process_ready_rounds(clock);
+                    self.advance(r, clock);
+                }
+            }
+            Ev::UploadArrived { r } => {
+                let t = self.workers[r].step;
+                self.report_arrival(t, r);
+                self.process_ready_rounds(clock);
+                // The worker stays blocked until `DownArrived`.
+            }
+            Ev::DownArrived { r } => {
+                if self.dense_down {
+                    let snap = self.down_snaps[r].take().expect("DownArrived without payload");
+                    self.workers[r].core.apply_dense_broadcast(&snap);
+                } else {
+                    self.workers[r].core.apply_delta_broadcast(self.down_bufs[r].message());
+                }
+                self.advance(r, clock);
+            }
+        }
+    }
+
+    /// Compress + stage worker `r`'s update for round `t` and put its
+    /// upload on the wire. The worker then blocks awaiting the broadcast.
+    fn begin_upload(&mut self, r: usize, t: usize, clock: u64) {
+        let (msg, bw) = {
+            let w = &mut self.workers[r];
+            let _ = w.core.make_update(self.spec.compressor);
+            // The two-slot memory tracker advances exactly at update
+            // creation, mirroring when the engine's `mem_norm_sq` changes.
+            w.mem_prev = w.mem_cur;
+            w.mem_cur = w.core.mem_norm_sq();
+            w.mem_cur_t = t;
+            (w.core.take_update(), w.profile.bw)
+        };
+        let wire_bits = msg.wire_bits_with(self.spec.codec);
+        let idx = self.ensure_round(t);
+        self.pending[idx].msgs[r] = Some(msg);
+        let dur = transfer_ticks(wire_bits, bw, self.sim.latency);
+        self.queue.push(clock + dur, Ev::UploadArrived { r });
+    }
+
+    /// Schedule worker `r`'s next local step after the current one (or,
+    /// from `StepDone`/`DownArrived`, after finishing step `r.step`).
+    fn advance(&mut self, r: usize, clock: u64) {
+        let t = self.workers[r].step;
+        if t + 1 >= self.spec.steps {
+            self.workers[r].done = true;
+            return;
+        }
+        self.workers[r].step = t + 1;
+        self.schedule_step(r, clock);
+    }
+
+    /// Push `StepDone` for worker `r`'s current step: base compute ticks,
+    /// straggler-multiplied when the per-step Bernoulli hits.
+    fn schedule_step(&mut self, r: usize, clock: u64) {
+        let w = &mut self.workers[r];
+        let base = w.profile.compute_ticks;
+        let hit = match &mut w.straggler {
+            Some(rng) => rng.f64() < self.sim.straggler_prob,
+            None => false,
+        };
+        let dur = if hit {
+            ((base as f64) * self.sim.straggler_mult).round().max(1.0) as u64
+        } else {
+            base
+        };
+        self.queue.push(clock + dur, Ev::StepDone { r });
+    }
+
+    /// Index (within `pending`) of round `t`'s buffer, opening buffers —
+    /// from the pool when possible — up to and including it.
+    fn ensure_round(&mut self, t: usize) -> usize {
+        let pos = self.round_steps[self.next_round_idx..]
+            .binary_search(&t)
+            .expect("sync report for a step with no round");
+        while self.pending.len() <= pos {
+            let i = self.next_round_idx + self.pending.len();
+            let mut buf = self.pool.pop().unwrap_or_else(RoundBuf::empty);
+            buf.reset(self.round_steps[i], self.round_expected[i], self.workers.len());
+            self.pending.push_back(buf);
+        }
+        pos
+    }
+
+    fn report_arrival(&mut self, t: usize, r: usize) {
+        let idx = self.ensure_round(t);
+        let buf = &mut self.pending[idx];
+        debug_assert!(buf.msgs[r].is_some(), "arrival without a staged message");
+        buf.arrived[r] = true;
+        buf.reports += 1;
+    }
+
+    fn report_skip(&mut self, t: usize, r: usize) {
+        let idx = self.ensure_round(t);
+        self.pending[idx].reports += 1;
+    }
+
+    /// Process every fully-reported round at the front of the line, oldest
+    /// first — rounds never complete out of order, which is what pins the
+    /// fold sequence to the engine's.
+    fn process_ready_rounds(&mut self, clock: u64) {
+        while self.pending.front().map_or(false, |b| b.reports == b.expected) {
+            let mut buf = self.pending.pop_front().expect("checked non-empty");
+            self.process_round(&mut buf, clock);
+            self.next_round_idx += 1;
+            self.pool.push(buf);
+            // Eagerly emit evals this round unlocked (eagerness keeps the
+            // two-slot memory tracker sufficient: no worker can stage
+            // another sync before its previous round is processed).
+            self.flush_evals(clock);
+        }
+    }
+
+    /// The engine's round body: fold in worker order, close the server
+    /// round, broadcast to the workers that arrived. A round whose every
+    /// expected participant skipped moves no state at all.
+    fn process_round(&mut self, buf: &mut RoundBuf, clock: u64) {
+        let arrived_n = buf.arrived.iter().filter(|&&a| a).count();
+        if arrived_n == 0 {
+            return;
+        }
+        self.master.begin_round(arrived_n);
+        for r in 0..self.workers.len() {
+            if let Some(msg) = buf.msgs[r].take() {
+                self.bits_up += msg.wire_bits_with(self.spec.codec);
+                self.master.apply_update(&msg).expect("sim-internal update dim mismatch");
+                self.workers[r].core.recycle_update(msg);
+            }
+        }
+        self.master.end_round();
+        for r in 0..self.workers.len() {
+            if !buf.arrived[r] {
+                continue;
+            }
+            let bits = if self.dense_down {
+                self.down_snaps[r] = Some(self.master.params_snapshot());
+                encode::dense_model_bits(self.dim)
+            } else {
+                self.master.delta_broadcast_into(
+                    r,
+                    self.spec.down_compressor,
+                    &mut self.down_bufs[r],
+                );
+                self.down_bufs[r].message().wire_bits_with(self.spec.codec)
+            };
+            self.bits_down += bits;
+            let dur = transfer_ticks(bits, self.workers[r].profile.bw, self.sim.latency);
+            self.queue.push(clock + dur, Ev::DownArrived { r });
+        }
+    }
+
+    /// Emit every eval-grid step whose model state is now final: grid step
+    /// `s` needs all rounds with step ≤ s − 1 processed.
+    fn flush_evals(&mut self, clock: u64) {
+        while let Some(&s) = self.eval_steps.get(self.next_eval) {
+            let covered = match self.round_steps.get(self.next_round_idx) {
+                None => true,
+                Some(&rt) => rt >= s,
+            };
+            if !covered {
+                break;
+            }
+            self.emit_eval(s, clock);
+            self.next_eval += 1;
+        }
+    }
+
+    fn emit_eval(&mut self, s: usize, clock: u64) {
+        let cutoff = s as i64 - 1;
+        // Worker-index-order f64 sum — the exact `engine::avg_mem` fold.
+        let mem = self.workers.iter().map(|w| w.mem_at(cutoff)).sum::<f64>()
+            / self.workers.len() as f64;
+        self.history.push(self.eval.measure(
+            self.spec,
+            s,
+            self.master.params(),
+            self.bits_up,
+            self.bits_down,
+            mem,
+        ));
+        self.points.push(SimPoint {
+            step: s,
+            ticks: clock,
+            secs: clock as f64 / self.sim.ticks_per_sec as f64,
+            state_hash: state_hash(self.master.params(), clock, self.queue.len()),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+    use crate::data::gaussian_clusters;
+    use crate::engine;
+    use crate::grad::SoftmaxRegression;
+    use crate::optim::LrSchedule;
+    use crate::topology::FixedPeriod;
+
+    fn setup() -> (crate::data::Dataset, SoftmaxRegression) {
+        let ds = gaussian_clusters(160, 8, 3, 2.0, 0.4, 7);
+        let model = SoftmaxRegression::new(8, 3, 1.0 / 160.0);
+        (ds, model)
+    }
+
+    fn base_spec<'a>(
+        model: &'a SoftmaxRegression,
+        ds: &'a crate::data::Dataset,
+        comp: &'a dyn crate::compress::Compressor,
+        sched: &'a FixedPeriod,
+    ) -> TrainSpec<'a> {
+        let mut spec = TrainSpec::new(model, ds, comp, sched);
+        spec.workers = 3;
+        spec.steps = 40;
+        spec.eval_every = 8;
+        spec.lr = LrSchedule::Const { eta: 0.4 };
+        spec
+    }
+
+    /// The core contract: heterogeneous timing changes the clock, never the
+    /// arithmetic — the sim `History` matches the engine bit for bit.
+    #[test]
+    fn parity_with_engine_even_under_skewed_timing() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(4);
+        let spec = base_spec(&model, &ds, &topk, &sched);
+        let engine_h = engine::run(&spec);
+        let sim = SimSpec {
+            compute_sigma: 0.9,
+            bw_sigma: 0.7,
+            latency: 500,
+            straggler_prob: 0.2,
+            straggler_mult: 6.0,
+            ..SimSpec::default()
+        };
+        let res = run(&spec, &sim);
+        assert_eq!(res.history.points.len(), engine_h.points.len());
+        for (a, b) in res.history.points.iter().zip(&engine_h.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "step {}", a.step);
+            assert_eq!(a.bits_up, b.bits_up);
+            assert_eq!(a.bits_down, b.bits_down);
+            assert_eq!(a.mem_norm_sq.to_bits(), b.mem_norm_sq.to_bits(), "step {}", a.step);
+        }
+        assert_eq!(res.history.final_params, engine_h.final_params);
+        assert_eq!(res.points.len(), res.history.points.len());
+        assert!(res.final_ticks > 0);
+    }
+
+    /// Ticks must be monotone over eval points and scale with the clock
+    /// resolution; slower clients make the same run take longer.
+    #[test]
+    fn virtual_time_is_monotone_and_reacts_to_compute_speed() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(2);
+        let spec = base_spec(&model, &ds, &topk, &sched);
+        let fast = run(&spec, &SimSpec { compute_mean: 100.0, ..SimSpec::default() });
+        let slow = run(&spec, &SimSpec { compute_mean: 10_000.0, ..SimSpec::default() });
+        let ticks: Vec<u64> = fast.points.iter().map(|p| p.ticks).collect();
+        assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "non-monotone: {ticks:?}");
+        assert!(slow.final_ticks > 10 * fast.final_ticks);
+        assert_eq!(fast.history.final_params, slow.history.final_params, "timing moved arithmetic");
+    }
+
+    /// Churn must not deadlock or corrupt rounds: every round still
+    /// completes (arrived + skipped = expected) and the run drains.
+    #[test]
+    fn churn_completes_and_diverges_from_engine_only_in_bits() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(2);
+        let mut spec = base_spec(&model, &ds, &topk, &sched);
+        spec.steps = 60;
+        let sim = SimSpec {
+            churn_online_mean: 40_000,
+            churn_offline_mean: 40_000,
+            ..SimSpec::default()
+        };
+        let res = run(&spec, &sim);
+        let no_churn = run(&spec, &SimSpec::default());
+        assert_eq!(res.history.points.len(), no_churn.history.points.len());
+        let b_churn = res.history.points.last().unwrap().bits_up;
+        let b_full = no_churn.history.points.last().unwrap().bits_up;
+        assert!(b_churn < b_full, "churn skipped no sync: {b_churn} vs {b_full}");
+        // Twin determinism under churn.
+        let twin = run(&spec, &sim);
+        let hashes: Vec<u64> = res.points.iter().map(|p| p.state_hash).collect();
+        let twin_hashes: Vec<u64> = twin.points.iter().map(|p| p.state_hash).collect();
+        assert_eq!(hashes, twin_hashes);
+        assert_eq!(res.events, twin.events);
+    }
+
+    /// secs_to_loss finds the first crossing on the sim clock.
+    #[test]
+    fn secs_to_loss_reports_first_crossing() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(2);
+        let spec = base_spec(&model, &ds, &topk, &sched);
+        let res = run(&spec, &SimSpec::default());
+        let first = res.history.points.first().unwrap().train_loss;
+        let last = res.history.points.last().unwrap().train_loss;
+        assert!(last < first, "loss did not improve: {first} → {last}");
+        let mid = 0.5 * (first + last);
+        let secs = res.secs_to_loss(mid).expect("crossed the midpoint");
+        assert!(secs > 0.0 && secs <= res.final_secs());
+        assert_eq!(res.secs_to_loss(f64::NEG_INFINITY), None);
+        assert_eq!(res.secs_to_loss(f64::INFINITY), Some(res.points[0].secs));
+    }
+}

@@ -37,6 +37,7 @@ use crate::data::Sharding;
 use crate::engine::{self, History, TrainSpec};
 use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::AggScale;
+use crate::sim::SimSpec;
 use crate::topology::{FixedPeriod, Participation, ParticipationSpec, RandomGaps, SyncSchedule};
 use crate::util::json::Json;
 use std::sync::Arc;
@@ -162,6 +163,10 @@ pub struct ExperimentSpec {
     pub server_opt: ServerOptSpec,
     pub sharding: Sharding,
     pub seed: u64,
+    /// Network/compute scenario for the event-driven simulator
+    /// (`qsparse sim`, `crate::sim`). `None` for engine/threaded runs; a
+    /// simulator run of a `None` spec uses the degenerate default scenario.
+    pub sim: Option<SimSpec>,
     /// Engine worker-pool threads (wall-clock only; histories are
     /// bit-identical for every value). 0 = all cores.
     pub threads: usize,
@@ -190,6 +195,7 @@ const FIELDS: &[&str] = &[
     "server_opt",
     "sharding",
     "seed",
+    "sim",
     "threads",
     "eval_every",
     "eval_rows",
@@ -218,6 +224,7 @@ impl ExperimentSpec {
             server_opt: ServerOptSpec::Avg,
             sharding: Sharding::Iid,
             seed: SEED,
+            sim: None,
             threads: 1,
             eval_every: dflt.eval_every,
             eval_rows: 512,
@@ -274,6 +281,14 @@ impl ExperimentSpec {
         self
     }
 
+    /// Embed a simulator scenario (stragglers, bandwidth skew, churn) —
+    /// consumed by `qsparse sim` / [`ResolvedExperiment::run_sim`], ignored
+    /// by the engine and threaded substrates.
+    pub fn with_sim(mut self, sim: SimSpec) -> Self {
+        self.sim = Some(sim);
+        self
+    }
+
     // -- validation ---------------------------------------------------------
 
     /// Range-check every field (called by `from_json` and `resolve`, so a
@@ -307,6 +322,9 @@ impl ExperimentSpec {
         self.down.resolve().map_err(|e| anyhow::anyhow!("`down`: {e}"))?;
         self.server_opt.validate()?;
         self.participation.validate(self.workers)?;
+        if let Some(sim) = &self.sim {
+            sim.validate()?;
+        }
         Ok(())
     }
 
@@ -333,6 +351,11 @@ impl ExperimentSpec {
         ];
         if self.codec != Codec::Raw {
             fields.push(("codec", Json::str(self.codec.as_str())));
+        }
+        // Like `codec`: emitted only when set, so every spec written before
+        // the simulator existed serializes byte-identically.
+        if let Some(sim) = &self.sim {
+            fields.push(("sim", sim.to_json()));
         }
         fields.extend([
             ("server_opt", Json::str(self.server_opt.spec_str())),
@@ -412,6 +435,9 @@ impl ExperimentSpec {
         }
         if let Some(v) = opt(j, "seed") {
             s.seed = u64_field(v, "seed")?;
+        }
+        if let Some(v) = opt(j, "sim") {
+            s.sim = Some(SimSpec::from_json(v).map_err(|e| anyhow::anyhow!("`sim`: {e}"))?);
         }
         if let Some(v) = opt(j, "threads") {
             s.threads = usize_field(v, "threads")?;
@@ -507,6 +533,16 @@ impl ResolvedExperiment {
     /// Run on the deterministic engine (from the workload's init).
     pub fn run(&self) -> History {
         engine::run_from(&self.train_spec(), self.workload.init.clone())
+    }
+
+    /// Run on the event-driven network simulator (`crate::sim`), from the
+    /// workload's init, under the spec's embedded scenario (or the
+    /// degenerate default when none is embedded). The returned
+    /// `SimResult::history` is bit-identical to [`ResolvedExperiment::run`]
+    /// whenever churn skipped no sync.
+    pub fn run_sim(&self) -> crate::sim::SimResult {
+        let sim = self.spec.sim.unwrap_or_default();
+        crate::sim::run_from(&self.train_spec(), &sim, self.workload.init.clone())
     }
 
     /// Run on the threaded master/worker runtime (consumes the resolution:
@@ -674,6 +710,33 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("codec"), "{err}");
+    }
+
+    #[test]
+    fn sim_json_roundtrip_and_default_omission() {
+        // Like `codec`: no embedded scenario ⇒ no `sim` key, so pre-sim
+        // specs stay byte-stable; absent field deserializes to None.
+        let s = ExperimentSpec::for_workload(Workload::ConvexSoftmax);
+        assert!(!s.to_json().to_string().contains("\"sim\""));
+        assert_eq!(ExperimentSpec::from_json(&s.to_json()).unwrap().sim, None);
+        let s = s.with_sim(SimSpec {
+            compute_sigma: 0.8,
+            straggler_prob: 0.05,
+            straggler_mult: 8.0,
+            ..SimSpec::default()
+        });
+        let j = s.to_json();
+        assert!(j.to_string().contains("\"sim\""));
+        assert_eq!(ExperimentSpec::from_json(&j).unwrap(), s);
+        // Errors inside the scenario are named (prefixed) errors.
+        let err = ExperimentSpec::from_json_str(r#"{"sim": {"straggler_prob": 2.0}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("straggler_prob"), "{err}");
+        let err = ExperimentSpec::from_json_str(r#"{"sim": {"bogus_knob": 1}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bogus_knob"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Integration tests: the event-driven network simulator (`sim::`).
+//!
+//! The simulator is a timing overlay on the engine's arithmetic: timing
+//! parameters decide *when* things happen (the virtual clock), never *what*
+//! the math computes. Hence the two pillars here: degenerate parity (the
+//! sim `History` is bit-identical to `engine::run` for every compressor
+//! family and wire codec) and determinism twins (the same spec + seed
+//! reproduces the exact per-eval-point FNV state-hash sequence). Queue
+//! tie-breaking and bandwidth→duration rounding unit tests live next to
+//! the code in `sim::queue` / `sim::client`.
+
+use qsparse::compress::{parse_spec, Codec};
+use qsparse::data::{gaussian_clusters, Dataset};
+use qsparse::engine::{self, TrainSpec};
+use qsparse::grad::SoftmaxRegression;
+use qsparse::optim::LrSchedule;
+use qsparse::sim::{self, SimSpec};
+use qsparse::topology::{FixedPeriod, RandomGaps, SyncSchedule};
+
+fn setup(n: usize) -> (Dataset, SoftmaxRegression) {
+    let ds = gaussian_clusters(n, 8, 3, 2.0, 0.4, 7);
+    let model = SoftmaxRegression::new(8, 3, 1.0 / n as f64);
+    (ds, model)
+}
+
+fn base_spec<'a>(
+    model: &'a SoftmaxRegression,
+    ds: &'a Dataset,
+    comp: &'a dyn qsparse::Compressor,
+    sched: &'a dyn SyncSchedule,
+) -> TrainSpec<'a> {
+    let mut spec = TrainSpec::new(model, ds, comp, sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = if cfg!(miri) { 12 } else { 48 };
+    spec.eval_every = 8;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec
+}
+
+/// Homogeneous speeds, zero latency, sync `H`: the sim must reproduce
+/// `engine::run` bit for bit — every metric of every eval point and the
+/// final parameters — for each compressor family under both wire codecs,
+/// with a compressed (error-compensated) downlink in the loop.
+#[test]
+fn degenerate_parity_across_compressors_and_codecs() {
+    let n = if cfg!(miri) { 48 } else { 200 };
+    let (ds, model) = setup(n);
+    let sched = FixedPeriod::new(4);
+    let down = parse_spec("topk:k=12").unwrap();
+    for comp_spec in ["topk:k=6", "qtopk:k=6,bits=4,scaled", "qsgd:bits=4", "signtopk:k=6,m=1"] {
+        let comp = parse_spec(comp_spec).unwrap();
+        for codec in [Codec::Raw, Codec::Rans] {
+            let mut spec = base_spec(&model, &ds, comp.as_ref(), &sched);
+            spec.down_compressor = down.as_ref();
+            spec.codec = codec;
+            let want = engine::run(&spec);
+            let got = sim::run(&spec, &SimSpec::default());
+            let tag = format!("{comp_spec} codec={}", codec.as_str());
+            assert_eq!(got.history.points.len(), want.points.len(), "{tag}");
+            for (a, b) in got.history.points.iter().zip(&want.points) {
+                assert_eq!(a.step, b.step, "{tag}");
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{tag} step {}",
+                    a.step
+                );
+                assert_eq!((a.bits_up, a.bits_down), (b.bits_up, b.bits_down), "{tag}");
+                assert_eq!(
+                    a.mem_norm_sq.to_bits(),
+                    b.mem_norm_sq.to_bits(),
+                    "{tag} step {}",
+                    a.step
+                );
+            }
+            assert_eq!(got.history.final_params, want.final_params, "{tag}");
+        }
+    }
+}
+
+/// Two runs of the same spec + seed under a fully loaded scenario (skewed
+/// speeds, stragglers, churn, async gaps) must process the same number of
+/// events and emit the identical state-hash sequence; a different seed
+/// must not.
+#[test]
+fn determinism_twin_same_seed_same_hash_sequence() {
+    let n = if cfg!(miri) { 48 } else { 160 };
+    let (ds, model) = setup(n);
+    let comp = parse_spec("qtopk:k=6,bits=4,scaled").unwrap();
+    let steps = if cfg!(miri) { 12 } else { 48 };
+    let sched = RandomGaps::generate(4, 4, steps, 123);
+    let mut spec = base_spec(&model, &ds, comp.as_ref(), &sched);
+    spec.steps = steps;
+    let scenario = SimSpec {
+        compute_sigma: 0.8,
+        bw_sigma: 0.5,
+        latency: 1_000,
+        straggler_prob: 0.1,
+        straggler_mult: 5.0,
+        churn_online_mean: 60_000,
+        churn_offline_mean: 30_000,
+        ..SimSpec::default()
+    };
+    let a = sim::run(&spec, &scenario);
+    let b = sim::run(&spec, &scenario);
+    assert_eq!(a.events, b.events, "event counts diverged between twins");
+    assert_eq!(a.final_ticks, b.final_ticks);
+    let ha: Vec<u64> = a.points.iter().map(|p| p.state_hash).collect();
+    let hb: Vec<u64> = b.points.iter().map(|p| p.state_hash).collect();
+    assert_eq!(ha, hb, "state-hash sequences diverged between twins");
+    assert_eq!(a.history.final_params, b.history.final_params);
+    // The fingerprint must actually track the trajectory, not be constant.
+    assert!(ha.windows(2).any(|w| w[0] != w[1]), "state hash never moved: {ha:?}");
+    // And a different seed is a different universe.
+    spec.seed ^= 1;
+    let c = sim::run(&spec, &scenario);
+    assert_ne!(
+        c.points.last().map(|p| p.state_hash),
+        a.points.last().map(|p| p.state_hash),
+        "seed change did not move the final state hash"
+    );
+}
+
+/// Churn smoke: offline windows make workers skip syncs, yet the run
+/// drains (all eval points emitted), the clock stays monotone, the loss
+/// stays finite, and skipped uploads can only reduce uplink traffic.
+#[test]
+fn churn_scenario_completes_and_stays_monotone() {
+    let n = if cfg!(miri) { 48 } else { 160 };
+    let (ds, model) = setup(n);
+    let comp = parse_spec("topk:k=6").unwrap();
+    let sched = FixedPeriod::new(4);
+    let spec = base_spec(&model, &ds, comp.as_ref(), &sched);
+    let churned = sim::run(
+        &spec,
+        &SimSpec {
+            compute_sigma: 0.6,
+            churn_online_mean: 40_000,
+            churn_offline_mean: 40_000,
+            ..SimSpec::default()
+        },
+    );
+    assert_eq!(churned.points.len(), churned.history.points.len());
+    let ticks: Vec<u64> = churned.points.iter().map(|p| p.ticks).collect();
+    assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "non-monotone clock: {ticks:?}");
+    assert!(churned.history.final_loss().is_finite());
+    let steady = sim::run(&spec, &SimSpec { compute_sigma: 0.6, ..SimSpec::default() });
+    assert!(
+        churned.history.total_bits_up() <= steady.history.total_bits_up(),
+        "churn increased uplink traffic"
+    );
+}

@@ -76,6 +76,24 @@ fn random_spec(rng: &mut Pcg64) -> ExperimentSpec {
     s.codec = if rng.f64() < 0.5 { Codec::Raw } else { Codec::Rans };
     s.sharding = if rng.f64() < 0.5 { Sharding::Iid } else { Sharding::LabelSkew };
     s.seed = rng.below(1 << 48);
+    s.sim = if rng.f64() < 0.5 {
+        None
+    } else {
+        let churn = rng.f64() < 0.5;
+        Some(qsparse::sim::SimSpec {
+            ticks_per_sec: 1 + rng.below(10_000_000),
+            compute_mean: 1.0 + rng.f64() * 10_000.0,
+            compute_sigma: rng.f64() * 1.5,
+            bw_mean: 0.5 + rng.f64() * 1000.0,
+            bw_sigma: rng.f64(),
+            latency: rng.below(100_000),
+            straggler_prob: rng.f64(),
+            straggler_mult: 1.0 + rng.f64() * 20.0,
+            churn_online_mean: if churn { 1 + rng.below(1 << 30) } else { 0 },
+            churn_offline_mean: if churn { 1 + rng.below(1 << 30) } else { 0 },
+            churn_sigma: rng.f64(),
+        })
+    };
     s.threads = rng.below_usize(9);
     s.eval_every = 1 + rng.below_usize(50);
     s.eval_rows = 1 + rng.below_usize(1024);

@@ -10,9 +10,9 @@
 //!    counting allocator; every other module is covered by an explicit
 //!    `#![forbid(unsafe_code)]`.
 //! 3. **Determinism** — deterministic-path modules (`protocol`, `compress`,
-//!    `engine`, `coordinator`, `topology`, `optim`, `simd`) must not touch
-//!    wall clocks (`Instant`, `SystemTime`) or RandomState-backed containers
-//!    (`HashMap`, `HashSet`) outside `#[cfg(test)]` code.
+//!    `engine`, `coordinator`, `topology`, `optim`, `simd`, `sim`) must not
+//!    touch wall clocks (`Instant`, `SystemTime`) or RandomState-backed
+//!    containers (`HashMap`, `HashSet`) outside `#[cfg(test)]` code.
 //! 4. **Panic-free decode** — the wire-facing parsers (`compress/encode.rs`,
 //!    `compress/rans.rs`, `util/json.rs`) must not contain `.unwrap()`,
 //!    `.expect(`, `panic!`, `unreachable!`, `todo!` or `unimplemented!`
@@ -69,6 +69,7 @@ const DET_DIRS: &[&str] = &[
     "rust/src/topology",
     "rust/src/optim",
     "rust/src/simd",
+    "rust/src/sim",
 ];
 
 /// Identifiers banned in deterministic paths (matched as whole words in
