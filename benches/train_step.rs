@@ -310,6 +310,11 @@ fn main() {
     // sim loop's steady-state allocation count (zero, like the engine).
     bench_sim(&mut rec, quick, warm, iters, &ds, &softmax);
 
+    // Fault-tolerance machinery: the stateless per-message fault decision,
+    // checkpoint snapshot serialization, and the faulty sim loop's
+    // steady-state allocation count (zero, like its fault-free twin).
+    bench_faults(&mut rec, quick, warm, iters, &ds, &softmax);
+
     if json {
         rec.write_json("BENCH_train_step.json");
     }
@@ -999,4 +1004,123 @@ fn bench_sim(
          the zero-allocation hot path has regressed"
     );
     println!("sim event loop steady state: {per_step:.1} allocations/step (target 0)");
+}
+
+/// Fault-tolerance machinery. (a) The stateless fault decision — a fresh
+/// PCG keyed off (seed, worker, step, channel), one f64 draw against the
+/// cumulative thresholds — is the overhead every wire hop pays under an
+/// active fault spec; reported per decision. (b) A full sequential-engine
+/// checkpoint snapshot (`protocol::checkpoint::save`: model, per-worker
+/// cores, downlink mirrors, metric history, RNG streams) at the fig-scale
+/// shape R=8, d=7850. (c) The faulty simulator's steady-state allocation
+/// count: drops, delays, downlink losses and crash-restarts all ride the
+/// recycled message/round buffers, so the 2N-vs-N diff must read exactly
+/// zero, like the fault-free sim probe. The mix deliberately omits
+/// duplication: a dup adds a second queue entry, so its seed-dependent
+/// peak occupancy could cross a regrow boundary only in the 2N run's
+/// second half; every other fault replaces an event one-for-one, keeping
+/// the queue's high-water mark step-count-invariant.
+fn bench_faults(
+    rec: &mut Recorder,
+    quick: bool,
+    warm: usize,
+    iters: usize,
+    ds: &Dataset,
+    softmax: &SoftmaxRegression,
+) {
+    use qsparse::engine::MetricPoint;
+    use qsparse::faults::{Channel, FaultPlan, FaultSpec};
+    use qsparse::protocol::{checkpoint, MasterCore, WorkerCore};
+
+    // (a) decision cost under the full cocktail (every stream active).
+    let cocktail = FaultSpec::parse(
+        "drop=0.1,corrupt=0.05,dup=0.05,delay=0.05:20000,drop-down=0.05,\
+         corrupt-down=0.05,crash=0.01,deadline=40000,seed=9",
+    )
+    .unwrap();
+    let plan = FaultPlan::new(cocktail).expect("cocktail spec is active");
+    let mut step = 0usize;
+    let decisions_per_iter = 8 * 3; // 8 workers × (up, down, crash)
+    let samples = time_iters(warm * 10, iters * 50, || {
+        for w in 0..8usize {
+            std::hint::black_box(plan.decide(w, step, Channel::Up));
+            std::hint::black_box(plan.decide(w, step, Channel::Down));
+            std::hint::black_box(plan.crash_at(w, step));
+        }
+        step += 1;
+    });
+    let per_msg: Vec<f64> = samples.iter().map(|s| s / decisions_per_iter as f64).collect();
+    rec.report("faults/inject-per-msg", &per_msg, None);
+
+    // (b) snapshot serialization at the standard figure shape: R=8 worker
+    // cores with momentum velocity, a delta-downlink master (per-worker
+    // mirrors), and a populated eval history.
+    let d = softmax.dim();
+    let workers_n = 8usize;
+    let mut rng = Pcg64::seeded(61);
+    let init: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+    let master = MasterCore::new(init.clone(), workers_n, 7, true);
+    let shard: Vec<usize> = (0..250).collect();
+    let cores: Vec<WorkerCore> = (0..workers_n)
+        .map(|r| WorkerCore::new(r, init.clone(), shard.clone(), 8, 0.9, 7))
+        .collect();
+    let mut history = qsparse::engine::History::new();
+    for s in 0..20usize {
+        history.push(MetricPoint {
+            step: s * 25,
+            train_loss: 1.0 / (s + 1) as f64,
+            test_err: 0.5,
+            test_top5_err: 0.1,
+            bits_up: (s as u64) << 20,
+            bits_down: (s as u64) << 22,
+            mem_norm_sq: 0.25,
+        });
+    }
+    let fp = checkpoint::spec_fingerprint("bench-checkpoint-spec");
+    let size = checkpoint::save(fp, 500, 1 << 30, 1 << 32, &history, &master, &cores).len();
+    let samples = time_iters(warm * 2, iters * 10, || {
+        std::hint::black_box(
+            checkpoint::save(fp, 500, 1 << 30, 1 << 32, &history, &master, &cores).len(),
+        );
+    });
+    rec.report("checkpoint/snapshot(R=8,d=7850)", &samples, Some(size));
+
+    // (c) steady-state allocations per simulated step under an active
+    // fault plan. Homogeneous timing, compressed downlink, same 2N-vs-N
+    // cancellation as the fault-free probe.
+    let comp = parse_spec("signtopk:k=170,m=1").unwrap();
+    let down = parse_spec("topk:k=400").unwrap();
+    let sched = FixedPeriod::new(4);
+    let faults = FaultSpec::parse(
+        "drop=0.2,delay=0.1:15000,drop-down=0.1,corrupt-down=0.05,crash=0.02,\
+         deadline=60000,seed=3",
+    )
+    .unwrap();
+    let run_faulty = |steps: usize| {
+        let mut spec = TrainSpec::new(softmax, ds, comp.as_ref(), &sched);
+        spec.workers = 8;
+        spec.batch = 8;
+        spec.steps = steps;
+        spec.lr = LrSchedule::Const { eta: 0.1 };
+        spec.sharding = Sharding::Iid;
+        spec.down_compressor = down.as_ref();
+        spec.eval_every = steps + 1; // exclude eval cost
+        std::hint::black_box(sim::run_from_faulty(
+            &spec,
+            &SimSpec::default(),
+            Some(&faults),
+            vec![0.0f32; softmax.dim()],
+        ));
+    };
+    let alloc_steps = if quick { 20 } else { 40 };
+    let a1 = count_allocs(|| run_faulty(alloc_steps));
+    let a2 = count_allocs(|| run_faulty(2 * alloc_steps));
+    let per_step = a2.saturating_sub(a1) as f64 / alloc_steps as f64;
+    rec.value("alloc/fault-steady-per-step(R=8,signtopk,H=4,down=topk)", per_step);
+    assert!(
+        per_step == 0.0,
+        "faulty sim loop steady state allocates {per_step:.2} times per step — \
+         the zero-allocation fault path has regressed"
+    );
+    println!("faulty sim loop steady state: {per_step:.1} allocations/step (target 0)");
 }

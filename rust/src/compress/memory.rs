@@ -80,6 +80,25 @@ impl ErrorMemory {
     pub fn clear(&mut self) {
         self.m.iter_mut().for_each(|v| *v = 0.0);
     }
+
+    /// Fold a *sent but lost* compressed message back into the memory:
+    /// `m ← m + g`. With the update recursion `m' = v − g` this restores
+    /// `m' + g = v = m + Δ` — exactly the pre-compression state, as if the
+    /// round had used the identity "send nothing" compressor. The fault-
+    /// tolerant drivers call this when the uplink carrying `g` was dropped
+    /// or corrupted, so the lost signal re-enters the very next update.
+    pub fn absorb(&mut self, msg: &Message) {
+        assert_eq!(msg.dim(), self.m.len(), "absorb dimension mismatch");
+        msg.add_into(&mut self.m, 1.0);
+    }
+
+    /// Restore the memory vector from a checkpoint. The caller validates
+    /// the length first (`protocol::checkpoint` rejects mismatches as a
+    /// structured error before getting here).
+    pub fn load(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.m.len(), "memory dimension mismatch");
+        self.m.copy_from_slice(src);
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +138,23 @@ mod tests {
         }
         assert_eq!(total, vec![10.0, 1.0, 2.0, 3.0]);
         assert!(mem.norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn absorbing_a_lost_message_restores_the_ledger() {
+        let mut mem = ErrorMemory::zeros(4);
+        let mut rng = Pcg64::seeded(53);
+        let op = TopK::new(1);
+        let delta = [10.0f32, 1.0, 2.0, 3.0];
+        let g = mem.compress_update(&delta, &op, &mut rng);
+        assert_eq!(g.to_dense(), vec![10.0, 0.0, 0.0, 0.0]);
+        // Uplink lost: m ← m + g recovers v = m_prev + Δ — the full
+        // pre-compression signal is back in the ledger.
+        mem.absorb(&g);
+        assert_eq!(mem.as_slice(), &delta);
+        // The next round re-sends the strongest lost coordinate first.
+        let g2 = mem.compress_update(&[0.0; 4], &op, &mut rng);
+        assert_eq!(g2.to_dense(), vec![10.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

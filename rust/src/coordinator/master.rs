@@ -30,17 +30,33 @@
 //! `UpdateMsg`/`ModelMsg`), so the master's steady-state decode → fold →
 //! encode cycle stays off the allocator; what remains per message is the
 //! channel transport itself.
+//!
+//! Fault injection (`CoordinatorConfig::faults`): the stateless
+//! [`FaultPlan`] is evaluated at this channel boundary, per (worker, sync
+//! step). Round completion becomes *count-based*: every expected
+//! participant is accounted for by a delivered update, an
+//! immediately-acknowledged loss (`ModelMsg::Missed` — dropped or
+//! undecodable uplink; the sender's error memory re-absorbs the update),
+//! or a crash both sides derive from the same pure hash. Delayed messages
+//! are overtaken by whatever is already queued on the channel (real
+//! reordering, no wall clock); duplicated uplinks re-enter the queue as a
+//! literal second copy and die on the per-(worker, step) idempotence
+//! guard. An undecodable update — injected or organic — is a *logged
+//! drop*, never an abort. Downlink faults are decided before the
+//! per-worker mirror advances, so a lost or corrupted reply costs one
+//! round of staleness, never mirror divergence.
 
-use super::{CoordinatorConfig, ModelMsg, ToMaster, UpdateMsg};
+use super::{CoordinatorConfig, CoordinatorError, ModelMsg, ToMaster, UpdateMsg};
 use crate::compress::{encode, Message, MessageBuf, WireEncoder};
 use crate::data::Dataset;
 use crate::engine::parallel::{ChunkView, MsgsView};
 use crate::engine::{History, MetricPoint};
+use crate::faults::{Channel, FaultAction, FaultPlan};
 use crate::grad::GradModel;
 use crate::protocol::MasterCore;
 use crate::topology::sync_participants_into;
 use crate::util::rng::Pcg64;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -76,6 +92,16 @@ where
          runtime: the aggregate-on-arrival path applies updates one at a time, so there is no \
          round aggregate to step on (use the engine, or `qsparse sim` — whose event-driven \
          rounds give async schedules a round clock — instead)"
+    );
+    let plan = cfg.faults.and_then(FaultPlan::new);
+    if let Some(p) = &plan {
+        p.spec().validate()?;
+    }
+    anyhow::ensure!(
+        plan.is_none() || barrier,
+        "fault injection on the threaded runtime requires a synchronous schedule: round \
+         completion under faults is counted per sync round (use `qsparse sim` for asynchronous \
+         fault experiments)"
     );
     let mut core = MasterCore::new(init.clone(), cfg.workers, cfg.seed, !dense_down);
     core.set_agg_scale(cfg.agg_scale);
@@ -173,7 +199,8 @@ where
     // `apply_update` loop's, so `History` stays bit-identical (tested).
     let nshards = std::thread::available_parallelism().map_or(1, |n| n.get()).min(8);
     let fold_pool = (barrier && cfg.workers >= 2 && d >= SHARD_FOLD_MIN_D && nshards >= 2)
-        .then(|| FoldPool::spawn(nshards));
+        .then(|| FoldPool::spawn(nshards))
+        .transpose()?;
     // The round's messages in worker-index order, taken out of (and after
     // the fold returned to) their owners' decode buffers — reused each
     // round.
@@ -200,166 +227,354 @@ where
     };
     grid.history.push(measure(0, core.params(), 0, 0, 0.0));
 
+    // Inbound staging queue: one channel receipt can expand into several
+    // arrivals (overtakers pulled ahead of a delayed message, the literal
+    // second copy of a duplicated one) — see `Inbound`.
+    let mut inbound: VecDeque<Inbound> = VecDeque::new();
+    let mut disconnected = false;
+
     while finished < cfg.workers {
+        debug_assert!(inbound.is_empty(), "inbound queue drains every receipt");
         match to_master_rx.recv() {
-            Err(_) => break,
-            Ok(ToMaster::Finished(_)) => finished += 1,
-            Ok(ToMaster::Update(mut upd)) => {
-                // Decode on arrival into the sender's recycled buffer, then
-                // return the spent byte vectors to the recycle pool.
-                decode_update_into(&upd, &mut upd_bufs[upd.worker])?;
-                recycle(&mut spare_bytes, std::mem::take(&mut upd.bytes));
-                recycle(&mut spare_bytes, std::mem::take(&mut upd.spent_down));
-                let meta = UpdateMeta {
-                    worker: upd.worker,
-                    bit_len: upd.bit_len,
-                    mem_norm_sq: upd.mem_norm_sq,
-                };
-                if barrier {
-                    buckets.entry(upd.step).or_default().push(meta);
-                    // Apply every round that is now complete, in step order.
-                    while round_idx < rounds.len() {
-                        let (step, parts) = &rounds[round_idx];
-                        let (step, expect) = (*step, parts.len());
-                        if buckets.get(&step).map_or(0, Vec::len) < expect {
-                            break;
-                        }
-                        let mut batch = buckets.remove(&step).expect("bucket checked above");
-                        // Grid points at or before this round's sync step see
-                        // the pre-round model — exactly what the engine
-                        // records between rounds (bits/memories are accounted
-                        // at application, so they too reflect applied rounds
-                        // only).
-                        grid.catch_up(step, |s| {
-                            measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
-                        });
-                        // Apply in worker order: f32 addition is not
-                        // associative, and a fixed order makes the threaded
-                        // sync run bit-identical to the engine (tested).
-                        batch.sort_by_key(|u| u.worker);
-                        core.begin_round(expect);
-                        for u in &batch {
-                            bits_up += u.bit_len;
-                            mem_norms[u.worker] = u.mem_norm_sq;
-                        }
-                        match &fold_pool {
-                            Some(pool) => {
-                                // Sharded fold: move the round's decoded
-                                // messages into one worker-ordered list,
-                                // fan the disjoint chunks out, then hand
-                                // each message back to its owner's buffer
-                                // so decode storage keeps recycling.
-                                round_msgs.clear();
-                                for u in &batch {
-                                    let msg = std::mem::take(&mut upd_bufs[u.worker].msg);
-                                    anyhow::ensure!(
-                                        msg.dim() == d,
-                                        "update dimension mismatch: message d={} vs model d={d}",
-                                        msg.dim(),
-                                    );
-                                    round_msgs.push(msg);
-                                }
-                                pool.fold(&round_msgs, &mut core);
-                                for (u, msg) in batch.iter().zip(round_msgs.drain(..)) {
-                                    upd_bufs[u.worker].msg = msg;
-                                }
-                            }
-                            None => {
-                                for u in &batch {
-                                    core.apply_update(upd_bufs[u.worker].message())?;
-                                }
-                            }
-                        }
-                        // Server optimizer step on the round aggregate
-                        // (no-op for Avg) — before any broadcast encoding.
-                        core.end_round();
-                        // Reply to this round's participants only — a
-                        // non-participant never blocks on the master, and a
-                        // queued stale model would corrupt its next sync.
-                        if dense_down {
-                            let payload = core.params_snapshot();
-                            let bits = encode::dense_model_bits(d);
-                            for &r in parts {
-                                bits_down += bits;
-                                let _ = reply_txs[r].send(ModelMsg::Dense {
-                                    params: Arc::clone(&payload),
-                                    recycled: spare_bytes.pop().unwrap_or_default(),
-                                });
-                            }
-                        } else {
-                            for &r in parts {
-                                let (bytes, bit_len) = encode_delta(
-                                    &mut core,
-                                    cfg.down_compressor.as_ref(),
-                                    &mut down_buf,
-                                    &mut wire,
-                                    r,
-                                    spare_bytes.pop().unwrap_or_default(),
-                                );
-                                bits_down += bit_len;
-                                let _ = reply_txs[r].send(ModelMsg::Delta {
-                                    bytes,
-                                    bit_len,
-                                    recycled: spare_bytes.pop().unwrap_or_default(),
-                                });
-                            }
-                        }
-                        grid.boundary(step, |s| {
-                            measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
-                        });
-                        round_idx += 1;
+            Err(_) => {
+                disconnected = true;
+                break;
+            }
+            Ok(m) => inbound.push_back(Inbound::Fresh(m)),
+        }
+        while let Some(item) = inbound.pop_front() {
+            let (mut upd, decided) = match item {
+                Inbound::Fresh(ToMaster::Finished(_)) => {
+                    finished += 1;
+                    continue;
+                }
+                Inbound::Fresh(ToMaster::Update(u)) => (u, false),
+                Inbound::Decided(u) => (u, true),
+            };
+            // Uplink fault decision at the channel boundary. A message is
+            // decided at most once: decisions are pure per (worker, step),
+            // so a re-decided delayed message would delay forever.
+            let action = match (&plan, decided) {
+                (Some(p), false) => p.decide(upd.worker, upd.step, Channel::Up),
+                _ => FaultAction::Deliver,
+            };
+            match action {
+                FaultAction::Delay(_) => {
+                    // Reorder at the boundary: everything already queued on
+                    // the transport overtakes this message, then it
+                    // delivers — no wall clock, no stalled barrier.
+                    while let Ok(m) = to_master_rx.try_recv() {
+                        inbound.push_back(Inbound::Fresh(m));
                     }
-                } else {
-                    // Aggregate-on-arrival (asynchronous schedules).
-                    let step = upd.step;
-                    let worker = meta.worker;
+                    inbound.push_back(Inbound::Decided(upd));
+                    continue;
+                }
+                FaultAction::Duplicate => {
+                    // Deliver this copy; enqueue a literal second copy that
+                    // will reach the per-(worker, step) idempotence guard
+                    // below as a genuine duplicate arrival.
+                    inbound.push_back(Inbound::Decided(UpdateMsg {
+                        worker: upd.worker,
+                        step: upd.step,
+                        bytes: upd.bytes.clone(),
+                        bit_len: upd.bit_len,
+                        mem_norm_sq: upd.mem_norm_sq,
+                        spent_down: Vec::new(),
+                    }));
+                }
+                FaultAction::Corrupt => FaultPlan::corrupt_bytes(&mut upd.bytes),
+                FaultAction::Drop | FaultAction::Deliver => {}
+            }
+            // Decode on arrival into the sender's recycled buffer. An
+            // undecodable update — injected corruption or an organic wire
+            // fault — is a logged drop, never an abort: the sender's error
+            // memory re-absorbs the update (satellite of the EF analysis:
+            // compressed mass is never lost, only deferred).
+            let delivered = !matches!(action, FaultAction::Drop)
+                && match encode::decode_into(&upd.bytes, upd.bit_len, &mut upd_bufs[upd.worker]) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        eprintln!(
+                            "master: dropping undecodable update from worker {} at step {}: {e}",
+                            upd.worker, upd.step
+                        );
+                        false
+                    }
+                };
+            recycle(&mut spare_bytes, std::mem::take(&mut upd.bytes));
+            recycle(&mut spare_bytes, std::mem::take(&mut upd.spent_down));
+            let meta = UpdateMeta {
+                worker: upd.worker,
+                bit_len: upd.bit_len,
+                mem_norm_sq: upd.mem_norm_sq,
+                delivered,
+            };
+            if barrier {
+                // Idempotence and ordering guards (reachable only under
+                // faults — the fault-free transport delivers exactly once,
+                // and a worker blocks until its round applied).
+                if plan.is_some() {
+                    if rounds[..round_idx].binary_search_by_key(&upd.step, |r| r.0).is_ok() {
+                        // Stale copy for an already-applied round: rejected,
+                        // never re-folded.
+                        continue;
+                    }
+                    if buckets
+                        .get(&upd.step)
+                        .is_some_and(|b| b.iter().any(|m| m.worker == meta.worker))
+                    {
+                        // Second copy of a duplicated uplink: applied once
+                        // per (worker, step).
+                        continue;
+                    }
+                }
+                if !meta.delivered {
+                    // Immediate loss acknowledgement — the sender blocks on
+                    // this reply; `lost_uplink` tells it to re-absorb.
+                    let _ = reply_txs[meta.worker].send(ModelMsg::Missed {
+                        lost_uplink: true,
+                        recycled: spare_bytes.pop().unwrap_or_default(),
+                    });
+                }
+                buckets.entry(upd.step).or_default().push(meta);
+                // Apply every round that is now complete, in step order.
+                // Under faults completion is count-based: updates and
+                // acknowledged losses both report; crashed participants are
+                // subtracted via the same pure predicate the worker used.
+                while round_idx < rounds.len() {
+                    let (step, parts) = &rounds[round_idx];
+                    let (step, expect) = (*step, parts.len());
+                    let expect_reports = match &plan {
+                        Some(p) => parts.iter().filter(|&&w| !p.crash_at(w, step)).count(),
+                        None => expect,
+                    };
+                    if buckets.get(&step).map_or(0, Vec::len) < expect_reports {
+                        break;
+                    }
+                    let mut batch = buckets.remove(&step).unwrap_or_default();
+                    // Grid points at or before this round's sync step see
+                    // the pre-round model — exactly what the engine
+                    // records between rounds (bits/memories are accounted
+                    // at application, so they too reflect applied rounds
+                    // only).
                     grid.catch_up(step, |s| {
                         measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
                     });
-                    bits_up += meta.bit_len;
-                    mem_norms[worker] = meta.mem_norm_sq;
-                    // |S_t| for the unbiased scale (same shared predicate as
-                    // the engine; the sender is a member, so it is never
-                    // empty).
-                    sync_participants_into(
-                        cfg.schedule.as_ref(),
-                        &cfg.participation,
-                        cfg.workers,
-                        step,
-                        &mut s_t,
-                    );
-                    core.begin_round(s_t.len());
-                    core.apply_update(upd_bufs[worker].message())?;
-                    // Avg is guaranteed here (non-Avg + async is rejected up
-                    // front), so this is a documented no-op.
+                    // Apply in worker order: f32 addition is not
+                    // associative, and a fixed order makes the threaded
+                    // sync run bit-identical to the engine (tested).
+                    batch.sort_by_key(|u| u.worker);
+                    core.begin_round(expect);
+                    // Wire bits were spent for lost updates too — account
+                    // every report, fold only the delivered ones.
+                    for u in &batch {
+                        bits_up += u.bit_len;
+                        mem_norms[u.worker] = u.mem_norm_sq;
+                    }
+                    match &fold_pool {
+                        Some(pool) => {
+                            // Sharded fold: move the round's decoded
+                            // messages into one worker-ordered list,
+                            // fan the disjoint chunks out, then hand
+                            // each message back to its owner's buffer
+                            // so decode storage keeps recycling.
+                            round_msgs.clear();
+                            for u in batch.iter().filter(|u| u.delivered) {
+                                let msg = std::mem::take(&mut upd_bufs[u.worker].msg);
+                                anyhow::ensure!(
+                                    msg.dim() == d,
+                                    "update dimension mismatch: message d={} vs model d={d}",
+                                    msg.dim(),
+                                );
+                                round_msgs.push(msg);
+                            }
+                            let folded = pool.fold(&round_msgs, &mut core);
+                            for (u, msg) in
+                                batch.iter().filter(|u| u.delivered).zip(round_msgs.drain(..))
+                            {
+                                upd_bufs[u.worker].msg = msg;
+                            }
+                            folded?;
+                        }
+                        None => {
+                            for u in batch.iter().filter(|u| u.delivered) {
+                                core.apply_update(upd_bufs[u.worker].message())?;
+                            }
+                        }
+                    }
+                    // Server optimizer step on the round aggregate
+                    // (no-op for Avg) — before any broadcast encoding.
                     core.end_round();
+                    // Reply to this round's *delivered* participants only:
+                    // lost senders were acknowledged on arrival and moved
+                    // on, crashed ones never blocked, and a queued stale
+                    // model would corrupt a non-participant's next sync.
+                    // Downlink faults are decided before any mirror
+                    // advance, so both sides stay consistent.
                     if dense_down {
-                        bits_down += encode::dense_model_bits(d);
-                        let _ = reply_txs[worker].send(ModelMsg::Dense {
-                            params: core.params_snapshot(),
-                            recycled: spare_bytes.pop().unwrap_or_default(),
-                        });
+                        let payload = core.params_snapshot();
+                        let bits = encode::dense_model_bits(d);
+                        for u in batch.iter().filter(|u| u.delivered) {
+                            let r = u.worker;
+                            let down = plan.map_or(FaultAction::Deliver, |p| {
+                                p.decide(r, step, Channel::Down)
+                            });
+                            if matches!(down, FaultAction::Drop | FaultAction::Corrupt) {
+                                // The dense broadcast has no wire-decode
+                                // stage, so both downlink faults degrade
+                                // to a dropped reply.
+                                let _ = reply_txs[r].send(ModelMsg::Missed {
+                                    lost_uplink: false,
+                                    recycled: spare_bytes.pop().unwrap_or_default(),
+                                });
+                                continue;
+                            }
+                            bits_down += bits;
+                            let _ = reply_txs[r].send(ModelMsg::Dense {
+                                params: Arc::clone(&payload),
+                                recycled: spare_bytes.pop().unwrap_or_default(),
+                            });
+                        }
                     } else {
-                        let (bytes, bit_len) = encode_delta(
-                            &mut core,
-                            cfg.down_compressor.as_ref(),
-                            &mut down_buf,
-                            &mut wire,
-                            worker,
-                            spare_bytes.pop().unwrap_or_default(),
-                        );
-                        bits_down += bit_len;
-                        let _ = reply_txs[worker].send(ModelMsg::Delta {
-                            bytes,
-                            bit_len,
-                            recycled: spare_bytes.pop().unwrap_or_default(),
-                        });
+                        for u in batch.iter().filter(|u| u.delivered) {
+                            let r = u.worker;
+                            let down = plan.map_or(FaultAction::Deliver, |p| {
+                                p.decide(r, step, Channel::Down)
+                            });
+                            match down {
+                                FaultAction::Drop => {
+                                    // Mirror untouched; the worker keeps
+                                    // its anchor and the next delta simply
+                                    // spans the missed round.
+                                    let _ = reply_txs[r].send(ModelMsg::Missed {
+                                        lost_uplink: false,
+                                        recycled: spare_bytes.pop().unwrap_or_default(),
+                                    });
+                                }
+                                FaultAction::Corrupt => {
+                                    // Exercise the worker's decode-drop
+                                    // path with deliberately undecodable
+                                    // bytes (tag 7 = `BadTag` on every
+                                    // codec) *without* advancing the
+                                    // mirror — a corrupted delta must
+                                    // never desynchronize the pair.
+                                    let mut bytes = spare_bytes.pop().unwrap_or_default();
+                                    bytes.clear();
+                                    bytes.push(0xE0);
+                                    let _ = reply_txs[r].send(ModelMsg::Delta {
+                                        bytes,
+                                        bit_len: 8,
+                                        recycled: spare_bytes.pop().unwrap_or_default(),
+                                    });
+                                }
+                                _ => {
+                                    let (bytes, bit_len) = encode_delta(
+                                        &mut core,
+                                        cfg.down_compressor.as_ref(),
+                                        &mut down_buf,
+                                        &mut wire,
+                                        r,
+                                        spare_bytes.pop().unwrap_or_default(),
+                                    );
+                                    bits_down += bit_len;
+                                    let _ = reply_txs[r].send(ModelMsg::Delta {
+                                        bytes,
+                                        bit_len,
+                                        recycled: spare_bytes.pop().unwrap_or_default(),
+                                    });
+                                }
+                            }
+                        }
                     }
                     grid.boundary(step, |s| {
                         measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
                     });
+                    round_idx += 1;
                 }
+            } else {
+                // Aggregate-on-arrival (asynchronous schedules; `plan` is
+                // `None` here — faults require the barrier).
+                let step = upd.step;
+                let worker = meta.worker;
+                grid.catch_up(step, |s| {
+                    measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                });
+                bits_up += meta.bit_len;
+                mem_norms[worker] = meta.mem_norm_sq;
+                if !meta.delivered {
+                    // Organic wire fault: acknowledge the loss so the
+                    // sender re-absorbs and keeps training.
+                    let _ = reply_txs[worker].send(ModelMsg::Missed {
+                        lost_uplink: true,
+                        recycled: spare_bytes.pop().unwrap_or_default(),
+                    });
+                    continue;
+                }
+                // |S_t| for the unbiased scale (same shared predicate as
+                // the engine; the sender is a member, so it is never
+                // empty).
+                sync_participants_into(
+                    cfg.schedule.as_ref(),
+                    &cfg.participation,
+                    cfg.workers,
+                    step,
+                    &mut s_t,
+                );
+                core.begin_round(s_t.len());
+                core.apply_update(upd_bufs[worker].message())?;
+                // Avg is guaranteed here (non-Avg + async is rejected up
+                // front), so this is a documented no-op.
+                core.end_round();
+                if dense_down {
+                    bits_down += encode::dense_model_bits(d);
+                    let _ = reply_txs[worker].send(ModelMsg::Dense {
+                        params: core.params_snapshot(),
+                        recycled: spare_bytes.pop().unwrap_or_default(),
+                    });
+                } else {
+                    let (bytes, bit_len) = encode_delta(
+                        &mut core,
+                        cfg.down_compressor.as_ref(),
+                        &mut down_buf,
+                        &mut wire,
+                        worker,
+                        spare_bytes.pop().unwrap_or_default(),
+                    );
+                    bits_down += bit_len;
+                    let _ = reply_txs[worker].send(ModelMsg::Delta {
+                        bytes,
+                        bit_len,
+                        recycled: spare_bytes.pop().unwrap_or_default(),
+                    });
+                }
+                grid.boundary(step, |s| {
+                    measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+                });
             }
+        }
+    }
+    // Degenerate fault tail: a round whose every participant crashed
+    // completes with zero reports; if no later arrival ran the barrier
+    // loop past it, apply it now (empty fold — just the server-opt round
+    // step and the grid record). Any round with a live participant cannot
+    // be pending here: its sender would still be blocked, so `finished`
+    // could not have reached `cfg.workers`.
+    if let Some(p) = plan.as_ref().filter(|_| !disconnected) {
+        while round_idx < rounds.len() {
+            let (step, parts) = &rounds[round_idx];
+            let (step, expect) = (*step, parts.len());
+            if parts.iter().any(|&w| !p.crash_at(w, step)) {
+                break;
+            }
+            grid.catch_up(step, |s| {
+                measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+            });
+            core.begin_round(expect);
+            core.end_round();
+            grid.boundary(step, |s| {
+                measure(s, core.params(), bits_up, bits_down, avg(&mem_norms))
+            });
+            round_idx += 1;
         }
     }
     // Tail of the grid (steps after the last sync leave the model frozen),
@@ -372,11 +587,32 @@ where
         history.push(measure(cfg.steps, core.params(), bits_up, bits_down, avg(&mem_norms)));
     }
 
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+    // Graceful teardown: release the reply channels first, so a worker
+    // still blocked in `recv` (possible only when a peer died mid-round)
+    // unblocks and exits instead of deadlocking the joins; then surface
+    // panics and disconnects as named `CoordinatorError`s.
+    drop(reply_txs);
+    let mut teardown: Result<(), CoordinatorError> = Ok(());
+    for (w, h) in handles.into_iter().enumerate() {
+        if h.join().is_err() && teardown.is_ok() {
+            teardown = Err(CoordinatorError::WorkerPanicked { worker: w });
+        }
     }
     if let Some(pool) = fold_pool {
         pool.join();
+    }
+    teardown?;
+    if disconnected && finished < cfg.workers {
+        // Drain what the barrier still holds — these rounds can never
+        // complete — and report the loss by name.
+        let pending_rounds = buckets.len();
+        buckets.clear();
+        return Err(CoordinatorError::WorkersDisconnected {
+            finished,
+            expected: cfg.workers,
+            pending_rounds,
+        }
+        .into());
     }
     history.final_params = core.into_params();
     Ok(history)
@@ -423,6 +659,22 @@ struct UpdateMeta {
     worker: usize,
     bit_len: u64,
     mem_norm_sq: f64,
+    /// `true`: the decoded update awaits the fold in its sender's buffer.
+    /// `false`: the uplink was lost (dropped or undecodable) — the report
+    /// counts toward round completion but nothing is folded, and the
+    /// sender was already acknowledged with `ModelMsg::Missed`.
+    delivered: bool,
+}
+
+/// One staged inbound arrival. A single channel receipt can expand into
+/// several of these: a delayed message re-enters behind the overtakers
+/// pulled off the transport ahead of it, and a duplicated uplink enqueues
+/// a literal second copy. `Decided` wraps updates whose uplink fault was
+/// already resolved — decisions are pure per (worker, step), so deciding
+/// twice would delay (or duplicate) forever.
+enum Inbound {
+    Fresh(ToMaster),
+    Decided(UpdateMsg),
 }
 
 /// Return a spent wire buffer to the recycle pool (empty vectors carry no
@@ -473,7 +725,7 @@ struct FoldCmd {
 }
 
 impl FoldPool {
-    fn spawn(nshards: usize) -> Self {
+    fn spawn(nshards: usize) -> std::io::Result<Self> {
         let mut txs = Vec::with_capacity(nshards);
         let mut acks = Vec::with_capacity(nshards);
         let mut handles = Vec::with_capacity(nshards);
@@ -496,31 +748,43 @@ impl FoldPool {
                                 return; // master gone
                             }
                         }
-                    })
-                    .expect("failed to spawn fold shard thread"),
+                    })?,
             );
         }
-        FoldPool { txs, acks, handles }
+        Ok(FoldPool { txs, acks, handles })
     }
 
     /// Fold the round's worker-ordered messages into the master's fold
     /// target, sharded by coordinate range. Blocks until every shard acks,
     /// so the borrow handed out by `fold_target` is quiescent again on
-    /// return.
-    fn fold(&self, msgs: &[Message], core: &mut MasterCore) {
+    /// return. A dead shard is a named error, not an abort — but an ack is
+    /// still awaited per command actually sent, so no live shard holds a
+    /// view into the fold target when this returns (aliasing contract).
+    fn fold(&self, msgs: &[Message], core: &mut MasterCore) -> Result<(), CoordinatorError> {
         let view = MsgsView::new(msgs);
         let (target, scale) = core.fold_target();
         let d = target.len();
         let n = self.txs.len();
+        let mut sent = 0usize;
+        let mut failed = false;
         for (ti, tx) in self.txs.iter().enumerate() {
             let (lo, hi) = (ti * d / n, (ti + 1) * d / n);
             // The [lo, hi) ranges partition 0..d, so the chunks are
             // disjoint.
             let chunk = ChunkView::new(target, lo, hi);
-            tx.send(FoldCmd { msgs: view, chunk, scale }).expect("fold shard thread died");
+            if tx.send(FoldCmd { msgs: view, chunk, scale }).is_err() {
+                failed = true;
+                break;
+            }
+            sent += 1;
         }
-        for ack in &self.acks {
-            ack.recv().expect("fold shard thread died");
+        for ack in self.acks.iter().take(sent) {
+            failed |= ack.recv().is_err();
+        }
+        if failed {
+            Err(CoordinatorError::FoldShardDied)
+        } else {
+            Ok(())
         }
     }
 
@@ -531,14 +795,6 @@ impl FoldPool {
             let _ = h.join();
         }
     }
-}
-
-/// Decode an update into the sender's recycled buffer (`decode_into`
-/// recycles the previous message's vectors, so with a fixed per-worker
-/// operator the steady state allocates nothing here).
-fn decode_update_into(upd: &UpdateMsg, buf: &mut MessageBuf) -> anyhow::Result<()> {
-    encode::decode_into(&upd.bytes, upd.bit_len, buf)
-        .map_err(|e| anyhow::anyhow!("undecodable update from worker {}: {e}", upd.worker))
 }
 
 fn avg(xs: &[f64]) -> f64 {

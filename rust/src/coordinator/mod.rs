@@ -35,6 +35,7 @@ pub use master::run_threaded;
 
 use crate::compress::{Codec, Compressor, Identity};
 use crate::data::Sharding;
+use crate::faults::FaultSpec;
 use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::AggScale;
 use crate::topology::{Participation, SyncSchedule};
@@ -75,6 +76,12 @@ pub struct CoordinatorConfig {
     pub eval_rows: usize,
     /// Initial parameters (zeros if None).
     pub init: Option<Vec<f32>>,
+    /// Deterministic fault injection at the channel boundaries (None = the
+    /// exact pre-existing fault-free paths). Requires a synchronous
+    /// schedule: round completion under faults is count-based — every
+    /// expected participant is accounted for by an update, an
+    /// immediately-acknowledged loss, or a statelessly-agreed crash.
+    pub faults: Option<FaultSpec>,
 }
 
 impl CoordinatorConfig {
@@ -97,9 +104,45 @@ impl CoordinatorConfig {
             eval_every: 10,
             eval_rows: 256,
             init: None,
+            faults: None,
         }
     }
 }
+
+/// Structured failures of the threaded runtime's channel fabric. Replaces
+/// the old in-place `expect`s: teardown paths now drain what they hold and
+/// surface a named error instead of aborting the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// A fold shard hung up mid-round (its thread died or its channel
+    /// closed before the ack came back).
+    FoldShardDied,
+    /// A worker thread panicked (detected at join).
+    WorkerPanicked { worker: usize },
+    /// The update channel closed before every worker reported `Finished`;
+    /// `pending_rounds` barrier rounds were drained without applying.
+    WorkersDisconnected { finished: usize, expected: usize, pending_rounds: usize },
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::FoldShardDied => {
+                write!(f, "fold shard thread died before acking its chunk")
+            }
+            CoordinatorError::WorkerPanicked { worker } => {
+                write!(f, "worker thread {worker} panicked")
+            }
+            CoordinatorError::WorkersDisconnected { finished, expected, pending_rounds } => write!(
+                f,
+                "update channel closed with {finished}/{expected} workers finished \
+                 ({pending_rounds} incomplete rounds drained)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
 
 /// Worker → master: an encoded compressed update.
 ///
@@ -139,4 +182,12 @@ pub(crate) enum ModelMsg {
     /// Encoded error-compensated compressed model delta vs this worker's
     /// anchor (see `protocol::` module docs).
     Delta { bytes: Vec<u8>, bit_len: u64, recycled: Vec<u8> },
+    /// Fault acknowledgement: this sync round is lost for the receiver.
+    /// `lost_uplink = true` means the worker's update never reached the
+    /// fold (dropped or undecodable) — the worker re-absorbs the sent
+    /// delta into its error memory. `false` means the update was applied
+    /// but the downlink reply was lost — the worker keeps its anchor (the
+    /// master's per-worker downlink mirror did not advance either, so the
+    /// next delta is simply computed over a longer span).
+    Missed { lost_uplink: bool, recycled: Vec<u8> },
 }

@@ -1,6 +1,15 @@
 //! Worker actor: a `protocol::WorkerCore` behind mpsc channels — local SGD
 //! steps, error-compensated compression, encoded uplink, blocking model
 //! refresh on sync (Algorithm 1/2 worker side).
+//!
+//! Fault tolerance: an undecodable downlink is a *logged drop*, never an
+//! abort — the worker keeps its anchor (`miss_broadcast`) and the master's
+//! per-worker mirror stays consistent because faults never advance it. A
+//! `ModelMsg::Missed { lost_uplink: true }` acknowledgement re-absorbs the
+//! just-sent update into the error memory (`reabsorb_last_update`), so a
+//! lost uplink costs a round of staleness, not the mass of the update.
+//! Crash-restarts are decided by the stateless `FaultPlan` hash that the
+//! master evaluates identically, so neither side waits on the other.
 // `unsafe` lives only in the fork-join core (`engine::parallel`,
 // `coordinator::master`) — everywhere else it is a compile error.
 #![forbid(unsafe_code)]
@@ -27,6 +36,7 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
     let WorkerArgs { id, cfg, train, shard, init, to_master, from_master } = args;
     assert_eq!(init.len(), model.dim(), "init/model dimension mismatch");
     let mut core = WorkerCore::new(id, init, shard, cfg.batch, cfg.momentum, cfg.seed);
+    let plan = cfg.faults.and_then(crate::faults::FaultPlan::new);
     // Reused wire encoder plus the recycled byte buffers: the uplink buffer
     // comes back with every master reply, the downlink delta's buffer goes
     // back with the next update — so the steady-state sync loop assembles,
@@ -44,6 +54,13 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
         // non-participant keeps its local run going (no uplink, no model
         // refresh) exactly like the engine's simulated workers.
         if cfg.schedule.syncs_at(id, t) && cfg.participation.participates(id, t) {
+            // Crash-restart instead of syncing. The master evaluates the
+            // same pure predicate for this (worker, step), so it neither
+            // waits for this update nor queues a reply.
+            if plan.is_some_and(|p| p.crash_at(id, t)) {
+                core.crash_restart();
+                continue;
+            }
             let bit_len = {
                 let msg = core.make_update(cfg.compressor.as_ref());
                 let (bytes, bit_len) = wire.encode(msg);
@@ -69,10 +86,34 @@ pub(crate) fn worker_main(model: Box<dyn GradModel>, args: WorkerArgs) {
                 }
                 Ok(ModelMsg::Delta { bytes, bit_len, recycled }) => {
                     up_bytes = recycled;
-                    encode::decode_into(&bytes, bit_len, &mut down_buf)
-                        .unwrap_or_else(|e| panic!("worker {id}: undecodable downlink delta: {e}"));
-                    core.apply_delta_broadcast(down_buf.message());
+                    // An undecodable downlink is a logged drop, not an
+                    // abort: the worker keeps its anchor, and because the
+                    // master only sends corrupted bytes *without* advancing
+                    // this worker's downlink mirror, both sides stay
+                    // consistent — the next delta spans the missed round.
+                    match encode::decode_into(&bytes, bit_len, &mut down_buf) {
+                        Ok(()) => core.apply_delta_broadcast(down_buf.message()),
+                        Err(e) => {
+                            eprintln!(
+                                "worker {id}: dropping undecodable downlink delta at step {t}: {e}"
+                            );
+                            core.miss_broadcast();
+                        }
+                    }
                     spent_down = bytes;
+                }
+                Ok(ModelMsg::Missed { lost_uplink, recycled }) => {
+                    up_bytes = recycled;
+                    if lost_uplink {
+                        // The update never reached the fold: fold its mass
+                        // back into the error memory (m ← m + ĝ restores
+                        // the pre-compression residual exactly) and resume
+                        // from the unchanged anchor.
+                        core.reabsorb_last_update();
+                    } else {
+                        // Update applied, reply lost: anchor only.
+                        core.miss_broadcast();
+                    }
                 }
                 Err(_) => return,
             }

@@ -253,6 +253,16 @@ impl ShardSampler {
         out.b = self.batch;
         out.dim = ds.dim;
     }
+
+    /// The sampling RNG stream — sampling is with replacement, so this is
+    /// the sampler's only trajectory-dependent state (checkpointing).
+    pub fn rng(&self) -> &Pcg64 {
+        &self.rng
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
 }
 
 #[cfg(test)]

@@ -180,6 +180,39 @@ fn resolve_threads(threads: usize, workers: usize) -> usize {
 }
 
 fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
+    match run_from_resumable(spec, global, None, 0, 0, &mut |_, _| {}) {
+        Ok(h) => h,
+        // Checkpoint errors only arise from parsing resume bytes; none
+        // were supplied.
+        Err(e) => unreachable!("resume-free run cannot fail: {e}"),
+    }
+}
+
+/// The sequential loop with checkpoint/resume hooks. `run_sequential`
+/// delegates here with both features disabled, so the bit-exactness of
+/// existing trajectories is structural, not re-proved.
+///
+/// * `resume`: bytes written by a previous `on_checkpoint` callback. The
+///   run restores every core and counter from them and continues from the
+///   saved step — the result is bit-identical to the uninterrupted run
+///   (asserted in `tests/integration_faults.rs`).
+/// * `spec_fp`: fingerprint of the canonical experiment spec (see
+///   [`crate::protocol::checkpoint::spec_fingerprint`]); stored in each
+///   checkpoint and required to match on resume.
+/// * `checkpoint_every`: emit a snapshot via `on_checkpoint(step, bytes)`
+///   at every step divisible by it (0 disables). Snapshots are taken at
+///   step boundaries *after* metrics, so the saved `History` is exactly
+///   the uninterrupted run's prefix.
+pub fn run_from_resumable(
+    spec: &TrainSpec,
+    global: Vec<f32>,
+    resume: Option<&[u8]>,
+    spec_fp: u64,
+    checkpoint_every: usize,
+    on_checkpoint: &mut dyn FnMut(usize, Vec<u8>),
+) -> Result<History, crate::protocol::CheckpointError> {
+    use crate::protocol::checkpoint;
+
     let d = spec.model.dim();
     assert_eq!(global.len(), d);
     let r_count = spec.workers;
@@ -211,10 +244,29 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
     // Reused downlink compression buffer (one message in flight at a time).
     let mut down_buf = MessageBuf::new();
 
-    // t = 0 snapshot.
-    history.push(eval.measure(spec, 0, master.params(), bits_up, bits_down, avg_mem(&workers)));
+    let start = match resume {
+        Some(bytes) => {
+            let resumed = checkpoint::load(bytes, spec_fp, &mut master, &mut workers)?;
+            bits_up = resumed.bits_up;
+            bits_down = resumed.bits_down;
+            history = resumed.history;
+            resumed.step
+        }
+        None => {
+            // t = 0 snapshot.
+            history.push(eval.measure(
+                spec,
+                0,
+                master.params(),
+                bits_up,
+                bits_down,
+                avg_mem(&workers),
+            ));
+            0
+        }
+    };
 
-    for t in 0..spec.steps {
+    for t in start..spec.steps {
         let eta = spec.lr.at(t);
         // -- workers: one local step each ------------------------------------
         for w in workers.iter_mut() {
@@ -258,10 +310,16 @@ fn run_sequential(spec: &TrainSpec, global: Vec<f32>) -> History {
                 avg_mem(&workers),
             ));
         }
+        if checkpoint_every > 0 && step % checkpoint_every == 0 {
+            let bytes = checkpoint::save(
+                spec_fp, step, bits_up, bits_down, &history, &master, &workers,
+            );
+            on_checkpoint(step, bytes);
+        }
     }
 
     history.final_params = master.into_params();
-    history
+    Ok(history)
 }
 
 fn avg_mem(workers: &[WorkerCore]) -> f64 {

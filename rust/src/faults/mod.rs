@@ -1,0 +1,570 @@
+//! Deterministic fault injection: drops, corruption, duplication, delay
+//! and worker crash-restarts, decided from a seed — never from wall time.
+//!
+//! The paper's error-feedback memory is already a ledger of everything the
+//! compressor withheld; this module extends that ledger to everything the
+//! *network* withheld. A worker whose update is dropped re-absorbs the
+//! sent message into its memory (`WorkerCore::reabsorb_update`), so a lost
+//! uplink is arithmetically identical to a coarser compressor for one
+//! round — delayed, never destroyed.
+//!
+//! # Determinism
+//!
+//! Every fault decision is a pure function of `(fault seed, worker, step,
+//! channel)`: [`FaultPlan::decide`] builds a fresh salted [`Pcg64`] per
+//! decision and draws once. There is no shared RNG stream, so the decision
+//! is independent of arrival order — the sim's virtual clock and the
+//! threaded coordinator's real channels inject the *same* faults for the
+//! same seed, and there is no injector state to checkpoint.
+//!
+//! # Semantics (shared by both substrates)
+//!
+//! * **drop (uplink)** — the encoded update never reaches the master; the
+//!   round closes without it (deadline on the sim clock, count-based missed
+//!   metas on the threaded path) and the worker re-absorbs the message into
+//!   its error memory, then re-anchors (`local ← anchor`).
+//! * **corrupt** — the wire bytes are mangled ([`FaultPlan::corrupt_bytes`]
+//!   forces an undefined wire tag, so decoding *always* yields a structured
+//!   [`DecodeError`](crate::compress::DecodeError)); the receiver logs and
+//!   drops, and the sender compensates exactly as for a drop.
+//! * **dup** — the update is delivered twice; per-(worker, step) dedup on
+//!   the master makes the second copy a no-op.
+//! * **delay** — delivery is deferred (extra virtual ticks on the sim; a
+//!   reorder buffer on the threaded path). A delivery that misses its
+//!   round's deadline degrades to a drop.
+//! * **drop/corrupt (downlink)** — the broadcast for one worker is skipped
+//!   before the master's downlink mirror advances, so the implicit
+//!   downlink error feedback stays consistent; the worker re-anchors and
+//!   continues from its stale model.
+//! * **crash** — at a sync point the worker loses its volatile state
+//!   (`WorkerCore::crash_restart`: error memory, optimizer velocity) and
+//!   restarts from the last broadcast anchor.
+// `unsafe` lives only in the fork-join core (`engine::parallel`,
+// `coordinator::master`) — everywhere else it is a compile error.
+#![forbid(unsafe_code)]
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Salt for the fault-decision RNG keys (distinct from every other stream
+/// salt in the crate: uplink 0xc0ffee, downlink 0xd05eed, participation
+/// 0x5e7ec7, sim profile 0x513a11, straggler 0x57a616, churn 0xc6a12d, …).
+const FAULT_RNG_SALT: u64 = 0xfa0175;
+
+/// Per-channel key tags so uplink, downlink and crash decisions for the
+/// same (worker, step) are independent draws.
+const CH_UP: u64 = 0x75;
+const CH_DOWN: u64 = 0xd0;
+const CH_CRASH: u64 = 0xc4;
+
+/// Fault scenario description — the `"faults"` object of an
+/// `ExperimentSpec` JSON, or the `--faults` CLI grammar. `Default` is a
+/// fault-free network (every probability 0, no deadline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the (stateless) fault-decision streams. Two runs with the
+    /// same spec and the same fault seed inject identical faults.
+    pub seed: u64,
+    /// Per-update probability the uplink message is dropped in flight.
+    pub drop_up: f64,
+    /// Per-update probability the uplink wire bytes are corrupted.
+    pub corrupt_up: f64,
+    /// Per-update probability the uplink message is delivered twice.
+    pub dup_up: f64,
+    /// Per-update probability the uplink delivery is delayed (and thereby
+    /// reordered against later senders).
+    pub delay_up: f64,
+    /// Maximum extra delivery delay in virtual ticks (uniform in
+    /// [1, delay_ticks]); must be ≥ 1 when `delay_up > 0`.
+    pub delay_ticks: u64,
+    /// Per-broadcast probability a worker's downlink message is dropped.
+    pub drop_down: f64,
+    /// Per-broadcast probability a worker's downlink message is corrupted.
+    pub corrupt_down: f64,
+    /// Per-sync probability the worker crash-restarts at the sync point.
+    pub crash: f64,
+    /// Sim round deadline in virtual ticks: a round force-closes this many
+    /// ticks after it opens, folding whatever arrived. 0 = barrier forever
+    /// (requires `drop_up == 0` and `corrupt_up == 0`, or the sim would
+    /// wait on a message that never comes).
+    pub deadline_ticks: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            drop_up: 0.0,
+            corrupt_up: 0.0,
+            dup_up: 0.0,
+            delay_up: 0.0,
+            delay_ticks: 0,
+            drop_down: 0.0,
+            corrupt_down: 0.0,
+            crash: 0.0,
+            deadline_ticks: 0,
+        }
+    }
+}
+
+/// JSON field names (single source for the strict unknown-key check).
+const FAULT_FIELDS: &[&str] = &[
+    "seed",
+    "drop_up",
+    "corrupt_up",
+    "dup_up",
+    "delay_up",
+    "delay_ticks",
+    "drop_down",
+    "corrupt_down",
+    "crash",
+    "deadline_ticks",
+];
+
+impl FaultSpec {
+    /// True when any fault process can fire (the injector is constructed
+    /// only then — fault-free runs take the exact pre-existing code paths).
+    pub fn active(&self) -> bool {
+        self.drop_up > 0.0
+            || self.corrupt_up > 0.0
+            || self.dup_up > 0.0
+            || self.delay_up > 0.0
+            || self.drop_down > 0.0
+            || self.corrupt_down > 0.0
+            || self.crash > 0.0
+            || self.deadline_ticks > 0
+    }
+
+    /// Range-check the scenario (shared by spec validation and the CLI).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, p) in [
+            ("drop_up", self.drop_up),
+            ("corrupt_up", self.corrupt_up),
+            ("dup_up", self.dup_up),
+            ("delay_up", self.delay_up),
+            ("drop_down", self.drop_down),
+            ("corrupt_down", self.corrupt_down),
+            ("crash", self.crash),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&p),
+                "faults: {name} must be in [0, 1], got {p}"
+            );
+        }
+        anyhow::ensure!(
+            self.drop_up + self.corrupt_up + self.dup_up + self.delay_up <= 1.0,
+            "faults: uplink probabilities must sum to <= 1 (one fault per message)"
+        );
+        anyhow::ensure!(
+            self.drop_down + self.corrupt_down <= 1.0,
+            "faults: downlink probabilities must sum to <= 1"
+        );
+        if self.delay_up > 0.0 {
+            anyhow::ensure!(
+                self.delay_ticks >= 1,
+                "faults: delay_up set but delay_ticks is 0 (no delay window)"
+            );
+        }
+        if self.drop_up > 0.0 || self.corrupt_up > 0.0 {
+            anyhow::ensure!(
+                self.deadline_ticks >= 1,
+                "faults: drop_up/corrupt_up need deadline_ticks >= 1 \
+                 (a barriered round would wait forever on the lost update)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Emit the full scenario (every field, explicit) as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("drop_up", Json::num(self.drop_up)),
+            ("corrupt_up", Json::num(self.corrupt_up)),
+            ("dup_up", Json::num(self.dup_up)),
+            ("delay_up", Json::num(self.delay_up)),
+            ("delay_ticks", Json::num(self.delay_ticks as f64)),
+            ("drop_down", Json::num(self.drop_down)),
+            ("corrupt_down", Json::num(self.corrupt_down)),
+            ("crash", Json::num(self.crash)),
+            ("deadline_ticks", Json::num(self.deadline_ticks as f64)),
+        ])
+    }
+
+    /// Parse a `"faults"` JSON object. Missing fields take their defaults;
+    /// unknown fields are a hard error (same strictness as the enclosing
+    /// `ExperimentSpec`). Ends with [`FaultSpec::validate`].
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultSpec> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("faults: expected a JSON object"))?;
+        if let Some(unknown) = obj.keys().find(|k| !FAULT_FIELDS.contains(&k.as_str())) {
+            anyhow::bail!("faults: unknown field `{unknown}`");
+        }
+        let f64_field = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("faults: field `{key}` must be a number")),
+            }
+        };
+        let u64_field = |key: &str, default: u64| -> anyhow::Result<u64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("faults: field `{key}` must be a non-negative integer")
+                    }),
+            }
+        };
+        let d = FaultSpec::default();
+        let s = FaultSpec {
+            seed: u64_field("seed", d.seed)?,
+            drop_up: f64_field("drop_up", d.drop_up)?,
+            corrupt_up: f64_field("corrupt_up", d.corrupt_up)?,
+            dup_up: f64_field("dup_up", d.dup_up)?,
+            delay_up: f64_field("delay_up", d.delay_up)?,
+            delay_ticks: u64_field("delay_ticks", d.delay_ticks)?,
+            drop_down: f64_field("drop_down", d.drop_down)?,
+            corrupt_down: f64_field("corrupt_down", d.corrupt_down)?,
+            crash: f64_field("crash", d.crash)?,
+            deadline_ticks: u64_field("deadline_ticks", d.deadline_ticks)?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Parse the `--faults` CLI grammar: comma-separated `key=value` pairs,
+    /// e.g. `drop=0.1,corrupt=0.02,dup=0.05,delay=0.1:20000,drop-down=0.05,
+    /// corrupt-down=0.01,crash=0.002,deadline=50000,seed=7`. Keys without a
+    /// `-down` suffix refer to the uplink. `delay` takes `prob:max_ticks`.
+    pub fn parse(text: &str) -> anyhow::Result<FaultSpec> {
+        let mut s = FaultSpec::default();
+        for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("faults: expected key=value, got `{part}`"))?;
+            let prob = || -> anyhow::Result<f64> {
+                val.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("faults: `{key}` needs a number, got `{val}`"))
+            };
+            let int = || -> anyhow::Result<u64> {
+                val.parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("faults: `{key}` needs an integer, got `{val}`"))
+            };
+            match key.trim() {
+                "drop" => s.drop_up = prob()?,
+                "corrupt" => s.corrupt_up = prob()?,
+                "dup" => s.dup_up = prob()?,
+                "delay" => {
+                    let (p, ticks) = val.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("faults: `delay` takes prob:max_ticks, got `{val}`")
+                    })?;
+                    s.delay_up = p
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("faults: bad delay prob `{p}`"))?;
+                    s.delay_ticks = ticks
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("faults: bad delay ticks `{ticks}`"))?;
+                }
+                "drop-down" => s.drop_down = prob()?,
+                "corrupt-down" => s.corrupt_down = prob()?,
+                "crash" => s.crash = prob()?,
+                "deadline" => s.deadline_ticks = int()?,
+                "seed" => s.seed = int()?,
+                other => anyhow::bail!(
+                    "faults: unknown key `{other}` (known: drop, corrupt, dup, delay, \
+                     drop-down, corrupt-down, crash, deadline, seed)"
+                ),
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Render back to the CLI grammar (run names, logs).
+    pub fn spec_str(&self) -> String {
+        let mut parts = Vec::new();
+        if self.drop_up > 0.0 {
+            parts.push(format!("drop={}", self.drop_up));
+        }
+        if self.corrupt_up > 0.0 {
+            parts.push(format!("corrupt={}", self.corrupt_up));
+        }
+        if self.dup_up > 0.0 {
+            parts.push(format!("dup={}", self.dup_up));
+        }
+        if self.delay_up > 0.0 {
+            parts.push(format!("delay={}:{}", self.delay_up, self.delay_ticks));
+        }
+        if self.drop_down > 0.0 {
+            parts.push(format!("drop-down={}", self.drop_down));
+        }
+        if self.corrupt_down > 0.0 {
+            parts.push(format!("corrupt-down={}", self.corrupt_down));
+        }
+        if self.crash > 0.0 {
+            parts.push(format!("crash={}", self.crash));
+        }
+        if self.deadline_ticks > 0 {
+            parts.push(format!("deadline={}", self.deadline_ticks));
+        }
+        parts.push(format!("seed={}", self.seed));
+        parts.join(",")
+    }
+}
+
+/// Which wire direction a decision is for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channel {
+    /// Worker → master update.
+    Up,
+    /// Master → worker broadcast.
+    Down,
+}
+
+/// The injector's verdict for one message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Deliver normally.
+    Deliver,
+    /// The message never arrives.
+    Drop,
+    /// The wire bytes are mangled in flight (decode fails ⇒ logged drop).
+    Corrupt,
+    /// The message arrives twice.
+    Duplicate,
+    /// Delivery is deferred by the given extra virtual ticks (≥ 1).
+    Delay(u64),
+}
+
+/// Stateless fault injector. Construct with [`FaultPlan::new`] — it
+/// returns `None` for an inactive spec so fault-free runs keep the exact
+/// pre-existing code paths (and their bit-exact histories).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Option<FaultPlan> {
+        spec.active().then_some(FaultPlan { spec })
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Sim round deadline (0 = barrier forever).
+    pub fn deadline_ticks(&self) -> u64 {
+        self.spec.deadline_ticks
+    }
+
+    /// One fresh decision stream per (worker, step, channel): the golden-
+    /// ratio step mix gives distinct keys per step, the channel tag keeps
+    /// up/down/crash draws independent, and `worker + 1` picks the stream
+    /// (stream 0 stays free, matching the crate's other salted streams).
+    fn rng(&self, worker: usize, step: usize, channel: u64) -> Pcg64 {
+        let key = self.spec.seed
+            ^ FAULT_RNG_SALT
+            ^ (step as u64).wrapping_mul(0x9e3779b97f4a7c15)
+            ^ channel;
+        Pcg64::new(key, worker as u64 + 1)
+    }
+
+    /// Decide the fate of the message `worker` sends (or is sent) at
+    /// global step `step`. Pure: same inputs ⇒ same action, on any
+    /// substrate, in any arrival order.
+    pub fn decide(&self, worker: usize, step: usize, channel: Channel) -> FaultAction {
+        let s = &self.spec;
+        match channel {
+            Channel::Up => {
+                if s.drop_up + s.corrupt_up + s.dup_up + s.delay_up <= 0.0 {
+                    return FaultAction::Deliver;
+                }
+                let mut rng = self.rng(worker, step, CH_UP);
+                let u = rng.f64();
+                if u < s.drop_up {
+                    FaultAction::Drop
+                } else if u < s.drop_up + s.corrupt_up {
+                    FaultAction::Corrupt
+                } else if u < s.drop_up + s.corrupt_up + s.dup_up {
+                    FaultAction::Duplicate
+                } else if u < s.drop_up + s.corrupt_up + s.dup_up + s.delay_up {
+                    FaultAction::Delay(rng.range_u64(1, s.delay_ticks.max(1)))
+                } else {
+                    FaultAction::Deliver
+                }
+            }
+            Channel::Down => {
+                if s.drop_down + s.corrupt_down <= 0.0 {
+                    return FaultAction::Deliver;
+                }
+                let u = self.rng(worker, step, CH_DOWN).f64();
+                if u < s.drop_down {
+                    FaultAction::Drop
+                } else if u < s.drop_down + s.corrupt_down {
+                    FaultAction::Corrupt
+                } else {
+                    FaultAction::Deliver
+                }
+            }
+        }
+    }
+
+    /// Does `worker` crash-restart at the sync point of `step`?
+    pub fn crash_at(&self, worker: usize, step: usize) -> bool {
+        self.spec.crash > 0.0 && self.rng(worker, step, CH_CRASH).f64() < self.spec.crash
+    }
+
+    /// Mangle encoded wire bytes so decoding *always* fails with a
+    /// structured error: force the 3-bit wire tag (MSB-first in byte 0) to
+    /// 7, which no codec defines — raw and rANS streams both reject it as
+    /// `DecodeError::BadTag`. Deterministic, length-preserving.
+    pub fn corrupt_bytes(bytes: &mut [u8]) {
+        if let Some(b) = bytes.first_mut() {
+            *b |= 0xE0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy() -> FaultSpec {
+        FaultSpec {
+            seed: 7,
+            drop_up: 0.2,
+            corrupt_up: 0.05,
+            dup_up: 0.1,
+            delay_up: 0.1,
+            delay_ticks: 500,
+            drop_down: 0.05,
+            corrupt_down: 0.02,
+            crash: 0.01,
+            deadline_ticks: 50_000,
+        }
+    }
+
+    #[test]
+    fn default_is_inactive_and_roundtrips() {
+        let s = FaultSpec::default();
+        s.validate().unwrap();
+        assert!(!s.active());
+        assert!(FaultPlan::new(s).is_none());
+        let back = FaultSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn nondefault_roundtrips_json_and_grammar() {
+        let s = lossy();
+        s.validate().unwrap();
+        assert!(s.active());
+        let text = s.to_json().pretty();
+        let back = FaultSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        let back = FaultSpec::parse(&s.spec_str()).unwrap();
+        assert_eq!(back, s);
+        let explicit = FaultSpec::parse(
+            "drop=0.2,corrupt=0.05,dup=0.1,delay=0.1:500,drop-down=0.05,\
+             corrupt-down=0.02,crash=0.01,deadline=50000,seed=7",
+        )
+        .unwrap();
+        assert_eq!(explicit, s);
+    }
+
+    #[test]
+    fn rejects_bad_ranges_and_unknown_keys() {
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"drop_up": 1.5}"#).unwrap()).is_err());
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"delay_ticks": -1}"#).unwrap()).is_err());
+        // delay without a window, drop without a deadline: config typos.
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"delay_up": 0.1}"#).unwrap()).is_err());
+        assert!(FaultSpec::from_json(&Json::parse(r#"{"drop_up": 0.1}"#).unwrap()).is_err());
+        assert!(FaultSpec::from_json(
+            &Json::parse(r#"{"drop_up": 0.1, "deadline_ticks": 1000}"#).unwrap()
+        )
+        .is_ok());
+        // Uplink fault probabilities must leave room for delivery decisions.
+        assert!(FaultSpec::from_json(
+            &Json::parse(r#"{"drop_up": 0.6, "dup_up": 0.6, "deadline_ticks": 1}"#).unwrap()
+        )
+        .is_err());
+        assert!(FaultSpec::parse("drop=0.1").is_err());
+        assert!(FaultSpec::parse("drop=0.1,deadline=1000").is_ok());
+        assert!(FaultSpec::parse("warp=0.1").is_err());
+        assert!(FaultSpec::parse("delay=0.1").is_err());
+        assert!(FaultSpec::parse("drop=x,deadline=5").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_channel_separated() {
+        let plan = FaultPlan::new(lossy()).unwrap();
+        for worker in 0..8 {
+            for step in (0..200).step_by(7) {
+                let a = plan.decide(worker, step, Channel::Up);
+                let b = plan.decide(worker, step, Channel::Up);
+                assert_eq!(a, b, "uplink decision must be pure");
+                assert_eq!(
+                    plan.decide(worker, step, Channel::Down),
+                    plan.decide(worker, step, Channel::Down)
+                );
+                assert_eq!(plan.crash_at(worker, step), plan.crash_at(worker, step));
+            }
+        }
+        // A different fault seed must change at least one decision.
+        let other = FaultPlan::new(FaultSpec { seed: 8, ..lossy() }).unwrap();
+        let diverges = (0..8).any(|w| {
+            (0..200).any(|t| plan.decide(w, t, Channel::Up) != other.decide(w, t, Channel::Up))
+        });
+        assert!(diverges, "fault seed must matter");
+    }
+
+    #[test]
+    fn decision_rates_match_probabilities() {
+        let plan = FaultPlan::new(lossy()).unwrap();
+        let trials = 20_000usize;
+        let mut counts = [0usize; 5]; // deliver, drop, corrupt, dup, delay
+        for i in 0..trials {
+            let idx = match plan.decide(i % 16, i / 16, Channel::Up) {
+                FaultAction::Deliver => 0,
+                FaultAction::Drop => 1,
+                FaultAction::Corrupt => 2,
+                FaultAction::Duplicate => 3,
+                FaultAction::Delay(t) => {
+                    assert!((1..=500).contains(&t));
+                    4
+                }
+            };
+            counts[idx] += 1;
+        }
+        let rate = |c: usize| c as f64 / trials as f64;
+        assert!((rate(counts[1]) - 0.2).abs() < 0.02, "drop rate {}", rate(counts[1]));
+        assert!((rate(counts[2]) - 0.05).abs() < 0.01, "corrupt rate {}", rate(counts[2]));
+        assert!((rate(counts[3]) - 0.1).abs() < 0.015, "dup rate {}", rate(counts[3]));
+        assert!((rate(counts[4]) - 0.1).abs() < 0.015, "delay rate {}", rate(counts[4]));
+        assert!((rate(counts[0]) - 0.55).abs() < 0.03, "deliver rate {}", rate(counts[0]));
+    }
+
+    #[test]
+    fn corrupt_bytes_forces_a_decode_error() {
+        use crate::compress::{encode, parse_spec, MessageBuf};
+        let op = parse_spec("topk:k=4").unwrap();
+        let mut rng = Pcg64::seeded(13);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 0.1).collect();
+        let msg = op.compress(&x, &mut rng);
+        let mut w = encode::BitWriter::new();
+        encode::encode_into(&msg, &mut w);
+        let bit_len = w.bit_len();
+        let (mut bytes, _) = w.into_bytes();
+        assert!(encode::decode(&bytes, bit_len).is_ok(), "sane stream must decode");
+        FaultPlan::corrupt_bytes(&mut bytes);
+        let mut buf = MessageBuf::new();
+        let err = encode::decode_into(&bytes, bit_len, &mut buf);
+        assert!(err.is_err(), "corrupted tag must be a structured decode error");
+    }
+}

@@ -183,14 +183,18 @@ fn run_series_on(
         eval_rows: s.eval_rows,
         threads: s.threads,
     };
-    Ok(match s.sim {
-        Some(sim) => {
-            let r = crate::sim::run_from(&spec, &sim, init.to_vec());
+    Ok(match (s.sim, s.faults) {
+        (None, None) => (engine::run_from(&spec, init.to_vec()), None),
+        // Faults without an explicit scenario still run on the simulator's
+        // virtual clock (default timing model) — the engine has no wire to
+        // inject faults into.
+        (sim, faults) => {
+            let sim = sim.unwrap_or_default();
+            let r = crate::sim::run_from_faulty(&spec, &sim, faults.as_ref(), init.to_vec());
             let final_secs = r.final_secs();
             let trace = SimTrace { points: r.points, events: r.events, final_secs };
             (r.history, Some(trace))
         }
-        None => (engine::run_from(&spec, init.to_vec()), None),
     })
 }
 

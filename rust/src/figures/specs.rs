@@ -16,12 +16,13 @@ use crate::spec::ExperimentSpec;
 
 /// All figure ids in paper order (fig9 — bidirectional compression, fig10 —
 /// sampled partial participation, fig11 — server optimizers, fig12 — the
-/// rANS wire codec, fig13 — the event-driven network simulator — are this
-/// repo's extensions, not paper figures).
+/// rANS wire codec, fig13 — the event-driven network simulator, fig14 —
+/// fault injection with deadline rounds — are this repo's extensions, not
+/// paper figures).
 pub fn all_figure_ids() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-        "fig12", "fig13",
+        "fig12", "fig13", "fig14",
     ]
 }
 
@@ -335,6 +336,47 @@ pub fn figure_spec(id: &str) -> Option<FigureSpec> {
                     cv.a("QTopK-async_mom0.9", &format!("qtopk:k={KC},bits=4,scaled"), 8)
                         .with_server_opt("momentum:beta=0.9,lr=0.1")
                         .with_sim(skew),
+                ],
+            )
+        }
+        // ---- fault tolerance (not in the paper) ------------------------------
+        // Loss under deterministic uplink loss on the simulator's virtual
+        // clock: the master closes each round at a deadline, dropped or
+        // corrupted updates are re-absorbed into the sender's error memory
+        // (m ← m + ĝ), so lost mass is delayed rather than destroyed. The
+        // sweep varies the drop rate with everything else fixed; the last
+        // series piles on corruption, duplication, delay-reordering and
+        // crash-restarts to show the cocktail still converges.
+        "fig14" => {
+            let skew = SimSpec {
+                compute_sigma: 0.8,
+                bw_sigma: 0.5,
+                latency: 2_000,
+                straggler_prob: 0.05,
+                straggler_mult: 8.0,
+                ..SimSpec::default()
+            };
+            let qtopk = format!("qtopk:k={KC},bits=4,scaled");
+            cv.build(
+                "fig14",
+                "convex: loss vs uplink drop rate under deadline rounds and EF re-absorption",
+                0.10,
+                0.15,
+                vec![
+                    cv.s("QTopK_drop0.0", &qtopk, 8).with_sim(skew),
+                    cv.s("QTopK_drop0.1", &qtopk, 8)
+                        .with_sim(skew)
+                        .with_faults("drop=0.1,deadline=40000,seed=14"),
+                    cv.s("QTopK_drop0.2", &qtopk, 8)
+                        .with_sim(skew)
+                        .with_faults("drop=0.2,deadline=40000,seed=14"),
+                    cv.s("QTopK_drop0.3", &qtopk, 8)
+                        .with_sim(skew)
+                        .with_faults("drop=0.3,deadline=40000,seed=14"),
+                    cv.s("QTopK_cocktail", &qtopk, 8).with_sim(skew).with_faults(
+                        "drop=0.1,corrupt=0.05,dup=0.05,delay=0.05:20000,\
+                         drop-down=0.05,corrupt-down=0.05,crash=0.01,deadline=40000,seed=14",
+                    ),
                 ],
             )
         }

@@ -32,6 +32,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod figures;
 pub mod grad;
 pub mod optim;
@@ -45,6 +46,7 @@ pub mod util;
 
 pub use compress::{Compressor, Message, MessageBuf};
 pub use engine::{History, TrainSpec};
+pub use faults::{FaultAction, FaultPlan, FaultSpec};
 pub use grad::GradModel;
 pub use optim::{ServerOpt, ServerOptSpec};
 pub use protocol::{AggScale, DownlinkWorker, MasterCore, WorkerCore};

@@ -38,6 +38,13 @@
 //!   --async                       Algorithm 2 random per-worker gaps
 //!   --threaded                    threaded master/worker runtime (vs engine)
 //!   --threads N                   engine worker-pool threads (0 = all cores)
+//!   --faults SPEC                 deterministic fault injection, e.g.
+//!                                 drop=0.1,corrupt=0.02,deadline=40000,seed=7
+//!                                 (needs --threaded here, or `qsparse sim`)
+//!   --checkpoint-every N          snapshot every N steps (sequential engine)
+//!   --checkpoint-path FILE        snapshot file (default qsparse.ckpt)
+//!   --resume FILE                 resume from a snapshot; the continued run
+//!                                 is bit-identical to the uninterrupted one
 //!   --steps N --workers N --batch N --eta F --momentum F --seed N
 //!   --csv FILE                    write the metric history as CSV
 //!   --json                        print a JSON summary
@@ -93,7 +100,8 @@ USAGE: qsparse <figure|gamma-table|train|sim|specs|inspect|help> [options]
         [--down-compressor SPEC] [--codec raw|rans]
         [--participation SPEC] [--agg-scale MODE]
         [--server-opt SPEC] [--h N] [--schedule SPEC] [--async] [--threaded]
-        [--threads N]
+        [--threads N] [--faults SPEC] [--checkpoint-every N]
+        [--checkpoint-path FILE] [--resume FILE]
         [--steps N] [--workers N] [--batch N] [--eta F] [--momentum F]
         [--seed N] [--csv FILE] [--json]
   sim   [all `train` spec flags] [--ticks-per-sec N] [--compute-mean F]
@@ -135,6 +143,21 @@ heavy-ball; lr defaults to 1−beta, an EMA of round deltas) |
 
 --threads runs the engine's worker steps on a thread pool (0 = all cores).
 Histories are bit-identical across thread counts; it is purely a speed knob.
+
+--faults injects deterministic message faults from a seeded hash of
+(worker, step, channel) — `drop=P,corrupt=P,dup=P,delay=P:TICKS,
+drop-down=P,corrupt-down=P,crash=P,deadline=TICKS,seed=N`. The master
+closes each round at the deadline (sim) or by accounting for every
+expected participant (threaded); a worker whose update was lost re-absorbs
+it into its error memory, so lost mass is delayed, not destroyed. Same
+seed ⇒ same faults ⇒ bit-identical histories. `train` requires --threaded
+(faults live on the channel fabric); `sim` injects on the virtual clock.
+
+--checkpoint-every N writes a versioned binary snapshot (magic QSCK) of
+every core, RNG stream and counter to --checkpoint-path each N steps;
+--resume FILE continues from one, bit-identical to the uninterrupted run.
+The header fingerprints the canonical spec JSON, so resuming under
+different flags fails with a structured spec-mismatch error.
 
 `sim` replays the same training arithmetic through a deterministic
 discrete-event network simulator (virtual u64 tick clock): per-client
@@ -314,6 +337,10 @@ fn spec_from_flags(f: &Flags) -> anyhow::Result<ExperimentSpec> {
     if let Some(s) = f.get("server-opt") {
         spec.server_opt = ServerOptSpec::parse(s)?;
     }
+    if let Some(s) = f.get("faults") {
+        spec.faults =
+            Some(qsparse::FaultSpec::parse(s).map_err(|e| anyhow::anyhow!("--faults: {e}"))?);
+    }
     spec.validate()?;
     Ok(spec)
 }
@@ -333,14 +360,74 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         print!("{}", spec.to_json().pretty());
         return Ok(());
     }
+    let ckpt_every: usize = f.parse_num("checkpoint-every", 0)?;
+    let resume_path = f.get("resume");
+    let checkpointing = ckpt_every > 0 || resume_path.is_some();
+    anyhow::ensure!(
+        !(f.has("threaded") && checkpointing),
+        "--checkpoint-every/--resume snapshot the sequential engine's state; \
+         --threaded does not apply"
+    );
+    anyhow::ensure!(
+        spec.faults.is_none() || f.has("threaded"),
+        "fault injection on `train` needs a wire to inject into: add --threaded \
+         (channel faults) or use `qsparse sim` (virtual-clock faults)"
+    );
     let sw = Stopwatch::start();
     let resolved = spec.resolve(false)?;
     let history = if f.has("threaded") {
         resolved.run_threaded()?
+    } else if checkpointing {
+        run_checkpointed(&f, &resolved, ckpt_every, resume_path)?
     } else {
         resolved.run()
     };
     report_history(&f, &spec, &history, sw.secs())
+}
+
+/// The `--checkpoint-every` / `--resume` train path: the sequential engine
+/// with snapshot hooks. The checkpoint header carries a fingerprint of the
+/// canonical spec JSON, so resuming under a different flag set is a
+/// structured `SpecMismatch`, never a silently hybrid run.
+fn run_checkpointed(
+    f: &Flags,
+    resolved: &qsparse::spec::ResolvedExperiment,
+    ckpt_every: usize,
+    resume_path: Option<&str>,
+) -> anyhow::Result<qsparse::History> {
+    anyhow::ensure!(
+        resolved.spec.threads <= 1,
+        "checkpointing requires --threads 1: snapshots are taken by the \
+         sequential engine (histories are bit-identical across thread counts, \
+         so this only costs wall-clock)"
+    );
+    let fp = qsparse::protocol::checkpoint::spec_fingerprint(&resolved.spec.to_json().pretty());
+    let resume_bytes = match resume_path {
+        Some(p) => Some(std::fs::read(p).map_err(|e| anyhow::anyhow!("--resume {p}: {e}"))?),
+        None => None,
+    };
+    let out = f.get_or("checkpoint-path", "qsparse.ckpt");
+    let mut write_err: Option<anyhow::Error> = None;
+    let history = engine::run_from_resumable(
+        &resolved.train_spec(),
+        resolved.workload.init.clone(),
+        resume_bytes.as_deref(),
+        fp,
+        ckpt_every,
+        &mut |step, bytes| {
+            if write_err.is_none() {
+                if let Err(e) = std::fs::write(&out, &bytes) {
+                    write_err = Some(anyhow::anyhow!("--checkpoint-path {out} at step {step}: {e}"));
+                } else {
+                    eprintln!("checkpoint: step {step} → {out} ({} bytes)", bytes.len());
+                }
+            }
+        },
+    )?;
+    match write_err {
+        Some(e) => Err(e),
+        None => Ok(history),
+    }
 }
 
 /// `qsparse sim`: run the experiment through the deterministic

@@ -90,6 +90,19 @@ impl LocalSgd {
     pub fn reset(&mut self) {
         self.velocity.iter_mut().for_each(|v| *v = 0.0);
     }
+
+    /// The momentum buffer (checkpointing).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Restore the momentum buffer from a checkpoint. The caller validates
+    /// the length first (`protocol::checkpoint` rejects mismatches as a
+    /// structured error before getting here).
+    pub fn load_velocity(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.velocity.len(), "velocity dimension mismatch");
+        self.velocity.copy_from_slice(src);
+    }
 }
 
 /// Server optimizer selection — plain data, JSON/CLI round-trippable.
@@ -287,6 +300,24 @@ pub trait ServerOpt: Send {
     fn set_round_lr(&mut self, _lr: f64) {}
 
     fn name(&self) -> String;
+
+    /// Serialize the optimizer's trajectory-dependent state (checkpointing).
+    /// Spec-derived constants (betas, eps, base lr) are rebuilt from the
+    /// spec on resume and are *not* written. Default: stateless.
+    fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        let _ = w;
+    }
+
+    /// Restore state written by [`ServerOpt::save_state`] onto a freshly
+    /// built optimizer of the same spec and dimension. Default: nothing to
+    /// read. Never panics on truncated input — errors are structured.
+    fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), crate::compress::DecodeError> {
+        let _ = r;
+        Ok(())
+    }
 }
 
 /// Server heavy-ball: `v ← β·v + Δ; x ← x − lr·v`.
@@ -312,6 +343,20 @@ impl ServerOpt for ServerMomentum {
 
     fn name(&self) -> String {
         format!("momentum(beta={},lr={})", self.beta, self.lr)
+    }
+
+    fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        w.push_f32s(&self.v);
+    }
+
+    fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), crate::compress::DecodeError> {
+        for vi in self.v.iter_mut() {
+            *vi = r.read_f32().ok_or(crate::compress::DecodeError::Truncated)?;
+        }
+        Ok(())
     }
 }
 
@@ -352,6 +397,28 @@ impl ServerOpt for ServerAdam {
 
     fn name(&self) -> String {
         format!("adam(b1={},b2={},eps={},lr={})", self.b1, self.b2, self.eps, self.lr)
+    }
+
+    fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        w.push_bits(self.t as u64, 64);
+        w.push_f32s(&self.m);
+        w.push_f32s(&self.v);
+    }
+
+    fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), crate::compress::DecodeError> {
+        use crate::compress::DecodeError;
+        let t = r.read_bits(64).ok_or(DecodeError::Truncated)?;
+        self.t = i32::try_from(t).map_err(|_| DecodeError::CountOverflow)?;
+        for mi in self.m.iter_mut() {
+            *mi = r.read_f32().ok_or(DecodeError::Truncated)?;
+        }
+        for vi in self.v.iter_mut() {
+            *vi = r.read_f32().ok_or(DecodeError::Truncated)?;
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,429 @@
+//! Bit-identical checkpoint/resume for the sequential training engine.
+//!
+//! A checkpoint is a snapshot of *every* piece of trajectory-dependent
+//! state at a step boundary: the master model (plus server-optimizer
+//! accumulators and downlink anchor mirrors), each worker's iterate /
+//! anchor / error memory / momentum velocity / RNG streams, the run
+//! counters (step, cumulative uplink and downlink bits) and the metric
+//! `History` collected so far. Restoring it onto freshly spec-constructed
+//! cores and continuing the loop MUST reproduce the uninterrupted run
+//! bit-for-bit — `tests/integration_faults.rs` asserts exactly that.
+//!
+//! # Wire format (version 1)
+//!
+//! A single MSB-first bit stream (the same [`BitWriter`]/[`BitReader`]
+//! machinery as the compression codecs), byte-padded at the end:
+//!
+//! ```text
+//!   magic    32 bits   "QSCK" big-endian
+//!   version   8 bits   CHECKPOINT_VERSION
+//!   spec_fp  64 bits   FNV-1a of the canonical experiment spec JSON
+//!   step     64 bits   completed steps
+//!   bits_up  64 bits   cumulative uplink wire bits
+//!   bits_dn  64 bits   cumulative downlink wire bits
+//!   d        64 bits   model dimension
+//!   workers  64 bits   fleet size
+//!   points   64 bits   History point count, then 7×64 bits per point
+//!   master   …         MasterCore::save_state
+//!   worker×R …         WorkerCore::save_state each
+//! ```
+//!
+//! `final_params` is not stored: a mid-run checkpoint has not produced it
+//! yet, and resume recomputes it at run completion.
+//!
+//! # Decode discipline
+//!
+//! Checkpoint bytes are untrusted input (a file on disk), so loading
+//! follows the same rules as the wire codecs: every failure is a
+//! structured [`CheckpointError`], never a panic; the `History` point
+//! count goes through [`checked_count`]'s decompression-bomb ceiling
+//! before any allocation; and RNG increments are validated odd (a PCG
+//! invariant) before reconstructing a generator. This file is on
+//! repo-lint's no-panic list alongside the decoders.
+
+use crate::compress::encode::{checked_count, BitReader, BitWriter, OrTruncated as _};
+use crate::compress::DecodeError;
+use crate::engine::{History, MetricPoint};
+use crate::sim::Fnv1a64;
+use crate::util::rng::Pcg64;
+
+use super::{MasterCore, WorkerCore};
+
+/// Bumped on any change to the checkpoint layout. Old versions are
+/// rejected with [`CheckpointError::BadVersion`] — there is no migration
+/// path, by design: a checkpoint is a resume token for one run, not an
+/// archival format.
+pub const CHECKPOINT_VERSION: u8 = 1;
+
+const MAGIC: u32 = u32::from_be_bytes(*b"QSCK");
+
+/// Each History point serializes to exactly 7 × 64 bits; used as the
+/// per-element floor for the decompression-bomb ceiling.
+const POINT_BITS: u64 = 7 * 64;
+
+/// Why a checkpoint failed to load. All variants are recoverable — the
+/// caller reports the error and starts fresh (or aborts); nothing panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The underlying bit stream was malformed (truncated, bomb ceiling).
+    Decode(DecodeError),
+    /// The leading bytes are not `QSCK` — not a checkpoint file.
+    BadMagic,
+    /// A checkpoint from an incompatible layout version.
+    BadVersion(u8),
+    /// The checkpoint was taken under a different experiment spec.
+    SpecMismatch,
+    /// Dimension / fleet-size / optional-state shape disagrees with the
+    /// cores being restored onto.
+    ShapeMismatch,
+    /// A serialized RNG violates the PCG stream invariant (even
+    /// increment) — the bytes cannot come from a real generator.
+    BadRngState,
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Decode(e) => write!(f, "malformed checkpoint stream: {e}"),
+            CheckpointError::BadMagic => write!(f, "not a checkpoint file (bad magic)"),
+            CheckpointError::BadVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (expected {CHECKPOINT_VERSION})")
+            }
+            CheckpointError::SpecMismatch => {
+                write!(f, "checkpoint was taken under a different experiment spec")
+            }
+            CheckpointError::ShapeMismatch => {
+                write!(f, "checkpoint shape does not match the run being resumed")
+            }
+            CheckpointError::BadRngState => {
+                write!(f, "serialized RNG state is invalid (even PCG increment)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<DecodeError> for CheckpointError {
+    fn from(e: DecodeError) -> Self {
+        CheckpointError::Decode(e)
+    }
+}
+
+/// FNV-1a fingerprint of the canonical spec text. Stored in the header
+/// and required to match on resume, so a checkpoint can never silently
+/// continue a *different* experiment.
+pub fn spec_fingerprint(canonical_spec: &str) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.write(canonical_spec.as_bytes());
+    h.finish()
+}
+
+// ---- shared primitives (used by the core save_state/load_state impls) ----
+
+/// Serialize a PCG stream as four 64-bit halves (state hi/lo, inc hi/lo).
+pub(crate) fn push_rng(w: &mut BitWriter, rng: &Pcg64) {
+    let (state, inc) = rng.snapshot();
+    w.push_bits((state >> 64) as u64, 64);
+    w.push_bits(state as u64, 64);
+    w.push_bits((inc >> 64) as u64, 64);
+    w.push_bits(inc as u64, 64);
+}
+
+/// Inverse of [`push_rng`]; rejects even increments (see
+/// [`CheckpointError::BadRngState`]) before touching the generator.
+pub(crate) fn read_rng(r: &mut BitReader) -> Result<Pcg64, CheckpointError> {
+    let state_hi = r.read_bits(64).or_truncated()?;
+    let state_lo = r.read_bits(64).or_truncated()?;
+    let inc_hi = r.read_bits(64).or_truncated()?;
+    let inc_lo = r.read_bits(64).or_truncated()?;
+    let state = ((state_hi as u128) << 64) | state_lo as u128;
+    let inc = ((inc_hi as u128) << 64) | inc_lo as u128;
+    if inc & 1 == 0 {
+        return Err(CheckpointError::BadRngState);
+    }
+    Ok(Pcg64::restore(state, inc))
+}
+
+/// Fill `out` from the stream, erroring (not panicking) on truncation.
+pub(crate) fn read_f32s(r: &mut BitReader, out: &mut [f32]) -> Result<(), CheckpointError> {
+    for v in out.iter_mut() {
+        *v = r.read_f32().or_truncated()?;
+    }
+    Ok(())
+}
+
+fn push_f64(w: &mut BitWriter, v: f64) {
+    w.push_bits(v.to_bits(), 64);
+}
+
+fn read_f64(r: &mut BitReader) -> Result<f64, CheckpointError> {
+    Ok(f64::from_bits(r.read_bits(64).or_truncated()?))
+}
+
+fn read_usize(r: &mut BitReader) -> Result<usize, CheckpointError> {
+    let v = r.read_bits(64).or_truncated()?;
+    usize::try_from(v).map_err(|_| CheckpointError::ShapeMismatch)
+}
+
+// ---- full-run snapshot ---------------------------------------------------
+
+/// The run-level counters restored from a checkpoint; the master and
+/// worker cores are restored in place by [`load`].
+pub struct Resumed {
+    /// Completed steps at snapshot time — the loop continues from here.
+    pub step: usize,
+    /// Cumulative wire bits at snapshot time.
+    pub bits_up: u64,
+    pub bits_down: u64,
+    /// Metric history collected so far (`final_params` empty; the
+    /// resumed run fills it on completion).
+    pub history: History,
+}
+
+/// Serialize a full sequential-engine snapshot at a step boundary.
+pub fn save(
+    spec_fp: u64,
+    step: usize,
+    bits_up: u64,
+    bits_down: u64,
+    history: &History,
+    master: &MasterCore,
+    workers: &[WorkerCore],
+) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.push_bits(MAGIC as u64, 32);
+    w.push_bits(CHECKPOINT_VERSION as u64, 8);
+    w.push_bits(spec_fp, 64);
+    w.push_bits(step as u64, 64);
+    w.push_bits(bits_up, 64);
+    w.push_bits(bits_down, 64);
+    w.push_bits(master.dim() as u64, 64);
+    w.push_bits(workers.len() as u64, 64);
+    w.push_bits(history.points.len() as u64, 64);
+    for p in &history.points {
+        w.push_bits(p.step as u64, 64);
+        push_f64(&mut w, p.train_loss);
+        push_f64(&mut w, p.test_err);
+        push_f64(&mut w, p.test_top5_err);
+        w.push_bits(p.bits_up, 64);
+        w.push_bits(p.bits_down, 64);
+        push_f64(&mut w, p.mem_norm_sq);
+    }
+    master.save_state(&mut w);
+    for wk in workers {
+        wk.save_state(&mut w);
+    }
+    let (bytes, _bit_len) = w.into_bytes();
+    bytes
+}
+
+/// Restore a snapshot written by [`save`] onto freshly spec-constructed
+/// cores. On success the cores hold the checkpointed state and the
+/// returned [`Resumed`] carries the run counters; on error the cores are
+/// partially written and must be discarded (the engine rebuilds them).
+pub fn load(
+    bytes: &[u8],
+    spec_fp: u64,
+    master: &mut MasterCore,
+    workers: &mut [WorkerCore],
+) -> Result<Resumed, CheckpointError> {
+    let bit_len = (bytes.len() as u64).saturating_mul(8);
+    let mut r = BitReader::new(bytes, bit_len);
+    if r.read_bits(32).or_truncated()? as u32 != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let version = r.read_bits(8).or_truncated()? as u8;
+    if version != CHECKPOINT_VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+    if r.read_bits(64).or_truncated()? != spec_fp {
+        return Err(CheckpointError::SpecMismatch);
+    }
+    let step = read_usize(&mut r)?;
+    let bits_up = r.read_bits(64).or_truncated()?;
+    let bits_down = r.read_bits(64).or_truncated()?;
+    let d = read_usize(&mut r)?;
+    let fleet = read_usize(&mut r)?;
+    if d != master.dim() || fleet != workers.len() {
+        return Err(CheckpointError::ShapeMismatch);
+    }
+    let n_points = r.read_bits(64).or_truncated()?;
+    let n_points = checked_count(n_points, POINT_BITS, &r)?;
+    let mut history = History::new();
+    history.points.reserve(n_points);
+    for _ in 0..n_points {
+        let p = MetricPoint {
+            step: read_usize(&mut r)?,
+            train_loss: read_f64(&mut r)?,
+            test_err: read_f64(&mut r)?,
+            test_top5_err: read_f64(&mut r)?,
+            bits_up: r.read_bits(64).or_truncated()?,
+            bits_down: r.read_bits(64).or_truncated()?,
+            mem_norm_sq: read_f64(&mut r)?,
+        };
+        history.points.push(p);
+    }
+    master.load_state(&mut r)?;
+    for wk in workers.iter_mut() {
+        wk.load_state(&mut r)?;
+    }
+    // Byte padding aside, the stream must be fully consumed — trailing
+    // data means the file does not describe this run's shape.
+    if r.remaining() >= 8 {
+        return Err(CheckpointError::ShapeMismatch);
+    }
+    Ok(Resumed { step, bits_up, bits_down, history })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ServerOptSpec;
+
+    fn mk_cores(d: usize, fleet: usize, seed: u64) -> (MasterCore, Vec<WorkerCore>) {
+        let master = MasterCore::new(vec![0.25f32; d], fleet, seed, true);
+        let workers = (0..fleet)
+            .map(|r| {
+                WorkerCore::new(r, vec![0.25f32; d], (0..16).collect(), 4, 0.9, seed)
+            })
+            .collect();
+        (master, workers)
+    }
+
+    fn perturbed(seed: u64) -> (MasterCore, Vec<WorkerCore>, History) {
+        let d = 12;
+        let (mut master, mut workers) = mk_cores(d, 2, seed);
+        master.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+        // Drive some state through the cores so the snapshot is non-trivial.
+        let ds = crate::data::gaussian_clusters(48, 4, 3, 1.5, 0.4, seed);
+        let model = crate::grad::SoftmaxRegression::new(4, 3, 1.0 / 48.0);
+        let op = crate::compress::TopK::new(3);
+        master.begin_round(2);
+        for wk in workers.iter_mut() {
+            wk.local_step(&model, &ds, 0.1);
+            let msg = wk.make_update(&op);
+            master.apply_update(msg).unwrap();
+        }
+        master.end_round();
+        let mut history = History::new();
+        history.push(MetricPoint {
+            step: 1,
+            train_loss: 1.25,
+            test_err: 0.5,
+            test_top5_err: 0.125,
+            bits_up: 96,
+            bits_down: 384,
+            mem_norm_sq: 0.015625,
+        });
+        (master, workers, history)
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let fp = spec_fingerprint("{\"spec\":1}");
+        let (master, workers, history) = perturbed(11);
+        let bytes = save(fp, 7, 1000, 2000, &history, &master, &workers);
+        let (mut m2, mut w2) = mk_cores(12, 2, 99);
+        m2.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+        let resumed = load(&bytes, fp, &mut m2, &mut w2).unwrap();
+        assert_eq!(resumed.step, 7);
+        assert_eq!(resumed.bits_up, 1000);
+        assert_eq!(resumed.bits_down, 2000);
+        assert_eq!(resumed.history.points.len(), 1);
+        assert_eq!(resumed.history.points[0].train_loss.to_bits(), 1.25f64.to_bits());
+        assert_eq!(m2.params(), master.params());
+        for (a, b) in w2.iter().zip(&workers) {
+            assert_eq!(a.params(), b.params());
+            assert_eq!(a.mem_norm_sq().to_bits(), b.mem_norm_sq().to_bits());
+        }
+        // Saving the restored state reproduces the exact bytes.
+        let again = save(fp, 7, 1000, 2000, &resumed.history, &m2, &w2);
+        assert_eq!(again, bytes);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_spec() {
+        let fp = spec_fingerprint("spec-a");
+        let (master, workers, history) = perturbed(12);
+        let bytes = save(fp, 3, 10, 20, &history, &master, &workers);
+
+        let (mut m, mut w) = mk_cores(12, 2, 1);
+        m.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+        let mut mangled = bytes.clone();
+        mangled[0] ^= 0xff;
+        assert_eq!(load(&mangled, fp, &mut m, &mut w), Err(CheckpointError::BadMagic));
+
+        let mut versioned = bytes.clone();
+        versioned[4] = CHECKPOINT_VERSION + 1;
+        assert_eq!(
+            load(&versioned, fp, &mut m, &mut w),
+            Err(CheckpointError::BadVersion(CHECKPOINT_VERSION + 1))
+        );
+
+        let other_fp = spec_fingerprint("spec-b");
+        assert_eq!(load(&bytes, other_fp, &mut m, &mut w), Err(CheckpointError::SpecMismatch));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_and_truncation_without_panicking() {
+        let fp = spec_fingerprint("spec");
+        let (master, workers, history) = perturbed(13);
+        let bytes = save(fp, 3, 10, 20, &history, &master, &workers);
+
+        // Wrong fleet size.
+        let (mut m3, mut w3) = mk_cores(12, 3, 1);
+        m3.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+        assert_eq!(load(&bytes, fp, &mut m3, &mut w3), Err(CheckpointError::ShapeMismatch));
+
+        // Every truncation point is a structured error, never a panic.
+        for cut in [0, 3, 4, 5, 12, 40, bytes.len() / 2, bytes.len() - 1] {
+            let (mut m, mut w) = mk_cores(12, 2, 1);
+            m.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+            assert!(load(&bytes[..cut], fp, &mut m, &mut w).is_err(), "cut={cut}");
+        }
+
+        // Trailing garbage is rejected too.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 16]);
+        let (mut m, mut w) = mk_cores(12, 2, 1);
+        m.set_server_opt(ServerOptSpec::Momentum { beta: 0.9, lr: 0.5 });
+        assert_eq!(load(&padded, fp, &mut m, &mut w), Err(CheckpointError::ShapeMismatch));
+    }
+
+    #[test]
+    fn rejects_even_rng_increment_as_bad_state() {
+        let mut w = BitWriter::new();
+        push_rng(&mut w, &Pcg64::seeded(5));
+        let (bytes, bit_len) = w.into_bytes();
+        let mut r = BitReader::new(&bytes, bit_len);
+        assert!(read_rng(&mut r).is_ok());
+        // An all-zero stream decodes four zero halves → inc is even.
+        let zeros = [0u8; 32];
+        let mut r = BitReader::new(&zeros, 256);
+        assert_eq!(read_rng(&mut r).err(), Some(CheckpointError::BadRngState));
+    }
+
+    #[test]
+    fn bomb_sized_history_count_is_rejected_before_allocation() {
+        // Craft a valid header claiming u64::MAX history points; the
+        // checked-count ceiling must reject it without allocating.
+        let fp = spec_fingerprint("bomb");
+        let mut w = BitWriter::new();
+        w.push_bits(u32::from_be_bytes(*b"QSCK") as u64, 32);
+        w.push_bits(CHECKPOINT_VERSION as u64, 8);
+        w.push_bits(fp, 64);
+        w.push_bits(0, 64); // step
+        w.push_bits(0, 64); // bits_up
+        w.push_bits(0, 64); // bits_down
+        w.push_bits(12, 64); // d
+        w.push_bits(2, 64); // workers
+        w.push_bits(u64::MAX, 64); // history points: absurd
+        let (bytes, _) = w.into_bytes();
+        let (mut m, mut wk) = mk_cores(12, 2, 1);
+        assert!(matches!(
+            load(&bytes, fp, &mut m, &mut wk),
+            Err(CheckpointError::Decode(_))
+        ));
+    }
+}

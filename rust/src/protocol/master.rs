@@ -81,6 +81,22 @@ impl DownlinkWorker {
     pub fn anchor(&self) -> &[f32] {
         &self.anchor
     }
+
+    /// Serialize the mirror (checkpointing): anchor + broadcast RNG.
+    pub fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        w.push_f32s(&self.anchor);
+        super::checkpoint::push_rng(w, &self.rng);
+    }
+
+    /// Restore state written by [`DownlinkWorker::save_state`].
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), super::checkpoint::CheckpointError> {
+        super::checkpoint::read_f32s(r, &mut self.anchor)?;
+        self.rng = super::checkpoint::read_rng(r)?;
+        Ok(())
+    }
 }
 
 /// Master state: the global model plus optional downlink compression state.
@@ -333,6 +349,75 @@ impl MasterCore {
                 .map(|(g, a)| g - a)
                 .collect()
         })
+    }
+
+    /// Serialize the master's trajectory-dependent state: the global model,
+    /// the current round scale, every downlink mirror, and the server
+    /// optimizer's round accumulator + internal state. The dense-broadcast
+    /// snapshot cache is derived and skipped.
+    pub fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        w.push_f32s(&self.global);
+        w.push_f32(self.round_scale);
+        match &self.down {
+            None => w.push_bit(false),
+            Some(st) => {
+                w.push_bit(true);
+                for dw in st {
+                    dw.save_state(w);
+                }
+            }
+        }
+        match &self.server {
+            None => w.push_bit(false),
+            Some(sr) => {
+                w.push_bit(true);
+                w.push_f32s(&sr.accum);
+                w.push_bit(sr.pending);
+                w.push_bits(sr.rounds_applied as u64, 64);
+                sr.opt.save_state(w);
+            }
+        }
+    }
+
+    /// Restore state written by [`MasterCore::save_state`] onto a freshly
+    /// constructed core of the same spec (same worker count, downlink mode
+    /// and server optimizer — a presence mismatch is a structured error,
+    /// never a panic). On error the core is partially written and must be
+    /// discarded.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), super::checkpoint::CheckpointError> {
+        use super::checkpoint::{read_f32s, CheckpointError};
+        use crate::compress::encode::OrTruncated as _;
+        read_f32s(r, &mut self.global)?;
+        self.round_scale = r.read_f32().or_truncated().map_err(CheckpointError::Decode)?;
+        self.snapshot = None;
+        let has_down = r.read_bit().or_truncated().map_err(CheckpointError::Decode)?;
+        match (&mut self.down, has_down) {
+            (None, false) => {}
+            (Some(st), true) => {
+                for dw in st.iter_mut() {
+                    dw.load_state(r)?;
+                }
+            }
+            _ => return Err(CheckpointError::ShapeMismatch),
+        }
+        let has_server = r.read_bit().or_truncated().map_err(CheckpointError::Decode)?;
+        match (&mut self.server, has_server) {
+            (None, false) => {}
+            (Some(sr), true) => {
+                read_f32s(r, &mut sr.accum)?;
+                sr.pending = r.read_bit().or_truncated().map_err(CheckpointError::Decode)?;
+                let rounds =
+                    r.read_bits(64).or_truncated().map_err(CheckpointError::Decode)?;
+                sr.rounds_applied = usize::try_from(rounds)
+                    .map_err(|_| CheckpointError::ShapeMismatch)?;
+                sr.opt.load_state(r).map_err(CheckpointError::Decode)?;
+            }
+            _ => return Err(CheckpointError::ShapeMismatch),
+        }
+        Ok(())
     }
 
     /// Average ‖m^{(r)}‖² across workers (0.0 for dense downlink) — the

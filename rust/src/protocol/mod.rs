@@ -56,9 +56,11 @@
 // `coordinator::master`) — everywhere else it is a compile error.
 #![forbid(unsafe_code)]
 
+pub mod checkpoint;
 mod master;
 mod worker;
 
+pub use checkpoint::{CheckpointError, CHECKPOINT_VERSION};
 pub use master::{DownlinkWorker, MasterCore};
 pub use worker::WorkerCore;
 

@@ -134,4 +134,81 @@ impl WorkerCore {
         msg.add_into(&mut self.anchor, 1.0);
         self.local.copy_from_slice(&self.anchor);
     }
+
+    // ---- fault recovery ---------------------------------------------------
+    // The EF memory is a ledger of everything not yet delivered; these
+    // methods extend it to network losses. All of them re-anchor
+    // (`local ← anchor`) exactly like a received broadcast would, so the
+    // worker's next delta is measured against the model it actually has.
+
+    /// The uplink carrying `msg` (this worker's own last update) was lost:
+    /// fold it back into the error memory (`m ← m + g`, restoring the full
+    /// pre-compression signal — see `ErrorMemory::absorb`) and restart
+    /// local iterations from the stale anchor. Nothing is lost, only
+    /// delayed to the next sync.
+    pub fn reabsorb_update(&mut self, msg: &Message) {
+        self.memory.absorb(msg);
+        self.local.copy_from_slice(&self.anchor);
+    }
+
+    /// As [`WorkerCore::reabsorb_update`], for the message still sitting in
+    /// the reusable buffer from the last `make_update` — the threaded
+    /// worker's path, where the buffer is encoded (borrowed, not taken)
+    /// before sending.
+    pub fn reabsorb_last_update(&mut self) {
+        self.memory.absorb(self.msg_buf.message());
+        self.local.copy_from_slice(&self.anchor);
+    }
+
+    /// This worker's *downlink* was lost after its uplink was applied: the
+    /// round's broadcast never arrived, so continue from the stale anchor.
+    /// The memory is untouched — the update was delivered, and a compressed
+    /// downlink's master-side mirror only advances for workers it actually
+    /// encoded for, so the implicit downlink EF stays consistent.
+    pub fn miss_broadcast(&mut self) {
+        self.local.copy_from_slice(&self.anchor);
+    }
+
+    /// Crash-restart at a sync point: volatile state (error memory,
+    /// momentum velocity) is lost, and the worker restarts from the last
+    /// model it durably has — its anchor. Unlike re-absorption this *does*
+    /// lose signal; the convergence tests quantify the difference.
+    pub fn crash_restart(&mut self) {
+        self.local.copy_from_slice(&self.anchor);
+        self.memory.clear();
+        self.opt.reset();
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    /// Serialize this worker's trajectory-dependent state. Scratch buffers
+    /// (gradient, delta, batch, message) are derived per step and skipped.
+    pub fn save_state(&self, w: &mut crate::compress::encode::BitWriter) {
+        w.push_f32s(&self.local);
+        w.push_f32s(&self.anchor);
+        w.push_f32s(self.memory.as_slice());
+        w.push_f32s(self.opt.velocity());
+        super::checkpoint::push_rng(w, self.sampler.rng());
+        super::checkpoint::push_rng(w, &self.rng);
+    }
+
+    /// Restore state written by [`WorkerCore::save_state`] onto a freshly
+    /// constructed core of the same spec (id, shard, dimension). On error
+    /// the core is partially written and must be discarded — the resume
+    /// paths abort the whole load.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::compress::encode::BitReader,
+    ) -> Result<(), super::checkpoint::CheckpointError> {
+        use super::checkpoint::{read_f32s, read_rng};
+        read_f32s(r, &mut self.local)?;
+        read_f32s(r, &mut self.anchor)?;
+        read_f32s(r, &mut self.delta_buf)?;
+        self.memory.load(&self.delta_buf);
+        read_f32s(r, &mut self.grad_buf)?;
+        self.opt.load_velocity(&self.grad_buf);
+        *self.sampler.rng_mut() = read_rng(r)?;
+        self.rng = read_rng(r)?;
+        Ok(())
+    }
 }

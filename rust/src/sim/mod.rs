@@ -59,7 +59,7 @@ pub mod run;
 pub use client::{transfer_ticks, ChurnTrack, ClientProfile};
 pub use hash::{state_hash, Fnv1a64};
 pub use queue::EventQueue;
-pub use run::{run, run_from, SimPoint, SimResult};
+pub use run::{run, run_from, run_from_faulty, SimPoint, SimResult};
 
 use crate::util::json::Json;
 

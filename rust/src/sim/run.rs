@@ -41,6 +41,26 @@
 //! totals and per-worker error memories are then exactly the engine's at
 //! that step — and is stamped with the virtual tick at which that happened
 //! plus an FNV-1a state digest for determinism twins.
+//!
+//! # Fault injection ([`run_from_faulty`])
+//!
+//! With an active [`FaultSpec`] the wire is lossy: uplink messages can be
+//! dropped, corrupted, duplicated or delayed, downlink broadcasts dropped,
+//! and workers crash-restarted — all decided by the stateless
+//! [`FaultPlan`], so the same fault seed injects the same faults on any
+//! substrate. Rounds then stop being barriers: a round force-closes
+//! `deadline_ticks` after it opens ([`Ev::RoundDeadline`]), folding
+//! whatever arrived, and a worker whose update was lost re-absorbs it into
+//! its error memory ([`WorkerCore::reabsorb_update`]) — the lost signal is
+//! delayed to its next sync, never destroyed. Duplicate deliveries dedup
+//! per (worker, round) via the round's `arrived` mask; late deliveries
+//! (after force-close) degrade to drops. Uplink bits are accounted at fold
+//! time for delivered updates and at re-absorption time for lost ones, so
+//! a dup/delay-only scenario (no signal loss) reproduces the fault-free
+//! `History` bit for bit — asserted in `tests/integration_faults.rs`.
+//! Corruption here is semantic (the master discards the arrival): the sim
+//! exchanges `Message` values, not wire bytes; real byte mangling and the
+//! decode-error path are exercised by the threaded coordinator.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -52,6 +72,7 @@ use super::SimSpec;
 use crate::compress::{encode, Compressor, Message, MessageBuf};
 use crate::data::shard_indices;
 use crate::engine::{EvalSets, History, TrainSpec};
+use crate::faults::{Channel, FaultAction, FaultPlan, FaultSpec};
 use crate::grad::GradModel;
 use crate::protocol::{MasterCore, WorkerCore};
 use crate::topology::SyncSchedule;
@@ -63,10 +84,19 @@ use crate::util::rng::Pcg64;
 enum Ev {
     /// Worker `r` finished its current local step.
     StepDone { r: usize },
-    /// Worker `r`'s uplink message reached the master.
-    UploadArrived { r: usize },
+    /// Worker `r`'s uplink message for round `t` reached the master. The
+    /// step rides in the event because faults (duplication, delay past a
+    /// deadline) can deliver it after the worker has moved on.
+    UploadArrived { r: usize, t: usize },
     /// The round broadcast reached worker `r`.
     DownArrived { r: usize },
+    /// Worker `r` gave up waiting for round feedback (its uplink was lost,
+    /// nacked, or too late): re-absorb the staged message and resume.
+    Missed { r: usize },
+    /// Worker `r`'s broadcast was lost: re-anchor and resume without it.
+    DownMissed { r: usize },
+    /// Round `t`'s deadline: force-close every open round up to `t`.
+    RoundDeadline { t: usize },
 }
 
 /// One worker's simulation shell around its protocol core.
@@ -80,6 +110,10 @@ struct SimWorker {
     /// blocked on a sync round-trip, the step it synced at).
     step: usize,
     done: bool,
+    /// An update that left the worker but will never be folded (dropped,
+    /// corrupt-nacked, or salvaged from a force-closed round). Consumed by
+    /// [`Ev::Missed`] / a late [`Ev::UploadArrived`], which re-absorb it.
+    lost: Option<Message>,
     /// Two-slot ‖m‖² tracker: because a worker blocks until its sync's
     /// broadcast returns, at most one of its syncs is ever unprocessed by
     /// the master — so the memory value any eval cutoff needs is either the
@@ -187,7 +221,23 @@ pub fn run(spec: &TrainSpec, sim: &SimSpec) -> SimResult {
 
 /// As [`run`], from explicit initial parameters (non-convex figures).
 pub fn run_from(spec: &TrainSpec, sim: &SimSpec, global: Vec<f32>) -> SimResult {
+    run_from_faulty(spec, sim, None, global)
+}
+
+/// As [`run_from`], over a faulty network. `faults: None` (or an inactive
+/// spec) takes the exact fault-free code paths, so existing histories are
+/// preserved structurally.
+pub fn run_from_faulty(
+    spec: &TrainSpec,
+    sim: &SimSpec,
+    faults: Option<&FaultSpec>,
+    global: Vec<f32>,
+) -> SimResult {
     sim.validate().expect("invalid SimSpec");
+    if let Some(f) = faults {
+        f.validate().expect("invalid FaultSpec");
+    }
+    let plan = faults.copied().and_then(FaultPlan::new);
     let d = spec.model.dim();
     assert_eq!(global.len(), d);
     assert!(spec.workers >= 1);
@@ -212,6 +262,7 @@ pub fn run_from(spec: &TrainSpec, sim: &SimSpec, global: Vec<f32>) -> SimResult 
             churn: ChurnTrack::new(sim, spec.seed, r),
             step: 0,
             done: false,
+            lost: None,
             mem_prev: 0.0,
             mem_cur: 0.0,
             mem_cur_t: 0,
@@ -245,6 +296,7 @@ pub fn run_from(spec: &TrainSpec, sim: &SimSpec, global: Vec<f32>) -> SimResult 
     let mut sim_state = Sim {
         spec,
         sim: *sim,
+        plan,
         dim: d,
         dense_down,
         eval: EvalSets::new(spec),
@@ -273,6 +325,9 @@ pub fn run_from(spec: &TrainSpec, sim: &SimSpec, global: Vec<f32>) -> SimResult 
 struct Sim<'s, 'a> {
     spec: &'s TrainSpec<'a>,
     sim: SimSpec,
+    /// Stateless fault injector; `None` = reliable network (the exact
+    /// pre-fault code paths).
+    plan: Option<FaultPlan>,
     dim: usize,
     dense_down: bool,
     eval: EvalSets,
@@ -344,24 +399,86 @@ impl Sim<'_, '_> {
                     && self.spec.participation.participates(r, t);
                 if !syncs {
                     self.advance(r, clock);
-                } else if self.workers[r].churn.online_at(clock) {
-                    self.begin_upload(r, t, clock);
-                } else {
+                } else if self.plan.map_or(false, |p| p.crash_at(r, t)) {
+                    // Crash-restart at the sync point: volatile state (error
+                    // memory, momentum velocity) is gone; restart from the
+                    // last anchor. Unlike a lost message this loses signal.
+                    let w = &mut self.workers[r];
+                    w.core.crash_restart();
+                    w.mem_prev = w.mem_cur;
+                    w.mem_cur = 0.0;
+                    w.mem_cur_t = t;
+                    if self.round_open(t) {
+                        self.report_skip(t, r, clock);
+                        self.process_ready_rounds(clock);
+                    }
+                    self.advance(r, clock);
+                } else if !self.workers[r].churn.online_at(clock) {
                     // Offline at the sync point: the device keeps training,
                     // the link is down. Tell the master not to wait (a
                     // control-plane notice, not wire traffic) and move on;
                     // uplink memory and both anchors stay frozen, so the
                     // error-feedback recursion is untouched.
-                    self.report_skip(t, r);
-                    self.process_ready_rounds(clock);
+                    if self.round_open(t) {
+                        self.report_skip(t, r, clock);
+                        self.process_ready_rounds(clock);
+                    }
                     self.advance(r, clock);
+                } else if self.round_open(t) {
+                    self.begin_upload(r, t, clock);
+                } else {
+                    // This straggler reached its sync only after the round's
+                    // deadline already closed it. The update still goes
+                    // through the EF recursion (and the wire, briefly) but
+                    // cannot join the round: stage it as lost and re-absorb
+                    // after the "too late" nack returns.
+                    let msg = {
+                        let w = &mut self.workers[r];
+                        let _ = w.core.make_update(self.spec.compressor);
+                        w.mem_prev = w.mem_cur;
+                        w.mem_cur = w.core.mem_norm_sq();
+                        w.mem_cur_t = t;
+                        w.core.take_update()
+                    };
+                    self.workers[r].lost = Some(msg);
+                    self.queue.push(clock + self.sim.latency.max(1), Ev::Missed { r });
                 }
             }
-            Ev::UploadArrived { r } => {
-                let t = self.workers[r].step;
-                self.report_arrival(t, r);
-                self.process_ready_rounds(clock);
-                // The worker stays blocked until `DownArrived`.
+            Ev::UploadArrived { r, t } => {
+                if !self.round_open(t) {
+                    // The round force-closed before this delivery: a late
+                    // original was salvaged into `lost` at force-close and
+                    // is re-absorbed now; a duplicate of an already-folded
+                    // copy finds nothing and is a no-op.
+                    self.recover_lost(r, clock);
+                } else {
+                    let corrupt = matches!(
+                        self.plan.map(|p| p.decide(r, t, Channel::Up)),
+                        Some(FaultAction::Corrupt)
+                    );
+                    let idx = self.ensure_round(t, clock);
+                    let buf = &mut self.pending[idx];
+                    if buf.arrived[r] {
+                        // Duplicate delivery: already applied once for this
+                        // (worker, round) — dedup makes the copy a no-op.
+                    } else if corrupt {
+                        // Mangled in flight: the master's decode fails, so
+                        // it logs + drops and nacks at once (the round need
+                        // not wait for its deadline). The worker re-absorbs
+                        // when the nack lands.
+                        buf.reports += 1;
+                        let msg = buf.msgs[r].take();
+                        self.workers[r].lost = msg;
+                        self.queue.push(clock + self.sim.latency.max(1), Ev::Missed { r });
+                        self.process_ready_rounds(clock);
+                    } else {
+                        debug_assert!(buf.msgs[r].is_some(), "arrival without a staged message");
+                        buf.arrived[r] = true;
+                        buf.reports += 1;
+                        self.process_ready_rounds(clock);
+                        // The worker stays blocked until `DownArrived`.
+                    }
+                }
             }
             Ev::DownArrived { r } => {
                 if self.dense_down {
@@ -372,11 +489,64 @@ impl Sim<'_, '_> {
                 }
                 self.advance(r, clock);
             }
+            Ev::Missed { r } => self.recover_lost(r, clock),
+            Ev::DownMissed { r } => {
+                // The broadcast never arrived; the master's downlink mirror
+                // was never advanced for us, so continuing from the stale
+                // anchor keeps the implicit downlink EF consistent.
+                self.workers[r].core.miss_broadcast();
+                self.advance(r, clock);
+            }
+            Ev::RoundDeadline { t } => self.force_close_through(t, clock),
         }
     }
 
+    /// Is round `t` still unprocessed (pending or not yet opened)?
+    fn round_open(&self, t: usize) -> bool {
+        self.round_steps[self.next_round_idx..].binary_search(&t).is_ok()
+    }
+
+    /// Re-absorb a lost update staged in `lost`: fold it back into the
+    /// error memory (bitwise `m ← m + g` — see `ErrorMemory::absorb`),
+    /// account its spent wire bits, and resume computing from the stale
+    /// anchor. A no-op when nothing is staged (duplicate deliveries).
+    fn recover_lost(&mut self, r: usize, clock: u64) {
+        if let Some(msg) = self.workers[r].lost.take() {
+            self.bits_up += msg.wire_bits_with(self.spec.codec);
+            let w = &mut self.workers[r];
+            w.core.reabsorb_update(&msg);
+            w.core.recycle_update(msg);
+            // The memory changed at the sync step it was produced for.
+            w.mem_cur = w.core.mem_norm_sq();
+            self.advance(r, clock);
+        }
+    }
+
+    /// Deadline expiry: force-close every still-open round with step ≤ `t`,
+    /// oldest first, folding what arrived. Staged-but-unarrived messages
+    /// are salvaged back to their workers, whose in-flight timeout or late
+    /// arrival re-absorbs them.
+    fn force_close_through(&mut self, t: usize, clock: u64) {
+        while self.pending.front().map_or(false, |b| b.t <= t) {
+            let mut buf = self.pending.pop_front().expect("checked non-empty");
+            for r in 0..self.workers.len() {
+                if !buf.arrived[r] {
+                    if let Some(msg) = buf.msgs[r].take() {
+                        self.workers[r].lost = Some(msg);
+                    }
+                }
+            }
+            self.process_round(&mut buf, clock);
+            self.next_round_idx += 1;
+            self.pool.push(buf);
+            self.flush_evals(clock);
+        }
+        self.process_ready_rounds(clock);
+    }
+
     /// Compress + stage worker `r`'s update for round `t` and put its
-    /// upload on the wire. The worker then blocks awaiting the broadcast.
+    /// upload on the wire (through the fault injector, if any). The worker
+    /// then blocks awaiting the broadcast — or its loss timeout.
     fn begin_upload(&mut self, r: usize, t: usize, clock: u64) {
         let (msg, bw) = {
             let w = &mut self.workers[r];
@@ -389,10 +559,38 @@ impl Sim<'_, '_> {
             (w.core.take_update(), w.profile.bw)
         };
         let wire_bits = msg.wire_bits_with(self.spec.codec);
-        let idx = self.ensure_round(t);
-        self.pending[idx].msgs[r] = Some(msg);
+        let idx = self.ensure_round(t, clock);
         let dur = transfer_ticks(wire_bits, bw, self.sim.latency);
-        self.queue.push(clock + dur, Ev::UploadArrived { r });
+        let action = match &self.plan {
+            Some(p) => p.decide(r, t, Channel::Up),
+            None => FaultAction::Deliver,
+        };
+        match action {
+            FaultAction::Drop => {
+                // Never reaches the master. The worker's own round-trip
+                // timer expires just after the round deadline would have;
+                // it then re-absorbs and resumes.
+                let timeout = self.plan.as_ref().map_or(0, |p| p.deadline_ticks());
+                self.workers[r].lost = Some(msg);
+                self.queue.push(clock + timeout + self.sim.latency.max(1), Ev::Missed { r });
+            }
+            FaultAction::Delay(extra) => {
+                self.pending[idx].msgs[r] = Some(msg);
+                self.queue.push(clock + dur + extra, Ev::UploadArrived { r, t });
+            }
+            FaultAction::Duplicate => {
+                self.pending[idx].msgs[r] = Some(msg);
+                self.queue.push(clock + dur, Ev::UploadArrived { r, t });
+                self.queue
+                    .push(clock + dur + self.sim.latency.max(1), Ev::UploadArrived { r, t });
+            }
+            FaultAction::Deliver | FaultAction::Corrupt => {
+                // Corruption is detected at arrival (the decode fails on
+                // the master); on the wire the two look the same.
+                self.pending[idx].msgs[r] = Some(msg);
+                self.queue.push(clock + dur, Ev::UploadArrived { r, t });
+            }
+        }
     }
 
     /// Schedule worker `r`'s next local step after the current one (or,
@@ -425,30 +623,29 @@ impl Sim<'_, '_> {
     }
 
     /// Index (within `pending`) of round `t`'s buffer, opening buffers —
-    /// from the pool when possible — up to and including it.
-    fn ensure_round(&mut self, t: usize) -> usize {
+    /// from the pool when possible — up to and including it. Under a fault
+    /// plan with a deadline, every newly opened round schedules its
+    /// force-close.
+    fn ensure_round(&mut self, t: usize, clock: u64) -> usize {
         let pos = self.round_steps[self.next_round_idx..]
             .binary_search(&t)
             .expect("sync report for a step with no round");
         while self.pending.len() <= pos {
             let i = self.next_round_idx + self.pending.len();
+            let step = self.round_steps[i];
             let mut buf = self.pool.pop().unwrap_or_else(RoundBuf::empty);
-            buf.reset(self.round_steps[i], self.round_expected[i], self.workers.len());
+            buf.reset(step, self.round_expected[i], self.workers.len());
             self.pending.push_back(buf);
+            if let Some(deadline) = self.plan.map(|p| p.deadline_ticks()).filter(|&d| d > 0) {
+                self.queue.push(clock + deadline, Ev::RoundDeadline { t: step });
+            }
         }
         pos
     }
 
-    fn report_arrival(&mut self, t: usize, r: usize) {
-        let idx = self.ensure_round(t);
-        let buf = &mut self.pending[idx];
-        debug_assert!(buf.msgs[r].is_some(), "arrival without a staged message");
-        buf.arrived[r] = true;
-        buf.reports += 1;
-    }
-
-    fn report_skip(&mut self, t: usize, r: usize) {
-        let idx = self.ensure_round(t);
+    fn report_skip(&mut self, t: usize, r: usize, clock: u64) {
+        let _ = r;
+        let idx = self.ensure_round(t, clock);
         self.pending[idx].reports += 1;
     }
 
@@ -487,6 +684,19 @@ impl Sim<'_, '_> {
         self.master.end_round();
         for r in 0..self.workers.len() {
             if !buf.arrived[r] {
+                continue;
+            }
+            // Downlink faults are decided *before* encoding: the master's
+            // per-worker downlink mirror never advances for a skipped
+            // broadcast, so the implicit downlink error feedback stays
+            // consistent and the dropped delta is re-offered next sync.
+            // (A corrupted broadcast is modeled as a drop here; real byte
+            // corruption is the threaded coordinator's territory.)
+            if matches!(
+                self.plan.map(|p| p.decide(r, buf.t, Channel::Down)),
+                Some(FaultAction::Drop) | Some(FaultAction::Corrupt)
+            ) {
+                self.queue.push(clock + self.sim.latency.max(1), Ev::DownMissed { r });
                 continue;
             }
             let bits = if self.dense_down {
@@ -647,6 +857,88 @@ mod tests {
         let twin_hashes: Vec<u64> = twin.points.iter().map(|p| p.state_hash).collect();
         assert_eq!(hashes, twin_hashes);
         assert_eq!(res.events, twin.events);
+    }
+
+    /// A dup/delay-only scenario loses no signal: duplicates dedup, delays
+    /// only move the clock, and rounds stay barriers (no deadline). The
+    /// `History` must equal the fault-free run bit for bit — the sim-side
+    /// idempotence + reordering guarantee.
+    #[test]
+    fn dup_and_delay_only_matches_faultless_bit_for_bit() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(2);
+        let spec = base_spec(&model, &ds, &topk, &sched);
+        let sim = SimSpec { latency: 800, bw_sigma: 0.6, ..SimSpec::default() };
+        let clean = run_from_faulty(&spec, &sim, None, vec![0.0; model.dim()]);
+        let faults = crate::faults::FaultSpec {
+            seed: 5,
+            dup_up: 0.4,
+            delay_up: 0.4,
+            delay_ticks: 20_000,
+            ..Default::default()
+        };
+        let lossy = run_from_faulty(&spec, &sim, Some(&faults), vec![0.0; model.dim()]);
+        assert_eq!(lossy.history.points.len(), clean.history.points.len());
+        for (a, b) in lossy.history.points.iter().zip(&clean.history.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "step {}", a.step);
+            assert_eq!(a.bits_up, b.bits_up, "step {}", a.step);
+            assert_eq!(a.bits_down, b.bits_down, "step {}", a.step);
+            assert_eq!(a.mem_norm_sq.to_bits(), b.mem_norm_sq.to_bits(), "step {}", a.step);
+        }
+        assert_eq!(lossy.history.final_params, clean.history.final_params);
+        // Duplication put extra events on the wire.
+        assert!(lossy.events > clean.events, "{} vs {}", lossy.events, clean.events);
+    }
+
+    /// The full fault cocktail must drain (no deadlock), converge in the
+    /// same ballpark, and be twin-deterministic: same fault seed ⇒ same
+    /// state-hash sequence and event count.
+    #[test]
+    fn fault_cocktail_drains_and_twins_agree() {
+        let (ds, model) = setup();
+        let topk = TopK::new(4);
+        let sched = FixedPeriod::new(2);
+        let mut spec = base_spec(&model, &ds, &topk, &sched);
+        spec.steps = 60;
+        let sim = SimSpec {
+            compute_sigma: 0.6,
+            bw_sigma: 0.5,
+            latency: 1_000,
+            straggler_prob: 0.05,
+            straggler_mult: 6.0,
+            ..SimSpec::default()
+        };
+        let faults = crate::faults::FaultSpec {
+            seed: 21,
+            drop_up: 0.15,
+            corrupt_up: 0.05,
+            dup_up: 0.1,
+            delay_up: 0.1,
+            delay_ticks: 30_000,
+            drop_down: 0.08,
+            corrupt_down: 0.02,
+            crash: 0.01,
+            deadline_ticks: 60_000,
+        };
+        let a = run_from_faulty(&spec, &sim, Some(&faults), vec![0.0; model.dim()]);
+        let b = run_from_faulty(&spec, &sim, Some(&faults), vec![0.0; model.dim()]);
+        assert_eq!(a.history.points.len(), b.history.points.len());
+        let ha: Vec<u64> = a.points.iter().map(|p| p.state_hash).collect();
+        let hb: Vec<u64> = b.points.iter().map(|p| p.state_hash).collect();
+        assert_eq!(ha, hb, "fault twins diverged");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.history.final_params, b.history.final_params);
+        // Loss still improves despite the lossy network (EF re-absorption).
+        let first = a.history.points.first().unwrap().train_loss;
+        let last = a.history.points.last().unwrap().train_loss;
+        assert!(last < first, "no progress under faults: {first} → {last}");
+        // A different fault seed must produce a different trajectory.
+        let other = crate::faults::FaultSpec { seed: 22, ..faults };
+        let c = run_from_faulty(&spec, &sim, Some(&other), vec![0.0; model.dim()]);
+        let hc: Vec<u64> = c.points.iter().map(|p| p.state_hash).collect();
+        assert_ne!(ha, hc, "fault seed had no effect");
     }
 
     /// secs_to_loss finds the first crossing on the sim clock.

@@ -35,6 +35,7 @@ use crate::compress::{parse_spec, Codec, Compressor};
 use crate::coordinator::{run_threaded, CoordinatorConfig};
 use crate::data::Sharding;
 use crate::engine::{self, History, TrainSpec};
+use crate::faults::FaultSpec;
 use crate::optim::{LrSchedule, ServerOptSpec};
 use crate::protocol::AggScale;
 use crate::sim::SimSpec;
@@ -167,6 +168,10 @@ pub struct ExperimentSpec {
     /// (`qsparse sim`, `crate::sim`). `None` for engine/threaded runs; a
     /// simulator run of a `None` spec uses the degenerate default scenario.
     pub sim: Option<SimSpec>,
+    /// Deterministic fault injection (drop/corrupt/duplicate/delay/crash,
+    /// `crate::faults` grammar). Consumed by the simulator and the threaded
+    /// runtime; `None` (the default) keeps the exact fault-free code paths.
+    pub faults: Option<FaultSpec>,
     /// Engine worker-pool threads (wall-clock only; histories are
     /// bit-identical for every value). 0 = all cores.
     pub threads: usize,
@@ -196,6 +201,7 @@ const FIELDS: &[&str] = &[
     "sharding",
     "seed",
     "sim",
+    "faults",
     "threads",
     "eval_every",
     "eval_rows",
@@ -225,6 +231,7 @@ impl ExperimentSpec {
             sharding: Sharding::Iid,
             seed: SEED,
             sim: None,
+            faults: None,
             threads: 1,
             eval_every: dflt.eval_every,
             eval_rows: 512,
@@ -289,6 +296,14 @@ impl ExperimentSpec {
         self
     }
 
+    /// Embed a fault-injection scenario (`crate::faults` CLI grammar) —
+    /// consumed by the simulator and threaded substrates, ignored by the
+    /// sequential engine (which has no wire to fault).
+    pub fn with_faults(mut self, spec: &str) -> Self {
+        self.faults = Some(FaultSpec::parse(spec).expect("bad fault spec"));
+        self
+    }
+
     // -- validation ---------------------------------------------------------
 
     /// Range-check every field (called by `from_json` and `resolve`, so a
@@ -325,6 +340,9 @@ impl ExperimentSpec {
         if let Some(sim) = &self.sim {
             sim.validate()?;
         }
+        if let Some(faults) = &self.faults {
+            faults.validate().map_err(|e| anyhow::anyhow!("`faults`: {e}"))?;
+        }
         Ok(())
     }
 
@@ -356,6 +374,9 @@ impl ExperimentSpec {
         // the simulator existed serializes byte-identically.
         if let Some(sim) = &self.sim {
             fields.push(("sim", sim.to_json()));
+        }
+        if let Some(faults) = &self.faults {
+            fields.push(("faults", faults.to_json()));
         }
         fields.extend([
             ("server_opt", Json::str(self.server_opt.spec_str())),
@@ -438,6 +459,10 @@ impl ExperimentSpec {
         }
         if let Some(v) = opt(j, "sim") {
             s.sim = Some(SimSpec::from_json(v).map_err(|e| anyhow::anyhow!("`sim`: {e}"))?);
+        }
+        if let Some(v) = opt(j, "faults") {
+            s.faults =
+                Some(FaultSpec::from_json(v).map_err(|e| anyhow::anyhow!("`faults`: {e}"))?);
         }
         if let Some(v) = opt(j, "threads") {
             s.threads = usize_field(v, "threads")?;
@@ -542,7 +567,12 @@ impl ResolvedExperiment {
     /// whenever churn skipped no sync.
     pub fn run_sim(&self) -> crate::sim::SimResult {
         let sim = self.spec.sim.unwrap_or_default();
-        crate::sim::run_from(&self.train_spec(), &sim, self.workload.init.clone())
+        crate::sim::run_from_faulty(
+            &self.train_spec(),
+            &sim,
+            self.spec.faults.as_ref(),
+            self.workload.init.clone(),
+        )
     }
 
     /// Run on the threaded master/worker runtime (consumes the resolution:
@@ -571,6 +601,7 @@ impl ResolvedExperiment {
         cfg.eval_every = spec.eval_every;
         cfg.eval_rows = spec.eval_rows;
         cfg.init = Some(workload.init);
+        cfg.faults = spec.faults;
         run_threaded(&cfg, factory, Arc::new(workload.train), Some(Arc::new(workload.test)))
     }
 }
@@ -737,6 +768,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("bogus_knob"), "{err}");
+    }
+
+    #[test]
+    fn faults_json_roundtrip_and_default_omission() {
+        // Like `sim`: no fault scenario ⇒ no `faults` key, so pre-fault
+        // specs stay byte-stable; absent field deserializes to None.
+        let s = ExperimentSpec::for_workload(Workload::ConvexSoftmax);
+        assert!(!s.to_json().to_string().contains("\"faults\""));
+        assert_eq!(ExperimentSpec::from_json(&s.to_json()).unwrap().faults, None);
+        let s = s.with_faults("drop=0.1,corrupt=0.02,delay=0.05:20000,deadline=40000,seed=9");
+        let j = s.to_json();
+        assert!(j.to_string().contains("\"faults\""));
+        assert_eq!(ExperimentSpec::from_json(&j).unwrap(), s);
+        // Errors inside the scenario are named errors, not panics.
+        let err = ExperimentSpec::from_json_str(r#"{"faults": {"drop_up": 2.0}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("drop_up"), "{err}");
+        let err = ExperimentSpec::from_json_str(r#"{"faults": {"bogus": 1}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bogus"), "{err}");
     }
 
     #[test]

@@ -45,6 +45,20 @@ impl Pcg64 {
         Self::new(seed, 0)
     }
 
+    /// Raw `(state, inc)` pair for checkpointing. `restore`-ing it resumes
+    /// the stream exactly where `snapshot` left it.
+    pub fn snapshot(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Pcg64::snapshot`] pair. `inc` must be
+    /// odd (every generator this crate constructs has an odd increment);
+    /// callers deserializing untrusted bytes check that before calling.
+    pub fn restore(state: u128, inc: u128) -> Self {
+        debug_assert!(inc & 1 == 1, "pcg increment must be odd");
+        Pcg64 { state, inc }
+    }
+
     /// Derive a child generator (e.g. per worker / per step) without
     /// perturbing this generator's own sequence more than one draw.
     pub fn fork(&mut self, stream: u64) -> Pcg64 {
@@ -228,6 +242,17 @@ mod tests {
         let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
         assert_eq!(va, vb);
         assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_the_stream() {
+        let mut rng = Pcg64::new(99, 3);
+        let _ = (0..17).map(|_| rng.next_u64()).count();
+        let (state, inc) = rng.snapshot();
+        let tail: Vec<u64> = (0..16).map(|_| rng.next_u64()).collect();
+        let mut resumed = Pcg64::restore(state, inc);
+        let resumed_tail: Vec<u64> = (0..16).map(|_| resumed.next_u64()).collect();
+        assert_eq!(tail, resumed_tail);
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Fault-tolerant rounds, end to end: deterministic fault injection on both
+//! runtimes (event-driven simulator and threaded coordinator), EF
+//! re-absorption of lost updates, and bit-identical checkpoint/resume.
+//!
+//! The determinism claims are *twin* tests: the same seeded fault spec run
+//! twice must produce bit-identical histories, on the simulator (single
+//! thread, virtual clock) and on the threaded runtime (real threads,
+//! nondeterministic arrival order — determinism comes from the barrier's
+//! sorted fold and the stateless per-(worker, step) fault decisions).
+
+use qsparse::compress::parse_spec;
+use qsparse::coordinator::{run_threaded, CoordinatorConfig};
+use qsparse::data::gaussian_clusters_split;
+use qsparse::engine::{run_from_resumable, History, TrainSpec};
+use qsparse::grad::{GradModel, SoftmaxRegression};
+use qsparse::optim::{LrSchedule, ServerOptSpec};
+use qsparse::protocol::checkpoint::spec_fingerprint;
+use qsparse::protocol::CheckpointError;
+use qsparse::sim::{run_from_faulty, SimSpec};
+use qsparse::topology::FixedPeriod;
+use qsparse::FaultSpec;
+use std::sync::Arc;
+
+const N: usize = 300;
+
+/// Miri runs every thread and event for real, so it gets a short horizon;
+/// native runs use enough steps for the convergence assertions to bite.
+fn steps() -> usize {
+    if cfg!(miri) {
+        12
+    } else {
+        80
+    }
+}
+
+/// Longer horizon for the convergence-under-loss assertions (faults slow
+/// progress down, so they get twice the steps of the identity tests).
+fn long_steps() -> usize {
+    if cfg!(miri) {
+        12
+    } else {
+        160
+    }
+}
+
+fn data() -> (qsparse::data::Dataset, qsparse::data::Dataset) {
+    gaussian_clusters_split(N, N / 4, 16, 4, 0.5, 1.0, 55)
+}
+
+fn model() -> SoftmaxRegression {
+    SoftmaxRegression::new(16, 4, 1.0 / N as f64)
+}
+
+/// Everything the cocktail can throw at a run: drops, corruption,
+/// duplication, delay-reordering, downlink loss and crash-restarts.
+fn cocktail() -> FaultSpec {
+    FaultSpec::parse(
+        "drop=0.1,corrupt=0.05,dup=0.1,delay=0.1:5000,drop-down=0.05,corrupt-down=0.05,\
+         crash=0.02,deadline=60000,seed=42",
+    )
+    .unwrap()
+}
+
+fn assert_identical(a: &History, b: &History, ctx: &str) {
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: grids differ");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.step, pb.step, "{ctx}");
+        assert_eq!(
+            pa.train_loss.to_bits(),
+            pb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {}",
+            pa.step
+        );
+        assert_eq!(
+            (pa.bits_up, pa.bits_down),
+            (pb.bits_up, pb.bits_down),
+            "{ctx}: wire bits at step {}",
+            pa.step
+        );
+    }
+}
+
+// ---- simulator -------------------------------------------------------------
+
+fn sim_run(train: &qsparse::data::Dataset, faults: Option<&FaultSpec>, steps: usize) -> History {
+    let m = model();
+    let comp = parse_spec("qtopk:k=10,bits=4").unwrap();
+    let sched = FixedPeriod::new(4);
+    let mut spec = TrainSpec::new(&m, train, comp.as_ref(), &sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = steps;
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    let sim = SimSpec { compute_sigma: 0.8, bw_sigma: 0.5, latency: 2_000, ..SimSpec::default() };
+    run_from_faulty(&spec, &sim, faults, vec![0.0; m.dim()]).history
+}
+
+/// Same seed ⇒ same faults ⇒ the same trajectory, bit for bit, and the
+/// cocktail still drains every staged message (the run terminates with a
+/// full history rather than deadlocking on a lost round).
+#[test]
+fn sim_fault_twins_are_bit_identical() {
+    let (train, _) = data();
+    let faults = cocktail();
+    let a = sim_run(&train, Some(&faults), steps());
+    let b = sim_run(&train, Some(&faults), steps());
+    assert_identical(&a, &b, "sim twins");
+    assert!(a.final_loss().is_finite());
+    assert!(!a.points.is_empty());
+}
+
+/// Convergence under loss: with 20% uplink drops the error memory
+/// re-absorbs every lost update (m ← m + ĝ), so training still converges —
+/// lost mass is delayed, not destroyed.
+#[test]
+fn sim_converges_under_uplink_drops() {
+    let (train, _) = data();
+    let faults = FaultSpec::parse("drop=0.2,deadline=60000,seed=7").unwrap();
+    let hist = sim_run(&train, Some(&faults), long_steps());
+    let first = hist.points.first().unwrap().train_loss;
+    let last = hist.final_loss();
+    assert!(last.is_finite());
+    if !cfg!(miri) {
+        assert!(last < (4.0f64).ln() * 0.6, "no convergence under drops: {last}");
+        assert!(last < first, "loss did not improve: {first} → {last}");
+    }
+}
+
+// ---- threaded coordinator --------------------------------------------------
+
+fn coord_cfg(faults: Option<FaultSpec>, delta_down: bool, steps: usize) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        Arc::from(parse_spec("qtopk:k=10,bits=4").unwrap()),
+        Arc::new(FixedPeriod::new(4)),
+    );
+    cfg.workers = 4;
+    cfg.batch = 4;
+    cfg.steps = steps;
+    cfg.lr = LrSchedule::Const { eta: 0.3 };
+    if delta_down {
+        cfg.down_compressor = Arc::from(parse_spec("topk:k=40").unwrap());
+    }
+    cfg.faults = faults;
+    cfg
+}
+
+fn coord_run(cfg: &CoordinatorConfig, train: &qsparse::data::Dataset) -> History {
+    run_threaded(
+        cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train.clone()),
+        None,
+    )
+    .unwrap()
+}
+
+/// Duplication and delay are *absorbed* faults: the per-(worker, step)
+/// idempotence guard applies each update exactly once and the sorted
+/// barrier fold makes arrival order irrelevant, so a dup/delay-only run is
+/// bit-identical to the faultless run — the strongest form of the
+/// "duplicated uplink is idempotent, out-of-order application is
+/// equivalent" property.
+#[test]
+fn threaded_dup_and_delay_only_matches_faultless_bit_for_bit() {
+    let (train, _) = data();
+    let faults = FaultSpec::parse("dup=0.2,delay=0.2:5000,seed=5").unwrap();
+    for delta_down in [false, true] {
+        let clean = coord_run(&coord_cfg(None, delta_down, steps()), &train);
+        let faulty = coord_run(&coord_cfg(Some(faults), delta_down, steps()), &train);
+        assert_identical(&clean, &faulty, &format!("dup/delay-only, delta_down={delta_down}"));
+    }
+}
+
+/// Twin determinism under real threads: the cocktail's decisions are a pure
+/// hash of (seed, worker, step, channel), so two runs racing their threads
+/// differently must still agree bit for bit.
+#[test]
+fn threaded_fault_twins_are_bit_identical() {
+    let (train, _) = data();
+    for delta_down in [false, true] {
+        let cfg = coord_cfg(Some(cocktail()), delta_down, steps());
+        let a = coord_run(&cfg, &train);
+        let b = coord_run(&cfg, &train);
+        assert_identical(&a, &b, &format!("threaded twins, delta_down={delta_down}"));
+        assert!(a.final_loss().is_finite());
+    }
+}
+
+/// Convergence under loss on the threaded runtime: dropped updates are
+/// acknowledged with `Missed` and re-absorbed by the sender.
+#[test]
+fn threaded_converges_under_uplink_drops() {
+    let (train, _) = data();
+    let faults = FaultSpec::parse("drop=0.2,deadline=60000,seed=7").unwrap();
+    let hist = coord_run(&coord_cfg(Some(faults), false, long_steps()), &train);
+    let last = hist.final_loss();
+    assert!(last.is_finite());
+    if !cfg!(miri) {
+        assert!(last < (4.0f64).ln() * 0.6, "no convergence under drops: {last}");
+    }
+}
+
+/// Fault injection on the aggregate-on-arrival (async) path has no round
+/// barrier to complete, so the config must be rejected up front rather than
+/// hanging a worker that waits for a reply the master never queues.
+#[test]
+fn threaded_faults_require_synchronous_schedule() {
+    let (train, _) = data();
+    let mut cfg = coord_cfg(Some(cocktail()), false, steps());
+    cfg.schedule = Arc::new(qsparse::topology::RandomGaps::generate(4, 4, cfg.steps, 99));
+    let err = run_threaded(
+        &cfg,
+        || Box::new(model()) as Box<dyn GradModel>,
+        Arc::new(train),
+        None,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("synchronous"), "unexpected error: {err}");
+}
+
+// ---- checkpoint/resume -----------------------------------------------------
+
+/// A full engine config for the checkpoint tests: worker momentum, server
+/// momentum, compressed downlink — every piece of state the snapshot must
+/// carry for the resumed run to be bit-identical.
+fn ckpt_spec<'a>(
+    m: &'a SoftmaxRegression,
+    train: &'a qsparse::data::Dataset,
+    test: &'a qsparse::data::Dataset,
+    comp: &'a dyn qsparse::compress::Compressor,
+    down: &'a dyn qsparse::compress::Compressor,
+    sched: &'a FixedPeriod,
+) -> TrainSpec<'a> {
+    let mut spec = TrainSpec::new(m, train, comp, sched);
+    spec.workers = 4;
+    spec.batch = 4;
+    spec.steps = steps();
+    spec.lr = LrSchedule::Const { eta: 0.3 };
+    spec.momentum = 0.5;
+    spec.test = Some(test);
+    spec.down_compressor = down;
+    spec.server_opt = ServerOptSpec::parse("momentum:beta=0.9,lr=0.1").unwrap();
+    spec.eval_every = 5;
+    spec
+}
+
+/// Run to completion, snapshotting along the way; resuming from *every*
+/// snapshot must reproduce the uninterrupted run bit for bit — history
+/// points, wire-bit counters and final parameters.
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    let (train, test) = data();
+    let m = model();
+    let comp = parse_spec("qtopk:k=10,bits=4").unwrap();
+    let down = parse_spec("topk:k=40").unwrap();
+    let sched = FixedPeriod::new(4);
+    let spec = ckpt_spec(&m, &train, &test, comp.as_ref(), down.as_ref(), &sched);
+    let fp = spec_fingerprint("integration-faults-checkpoint-spec");
+    let init = vec![0.0f32; m.dim()];
+
+    let full = run_from_resumable(&spec, init.clone(), None, fp, 0, &mut |_, _| {}).unwrap();
+
+    let every = (steps() / 3).max(1);
+    let mut snaps: Vec<(usize, Vec<u8>)> = Vec::new();
+    let checkpointed =
+        run_from_resumable(&spec, init.clone(), None, fp, every, &mut |step, bytes| {
+            snaps.push((step, bytes))
+        })
+        .unwrap();
+    assert_identical(&full, &checkpointed, "checkpoint emission must not perturb the run");
+    assert!(!snaps.is_empty(), "no snapshots emitted at every={every}");
+
+    for (step, bytes) in &snaps {
+        let resumed =
+            run_from_resumable(&spec, init.clone(), Some(bytes), fp, 0, &mut |_, _| {}).unwrap();
+        assert_identical(&full, &resumed, &format!("resume from step {step}"));
+    }
+}
+
+/// Corrupted, truncated or mismatched checkpoints are structured errors —
+/// never a panic, never a silently hybrid run.
+#[test]
+fn damaged_checkpoints_fail_with_structured_errors() {
+    let (train, test) = data();
+    let m = model();
+    let comp = parse_spec("qtopk:k=10,bits=4").unwrap();
+    let down = parse_spec("topk:k=40").unwrap();
+    let sched = FixedPeriod::new(4);
+    let spec = ckpt_spec(&m, &train, &test, comp.as_ref(), down.as_ref(), &sched);
+    let fp = spec_fingerprint("integration-faults-checkpoint-spec");
+    let init = vec![0.0f32; m.dim()];
+
+    let every = (steps() / 2).max(1);
+    let mut snaps: Vec<(usize, Vec<u8>)> = Vec::new();
+    run_from_resumable(&spec, init.clone(), None, fp, every, &mut |step, bytes| {
+        snaps.push((step, bytes))
+    })
+    .unwrap();
+    let bytes = snaps.pop().expect("at least one snapshot").1;
+
+    // Wrong spec fingerprint: a checkpoint cannot continue a different run.
+    let other = spec_fingerprint("some-other-spec");
+    assert_eq!(
+        run_from_resumable(&spec, init.clone(), Some(&bytes), other, 0, &mut |_, _| {}).err(),
+        Some(CheckpointError::SpecMismatch)
+    );
+
+    // Flipped magic byte.
+    let mut mangled = bytes.clone();
+    mangled[0] ^= 0xff;
+    assert_eq!(
+        run_from_resumable(&spec, init.clone(), Some(&mangled), fp, 0, &mut |_, _| {}).err(),
+        Some(CheckpointError::BadMagic)
+    );
+
+    // Every truncation point is an error, never a panic.
+    for cut in [0, 3, 4, 5, 12, 40, bytes.len() / 2, bytes.len() - 1] {
+        let r = run_from_resumable(&spec, init.clone(), Some(&bytes[..cut]), fp, 0, &mut |_, _| {});
+        assert!(r.is_err(), "truncation at {cut} bytes must be rejected");
+    }
+}

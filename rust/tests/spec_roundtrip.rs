@@ -94,6 +94,31 @@ fn random_spec(rng: &mut Pcg64) -> ExperimentSpec {
             churn_sigma: rng.f64(),
         })
     };
+    s.faults = if rng.f64() < 0.5 {
+        None
+    } else {
+        // Keep the uplink probabilities summing < 1 and satisfy the
+        // delay/deadline coupling rules `FaultSpec::validate` enforces.
+        let drop_up = rng.f64() * 0.25;
+        let corrupt_up = rng.f64() * 0.25;
+        let delay_up = rng.f64() * 0.25;
+        Some(qsparse::FaultSpec {
+            seed: rng.below(1 << 48),
+            drop_up,
+            corrupt_up,
+            dup_up: rng.f64() * 0.25,
+            delay_up,
+            delay_ticks: if delay_up > 0.0 { 1 + rng.below(100_000) } else { 0 },
+            drop_down: rng.f64() * 0.5,
+            corrupt_down: rng.f64() * 0.5,
+            crash: rng.f64() * 0.1,
+            deadline_ticks: if drop_up > 0.0 || corrupt_up > 0.0 {
+                1 + rng.below(1 << 30)
+            } else {
+                0
+            },
+        })
+    };
     s.threads = rng.below_usize(9);
     s.eval_every = 1 + rng.below_usize(50);
     s.eval_rows = 1 + rng.below_usize(1024);

@@ -10,13 +10,15 @@
 //!    counting allocator; every other module is covered by an explicit
 //!    `#![forbid(unsafe_code)]`.
 //! 3. **Determinism** — deterministic-path modules (`protocol`, `compress`,
-//!    `engine`, `coordinator`, `topology`, `optim`, `simd`, `sim`) must not
-//!    touch wall clocks (`Instant`, `SystemTime`) or RandomState-backed
-//!    containers (`HashMap`, `HashSet`) outside `#[cfg(test)]` code.
+//!    `engine`, `coordinator`, `topology`, `optim`, `simd`, `sim`,
+//!    `faults`) must not touch wall clocks (`Instant`, `SystemTime`) or
+//!    RandomState-backed containers (`HashMap`, `HashSet`) outside
+//!    `#[cfg(test)]` code.
 //! 4. **Panic-free decode** — the wire-facing parsers (`compress/encode.rs`,
-//!    `compress/rans.rs`, `util/json.rs`) must not contain `.unwrap()`,
-//!    `.expect(`, `panic!`, `unreachable!`, `todo!` or `unimplemented!`
-//!    outside tests: corrupt input must surface as a named error.
+//!    `compress/rans.rs`, `util/json.rs`, `protocol/checkpoint.rs`) must
+//!    not contain `.unwrap()`, `.expect(`, `panic!`, `unreachable!`,
+//!    `todo!` or `unimplemented!` outside tests: corrupt input must surface
+//!    as a named error.
 //! 5. **Bench-probe drift** — `scripts/bench_probes.txt` (the manifest
 //!    `scripts/check_bench.py` enforces in CI) and the probe-name literals
 //!    in `benches/train_step.rs` must agree in both directions, so a probe
@@ -70,6 +72,7 @@ const DET_DIRS: &[&str] = &[
     "rust/src/optim",
     "rust/src/simd",
     "rust/src/sim",
+    "rust/src/faults",
 ];
 
 /// Identifiers banned in deterministic paths (matched as whole words in
@@ -81,6 +84,7 @@ const NO_PANIC_FILES: &[&str] = &[
     "rust/src/compress/encode.rs",
     "rust/src/compress/rans.rs",
     "rust/src/util/json.rs",
+    "rust/src/protocol/checkpoint.rs",
 ];
 
 /// Panicking constructs (substring match on blanked code, so `unwrap_or`
